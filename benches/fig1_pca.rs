@@ -1,0 +1,26 @@
+//! Bench: regenerate Figure 1 — PCA speedup on synthetic CelebA across
+//! image sizes 8×8…(configurable) and k ∈ {1,3,5,10,20,30}% of d.
+//!
+//! ```sh
+//! cargo bench --bench fig1_pca
+//! cargo bench --bench fig1_pca -- --repeats 10 --sizes 8,12,16,20,24
+//! ```
+
+use rsvd::experiments::{self, pca_fig1::PcaOpts};
+use rsvd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let opts = PcaOpts {
+        repeats: args.get_usize("repeats", 3),
+        image_sizes: args
+            .get("sizes")
+            .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+            .unwrap_or_else(|| PcaOpts::default().image_sizes),
+        ..Default::default()
+    };
+    let coord = experiments::boot_coordinator();
+    let table = experiments::run_pca_figure(&coord, &opts);
+    table.print();
+    table.save_csv("fig1_pca");
+}

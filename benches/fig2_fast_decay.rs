@@ -1,0 +1,47 @@
+//! Bench: regenerate Figure 2 — speedup curves on the fast-decay spectrum
+//! (σᵢ = 1/i²), A ∈ R^{2000×n}, k ∈ {1,3,5,10}% of n.
+//!
+//! ```sh
+//! cargo bench --bench fig2_fast_decay                 # scaled default
+//! cargo bench --bench fig2_fast_decay -- --repeats 10 --n-grid 256,512,1024,1536
+//! ```
+
+use rsvd::datagen::Decay;
+use rsvd::experiments::{self, SpectrumOpts};
+use rsvd::util::cli::Args;
+
+#[allow(dead_code)] // unused when included as a module by fig3/fig4
+fn main() {
+    run_decay_bench(Decay::Fast, "fig2_fast_decay");
+}
+
+pub fn run_decay_bench(decay: Decay, name: &str) {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let opts = SpectrumOpts {
+        repeats: args.get_usize("repeats", 3),
+        n_grid: args
+            .get("n-grid")
+            .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+            .unwrap_or_else(|| SpectrumOpts::default().n_grid),
+        full_methods_max_n: args.get_usize("full-max-n", 1024),
+        ..Default::default()
+    };
+    let coord = experiments::boot_coordinator();
+    // accuracy gate (paper: ≤1e-8 vs GESVD) on the smallest grid point
+    let n0 = opts.n_grid[0];
+    let worst = experiments::spectrum_figs::accuracy_gate(
+        &coord,
+        decay,
+        opts.m,
+        n0,
+        experiments::k_of(0.05, n0),
+        7,
+    );
+    println!("accuracy vs GESVD at n={n0}: worst rel err {worst:.2e}");
+    if !matches!(decay, Decay::Slow) {
+        assert!(worst < 1e-8, "accuracy gate violated: {worst:.2e}");
+    }
+    let table = experiments::run_spectrum_figure(&coord, decay, &opts);
+    table.print();
+    table.save_csv(name);
+}

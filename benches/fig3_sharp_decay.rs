@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 3 — the sharp-decay spectrum
+//! (σᵢ = 1e-4 + 1/(1+exp(i+1−β)), breakout β = 10).
+
+use rsvd::datagen::Decay;
+
+#[path = "fig2_fast_decay.rs"]
+mod fig2;
+
+fn main() {
+    fig2::run_decay_bench(Decay::Sharp { beta: 10.0 }, "fig3_sharp_decay");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 4 — the slow-decay spectrum (σᵢ = 1/i^0.1),
+//! the hard case for randomized sketching (accuracy reported, not gated).
+
+use rsvd::datagen::Decay;
+
+#[path = "fig2_fast_decay.rs"]
+mod fig2;
+
+fn main() {
+    fig2::run_decay_bench(Decay::Slow, "fig4_slow_decay");
+}

@@ -1,0 +1,170 @@
+//! Microbenchmarks for the §Perf pass: host GEMM roofline, device GEMM
+//! artifacts, solver kernels, end-to-end pipeline phases.
+//!
+//! ```sh
+//! cargo bench --bench microbench -- [--repeats 5] [--only gemm|device|solvers|pipeline]
+//! ```
+
+use rsvd::bench_harness::{fmt_secs, time_n, Table};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::experiments;
+use rsvd::linalg::{bidiag, eigen, gemm, lanczos, qr, svd_gesvd, svd_jacobi, Matrix};
+use rsvd::runtime::{ArtifactKind, Engine};
+use rsvd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let repeats = args.get_usize("repeats", 3);
+    let only = args.get("only").unwrap_or("all");
+
+    if matches!(only, "all" | "gemm") {
+        bench_gemm(repeats);
+    }
+    if matches!(only, "all" | "device") {
+        bench_device_gemm(repeats);
+    }
+    if matches!(only, "all" | "solvers") {
+        bench_solvers(repeats);
+    }
+    if matches!(only, "all" | "pipeline") {
+        bench_pipeline_phases(repeats);
+    }
+}
+
+fn bench_gemm(repeats: usize) {
+    let mut table = Table::new("host GEMM (f64)", &["shape", "mean", "GFLOP/s"]);
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512), (1024, 1024, 1024), (2048, 512, 64)] {
+        let a = Matrix::gaussian(m, k, 1);
+        let b = Matrix::gaussian(k, n, 2);
+        let mut c = Matrix::zeros(m, n);
+        let t = time_n(repeats, || gemm::gemm(1.0, &a, &b, 0.0, &mut c));
+        let gflops = 2.0 * (m * k * n) as f64 / t.mean_s / 1e9;
+        table.row(vec![
+            format!("{m}x{k}x{n}"),
+            fmt_secs(t.mean_s),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    table.print();
+    table.save_csv("micro_gemm");
+}
+
+fn bench_device_gemm(repeats: usize) {
+    let dir = experiments::artifact_dir();
+    let Ok(engine) = Engine::new(&dir) else {
+        println!("device benches skipped: no artifacts");
+        return;
+    };
+    let mut table = Table::new("device GEMM artifacts (f64)", &["artifact", "mean exec", "GFLOP/s"]);
+    for impl_name in ["xladot", "pallas"] {
+        for sz in [256usize, 1024] {
+            let Some(spec) = engine
+                .manifest()
+                .pick_bucket(ArtifactKind::Gemm, impl_name, sz, sz, sz, None)
+            else {
+                continue;
+            };
+            if spec.m != sz {
+                continue;
+            }
+            let spec = spec.clone();
+            let a = Matrix::gaussian(sz, sz, 1);
+            let b = Matrix::gaussian(sz, sz, 2);
+            let t = time_n(repeats, || {
+                let _ = engine.run_gemm(&spec, &a, &b).expect("gemm");
+            });
+            let gflops = 2.0 * (sz * sz * sz) as f64 / t.mean_s / 1e9;
+            table.row(vec![spec.name.clone(), fmt_secs(t.mean_s), format!("{gflops:.2}")]);
+        }
+    }
+    table.print();
+    table.save_csv("micro_device_gemm");
+}
+
+fn bench_solvers(repeats: usize) {
+    let mut table = Table::new("host solver kernels", &["solver", "shape", "mean"]);
+    let a = spectrum_matrix(600, 400, Decay::Fast, 3);
+    let g = gemm::gram_t(&Matrix::gaussian(420, 400, 5));
+
+    let t = time_n(repeats, || {
+        let _ = svd_gesvd::singular_values(&a);
+    });
+    table.row(vec!["gesvd (values)".into(), "600x400".into(), fmt_secs(t.mean_s)]);
+
+    let t = time_n(repeats.min(2), || {
+        let _ = svd_jacobi::svd_jacobi(&a);
+    });
+    table.row(vec!["jacobi (full)".into(), "600x400".into(), fmt_secs(t.mean_s)]);
+
+    let t = time_n(repeats, || {
+        let _ = lanczos::svds(&a, 20);
+    });
+    table.row(vec!["lanczos k=20".into(), "600x400".into(), fmt_secs(t.mean_s)]);
+
+    let t = time_n(repeats, || {
+        let _ = eigen::eigvalsh_partial(&g, 20);
+    });
+    table.row(vec!["dsyevr-analog k=20".into(), "400x400".into(), fmt_secs(t.mean_s)]);
+
+    let t = time_n(repeats, || {
+        let _ = eigen::eigh(&g);
+    });
+    table.row(vec!["eigh (full)".into(), "400x400".into(), fmt_secs(t.mean_s)]);
+
+    let t = time_n(repeats, || {
+        let _ = bidiag::bidiagonalize(&a);
+    });
+    table.row(vec!["bidiagonalize".into(), "600x400".into(), fmt_secs(t.mean_s)]);
+
+    let y = Matrix::gaussian(2000, 64, 9);
+    let t = time_n(repeats, || {
+        let _ = qr::cholesky_qr2(&y).expect("qr");
+    });
+    table.row(vec!["cholesky_qr2".into(), "2000x64".into(), fmt_secs(t.mean_s)]);
+
+    table.print();
+    table.save_csv("micro_solvers");
+}
+
+/// Phase split of the native pipeline — identifies the hot path for §Perf.
+fn bench_pipeline_phases(repeats: usize) {
+    let mut table = Table::new("native Alg.1 phase split (2000x512, s=36, q=2)", &["phase", "mean"]);
+    let a = spectrum_matrix(2000, 512, Decay::Fast, 7);
+    let s = 36;
+    let omega = Matrix::gaussian(512, s, 1);
+
+    let t_sketch = time_n(repeats, || {
+        let _ = gemm::matmul(&a, &omega);
+    });
+    table.row(vec!["sketch Y = AΩ".into(), fmt_secs(t_sketch.mean_s)]);
+
+    let y = gemm::matmul(&a, &omega);
+    let t_pow = time_n(repeats, || {
+        let q1 = qr::orthonormalize(&y);
+        let z = gemm::matmul_tn(&a, &q1);
+        let q2 = qr::orthonormalize(&z);
+        let _ = gemm::matmul(&a, &q2);
+    });
+    table.row(vec!["1 power iter (2 GEMM + 2 orth)".into(), fmt_secs(t_pow.mean_s)]);
+
+    let q = qr::orthonormalize(&y);
+    let t_b = time_n(repeats, || {
+        let _ = gemm::matmul_tn(&q, &a);
+    });
+    table.row(vec!["B = QᵀA".into(), fmt_secs(t_b.mean_s)]);
+
+    let b = gemm::matmul_tn(&q, &a);
+    let t_g = time_n(repeats, || {
+        let _ = gemm::matmul_nt(&b, &b);
+    });
+    table.row(vec!["G = BBᵀ".into(), fmt_secs(t_g.mean_s)]);
+
+    let g = gemm::matmul_nt(&b, &b);
+    let t_e = time_n(repeats, || {
+        let _ = eigen::eigh(&g);
+    });
+    table.row(vec!["eigh(G) (host finish)".into(), fmt_secs(t_e.mean_s)]);
+
+    table.print();
+    table.save_csv("micro_pipeline_phases");
+}

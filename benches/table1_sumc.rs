@@ -1,0 +1,20 @@
+//! Bench: regenerate Table 1 — SuMC with CPU vs device eigensolver:
+//! elapsed time, solver calls, ARI on the planted datasets.
+//!
+//! ```sh
+//! cargo bench --bench table1_sumc                      # first dataset, 1/10 scale
+//! cargo bench --bench table1_sumc -- --scale 1.0 --full  # paper scale + second dataset
+//! ```
+
+use rsvd::experiments;
+use rsvd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get_f64("scale", 0.1);
+    let iters = args.get_usize("max-iters", 30);
+    let coord = experiments::boot_coordinator();
+    let table = experiments::run_sumc_table(&coord, scale, iters, args.has("full"), 7);
+    table.print();
+    table.save_csv("table1_sumc");
+}

@@ -1,0 +1,61 @@
+//! Quickstart: boot the coordinator, decompose one matrix through the AOT
+//! device pipeline, and compare against the exact solver.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::svd_gesvd::svd;
+
+fn main() {
+    // 1. a 256×128 test matrix with fast-decaying spectrum (σᵢ = 1/i²)
+    let (m, n, k) = (256, 128, 10);
+    let a = spectrum_matrix(m, n, Decay::Fast, 42);
+
+    // 2. boot the coordinator over the AOT artifacts
+    let coord = match Coordinator::start("artifacts", CoordinatorCfg::default()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("no artifacts ({e}); falling back to host-only mode");
+            Coordinator::start_host_only(CoordinatorCfg::default())
+        }
+    };
+
+    // 3. randomized k-SVD through the service
+    let res = coord.run(Request::Svd {
+        a: a.clone(),
+        k,
+        method: Method::Auto,
+        want_vectors: true,
+        seed: 7,
+    });
+    let d = res.outcome.expect("decomposition");
+    println!(
+        "served by [{}] bucket {:?} in {:?} (queued {:?})",
+        d.method_used, d.bucket, res.exec, res.queued
+    );
+
+    // 4. compare with the exact full SVD
+    let exact = svd(&a);
+    println!("\n  i    randomized σᵢ        exact σᵢ         rel.err");
+    for i in 0..k {
+        let rel = (d.values[i] - exact.s[i]).abs() / exact.s[0];
+        println!("  {i:>2}  {:>16.12}  {:>16.12}  {rel:.2e}", d.values[i], exact.s[i]);
+    }
+
+    // 5. reconstruction quality vs the optimal rank-k approximation
+    let (u, v) = (d.u.expect("U"), d.v.expect("V"));
+    let mut us = u.clone();
+    for i in 0..us.rows() {
+        for j in 0..k {
+            us[(i, j)] *= d.values[j];
+        }
+    }
+    let rec = rsvd::linalg::gemm::matmul(&us, &v.transpose());
+    let err = a.add_scaled(-1.0, &rec).fro_norm();
+    let best: f64 = exact.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+    println!("\n‖A − ŨΣ̃Ṽᵀ‖_F = {err:.3e} (optimal rank-{k}: {best:.3e})");
+    coord.metrics.snapshot().print();
+}

@@ -1,0 +1,23 @@
+//! Table-1 scenario as a runnable example: SuMC subspace clustering with
+//! the eigensolver backend swapped between CPU and the device pipeline.
+//!
+//! ```sh
+//! cargo run --release --example subspace_clustering -- [--scale 0.1] [--full]
+//! ```
+//! `--scale 1.0` reproduces the paper's dataset sizes (slow on one core);
+//! `--full` also runs the 10× "second" dataset.
+
+use rsvd::experiments;
+use rsvd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get_f64("scale", 0.1);
+    let max_iters = args.get_usize("max-iters", 30);
+    let coord = experiments::boot_coordinator();
+    let table = experiments::run_sumc_table(&coord, scale, max_iters, args.has("full"), 7);
+    table.print();
+    table.save_csv("table1_sumc_example");
+    println!();
+    coord.metrics.snapshot().print();
+}

@@ -1,0 +1,199 @@
+"""AOT export: lower every pipeline bucket to HLO text + manifest.json.
+
+Run once via `make artifacts`. The bucket set is derived from
+configs/experiments.json — the same grids the rust benches sweep — so every
+figure's (shape, k%) request lands exactly on an exported bucket.
+
+HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(os.path.dirname(HERE))
+CONFIG = os.path.join(ROOT, "configs", "experiments.json")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def pick_bucket(value, buckets):
+    """Smallest bucket ≥ value (assert instead of silently clamping)."""
+    for b in buckets:
+        if b >= value:
+            return b
+    raise ValueError(f"no bucket ≥ {value} in {buckets}")
+
+
+def f64(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float64)
+
+
+U32_2 = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def spec_of(sds):
+    return [str(sds.dtype), list(sds.shape)]
+
+
+def lower_artifact(kind, fn, arg_specs, meta, out_dir, manifest, force=False):
+    name = meta["name"]
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    entry = dict(meta)
+    entry["kind"] = kind
+    entry["file"] = f"{name}.hlo.txt"
+    entry["inputs"] = [spec_of(s) for s in arg_specs]
+    if not force and os.path.exists(path):
+        # reuse existing lowering (Makefile decides staleness at the
+        # directory level; per-file reuse makes --only iteration fast)
+        lowered = None
+        text = None
+    else:
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+    manifest.append(entry)
+    print(f"  {name}  ({'cached' if text is None else f'{len(text)} chars'})")
+
+
+def rsvd_buckets(cfg):
+    """Derive the (m, n, s) bucket set for the spectrum figures (2-4)."""
+    sp = cfg["spectrum"]
+    p = cfg["oversample"]
+    sbk = cfg["s_buckets"]
+    out = set()
+    for n in sp["n_grid_full"]:
+        nb = n if n % 2 == 0 else n + 1
+        for pct in sp["k_pcts"]:
+            k = max(1, int(-(-n * pct // 1)))
+            s = pick_bucket(min(k + p, n), [b for b in sbk if b <= n] or [n])
+            out.add((sp["m_bucket"], nb, s))
+    return sorted(out)
+
+
+def pca_buckets(cfg):
+    """(n_samples, d, s) buckets for the PCA figure (1)."""
+    pc = cfg["pca"]
+    p = cfg["oversample"]
+    sbk = cfg["s_buckets"]
+    out = set()
+    for hw in pc["image_sizes"]:
+        d = 3 * hw * hw
+        for pct in pc["k_pcts"]:
+            k = max(1, int(-(-d * pct // 1)))
+            s = pick_bucket(min(k + p, d), [b for b in sbk if b <= d] or [d])
+            out.add((pc["n_samples"], d, s))
+    return sorted(out)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(ROOT, "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="only the tiny integration-test buckets")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args()
+
+    with open(CONFIG) as f:
+        cfg = json.load(f)
+    q = cfg["power_iters"]
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+
+    def emit_rsvd(kind, m, n, s, qq, impl):
+        fn = {
+            "rsvd": model.rsvd_qbg,
+            "rsvd_values": model.rsvd_values_g,
+            "pca": model.pca_qbg,
+        }[kind]
+        meta = {
+            "name": f"{kind}_m{m}_n{n}_s{s}_q{qq}_{impl}",
+            "m": m, "n": n, "s": s, "q": qq, "impl": impl,
+        }
+        lower_artifact(
+            kind,
+            functools.partial(fn, s=s, q=qq, impl=impl),
+            [f64((m, n)), U32_2],
+            meta, args.out, manifest, force=args.force,
+        )
+
+    def emit_gemm(m, k, n, impl):
+        meta = {"name": f"gemm_m{m}_k{k}_n{n}_{impl}",
+                "m": m, "k": k, "n": n, "impl": impl}
+        lower_artifact(
+            "gemm",
+            functools.partial(model.gemm_fn, impl=impl),
+            [f64((m, k)), f64((k, n))],
+            meta, args.out, manifest, force=args.force,
+        )
+
+    # --- tiny integration buckets (both impls; used by pytest + cargo test)
+    t = cfg["tiny"]
+    for impl in ("xladot", "pallas"):
+        emit_rsvd("rsvd", t["m"], t["n"], t["s"], t["q"], impl)
+        emit_rsvd("rsvd_values", t["m"], t["n"], t["s"], t["q"], impl)
+        emit_rsvd("pca", t["m"], t["n"], t["s"], t["q"], impl)
+        emit_gemm(cfg["gemm_sizes"][0], cfg["gemm_sizes"][0],
+                  cfg["gemm_sizes"][0], impl)
+
+    if not args.quick:
+        # --- quickstart bucket
+        qs = cfg["quickstart"]
+        emit_rsvd("rsvd", qs["m"], qs["n"], qs["s"], qs["q"], "xladot")
+
+        # --- spectrum figure buckets (values + full)
+        for (m, n, s) in rsvd_buckets(cfg):
+            emit_rsvd("rsvd_values", m, n, s, q, "xladot")
+            emit_rsvd("rsvd", m, n, s, q, "xladot")
+
+        # --- PCA figure buckets
+        for (nn, d, s) in pca_buckets(cfg):
+            emit_rsvd("pca", nn, d, s, q, "xladot")
+
+        # --- SuMC buckets: per-cluster eigenproblems, D=dim (Table 1);
+        # cluster sizes vary per iteration → m-bucket ladder over several
+        # dim buckets (scaled runs use dim ≈ 100–1000).
+        for mb in (256, 512, 1024, 2048, 4096):
+            emit_rsvd("rsvd", mb, 256, 96, q, "xladot")
+        for mb in (1024, 2048, 4096):
+            emit_rsvd("rsvd", mb, 512, 96, q, "xladot")
+        for mb in (2048, 4096):
+            emit_rsvd("rsvd", mb, 1024, 128, q, "xladot")
+
+        # --- ablation: pallas vs xladot on a mid-size bucket
+        emit_rsvd("rsvd_values", 2048, 512, 64, q, "pallas")
+        # --- ablation: power-iteration sweep q ∈ {0,1,2,4}
+        for qq in (0, 1, 4):
+            emit_rsvd("rsvd_values", 2048, 512, 64, qq, "xladot")
+
+        # --- gemm microbench artifacts
+        for sz in cfg["gemm_sizes"][1:]:
+            for impl in ("xladot", "pallas"):
+                emit_gemm(sz, sz, sz, impl)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "config": cfg, "artifacts": manifest}, f,
+                  indent=1)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the randomized-SVD pipeline (build-time only)."""
+
+from .matmul import matmul, matmul_nt, matmul_tn
+from .gram import gram
+from .power import power_iterations, power_step
+
+__all__ = [
+    "matmul",
+    "matmul_nt",
+    "matmul_tn",
+    "gram",
+    "power_iterations",
+    "power_step",
+]

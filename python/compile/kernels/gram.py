@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: Gram matrix G = B @ B^T.
+
+A dedicated kernel rather than `matmul(b, b.T)`: the same HBM array is read
+through two BlockSpecs (row-panel i and row-panel j), so no transposed copy
+of B is materialized -- on TPU this halves HBM traffic for the step-5
+contraction the pipeline uses to hand the small eigenproblem to the host.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pad_to, _round_up, _ceil_mult
+
+
+def _gram_kernel(bi_ref, bj_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        bi_ref[...], bj_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bk"))
+def gram(b, *, bs=128, bk=256):
+    """G = B @ B^T for B (s, n). Output (s, s)."""
+    s, n = b.shape
+    bs_ = min(bs, _ceil_mult(s))
+    bk_ = min(bk, _ceil_mult(n))
+    sp, np_ = _round_up(s, bs_), _round_up(n, bk_)
+    bp = _pad_to(b, sp, np_)
+    grid = (sp // bs_, sp // bs_, np_ // bk_)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bs_, bk_), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bs_, bs_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((sp, sp), b.dtype),
+        interpret=True,
+    )(bp, bp)
+    return out[:s, :s]

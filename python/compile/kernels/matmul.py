@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled matrix multiply — the BLAS-3 workhorse.
+
+The paper's core claim is that randomized SVD can be reformulated so that
+essentially all flops are GEMMs, which saturate throughput-oriented
+hardware. On CUDA that means cuBLAS; on TPU the analogous statement is an
+MXU-shaped Pallas kernel: 128x128 output tiles held in VMEM, a K-loop
+streaming input tiles HBM->VMEM via BlockSpec, and a systolic `dot` per
+tile. `interpret=True` everywhere: the CPU PJRT runtime cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO (same schedule,
+simulated memory spaces) -- see DESIGN.md section "Hardware adaptation".
+
+VMEM budget per program instance (f64, bm=bn=bk=128):
+    x tile 128*128*8 = 128 KiB, y tile 128 KiB, o tile 128 KiB
+    => 384 KiB << 16 MiB/core. The f32 MXU variant halves this.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile sizes.
+BM = 128
+BN = 128
+BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid (i, j, k): o[i,j] accumulates x[i,k] @ y[k,j].
+
+    k is the innermost (fastest-varying) grid axis, so the same output tile
+    is revisited across consecutive steps -- the classic Pallas accumulate
+    pattern. On real TPU the o tile stays resident in VMEM between steps.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=BM, bn=BN, bk=BK):
+    """C = X @ Y via the tiled Pallas kernel.
+
+    Shapes need not be tile-multiples: inputs are zero-padded up to the next
+    tile boundary and the result sliced back (zero padding is exact for
+    matmul). Artifact shape buckets are chosen as tile multiples so the
+    padding branch is a no-op on the hot path.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims {k} vs {k2}"
+    if x.dtype != y.dtype:
+        y = y.astype(x.dtype)
+    bm_, bn_, bk_ = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+    mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, bk_)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matmul_tn(x, y, **kw):
+    """C = X^T @ Y (transpose materialized by XLA; the GEMM is the kernel)."""
+    return matmul(x.T, y, **kw)
+
+
+def matmul_nt(x, y, **kw):
+    """C = X @ Y^T."""
+    return matmul(x, y.T, **kw)
+
+
+def _round_up(v, b):
+    return -(-v // b) * b
+
+
+def _ceil_mult(v):
+    """Largest power-of-two tile <= v (keeps tiny test shapes legal)."""
+    p = 1
+    while p * 2 <= v and p < 128:
+        p *= 2
+    return p

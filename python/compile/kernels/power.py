@@ -1,0 +1,33 @@
+"""L1 fused power-iteration step: Y' = A @ (A^T @ Y).
+
+Algorithm 1 step 2 applies (A A^T)^q to the sketch. Forming A A^T (m x m)
+would be O(m^2 n) flops and O(m^2) HBM; the fused form is two GEMMs of
+O(mns) each, which is exactly the reformulation the paper advocates. Both
+GEMMs go through the L1 tiled kernel so they lower into the same HLO module.
+"""
+
+from .matmul import matmul, matmul_tn
+
+
+def power_step(a, y, **kw):
+    """One unstabilized application: Y <- A (A^T Y)."""
+    z = matmul_tn(a, y, **kw)
+    return matmul(a, z, **kw)
+
+
+def power_iterations(a, y, q, orth=None, **kw):
+    """q applications with optional re-orthonormalization between steps.
+
+    `orth` is injected (cholqr from compile.linalg) to avoid a circular
+    import; `None` gives the raw (numerically risky) chain the paper's
+    pseudo-code writes, which tests exercise on well-conditioned inputs.
+    """
+    for _ in range(q):
+        if orth is not None:
+            y = orth(y)
+            z = matmul_tn(a, y, **kw)
+            z = orth(z)
+            y = matmul(a, z, **kw)
+        else:
+            y = power_step(a, y, **kw)
+    return y

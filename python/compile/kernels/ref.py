@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+pytest (python/tests/) sweeps shapes and dtypes with hypothesis and asserts
+the Pallas kernels match these to tight tolerances. Keep these maximally
+boring: one jnp call each.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def matmul_tn_ref(x, y):
+    return jnp.dot(x.T, y, preferred_element_type=x.dtype)
+
+
+def matmul_nt_ref(x, y):
+    return jnp.dot(x, y.T, preferred_element_type=x.dtype)
+
+
+def gram_ref(b):
+    return jnp.dot(b, b.T, preferred_element_type=b.dtype)
+
+
+def power_step_ref(a, y):
+    return a @ (a.T @ y)

@@ -1,0 +1,137 @@
+"""L2 in-graph linear algebra: CholeskyQR2 built from pure HLO ops.
+
+The interchange runtime (xla_extension 0.5.1) rejects the TYPED_FFI
+custom-calls jax emits for `jnp.linalg.cholesky` / `triangular_solve` on
+CPU, so both are implemented here with masked `lax.fori_loop` over
+dynamic-slice updates — every op lowers to plain HLO and round-trips
+through the text format. See DESIGN.md §6b.
+
+CholeskyQR turns panel orthogonalization into BLAS-3: one Gram GEMM, one
+s×s Cholesky, one triangular solve applied as a GEMM-shaped sweep. Two
+rounds (CholeskyQR2, Yamamoto et al. 2015) restore Householder-grade
+orthogonality for κ(A) up to ~1/√ε.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# factors up to this size are statically unrolled (see §Perf note in
+# `cholesky_ingraph`); larger ones use `fori_loop`. 64 is the measured
+# compile-time knee of the pinned xla_extension 0.5.1 compiler: s=96
+# unrolled graphs took ~90 s to compile (EXPERIMENTS §Perf iteration 3)
+# while s≤64 compiles in ~1 s and keeps the exec win.
+UNROLL_LIMIT = 64
+
+
+def cholesky_ingraph(g, pivot_floor=None):
+    """Lower-triangular L with G ≈ L·Lᵀ, via right-looking column Cholesky.
+
+    Masked formulation: iteration j normalizes column j against the
+    partially-downdated G and rank-1-downdates the trailing block. All
+    indexing is dynamic-slice, shapes static — pure HLO.
+
+    `pivot_floor` (a positive scalar, default eps·trace/s) lower-bounds the
+    pivot: for **rank-deficient** G (padded or low-rank inputs — e.g. the
+    SuMC clusters) the downdated trailing diagonal hits roundoff-negative
+    values; flooring keeps the factor finite and makes the corresponding
+    Q columns collapse toward zero instead of exploding — the projector
+    onto the true range is unaffected.
+    """
+    s = g.shape[0]
+    idx = jnp.arange(s)
+    if pivot_floor is None:
+        eps = jnp.finfo(g.dtype).eps
+        # the additive term must be a *normal* float: XLA CPU flushes
+        # subnormals to zero, and a zero floor reintroduces 0/0 on
+        # all-zero inputs
+        pivot_floor = eps * (jnp.trace(g) / s) + jnp.finfo(g.dtype).tiny
+
+    def step(j, gw, l):
+        col = lax.dynamic_slice_in_dim(gw, j, 1, axis=1)[:, 0]  # (s,)
+        # a pivot at/below the floor marks a numerically-null direction:
+        # dividing its (roundoff) column by the floored pivot would amplify
+        # error double-exponentially across the null block. Emit d·e_j
+        # instead — L stays nonsingular for the solve, the downdate touches
+        # only the pivot, and the corresponding Q column collapses to ~0.
+        is_null = col[j] <= pivot_floor
+        d = jnp.sqrt(jnp.maximum(col[j], pivot_floor))
+        lcol = jnp.where(idx >= j, col / d, 0.0)
+        lcol = lcol.at[j].set(d)
+        lcol = jnp.where(is_null, jnp.where(idx == j, d, 0.0), lcol)
+        l = lax.dynamic_update_slice_in_dim(l, lcol[:, None], j, axis=1)
+        # rank-1 downdate of the trailing block (rows/cols < j see zeros)
+        gw = gw - lcol[:, None] * lcol[None, :]
+        return gw, l
+
+    # §Perf: the sequential dependency is unavoidable, but a `while` loop
+    # costs ~0.15 ms/iteration of XLA-CPU loop machinery — more than the
+    # O(s²) step itself. Statically unrolling small factors removes it
+    # (dynamic_slice with a constant index folds to a static slice).
+    if s <= UNROLL_LIMIT:
+        gw, l = g, jnp.zeros_like(g)
+        for j in range(s):
+            gw, l = step(j, gw, l)
+        return l
+    _, l = lax.fori_loop(0, s, lambda j, c: step(j, *c), (g, jnp.zeros_like(g)))
+    return l
+
+
+def triangular_inverse_lt(l):
+    """W = L⁻¹ for lower-triangular L (s, s), column by column.
+
+    Forward substitution on the identity: s fori_loop steps of O(s²) work.
+    Keeping the sequential loop on the *small* s×s factor (instead of the
+    m×s panel) is the §Perf optimization that turns the panel solve into
+    one fused GEMM — see EXPERIMENTS.md §Perf.
+    """
+    s = l.shape[0]
+    idx = jnp.arange(s)
+
+    def step(i, w):
+        # row i of W: W[i,:] = (e_iᵀ − Σ_{k<i} L[i,k]·W[k,:]) / L[i,i];
+        # rows ≥ i of W are still zero, so a full matvec suffices
+        lrow = lax.dynamic_slice_in_dim(l, i, 1, axis=0)[0]  # L[i, :]
+        lii = lrow[i]
+        e = jnp.where(idx == i, 1.0, 0.0).astype(l.dtype)
+        acc = lrow @ w  # (s,)
+        wrow = (e - acc) / lii
+        wrow = jnp.where(idx <= i, wrow, 0.0)  # W is lower triangular
+        return lax.dynamic_update_slice_in_dim(w, wrow[None, :], i, axis=0)
+
+    if s <= UNROLL_LIMIT:
+        w = jnp.zeros_like(l)
+        for i in range(s):
+            w = step(i, w)
+        return w
+    return lax.fori_loop(0, s, step, jnp.zeros_like(l))
+
+
+def solve_right_lt(y, l):
+    """Q = Y · L⁻ᵀ for Y (m, s), L (s, s) lower triangular.
+
+    Computed as Y @ (L⁻¹)ᵀ: the sequential substitution runs on the s×s
+    factor only and the heavy O(ms²) contraction is a single fused GEMM.
+    """
+    w = triangular_inverse_lt(l)
+    return jnp.dot(y, w.T, preferred_element_type=y.dtype)
+
+
+def cholqr(y, gram_fn=None):
+    """One CholeskyQR round: Q with range(Q) = range(Y), R implicit."""
+    if gram_fn is None:
+        gram_fn = lambda x: jnp.dot(x.T, x, preferred_element_type=x.dtype)
+    g = gram_fn(y)
+    # tiny ridge keeps the in-graph factorization finite for nearly
+    # rank-deficient panels; oversampling makes its effect vanish in the
+    # projector Q Qᵀ
+    eps = jnp.finfo(y.dtype).eps
+    scale = jnp.trace(g) / g.shape[0] + jnp.finfo(y.dtype).tiny
+    g = g + (eps * scale) * jnp.eye(g.shape[0], dtype=y.dtype)
+    l = cholesky_ingraph(g)
+    return solve_right_lt(y, l)
+
+
+def cholqr2(y, gram_fn=None):
+    """CholeskyQR2: two rounds — the pipeline's step-3 orthonormalizer."""
+    return cholqr(cholqr(y, gram_fn), gram_fn)

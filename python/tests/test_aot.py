@@ -1,0 +1,57 @@
+"""AOT export smoke: bucket derivation and manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_pick_bucket():
+    assert aot.pick_bucket(17, [16, 32, 64]) == 32
+    assert aot.pick_bucket(16, [16, 32]) == 16
+    with pytest.raises(ValueError):
+        aot.pick_bucket(100, [16, 32])
+
+
+def test_bucket_derivation_covers_grids():
+    with open(aot.CONFIG) as f:
+        cfg = json.load(f)
+    rb = aot.rsvd_buckets(cfg)
+    assert all(m == cfg["spectrum"]["m_bucket"] for (m, _, _) in rb)
+    # every (n, k%) must land on some bucket with s ≥ k + p
+    p = cfg["oversample"]
+    for n in cfg["spectrum"]["n_grid"]:
+        for pct in cfg["spectrum"]["k_pcts"]:
+            k = max(1, -(-int(n * pct) // 1))
+            found = [s for (_, nb, s) in rb if nb >= n and s >= min(k + p, n)]
+            assert found, f"no bucket for n={n} k={k}"
+    pb = aot.pca_buckets(cfg)
+    assert all(nn == cfg["pca"]["n_samples"] for (nn, _, _) in pb)
+
+
+def test_quick_export(tmp_path):
+    """--quick export produces loadable text + a consistent manifest."""
+    out = tmp_path / "arts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--quick"],
+        cwd=os.path.join(ROOT, "python"),
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    with open(out / "manifest.json") as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert len(man["artifacts"]) == 8  # 4 kinds × 2 impls
+    for a in man["artifacts"]:
+        path = out / a["file"]
+        assert path.exists(), a["file"]
+        text = path.read_text()
+        assert text.startswith("HloModule"), a["file"]
+        assert "custom-call" not in text, a["file"]

@@ -1,0 +1,103 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and dtypes — the CORE correctness signal for the
+kernels that every artifact's GEMMs go through.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+dims = st.integers(min_value=1, max_value=300)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, dt=st.sampled_from([0, 1]))
+def test_matmul_matches_ref(m, k, n, dt):
+    dtype = DTYPES[dt]
+    x = rand(m * 7 + k, (m, k), dtype)
+    y = rand(n * 13 + k, (k, n), dtype)
+    got = kernels.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    rtol = 1e-12 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=rtol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_matmul_tn_nt(m, k, n):
+    x = rand(1, (k, m), jnp.float64)
+    y = rand(2, (k, n), jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(kernels.matmul_tn(x, y)),
+        np.asarray(ref.matmul_tn_ref(x, y)),
+        rtol=1e-12, atol=1e-12,
+    )
+    x2 = rand(3, (m, k), jnp.float64)
+    y2 = rand(4, (n, k), jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(kernels.matmul_nt(x2, y2)),
+        np.asarray(ref.matmul_nt_ref(x2, y2)),
+        rtol=1e-12, atol=1e-12,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 200), n=st.integers(1, 400), dt=st.sampled_from([0, 1]))
+def test_gram_matches_ref(s, n, dt):
+    dtype = DTYPES[dt]
+    b = rand(s + n, (s, n), dtype)
+    got = np.asarray(kernels.gram(b))
+    want = np.asarray(ref.gram_ref(b))
+    rtol = 1e-12 if dtype == jnp.float64 else 1e-3
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol)
+    # exact symmetry of the result
+    np.testing.assert_allclose(got, got.T, rtol=0, atol=np.abs(got).max() * 1e-12 if got.size else 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 150), n=st.integers(2, 150), s=st.integers(1, 32))
+def test_power_step_matches_ref(m, n, s):
+    a = rand(5, (m, n), jnp.float64)
+    y = rand(6, (m, s), jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(kernels.power_step(a, y)),
+        np.asarray(ref.power_step_ref(a, y)),
+        rtol=1e-11, atol=1e-11,
+    )
+
+
+def test_power_iterations_sharpen_spectrum():
+    # after q iterations the sketch aligns with the top singular directions:
+    # projection error of rank-deficient A onto range(Y) goes to ~0
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((60, 4))
+    v = rng.standard_normal((4, 40))
+    a = jnp.asarray(u @ v)
+    omega = jnp.asarray(rng.standard_normal((40, 8)))
+    y = kernels.matmul(a, omega)
+    y = kernels.power_iterations(a, y, q=2)
+    qmat, _ = np.linalg.qr(np.asarray(y))
+    proj = qmat @ (qmat.T @ np.asarray(a))
+    assert np.abs(proj - np.asarray(a)).max() < 1e-8
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    x = rand(7, (100, 70), jnp.float64)
+    y = rand(8, (70, 90), jnp.float64)
+    a = np.asarray(kernels.matmul(x, y, bm=bm, bn=bn, bk=bk))
+    b = np.asarray(ref.matmul_ref(x, y))
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,64 @@
+"""Rank-deficiency robustness — the SuMC regression.
+
+Padded and low-rank inputs make the sketch Gram numerically singular; the
+in-graph Cholesky must treat floored pivots as null directions (emit d·eⱼ)
+or error amplifies double-exponentially across the null block. These tests
+pin the fix."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg, model
+
+SEED = jnp.array([1, 2], dtype=jnp.uint32)
+
+
+def low_rank(m, n, r, seed=0, pad_to=None):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+    if pad_to:
+        out = np.zeros(pad_to)
+        out[:m, :n] = a
+        a = out
+    return jnp.asarray(a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(1, 10), s=st.integers(12, 48))
+def test_cholqr2_rank_deficient_panels(r, s):
+    y_full = low_rank(80, r, r, seed=s)
+    y = jnp.pad(y_full, ((0, 0), (0, s - r)))
+    q = np.asarray(linalg.cholqr2(y))
+    assert np.isfinite(q).all()
+    qtq = q.T @ q
+    # the first r columns span the range and are orthonormal; null columns
+    # collapse to ~0
+    diag = np.diag(qtq)
+    assert np.all((np.abs(diag - 1.0) < 1e-8) | (np.abs(diag) < 1e-6)), diag
+    # projector onto range(Y) is correct: Q Qᵀ y = y
+    np.testing.assert_allclose(q @ (q.T @ np.asarray(y)), np.asarray(y), atol=1e-8)
+
+
+def test_sumc_regression_padded_cluster():
+    """The exact failing configuration: rank-42 cluster padded to 512x256,
+    s=96 — must produce finite G with the true spectrum."""
+    a = low_rank(280, 80, 42, seed=0, pad_to=(512, 256))
+    _, _, g = model.rsvd_qbg(a, SEED, s=96, q=2)
+    g = np.asarray(g)
+    assert np.isfinite(g).all()
+    w = np.linalg.eigvalsh(g)[::-1]
+    sv = np.sqrt(np.maximum(w, 0))
+    exact = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(sv[:42], exact[:42], rtol=1e-8)
+    # trailing values ~0
+    assert sv[50] < 1e-6 * exact[0]
+
+
+def test_zero_matrix_is_finite():
+    a = jnp.zeros((64, 48), dtype=jnp.float64)
+    _, _, g = model.rsvd_qbg(a, SEED, s=16, q=1)
+    g = np.asarray(g)
+    assert np.isfinite(g).all()
+    assert np.abs(g).max() < 1e-10

@@ -1,0 +1,173 @@
+//! Benchmark harness: mean/std-of-N timing and the paper's speedup-ratio
+//! reporting (the exact error-interval formula from §4).
+//!
+//! The paper reports, per competitor `*`:
+//!   ratio = mean(*) / mean(ours)
+//!   interval = [ (mean(*) − std(*)) / (mean(ours) + std(ours)),
+//!                (mean(*) + std(*)) / (mean(ours) − std(ours)) ]
+//! with ratio > 1 meaning "ours is faster".
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over N runs.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub runs: usize,
+}
+
+impl Timing {
+    pub fn from_durations(ds: &[Duration]) -> Timing {
+        let n = ds.len().max(1) as f64;
+        let xs: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Timing { mean_s: mean, std_s: var.sqrt(), runs: ds.len() }
+    }
+}
+
+/// Run `f` `n` times (after one untimed warmup) and collect statistics.
+/// The warmup absorbs one-time costs (artifact compile, cache fill) that
+/// the paper's steady-state timings exclude.
+pub fn time_n(n: usize, mut f: impl FnMut()) -> Timing {
+    f(); // warmup
+    let mut ds = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        ds.push(t0.elapsed());
+    }
+    Timing::from_durations(&ds)
+}
+
+/// Paper speedup row: (ratio, interval_lo, interval_hi).
+pub fn speedup(other: &Timing, ours: &Timing) -> (f64, f64, f64) {
+    let ratio = other.mean_s / ours.mean_s;
+    let lo = (other.mean_s - other.std_s) / (ours.mean_s + ours.std_s);
+    let hi_den = ours.mean_s - ours.std_s;
+    let hi = if hi_den > 0.0 { (other.mean_s + other.std_s) / hi_den } else { f64::INFINITY };
+    (ratio, lo, hi)
+}
+
+/// Simple aligned-column table with markdown and CSV emitters.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n### {}\n", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV next to the bench (results/ dir) for plotting.
+    pub fn save_csv(&self, name: &str) {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{name}.csv"));
+        if std::fs::write(&path, self.to_csv()).is_ok() {
+            println!("(csv saved to {})", path.display());
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Format a speedup triple "ratio [lo, hi]".
+pub fn fmt_speedup(t: (f64, f64, f64)) -> String {
+    format!("{:.2}x [{:.2}, {:.2}]", t.0, t.1, t.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let ds = [Duration::from_millis(10), Duration::from_millis(20), Duration::from_millis(30)];
+        let t = Timing::from_durations(&ds);
+        assert!((t.mean_s - 0.020).abs() < 1e-9);
+        assert!((t.std_s - 0.00816496580927726).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_formula() {
+        let ours = Timing { mean_s: 1.0, std_s: 0.1, runs: 10 };
+        let other = Timing { mean_s: 10.0, std_s: 1.0, runs: 10 };
+        let (r, lo, hi) = speedup(&other, &ours);
+        assert!((r - 10.0).abs() < 1e-12);
+        assert!((lo - 9.0 / 1.1).abs() < 1e-12);
+        assert!((hi - 11.0 / 0.9).abs() < 1e-12);
+        assert!(lo <= r && r <= hi);
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn time_n_runs() {
+        let mut count = 0;
+        let t = time_n(5, || count += 1);
+        assert_eq!(count, 6); // 5 + warmup
+        assert_eq!(t.runs, 5);
+    }
+}

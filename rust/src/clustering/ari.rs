@@ -1,0 +1,86 @@
+//! Adjusted Rand Index (Hubert & Arabie 1985) — Table 1's quality metric.
+
+/// ARI between two labelings. 1.0 = identical partitions (up to label
+/// permutation), ~0 = random agreement, can be negative.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "label vectors must align");
+    let n = a.len();
+    if n <= 1 {
+        return 1.0;
+    }
+    let ka = 1 + *a.iter().max().unwrap_or(&0);
+    let kb = 1 + *b.iter().max().unwrap_or(&0);
+    // contingency table
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for (&x, &y) in a.iter().zip(b) {
+        table[x * kb + y] += 1;
+        rows[x] += 1;
+        cols[y] += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1)) as f64 / 2.0;
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| c2(x)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-300 {
+        return 1.0; // degenerate: both partitions trivial
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Philox4x32, RngCore};
+
+    #[test]
+    fn identical_is_one() {
+        let l = vec![0, 0, 1, 1, 2, 2, 2];
+        assert!((adjusted_rand_index(&l, &l) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_labels_still_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_labels_near_zero() {
+        let mut rng = Philox4x32::new(11);
+        let a: Vec<usize> = (0..2000).map(|_| rng.next_below(4) as usize).collect();
+        let b: Vec<usize> = (0..2000).map(|_| rng.next_below(4) as usize).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.05, "ari {ari}");
+    }
+
+    #[test]
+    fn disagreement_below_one() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 0, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari < 0.5, "ari {ari}");
+    }
+
+    #[test]
+    fn prop_symmetric_and_bounded() {
+        crate::testkit::check(100, |g| {
+            let n = g.usize(2..60);
+            let ka = g.usize(1..5);
+            let kb = g.usize(1..5);
+            let a: Vec<usize> = (0..n).map(|_| g.usize(0..ka)).collect();
+            let b: Vec<usize> = (0..n).map(|_| g.usize(0..kb)).collect();
+            let ab = adjusted_rand_index(&a, &b);
+            let ba = adjusted_rand_index(&b, &a);
+            crate::testkit::assert_close(ab, ba, 1e-12, "symmetry")?;
+            crate::testkit::assert_that(ab <= 1.0 + 1e-12, "bounded above")?;
+            crate::testkit::assert_that(ab >= -1.0 - 1e-12, "bounded below")?;
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Subspace clustering (SuMC) and clustering metrics — the paper's Table 1
+//! application, with the eigensolver backend swappable between the rust CPU
+//! baselines and the coordinator's device pipeline.
+
+pub mod ari;
+pub mod sumc;
+
+pub use ari::adjusted_rand_index;
+pub use sumc::{
+    proximity_init, random_init, sumc, sumc_restarts, CpuSolver, ServiceSolver, SubspaceSolver,
+    SumcCfg, SumcResult,
+};

@@ -1,0 +1,429 @@
+//! SuMC — subspace clustering by lossy compression (Struski, Tabor, Spurek,
+//! *Information Sciences* 2018): the paper's second application (Table 1).
+//!
+//! Each cluster is an affine subspace; the objective is the total
+//! compression error Σⱼ nⱼ·Eⱼ(dⱼ) under a global dimension budget
+//! Σⱼ dⱼ = D_total, where Eⱼ(d) is the mean squared residual of projecting
+//! cluster j onto its top-d principal subspace. The loop alternates:
+//!
+//!   1. per-cluster eigendecomposition of the centered scatter — **the
+//!      solver call Table 1 counts**, served by a pluggable backend
+//!      (pure-rust CPU solvers, or the coordinator's device pipeline);
+//!   2. greedy dimension (re-)allocation: granting cluster j its (d+1)-th
+//!      dimension removes nⱼ·λ_{d+1}(j) of cost — water-fill the budget;
+//!   3. point reassignment to the cluster with the smallest projection
+//!      residual.
+//!
+//! Converges when assignments stabilize (cost is monotone non-increasing
+//! in steps 2–3 for fixed subspaces).
+
+use super::ari::adjusted_rand_index;
+use crate::coordinator::{Coordinator, Method, Request};
+use crate::linalg::{blas, Matrix};
+
+/// Pluggable eigensolver backend — the CPU/GPU swap of Table 1.
+pub trait SubspaceSolver {
+    /// Top-`dmax` eigenpairs of the covariance of the (already centered)
+    /// cluster data `xc` (n×D). Returns (eigenvalues desc, components D×dmax).
+    fn subspace(&mut self, xc: &Matrix, dmax: usize) -> Result<(Vec<f64>, Matrix), String>;
+    /// Number of solver invocations so far.
+    fn calls(&self) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// CPU backend: Golub–Kahan SVD of the centered cluster (LAPACK-style).
+#[derive(Default)]
+pub struct CpuSolver {
+    calls: u64,
+}
+
+impl SubspaceSolver for CpuSolver {
+    fn subspace(&mut self, xc: &Matrix, dmax: usize) -> Result<(Vec<f64>, Matrix), String> {
+        self.calls += 1;
+        let n = xc.rows().max(1);
+        let f = crate::linalg::svd_gesvd::svd(xc);
+        let d = dmax.min(f.s.len());
+        let evals = f.s[..d].iter().map(|s| s * s / n as f64).collect();
+        Ok((evals, f.v.submatrix(0, f.v.rows(), 0, d)))
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu_gesvd"
+    }
+}
+
+/// Coordinator-backed backend: routes each eigenproblem through the
+/// service (device pipeline when a bucket fits — the paper's GPU path).
+pub struct ServiceSolver<'a> {
+    pub coord: &'a Coordinator,
+    pub method: Method,
+    pub seed: u64,
+    calls: u64,
+}
+
+impl<'a> ServiceSolver<'a> {
+    pub fn new(coord: &'a Coordinator, method: Method, seed: u64) -> Self {
+        Self { coord, method, seed, calls: 0 }
+    }
+}
+
+impl SubspaceSolver for ServiceSolver<'_> {
+    fn subspace(&mut self, xc: &Matrix, dmax: usize) -> Result<(Vec<f64>, Matrix), String> {
+        self.calls += 1;
+        let n = xc.rows().max(1);
+        let res = self
+            .coord
+            .run(Request::Svd {
+                a: xc.clone(),
+                k: dmax,
+                method: self.method,
+                want_vectors: true,
+                seed: self.seed ^ self.calls,
+            })
+            .outcome?;
+        let v = res.v.ok_or("solver returned no vectors")?;
+        let evals = res.values.iter().map(|s| s * s / n as f64).collect();
+        Ok((evals, v))
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &'static str {
+        "service"
+    }
+}
+
+/// SuMC configuration.
+#[derive(Clone, Debug)]
+pub struct SumcCfg {
+    pub n_clusters: usize,
+    /// global dimension budget Σ dⱼ (the "compression rate" knob; for the
+    /// planted datasets, the sum of true dims).
+    pub dim_budget: usize,
+    /// per-cluster cap on candidate dimensions (bounds solver cost).
+    pub max_dim: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+/// Clustering outcome + accounting.
+pub struct SumcResult {
+    pub labels: Vec<usize>,
+    /// allocated subspace dimension per cluster
+    pub dims: Vec<usize>,
+    pub iterations: usize,
+    pub solver_calls: u64,
+    /// final total compression cost Σ residuals
+    pub cost: f64,
+    pub converged: bool,
+}
+
+/// Run SuMC. `init` — initial labels (paper: "same initialization of points
+/// to clusters" across backends).
+pub fn sumc(
+    x: &Matrix,
+    init: &[usize],
+    cfg: &SumcCfg,
+    solver: &mut dyn SubspaceSolver,
+) -> Result<SumcResult, String> {
+    let (n, dim) = x.shape();
+    assert_eq!(init.len(), n);
+    let c = cfg.n_clusters;
+    let mut labels = init.to_vec();
+    let mut dims = vec![cfg.dim_budget / c; c];
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut cost = f64::INFINITY;
+
+    for _iter in 0..cfg.max_iters {
+        iterations += 1;
+        // ── step 1: per-cluster subspace fit
+        let mut means: Vec<Vec<f64>> = Vec::with_capacity(c);
+        let mut bases: Vec<Matrix> = Vec::with_capacity(c);
+        let mut evals: Vec<Vec<f64>> = Vec::with_capacity(c);
+        let mut sizes = vec![0usize; c];
+        for &l in &labels {
+            sizes[l] += 1;
+        }
+        for j in 0..c {
+            if sizes[j] == 0 {
+                // re-seed empty cluster at the point with the worst residual
+                means.push(vec![0.0; dim]);
+                bases.push(Matrix::zeros(dim, 0));
+                evals.push(vec![]);
+                continue;
+            }
+            let mut xj = Matrix::zeros(sizes[j], dim);
+            let mut r = 0;
+            for (i, &l) in labels.iter().enumerate() {
+                if l == j {
+                    xj.row_mut(r).copy_from_slice(x.row(i));
+                    r += 1;
+                }
+            }
+            let mu = crate::pca::column_means(&xj);
+            for rr in 0..xj.rows() {
+                let row = xj.row_mut(rr);
+                for (jj, m) in mu.iter().enumerate() {
+                    row[jj] -= m;
+                }
+            }
+            let dmax = cfg.max_dim.min(dim).min(sizes[j].saturating_sub(1)).max(1);
+            let (ev, w) = solver.subspace(&xj, dmax)?;
+            means.push(mu);
+            bases.push(w);
+            evals.push(ev);
+        }
+
+        // ── step 2: greedy dimension allocation under the budget
+        let mut alloc = vec![0usize; c];
+        for _ in 0..cfg.dim_budget {
+            // marginal gain of the next dimension for each cluster
+            let mut best: Option<(usize, f64)> = None;
+            for j in 0..c {
+                let d = alloc[j];
+                if d < evals[j].len() {
+                    let gain = sizes[j] as f64 * evals[j][d];
+                    if best.map(|(_, g)| gain > g).unwrap_or(true) {
+                        best = Some((j, gain));
+                    }
+                }
+            }
+            match best {
+                Some((j, _)) => alloc[j] += 1,
+                None => break,
+            }
+        }
+        dims = alloc;
+
+        // ── step 3: reassignment by projection residual
+        let mut new_labels = vec![0usize; n];
+        let mut new_cost = 0.0;
+        let mut centered = vec![0.0; dim];
+        let mut proj = vec![0.0; cfg.max_dim.min(dim)];
+        for i in 0..n {
+            let mut best_j = labels[i];
+            let mut best_r = f64::INFINITY;
+            for j in 0..c {
+                if sizes[j] == 0 {
+                    continue;
+                }
+                let row = x.row(i);
+                for (t, cen) in centered.iter_mut().enumerate() {
+                    *cen = row[t] - means[j][t];
+                }
+                let full = blas::dot(&centered, &centered);
+                let d = dims[j].min(bases[j].cols());
+                let mut captured = 0.0;
+                for t in 0..d {
+                    // wᵗ·centered, column t of basis
+                    let mut s = 0.0;
+                    for r in 0..dim {
+                        s += bases[j][(r, t)] * centered[r];
+                    }
+                    proj[t] = s;
+                    captured += s * s;
+                }
+                let resid = (full - captured).max(0.0);
+                if resid < best_r {
+                    best_r = resid;
+                    best_j = j;
+                }
+            }
+            new_labels[i] = best_j;
+            new_cost += best_r;
+        }
+
+        let stable = new_labels == labels;
+        labels = new_labels;
+        cost = new_cost;
+        if stable {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(SumcResult {
+        labels,
+        dims,
+        iterations,
+        solver_calls: solver.calls(),
+        cost,
+        converged,
+    })
+}
+
+/// Random initial assignment (balanced-ish), shared across backends.
+pub fn random_init(n: usize, c: usize, seed: u64) -> Vec<usize> {
+    let perm = crate::datagen::permutation(n, seed);
+    let mut labels = vec![0usize; n];
+    for (rank, &i) in perm.iter().enumerate() {
+        labels[i] = rank % c;
+    }
+    labels
+}
+
+/// k-means++-style proximity init: pick spread-out seed points, assign by
+/// Euclidean distance. Affine-subspace clusters differ in their offsets, so
+/// distance-based seeding starts the alternation near a good basin — the
+/// standard cure for the random-init local minima of k-subspace methods.
+pub fn proximity_init(x: &Matrix, c: usize, seed: u64) -> Vec<usize> {
+    let n = x.rows();
+    let mut rng = crate::rng::Philox4x32::new(seed);
+    use crate::rng::RngCore;
+    let mut seeds = vec![rng.next_below(n as u64) as usize];
+    let mut dist2 = vec![f64::INFINITY; n];
+    while seeds.len() < c {
+        let last = *seeds.last().unwrap();
+        for i in 0..n {
+            let d = row_dist2(x, i, last);
+            if d < dist2[i] {
+                dist2[i] = d;
+            }
+        }
+        // d² sampling
+        let total: f64 = dist2.iter().sum();
+        let mut target = rng.next_f64() * total;
+        let mut pick = n - 1;
+        for (i, &d) in dist2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        seeds.push(pick);
+    }
+    (0..n)
+        .map(|i| {
+            (0..c)
+                .min_by(|&a, &b| {
+                    row_dist2(x, i, seeds[a])
+                        .partial_cmp(&row_dist2(x, i, seeds[b]))
+                        .unwrap()
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+fn row_dist2(x: &Matrix, i: usize, j: usize) -> f64 {
+    let (a, b) = (x.row(i), x.row(j));
+    a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum()
+}
+
+/// Multi-restart wrapper: run SuMC from `restarts` different proximity
+/// inits and keep the lowest-cost result (the compression objective is the
+/// model-selection criterion — no ground truth needed).
+pub fn sumc_restarts(
+    x: &Matrix,
+    cfg: &SumcCfg,
+    restarts: usize,
+    solver: &mut dyn SubspaceSolver,
+) -> Result<SumcResult, String> {
+    let mut best: Option<SumcResult> = None;
+    for r in 0..restarts.max(1) {
+        let init = proximity_init(x, cfg.n_clusters, cfg.seed.wrapping_add(r as u64 * 101));
+        let res = sumc(x, &init, cfg, solver)?;
+        if best.as_ref().map(|b| res.cost < b.cost).unwrap_or(true) {
+            best = Some(res);
+        }
+    }
+    Ok(best.unwrap())
+}
+
+/// Convenience: ARI against ground truth.
+pub fn score(result: &SumcResult, truth: &[usize]) -> f64 {
+    adjusted_rand_index(&result.labels, truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::subspace_mixture;
+
+    #[test]
+    fn recovers_planted_subspaces_cpu() {
+        // well-separated planted subspaces of distinct dims
+        let ds = subspace_mixture(30, &[(2, 60), (5, 80)], 5);
+        let cfg = SumcCfg {
+            n_clusters: 2,
+            dim_budget: 7,
+            max_dim: 8,
+            max_iters: 25,
+            seed: 3,
+        };
+        let mut solver = CpuSolver::default();
+        let res = sumc_restarts(&ds.x, &cfg, 4, &mut solver).unwrap();
+        let ari = score(&res, &ds.labels);
+        assert!(ari > 0.95, "ARI {ari} dims {:?} iters {}", res.dims, res.iterations);
+        assert!(res.solver_calls > 0);
+        // budget respected
+        assert!(res.dims.iter().sum::<usize>() <= 7);
+    }
+
+    #[test]
+    fn dimension_allocation_finds_planted_dims() {
+        let ds = subspace_mixture(24, &[(3, 70), (6, 90)], 11);
+        let cfg = SumcCfg {
+            n_clusters: 2,
+            dim_budget: 9,
+            max_dim: 10,
+            max_iters: 30,
+            seed: 1,
+        };
+        let mut solver = CpuSolver::default();
+        let res = sumc_restarts(&ds.x, &cfg, 4, &mut solver).unwrap();
+        if score(&res, &ds.labels) > 0.95 {
+            let mut d = res.dims.clone();
+            d.sort();
+            assert_eq!(d, vec![3, 6], "allocated dims should match planted");
+        }
+    }
+
+    #[test]
+    fn service_backend_matches_cpu() {
+        let ds = subspace_mixture(20, &[(2, 40), (4, 50)], 7);
+        let cfg = SumcCfg {
+            n_clusters: 2,
+            dim_budget: 6,
+            max_dim: 7,
+            max_iters: 20,
+            seed: 5,
+        };
+        let init = proximity_init(&ds.x, 2, 4);
+        let mut cpu = CpuSolver::default();
+        let r1 = sumc(&ds.x, &init, &cfg, &mut cpu).unwrap();
+        let coord =
+            Coordinator::start_host_only(crate::coordinator::CoordinatorCfg::default());
+        let mut svc = ServiceSolver::new(&coord, Method::Gesvd, 1);
+        let r2 = sumc(&ds.x, &init, &cfg, &mut svc).unwrap();
+        // same deterministic solver → identical trajectories
+        assert_eq!(r1.labels, r2.labels);
+        assert_eq!(r1.dims, r2.dims);
+        assert_eq!(r1.solver_calls, r2.solver_calls);
+    }
+
+    #[test]
+    fn cost_is_finite_and_converges() {
+        let ds = subspace_mixture(16, &[(2, 30), (3, 30)], 13);
+        let cfg = SumcCfg {
+            n_clusters: 2,
+            dim_budget: 5,
+            max_dim: 6,
+            max_iters: 40,
+            seed: 8,
+        };
+        let init = proximity_init(&ds.x, 2, 1);
+        let mut solver = CpuSolver::default();
+        let res = sumc(&ds.x, &init, &cfg, &mut solver).unwrap();
+        assert!(res.cost.is_finite());
+        assert!(res.converged, "should converge in 40 iters");
+    }
+}

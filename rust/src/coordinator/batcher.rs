@@ -1,0 +1,104 @@
+//! Dynamic batcher: groups queued jobs by route target.
+//!
+//! Jobs that resolve to the same device artifact are executed as one batch:
+//! a single executable-cache hit, warm device state, and (on a multi-device
+//! PJRT topology) a single batched dispatch. Host jobs batch by method so a
+//! pool worker keeps its instruction cache warm. The planning step is pure
+//! (and property-tested): conservation — every job appears in exactly one
+//! batch, order preserved within a batch, never exceeding `max_batch`.
+
+use std::collections::BTreeMap;
+
+/// Batch of job indices sharing a route key.
+#[derive(Debug, PartialEq)]
+pub struct Batch {
+    pub key: String,
+    pub jobs: Vec<usize>,
+}
+
+/// Group `keys[i]` (the route key of job i) into batches of ≤ `max_batch`,
+/// preserving submission order inside each batch and ordering batches by
+/// first-job arrival (fairness: no starvation of singleton routes).
+pub fn plan_batches(keys: &[String], max_batch: usize) -> Vec<Batch> {
+    assert!(max_batch > 0);
+    let mut by_key: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut first_seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, k) in keys.iter().enumerate() {
+        by_key.entry(k).or_default().push(i);
+        first_seen.entry(k).or_insert(i);
+    }
+    let mut batches = Vec::new();
+    for (key, jobs) in by_key {
+        for chunk in jobs.chunks(max_batch) {
+            batches.push(Batch { key: key.to_string(), jobs: chunk.to_vec() });
+        }
+    }
+    // fairness: order batches by the arrival of their first job
+    batches.sort_by_key(|b| b.jobs[0]);
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, Gen};
+
+    fn keys(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn groups_by_key() {
+        let b = plan_batches(&keys(&["a", "b", "a", "a", "b"]), 10);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].key, "a");
+        assert_eq!(b[0].jobs, vec![0, 2, 3]);
+        assert_eq!(b[1].key, "b");
+        assert_eq!(b[1].jobs, vec![1, 4]);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let b = plan_batches(&keys(&["a"; 7]), 3);
+        assert_eq!(b.iter().map(|x| x.jobs.len()).collect::<Vec<_>>(), vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn batch_order_is_arrival_order() {
+        let b = plan_batches(&keys(&["z", "a", "z"]), 10);
+        assert_eq!(b[0].key, "z"); // z arrived first
+        assert_eq!(b[1].key, "a");
+    }
+
+    /// Property: conservation + ordering, over random key sequences.
+    #[test]
+    fn prop_conservation() {
+        testkit::check(200, |g: &mut Gen| {
+            let n = g.usize(0..40);
+            let nkeys = g.usize(1..6);
+            let keys: Vec<String> =
+                (0..n).map(|_| format!("k{}", g.usize(0..nkeys))).collect();
+            let max_batch = g.usize(1..8);
+            let batches = plan_batches(&keys, max_batch);
+            // every index exactly once
+            let mut seen: Vec<usize> = batches.iter().flat_map(|b| b.jobs.clone()).collect();
+            seen.sort();
+            testkit::assert_that(
+                seen == (0..n).collect::<Vec<_>>(),
+                &format!("conservation violated: {seen:?}"),
+            )?;
+            for b in &batches {
+                testkit::assert_that(b.jobs.len() <= max_batch, "max_batch exceeded")?;
+                testkit::assert_that(
+                    b.jobs.windows(2).all(|w| w[0] < w[1]),
+                    "order not preserved in batch",
+                )?;
+                testkit::assert_that(
+                    b.jobs.iter().all(|&i| keys[i] == b.key),
+                    "job in wrong batch",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

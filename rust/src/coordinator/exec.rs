@@ -1,0 +1,268 @@
+//! Job execution: run a routed request on the device engine or a host
+//! solver and produce a `Decomposition`.
+
+use super::job::{Decomposition, Method, Request};
+use super::router::Route;
+use crate::linalg::{
+    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Matrix,
+};
+use crate::runtime::{finish_rsvd, finish_values, Engine};
+
+/// Execute one request along its route.
+pub fn execute(req: &Request, route: &Route, engine: Option<&Engine>) -> Result<Decomposition, String> {
+    match route {
+        Route::Device { name } => {
+            let engine = engine.ok_or("device route but no engine attached")?;
+            run_device(req, name, engine)
+        }
+        Route::Host { method } => run_host(req, *method),
+    }
+}
+
+fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decomposition, String> {
+    let spec = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.name == artifact)
+        .ok_or_else(|| format!("artifact {artifact} not in manifest"))?
+        .clone();
+    match req {
+        Request::Svd { a, k, want_vectors, seed, .. } => {
+            let out = engine
+                .run_rsvd(&spec, a, split_seed(*seed))
+                .map_err(|e| format!("device exec: {e:#}"))?;
+            let k = (*k).min(spec.s);
+            if *want_vectors {
+                let f = finish_rsvd(&out, k, a.rows(), a.cols());
+                Ok(Decomposition {
+                    values: f.s.clone(),
+                    u: Some(f.u),
+                    v: Some(f.v),
+                    method_used: "device",
+                    bucket: Some(spec.name.clone()),
+                })
+            } else {
+                Ok(Decomposition {
+                    values: finish_values(&out, k),
+                    u: None,
+                    v: None,
+                    method_used: "device",
+                    bucket: Some(spec.name.clone()),
+                })
+            }
+        }
+        Request::Pca { x, k, seed, .. } => {
+            let out = engine
+                .run_rsvd(&spec, x, split_seed(*seed))
+                .map_err(|e| format!("device exec: {e:#}"))?;
+            let k = (*k).min(spec.s);
+            let f = finish_rsvd(&out, k, x.rows(), x.cols());
+            let n = x.rows() as f64;
+            Ok(Decomposition {
+                values: f.s.iter().map(|s| s * s / n).collect(),
+                u: None,
+                v: Some(f.v),
+                method_used: "device",
+                bucket: Some(spec.name.clone()),
+            })
+        }
+    }
+}
+
+fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
+    match req {
+        Request::Svd { a, k, want_vectors, seed, .. } => {
+            host_svd(a, *k, method, *want_vectors, *seed)
+        }
+        Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
+    }
+}
+
+fn host_svd(
+    a: &Matrix,
+    k: usize,
+    method: Method,
+    want_vectors: bool,
+    seed: u64,
+) -> Result<Decomposition, String> {
+    let r = a.rows().min(a.cols());
+    let k = k.min(r);
+    let trunc = |s: crate::linalg::Svd| Decomposition {
+        values: s.s[..k.min(s.s.len())].to_vec(),
+        u: want_vectors.then(|| s.u.submatrix(0, s.u.rows(), 0, k.min(s.u.cols()))),
+        v: want_vectors.then(|| s.v.submatrix(0, s.v.rows(), 0, k.min(s.v.cols()))),
+        method_used: method.name(),
+        bucket: None,
+    };
+    match method {
+        Method::Gesvd => {
+            if want_vectors {
+                Ok(trunc(svd_gesvd::svd(a)))
+            } else {
+                Ok(Decomposition {
+                    values: svd_gesvd::singular_values(a)[..k].to_vec(),
+                    u: None,
+                    v: None,
+                    method_used: method.name(),
+                    bucket: None,
+                })
+            }
+        }
+        Method::Jacobi => Ok(trunc(svd_jacobi::svd_jacobi(a))),
+        Method::Lanczos => Ok(trunc(lanczos::svds_opts(
+            a,
+            k,
+            &lanczos::LanczosOpts { seed, ..Default::default() },
+        ))),
+        Method::PartialEigen => {
+            // dsyevr analog: k largest eigenpairs of the Gram matrix of the
+            // short side; σ = √λ.
+            let (m, n) = a.shape();
+            let g = if n <= m { gemm::gram_t(a) } else { gemm::gram_n(a) };
+            if want_vectors {
+                let (w, v) = eigen::eigh_partial(&g, k);
+                let sigma: Vec<f64> = w.iter().map(|x| x.max(0.0).sqrt()).collect();
+                // v holds the short-side singular vectors
+                let (u_out, v_out) = if n <= m {
+                    // v are right vectors; U = A V Σ⁻¹
+                    let av = gemm::matmul(a, &v);
+                    (Some(scale_cols(av, &sigma)), Some(v))
+                } else {
+                    let atv = gemm::matmul_tn(a, &v);
+                    (Some(v), Some(scale_cols(atv, &sigma)))
+                };
+                Ok(Decomposition {
+                    values: sigma,
+                    u: if want_vectors { u_out } else { None },
+                    v: v_out,
+                    method_used: method.name(),
+                    bucket: None,
+                })
+            } else {
+                let w = eigen::eigvalsh_partial(&g, k);
+                Ok(Decomposition {
+                    values: w.iter().map(|x| x.max(0.0).sqrt()).collect(),
+                    u: None,
+                    v: None,
+                    method_used: method.name(),
+                    bucket: None,
+                })
+            }
+        }
+        Method::NativeRsvd | Method::Auto | Method::Device => {
+            let opts = native_rsvd::RsvdOpts { seed, ..Default::default() };
+            if want_vectors {
+                Ok(trunc(native_rsvd::rsvd(a, k, &opts)))
+            } else {
+                Ok(Decomposition {
+                    values: native_rsvd::rsvd_values(a, k, &opts),
+                    u: None,
+                    v: None,
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            }
+        }
+    }
+}
+
+fn host_pca(x: &Matrix, k: usize, method: Method, seed: u64) -> Result<Decomposition, String> {
+    // center
+    let (n, _d) = x.shape();
+    let mut xc = x.clone();
+    for j in 0..xc.cols() {
+        let mu: f64 = (0..n).map(|i| xc[(i, j)]).sum::<f64>() / n as f64;
+        for i in 0..n {
+            xc[(i, j)] -= mu;
+        }
+    }
+    let svd_req = host_svd(&xc, k, effective_pca_method(method), true, seed)?;
+    Ok(Decomposition {
+        values: svd_req.values.iter().map(|s| s * s / n as f64).collect(),
+        u: None,
+        v: svd_req.v,
+        method_used: svd_req.method_used,
+        bucket: None,
+    })
+}
+
+fn effective_pca_method(m: Method) -> Method {
+    match m {
+        Method::Auto | Method::Device => Method::NativeRsvd,
+        other => other,
+    }
+}
+
+fn scale_cols(mut m: Matrix, sigma: &[f64]) -> Matrix {
+    for j in 0..m.cols().min(sigma.len()) {
+        let inv = if sigma[j] > 0.0 { 1.0 / sigma[j] } else { 0.0 };
+        for i in 0..m.rows() {
+            m[(i, j)] *= inv;
+        }
+    }
+    m
+}
+
+fn split_seed(seed: u64) -> [u32; 2] {
+    [(seed >> 32) as u32, seed as u32]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{Method, Request};
+
+    fn req(a: Matrix, k: usize, m: Method, vecs: bool) -> Request {
+        Request::Svd { a, k, method: m, want_vectors: vecs, seed: 3 }
+    }
+
+    #[test]
+    fn host_methods_agree_on_values() {
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) as f64).powi(2), 5);
+        let exact = svd_gesvd::svd(&a);
+        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen, Method::NativeRsvd] {
+            let d = run_host(&req(a.clone(), 4, m, false), m).unwrap();
+            assert_eq!(d.values.len(), 4);
+            for i in 0..4 {
+                let rel = (d.values[i] - exact.s[i]).abs() / exact.s[0];
+                assert!(rel < 1e-7, "{m:?} σ{i}: {} vs {} ({rel})", d.values[i], exact.s[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn host_vectors_reconstruct() {
+        let a = crate::datagen_test_matrix(30, 20, |i| 1.0 / (1 + i) as f64, 7);
+        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen] {
+            let d = run_host(&req(a.clone(), 3, m, true), m).unwrap();
+            let u = d.u.as_ref().unwrap();
+            let v = d.v.as_ref().unwrap();
+            // residual ‖A v_i − σ_i u_i‖ small
+            for t in 0..3 {
+                let vc = v.col(t);
+                let mut av = vec![0.0; 30];
+                crate::linalg::blas::gemv(&a, &vc, &mut av);
+                for i in 0..30 {
+                    av[i] -= d.values[t] * u[(i, t)];
+                }
+                let res = crate::linalg::blas::nrm2(&av);
+                assert!(res < 1e-6 * d.values[0], "{m:?} triplet {t} residual {res}");
+            }
+        }
+    }
+
+    #[test]
+    fn host_pca_centers() {
+        // identical constant offset on all points: PCA eigenvalues of the
+        // centered data must be ~0 for a rank-1 offset cloud
+        let mut x = Matrix::zeros(20, 5);
+        for i in 0..20 {
+            for j in 0..5 {
+                x[(i, j)] = 7.0; // constant — zero variance
+            }
+        }
+        let d = host_pca(&x, 2, Method::Gesvd, 1).unwrap();
+        assert!(d.values[0].abs() < 1e-18, "constant data has no variance");
+    }
+}

@@ -1,0 +1,186 @@
+//! Job model: decomposition requests, results, and solver selection.
+
+use crate::linalg::Matrix;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Which solver backend to use. `Auto` lets the router decide (device
+/// pipeline when a bucket fits, native randomized otherwise, exact solvers
+/// when k is a large fraction of the spectrum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Auto,
+    /// AOT pipeline via PJRT ("ours" / the paper's GPU path).
+    Device,
+    /// Pure-rust Algorithm 1 (R-rsvd analog; also the device fallback).
+    NativeRsvd,
+    /// Golub–Kahan full SVD (LAPACK dgesvd analog).
+    Gesvd,
+    /// One-sided Jacobi full SVD (cuSOLVER gesvdj analog).
+    Jacobi,
+    /// Lanczos partial SVD (RSpectra svds analog).
+    Lanczos,
+    /// Tridiagonal bisection partial eigensolver on AᵀA (dsyevr analog).
+    PartialEigen,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Auto => "auto",
+            Method::Device => "device",
+            Method::NativeRsvd => "native_rsvd",
+            Method::Gesvd => "gesvd",
+            Method::Jacobi => "jacobi",
+            Method::Lanczos => "lanczos",
+            Method::PartialEigen => "partial_eigen",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "auto" => Method::Auto,
+            "device" => Method::Device,
+            "native_rsvd" | "rsvd" => Method::NativeRsvd,
+            "gesvd" => Method::Gesvd,
+            "jacobi" => Method::Jacobi,
+            "lanczos" | "svds" => Method::Lanczos,
+            "partial_eigen" | "dsyevr" => Method::PartialEigen,
+            _ => return None,
+        })
+    }
+}
+
+/// A decomposition request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// k largest singular triplets (or values only) of `a`.
+    Svd {
+        a: Matrix,
+        k: usize,
+        method: Method,
+        want_vectors: bool,
+        seed: u64,
+    },
+    /// k principal components of row-sample matrix `x` (centered by the
+    /// solver). Returns eigenvalues of the covariance and components in `v`.
+    Pca {
+        x: Matrix,
+        k: usize,
+        method: Method,
+        seed: u64,
+    },
+}
+
+impl Request {
+    pub fn k(&self) -> usize {
+        match self {
+            Request::Svd { k, .. } | Request::Pca { k, .. } => *k,
+        }
+    }
+
+    pub fn method(&self) -> Method {
+        match self {
+            Request::Svd { method, .. } | Request::Pca { method, .. } => *method,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Request::Svd { a, .. } => a.shape(),
+            Request::Pca { x, .. } => x.shape(),
+        }
+    }
+}
+
+/// Successful decomposition.
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    /// Singular values (SVD) or covariance eigenvalues (PCA), descending.
+    pub values: Vec<f64>,
+    /// Left singular vectors (SVD only, when requested).
+    pub u: Option<Matrix>,
+    /// Right singular vectors / principal components.
+    pub v: Option<Matrix>,
+    /// Backend that actually served the job.
+    pub method_used: &'static str,
+    /// Artifact bucket used, if the device path served it.
+    pub bucket: Option<String>,
+}
+
+/// Completed job envelope.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub outcome: Result<Decomposition, String>,
+    /// queue wait (submit → dispatch)
+    pub queued: Duration,
+    /// solver execution
+    pub exec: Duration,
+}
+
+/// Internal job representation flowing through the queue.
+pub struct Job {
+    pub id: u64,
+    pub request: Request,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<JobResult>,
+}
+
+/// Caller-side handle to an in-flight job.
+pub struct JobHandle {
+    pub id: u64,
+    pub(crate) rx: mpsc::Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> JobResult {
+        self.rx.recv().unwrap_or(JobResult {
+            id: self.id,
+            outcome: Err("coordinator dropped the job".into()),
+            queued: Duration::ZERO,
+            exec: Duration::ZERO,
+        })
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_roundtrip() {
+        for m in [
+            Method::Auto,
+            Method::Device,
+            Method::NativeRsvd,
+            Method::Gesvd,
+            Method::Jacobi,
+            Method::Lanczos,
+            Method::PartialEigen,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m), "{m:?}");
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn request_accessors() {
+        let r = Request::Svd {
+            a: Matrix::zeros(5, 3),
+            k: 2,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+        };
+        assert_eq!(r.k(), 2);
+        assert_eq!(r.shape(), (5, 3));
+        assert_eq!(r.method(), Method::Auto);
+    }
+}

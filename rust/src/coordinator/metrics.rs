@@ -1,0 +1,211 @@
+//! Metrics: latency histograms, per-backend counters, solver-call
+//! accounting (Table 1's "Solver calls" column comes from here).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (µs granularity, factor-2 buckets from
+/// 1µs to ~1h). Lock-free reads are unnecessary here; a mutex keeps it
+/// simple and contention is negligible next to solver work.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    sum_us: u128,
+    max_us: u128,
+}
+
+const NBUCKETS: usize = 42;
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; NBUCKETS], sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1);
+        let b = (127 - (us as u128).leading_zeros() as usize).min(NBUCKETS - 1);
+        self.counts[b] += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / n as u128) as u64)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us as u64)
+    }
+
+    /// Approximate quantile from bucket upper bounds (within 2× of truth —
+    /// fine for p50/p95/p99 reporting).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // bucket upper bound, clamped to the observed maximum
+                let bound = Duration::from_micros(1u64 << (b + 1).min(63));
+                return bound.min(self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub solver_calls: BTreeMap<String, u64>,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub queue_mean: Duration,
+    pub queue_p95: Duration,
+    pub exec_mean: Duration,
+    pub exec_p50: Duration,
+    pub exec_p95: Duration,
+    pub exec_p99: Duration,
+    pub exec_max: Duration,
+}
+
+impl Snapshot {
+    pub fn print(&self) {
+        println!("── coordinator metrics ──");
+        println!("jobs: {} ok, {} failed", self.jobs_completed, self.jobs_failed);
+        println!(
+            "batches: {} ({} jobs batched, {:.2} jobs/batch)",
+            self.batches,
+            self.batched_jobs,
+            if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 }
+        );
+        println!("queue: mean {:?}, p95 {:?}", self.queue_mean, self.queue_p95);
+        println!(
+            "exec: mean {:?}, p50 {:?}, p95 {:?}, p99 {:?}, max {:?}",
+            self.exec_mean, self.exec_p50, self.exec_p95, self.exec_p99, self.exec_max
+        );
+        for (backend, calls) in &self.solver_calls {
+            println!("solver calls [{backend}]: {calls}");
+        }
+    }
+}
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    completed: u64,
+    failed: u64,
+    solver_calls: BTreeMap<String, u64>,
+    batches: u64,
+    batched_jobs: u64,
+    queue: Option<Histogram>,
+    exec: Option<Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn record_job(&self, backend: &str, queued: Duration, exec: Duration, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if ok {
+            g.completed += 1;
+        } else {
+            g.failed += 1;
+        }
+        *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
+        g.queue.get_or_insert_with(Histogram::new).record(queued);
+        g.exec.get_or_insert_with(Histogram::new).record(exec);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_jobs += size as u64;
+    }
+
+    /// Total solver calls across backends (Table 1 accounting).
+    pub fn total_solver_calls(&self) -> u64 {
+        self.inner.lock().unwrap().solver_calls.values().sum()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let empty = Histogram::new();
+        let queue = g.queue.as_ref().unwrap_or(&empty);
+        let exec = g.exec.as_ref().unwrap_or(&empty);
+        Snapshot {
+            jobs_completed: g.completed,
+            jobs_failed: g.failed,
+            solver_calls: g.solver_calls.clone(),
+            batches: g.batches,
+            batched_jobs: g.batched_jobs,
+            queue_mean: queue.mean(),
+            queue_p95: queue.quantile(0.95),
+            exec_mean: exec.mean(),
+            exec_p50: exec.quantile(0.5),
+            exec_p95: exec.quantile(0.95),
+            exec_p99: exec.quantile(0.99),
+            exec_max: exec.max(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        assert!(h.mean() >= Duration::from_micros(400));
+        assert!(h.mean() <= Duration::from_micros(700));
+        assert_eq!(h.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn metrics_accounting() {
+        let m = Metrics::new();
+        m.record_job("device", Duration::from_micros(5), Duration::from_millis(2), true);
+        m.record_job("device", Duration::from_micros(7), Duration::from_millis(3), true);
+        m.record_job("gesvd", Duration::from_micros(9), Duration::from_millis(90), false);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.solver_calls["device"], 2);
+        assert_eq!(s.solver_calls["gesvd"], 1);
+        assert_eq!(m.total_solver_calls(), 3);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_jobs, 2);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the serving layer around the decomposition solvers.
+//!
+//! ```text
+//! submit(Request) ─▶ queue ─▶ [batch window] ─▶ router ─▶ executor ─▶ reply
+//!                                │                │
+//!                                │                ├─ Device: PJRT artifact
+//!                                └─ batcher       └─ Host: rust baselines
+//! ```
+//!
+//! The paper's contribution is the solver pipeline itself; this layer is
+//! what makes it a *system*: shape-bucketed artifact routing with zero-pad
+//! invariance, dynamic batching, backend fallback, and the metrics that
+//! Table 1 ("solver calls") and the serve example report.
+
+pub mod batcher;
+pub mod exec;
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Request};
+pub use metrics::{Metrics, Snapshot};
+pub use router::{Route, RouterCfg};
+pub use server::{Coordinator, CoordinatorCfg};

@@ -1,0 +1,183 @@
+//! Routing policy: which backend serves a request.
+//!
+//! `Auto` policy (mirrors how the paper positions the method):
+//!   * k beyond `full_spectrum_cutoff` of min(m,n) → randomized sketching
+//!     stops paying for itself (s→n makes the pipeline a full QR); route to
+//!     the exact full solver.
+//!   * otherwise, if a device bucket fits (shape ≤ bucket, s = k + p ≤
+//!     bucket.s) → device pipeline.
+//!   * otherwise → native rust Algorithm 1 (same math, host BLAS).
+
+use super::job::{Method, Request};
+use crate::runtime::{ArtifactKind, Manifest};
+
+/// Resolved route for one job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Route {
+    /// Execute artifact `name` (device path).
+    Device { name: String },
+    /// Host solver.
+    Host { method: Method },
+}
+
+/// Routing configuration.
+#[derive(Clone, Debug)]
+pub struct RouterCfg {
+    /// oversampling p for s = k + p (paper default 10)
+    pub oversample: usize,
+    /// preferred artifact implementation ("xladot" | "pallas")
+    pub impl_name: String,
+    /// k/min(m,n) above which exact full SVD is routed instead
+    pub full_spectrum_cutoff: f64,
+    /// default power iterations (must match exported buckets)
+    pub power_iters: usize,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        Self {
+            oversample: 10,
+            impl_name: "xladot".into(),
+            full_spectrum_cutoff: 0.5,
+            power_iters: 2,
+        }
+    }
+}
+
+/// Decide the route for a request against the artifact inventory.
+pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
+    let method = req.method();
+    if method != Method::Auto && method != Method::Device {
+        return Route::Host { method };
+    }
+    let (m, n) = req.shape();
+    let k = req.k();
+    let r = m.min(n);
+
+    // degenerate/full-spectrum territory → exact solver
+    if method == Method::Auto && (k as f64) > cfg.full_spectrum_cutoff * r as f64 {
+        return Route::Host { method: Method::Gesvd };
+    }
+
+    let s = (k + cfg.oversample).min(r);
+    let bucket = match req {
+        Request::Svd { .. } => manifest.pick_bucket(
+            ArtifactKind::Rsvd,
+            &cfg.impl_name,
+            m,
+            n,
+            s,
+            Some(cfg.power_iters),
+        ),
+        Request::Pca { .. } => manifest.pick_pca_bucket(&cfg.impl_name, m, n, s),
+    };
+    match bucket {
+        Some(spec) => Route::Device { name: spec.name.clone() },
+        None => {
+            if method == Method::Device {
+                // explicit device request with no bucket: surface the miss
+                // as a host fallback with the same algorithm
+                Route::Host { method: Method::NativeRsvd }
+            } else {
+                Route::Host { method: Method::NativeRsvd }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Request;
+    use crate::linalg::Matrix;
+    use crate::runtime::Manifest;
+
+    fn toy_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("rsvd_router_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{"version":1,"artifacts":[
+          {"name":"r_small","kind":"rsvd","file":"x.hlo.txt","m":256,"n":128,"s":32,"q":2,"impl":"xladot"},
+          {"name":"r_big","kind":"rsvd","file":"y.hlo.txt","m":2048,"n":1024,"s":128,"q":2,"impl":"xladot"},
+          {"name":"p_one","kind":"pca","file":"z.hlo.txt","m":2048,"n":768,"s":64,"q":2,"impl":"xladot"}
+        ]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    fn svd_req(m: usize, n: usize, k: usize, method: Method) -> Request {
+        Request::Svd { a: Matrix::zeros(m, n), k, method, want_vectors: false, seed: 0 }
+    }
+
+    #[test]
+    fn auto_routes_to_fitting_bucket() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        match route(&svd_req(200, 100, 8, Method::Auto), &man, &cfg) {
+            Route::Device { name } => assert_eq!(name, "r_small"),
+            other => panic!("{other:?}"),
+        }
+        // bigger shape → bigger bucket
+        match route(&svd_req(2000, 1000, 20, Method::Auto), &man, &cfg) {
+            Route::Device { name } => assert_eq!(name, "r_big"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_when_no_bucket() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        // too large for any bucket
+        match route(&svd_req(4096, 2048, 8, Method::Auto), &man, &cfg) {
+            Route::Host { method } => assert_eq!(method, Method::NativeRsvd),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_k_routes_to_exact() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        match route(&svd_req(200, 100, 80, Method::Auto), &man, &cfg) {
+            Route::Host { method } => assert_eq!(method, Method::Gesvd),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_methods_respected() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen, Method::NativeRsvd] {
+            match route(&svd_req(200, 100, 8, m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, m),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pca_routes_to_exact_sample_bucket() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        let req = Request::Pca { x: Matrix::zeros(2048, 700), k: 10, method: Method::Auto, seed: 0 };
+        match route(&req, &man, &cfg) {
+            Route::Device { name } => assert_eq!(name, "p_one"),
+            other => panic!("{other:?}"),
+        }
+        // sample count mismatch → host
+        let req = Request::Pca { x: Matrix::zeros(1000, 700), k: 10, method: Method::Auto, seed: 0 };
+        assert!(matches!(route(&req, &man, &cfg), Route::Host { .. }));
+    }
+
+    #[test]
+    fn oversample_respects_bucket_s() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        // k=30 → s=40 > 32: r_small doesn't fit, needs r_big
+        match route(&svd_req(200, 100, 30, Method::Auto), &man, &cfg) {
+            Route::Device { name } => assert_eq!(name, "r_big"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

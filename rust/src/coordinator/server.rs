@@ -1,0 +1,339 @@
+//! The coordinator server: job queue → dynamic batcher → router → executor.
+//!
+//! Thread model (no async runtime is needed — jobs are CPU-bound solver
+//! calls): one dispatcher thread owns the queue; it drains a batching
+//! window, groups jobs by route (batcher), and executes groups, replying
+//! through per-job channels. The PJRT engine is shared behind `Arc`.
+
+use super::batcher::plan_batches;
+use super::job::{Job, JobHandle, JobResult, Request};
+use super::metrics::Metrics;
+use super::router::{route, Route, RouterCfg};
+use crate::runtime::{ArtifactKind, Engine};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorCfg {
+    pub router: RouterCfg,
+    /// max jobs fused into one batch
+    pub max_batch: usize,
+    /// how long the dispatcher waits to fill a batch after the first job
+    pub batch_window: Duration,
+    /// eagerly compile all rsvd-family artifacts at startup
+    pub warmup: bool,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        Self {
+            router: RouterCfg::default(),
+            max_batch: 8,
+            batch_window: Duration::ZERO,
+            warmup: false,
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+///
+/// The PJRT engine is **owned by the dispatcher thread** (the xla crate's
+/// client is not Send/Sync — same discipline as a GPU owned by one driver
+/// thread); callers interact only through channels.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<Job>>,
+    dispatcher: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    has_engine: bool,
+}
+
+impl Coordinator {
+    /// Start with a device engine built from an artifact directory.
+    /// Fails fast if the manifest can't be loaded or the client can't start.
+    pub fn start(
+        artifact_dir: impl Into<PathBuf>,
+        cfg: CoordinatorCfg,
+    ) -> Result<Coordinator, String> {
+        Self::start_inner(Some(artifact_dir.into()), cfg)
+    }
+
+    /// Start host-only (no artifacts — every route is a host solver).
+    pub fn start_host_only(cfg: CoordinatorCfg) -> Coordinator {
+        Self::start_inner(None, cfg).expect("host-only start cannot fail")
+    }
+
+    fn start_inner(
+        artifact_dir: Option<PathBuf>,
+        cfg: CoordinatorCfg,
+    ) -> Result<Coordinator, String> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let has_engine = artifact_dir.is_some();
+        // startup handshake: the dispatcher reports engine init success
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let dispatcher = std::thread::Builder::new()
+            .name("rsvd-dispatcher".into())
+            .spawn(move || {
+                let engine = match artifact_dir {
+                    Some(dir) => match Engine::new(&dir) {
+                        Ok(e) => {
+                            if cfg.warmup {
+                                let kinds = [
+                                    ArtifactKind::Rsvd,
+                                    ArtifactKind::RsvdValues,
+                                    ArtifactKind::Pca,
+                                ];
+                                if let Err(err) = e.warmup(&kinds, &cfg.router.impl_name) {
+                                    let _ = ready_tx.send(Err(format!("warmup: {err:#}")));
+                                    return;
+                                }
+                            }
+                            Some(e)
+                        }
+                        Err(err) => {
+                            let _ = ready_tx.send(Err(format!("engine init: {err:#}")));
+                            return;
+                        }
+                    },
+                    None => None,
+                };
+                let _ = ready_tx.send(Ok(()));
+                dispatch_loop(rx, engine, cfg, m2)
+            })
+            .map_err(|e| format!("spawn dispatcher: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "dispatcher died during startup".to_string())??;
+        Ok(Coordinator {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            next_id: AtomicU64::new(1),
+            metrics,
+            has_engine,
+        })
+    }
+
+    /// Whether a device engine is attached.
+    pub fn has_engine(&self) -> bool {
+        self.has_engine
+    }
+
+    /// Submit a request; returns a handle to await the result.
+    pub fn submit(&self, request: Request) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let job = Job { id, request, submitted: Instant::now(), reply };
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(job)
+            .expect("dispatcher alive");
+        JobHandle { id, rx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn run(&self, request: Request) -> JobResult {
+        self.submit(request).wait()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // closing the channel stops the dispatcher after it drains
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    rx: mpsc::Receiver<Job>,
+    engine: Option<Engine>,
+    cfg: CoordinatorCfg,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped → shutdown
+        };
+        // drain the batching window. A zero window (the latency-first
+        // default) still batches co-arrived bursts via try_recv but never
+        // delays a lone job; a positive window trades first-job latency
+        // for larger batches (ablation A5 measures this).
+        let mut jobs = vec![first];
+        if cfg.batch_window.is_zero() {
+            while jobs.len() < cfg.max_batch * 4 {
+                match rx.try_recv() {
+                    Ok(j) => jobs.push(j),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + cfg.batch_window;
+            while jobs.len() < cfg.max_batch * 4 {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        // route every job, batch by route key
+        let routes: Vec<Route> = jobs
+            .iter()
+            .map(|j| route(&j.request, manifest_of(&engine), &cfg.router))
+            .collect();
+        let keys: Vec<String> = routes
+            .iter()
+            .map(|r| match r {
+                Route::Device { name } => format!("dev:{name}"),
+                Route::Host { method } => format!("host:{}", method.name()),
+            })
+            .collect();
+        let batches = plan_batches(&keys, cfg.max_batch);
+
+        for batch in batches {
+            metrics.record_batch(batch.jobs.len());
+            for &ji in &batch.jobs {
+                let job = &jobs[ji];
+                let r = &routes[ji];
+                let queued = job.submitted.elapsed();
+                let t0 = Instant::now();
+                // a panicking solver must fail the job, not the dispatcher
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    super::exec::execute(&job.request, r, engine.as_ref())
+                }))
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "solver panicked".into());
+                    Err(format!("solver panic: {msg}"))
+                });
+                let exec = t0.elapsed();
+                let backend = match r {
+                    Route::Device { .. } => "device",
+                    Route::Host { method } => method.name(),
+                };
+                metrics.record_job(backend, queued, exec, outcome.is_ok());
+                let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+            }
+        }
+    }
+}
+
+fn manifest_of(engine: &Option<Engine>) -> &crate::runtime::Manifest {
+    use std::sync::OnceLock;
+    static EMPTY: OnceLock<crate::runtime::Manifest> = OnceLock::new();
+    match engine {
+        Some(e) => e.manifest(),
+        None => EMPTY.get_or_init(|| crate::runtime::Manifest {
+            dir: std::path::PathBuf::new(),
+            artifacts: Vec::new(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Method;
+    use crate::linalg::Matrix;
+
+    fn svd_req(m: usize, n: usize, k: usize, method: Method) -> Request {
+        Request::Svd {
+            a: crate::datagen_test_matrix(m, n, |i| 1.0 / ((i + 1) as f64).powi(2), 11),
+            k,
+            method,
+            want_vectors: false,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn host_only_end_to_end() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let res = coord.run(svd_req(30, 20, 3, Method::Gesvd));
+        let d = res.outcome.expect("ok");
+        assert_eq!(d.values.len(), 3);
+        assert_eq!(d.method_used, "gesvd");
+        assert!((d.values[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            max_batch: 4,
+            batch_window: Duration::from_millis(5),
+            ..Default::default()
+        });
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                let method = if i % 2 == 0 { Method::NativeRsvd } else { Method::Lanczos };
+                coord.submit(svd_req(25, 15, 2, method))
+            })
+            .collect();
+        let mut ids = Vec::new();
+        for h in handles {
+            let id = h.id;
+            let r = h.wait();
+            assert_eq!(r.id, id);
+            assert!(r.outcome.is_ok(), "{:?}", r.outcome);
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 12);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 12);
+        assert!(snap.batches >= 2, "batched at least by method");
+    }
+
+    #[test]
+    fn auto_without_engine_uses_native() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let res = coord.run(svd_req(30, 20, 3, Method::Auto));
+        let d = res.outcome.unwrap();
+        assert_eq!(d.method_used, "native_rsvd");
+        assert!(d.bucket.is_none());
+    }
+
+    #[test]
+    fn large_k_routes_exact_even_host_only() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let res = coord.run(svd_req(20, 16, 14, Method::Auto));
+        let d = res.outcome.unwrap();
+        assert_eq!(d.method_used, "gesvd");
+    }
+
+    #[test]
+    fn pca_request_host() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let x = Matrix::gaussian(40, 10, 3);
+        let res = coord.run(Request::Pca { x, k: 2, method: Method::Gesvd, seed: 1 });
+        let d = res.outcome.unwrap();
+        assert_eq!(d.values.len(), 2);
+        assert!(d.values[0] >= d.values[1]);
+        assert!(d.v.is_some());
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let _ = coord.run(svd_req(10, 8, 2, Method::Jacobi));
+        drop(coord); // must not hang
+    }
+}

@@ -1,0 +1,105 @@
+//! CelebA substitute for the Figure 1 PCA experiment.
+//!
+//! The paper resizes CelebA faces to h×w×3 and flattens. What the PCA
+//! benchmark actually exercises is a data matrix whose covariance has a
+//! natural-image profile: energy concentrated in smooth, low-frequency
+//! modes with a polynomial tail. We synthesize exactly that: images are
+//! random combinations of 2-D DCT atoms with 1/f²-decaying coefficients
+//! per channel, plus pixel noise — the standard natural-image spectral
+//! model. (Substitution documented in DESIGN.md §4.)
+
+use crate::linalg::Matrix;
+
+/// Generate `n` synthetic face-like RGB images of size h×w, flattened to
+/// rows of length 3·h·w (the paper's layout).
+pub fn synthetic_faces(n: usize, h: usize, w: usize, seed: u64) -> Matrix {
+    let d = 3 * h * w;
+    // number of low-frequency atoms per channel
+    let fh = h.min(12);
+    let fw = w.min(12);
+    let r = fh * fw;
+    let mut g = super::gaussians(seed);
+
+    // DCT atom table: atom (p,q) at pixel (y,x)
+    let mut atoms = vec![0.0f64; r * h * w];
+    for p in 0..fh {
+        for q in 0..fw {
+            let a = r_index(p, q, fw);
+            for y in 0..h {
+                for x in 0..w {
+                    let c = ((std::f64::consts::PI * (y as f64 + 0.5) * p as f64) / h as f64)
+                        .cos()
+                        * ((std::f64::consts::PI * (x as f64 + 0.5) * q as f64) / w as f64).cos();
+                    atoms[a * h * w + y * w + x] = c;
+                }
+            }
+        }
+    }
+
+    let mut out = Matrix::zeros(n, d);
+    let mut coefs = vec![0.0f64; r];
+    for img in 0..n {
+        for ch in 0..3 {
+            // 1/f² coefficient decay; channels correlated via shared base
+            for p in 0..fh {
+                for q in 0..fw {
+                    let f = 1.0 + (p * p + q * q) as f64;
+                    coefs[r_index(p, q, fw)] = g.next() * 8.0 / f;
+                }
+            }
+            for y in 0..h {
+                for x in 0..w {
+                    let mut v = 0.0;
+                    for (a, &c) in coefs.iter().enumerate() {
+                        v += c * atoms[a * h * w + y * w + x];
+                    }
+                    // pixel noise + mean offset (images are positive-ish)
+                    v += 0.05 * g.next() + 0.5;
+                    out[(img, ch * h * w + y * w + x)] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn r_index(p: usize, q: usize, fw: usize) -> usize {
+    p * fw + q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigen::eigvalsh, gemm::gram_t};
+
+    #[test]
+    fn shape_and_determinism() {
+        let x = synthetic_faces(10, 8, 8, 3);
+        assert_eq!(x.shape(), (10, 192));
+        let y = synthetic_faces(10, 8, 8, 3);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn covariance_decays_like_natural_images() {
+        let x = synthetic_faces(200, 8, 8, 7);
+        // center
+        let mut xc = x.clone();
+        for j in 0..xc.cols() {
+            let mu: f64 = (0..xc.rows()).map(|i| xc[(i, j)]).sum::<f64>() / xc.rows() as f64;
+            for i in 0..xc.rows() {
+                xc[(i, j)] -= mu;
+            }
+        }
+        let mut cov = gram_t(&xc);
+        cov.scale(1.0 / 200.0);
+        let w = eigvalsh(&cov);
+        // strong energy concentration: top 10 of 192 modes carry > 60%
+        let total: f64 = w.iter().filter(|x| **x > 0.0).sum();
+        let top10: f64 = w.iter().take(10).sum();
+        assert!(top10 / total > 0.6, "top10 frac {}", top10 / total);
+        // ...but not degenerate low-rank: tail still alive (noise floor)
+        assert!(w[50] > 0.0);
+    }
+}

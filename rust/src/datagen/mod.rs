@@ -1,0 +1,116 @@
+//! Synthetic workload generators for the paper's experiments.
+//!
+//! * [`spectrum`] — matrices with exactly controlled singular spectra
+//!   (Figures 2–4: fast / sharp / slow decay).
+//! * [`faces`] — CelebA substitute: random smooth "face-like" images with a
+//!   natural-image covariance profile (Figure 1).
+//! * [`subspaces`] — planted subspace mixtures for SuMC (Table 1).
+
+pub mod faces;
+pub mod spectrum;
+pub mod subspaces;
+
+pub use faces::synthetic_faces;
+pub use spectrum::{spectrum_matrix, Decay};
+pub use subspaces::{subspace_mixture, SubspaceDataset};
+
+use crate::linalg::Matrix;
+use crate::rng::{GaussianStream, Philox4x32, RngCore};
+
+/// Orthonormal m×r matrix built from `p` random Householder reflections
+/// applied to the first r identity columns: Q = H₁…H_p [I; 0].
+///
+/// Exact-QR Haar sampling costs O(m·r²) BLAS-2 flops (minutes at the
+/// figure sizes on this host); reflector products are O(p·m·r) and give an
+/// exactly orthonormal factor, which is all the spectrum construction
+/// A = U·Σ·Vᵀ requires. (The spectrum is what the experiments control;
+/// the singular *vectors'* distribution is irrelevant to solver timing.)
+pub fn random_orthonormal(m: usize, r: usize, seed: u64) -> Matrix {
+    assert!(r <= m);
+    let mut q = Matrix::zeros(m, r);
+    for i in 0..r {
+        q[(i, i)] = 1.0;
+    }
+    let mut g = GaussianStream::new(Philox4x32::new(seed));
+    let p = 12;
+    let mut v = vec![0.0; m];
+    for _ in 0..p {
+        for x in v.iter_mut() {
+            *x = g.next();
+        }
+        let nrm = crate::linalg::blas::nrm2(&v);
+        for x in v.iter_mut() {
+            *x /= nrm;
+        }
+        // Q ← (I − 2vvᵀ) Q, column-wise
+        for c in 0..r {
+            let mut dot = 0.0;
+            for i in 0..m {
+                dot += v[i] * q[(i, c)];
+            }
+            let t = 2.0 * dot;
+            for i in 0..m {
+                q[(i, c)] -= t * v[i];
+            }
+        }
+    }
+    q
+}
+
+/// Uniform [0,1) matrix (SuMC's synthetic point clouds live in [0,1]^dim).
+pub fn uniform_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    crate::rng::fill_uniform(seed, 0.0, 1.0, m.as_mut_slice());
+    m
+}
+
+/// Random permutation of 0..n (dataset shuffling).
+pub fn permutation(n: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Philox4x32::new(seed);
+    crate::rng::shuffle(&mut rng, &mut idx);
+    idx
+}
+
+/// Gaussian stream helper for module-local use.
+pub(crate) fn gaussians(seed: u64) -> GaussianStream<Philox4x32> {
+    GaussianStream::new(Philox4x32::new(seed))
+}
+
+pub(crate) fn uniform01(rng: &mut Philox4x32) -> f64 {
+    rng.next_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_tn;
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        for &(m, r) in &[(10, 10), (50, 8), (128, 32)] {
+            let q = random_orthonormal(m, r, 7);
+            let qtq = matmul_tn(&q, &q);
+            assert!(
+                qtq.max_diff(&Matrix::eye(r)) < 1e-12,
+                "{m}x{r}: {}",
+                qtq.max_diff(&Matrix::eye(r))
+            );
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let p = permutation(100, 3);
+        let mut s = p.clone();
+        s.sort();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(p, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_in_unit_box() {
+        let u = uniform_matrix(50, 10, 5);
+        assert!(u.as_slice().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,95 @@
+//! Spectrum-controlled test matrices — the paper's §4 "Performance
+//! comparison" construction: A = U·Σ·Vᵀ with random orthogonal factors and
+//! one of three decay profiles.
+
+use super::random_orthonormal;
+use crate::linalg::Matrix;
+
+/// The three singular-value decay profiles of Figures 2–4.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decay {
+    /// (i) σᵢ = 1/i² — fast decay.
+    Fast,
+    /// (ii) σᵢ = 1e-4 + 1/(1+exp(i+1−β)) — sharp decay around breakout β.
+    Sharp { beta: f64 },
+    /// (iii) σᵢ = 1/i^0.1 — slow decay (the hard case for sketching).
+    Slow,
+}
+
+impl Decay {
+    /// σ for 0-based index i (the paper's formulas are 1-based).
+    pub fn sigma(self, i: usize) -> f64 {
+        let i1 = (i + 1) as f64;
+        match self {
+            Decay::Fast => 1.0 / (i1 * i1),
+            Decay::Sharp { beta } => 1e-4 + 1.0 / (1.0 + (i1 + 1.0 - beta).exp()),
+            Decay::Slow => 1.0 / i1.powf(0.1),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Decay::Fast => "fast",
+            Decay::Sharp { .. } => "sharp",
+            Decay::Slow => "slow",
+        }
+    }
+}
+
+/// A = U·Σ·Vᵀ ∈ R^{m×n} with the given decay profile, m ≥ n.
+pub fn spectrum_matrix(m: usize, n: usize, decay: Decay, seed: u64) -> Matrix {
+    assert!(m >= n, "paper setting is m ≥ n");
+    let r = n;
+    let u = random_orthonormal(m, r, seed);
+    let v = random_orthonormal(n, r, seed.wrapping_add(0x9E37));
+    // A = (U·Σ)·Vᵀ
+    let mut us = u;
+    for j in 0..r {
+        let s = decay.sigma(j);
+        for i in 0..m {
+            us[(i, j)] *= s;
+        }
+    }
+    crate::linalg::gemm::matmul_nt(&us, &v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_gesvd::svd;
+
+    #[test]
+    fn spectrum_is_exact() {
+        for decay in [Decay::Fast, Decay::Sharp { beta: 10.0 }, Decay::Slow] {
+            let a = spectrum_matrix(40, 25, decay, 3);
+            let f = svd(&a);
+            for i in 0..25 {
+                let want = decay.sigma(i);
+                assert!(
+                    (f.s[i] - want).abs() < 1e-10,
+                    "{decay:?} σ{i}: {} vs {want}",
+                    f.s[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharp_decay_has_breakout() {
+        let d = Decay::Sharp { beta: 10.0 };
+        // before breakout ≈ 1, after ≈ 1e-4
+        assert!(d.sigma(0) > 0.99);
+        assert!(d.sigma(20) < 1e-3);
+        // monotone decreasing
+        for i in 1..40 {
+            assert!(d.sigma(i) <= d.sigma(i - 1) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = spectrum_matrix(20, 10, Decay::Fast, 5);
+        let b = spectrum_matrix(20, 10, Decay::Fast, 5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,96 @@
+//! Planted subspace mixtures — the SuMC Table 1 synthetic datasets:
+//! "points generated on [0,1]^dim subspaces of known dimension".
+
+use super::{random_orthonormal, uniform01};
+use crate::linalg::Matrix;
+use crate::rng::Philox4x32;
+
+/// A generated dataset with ground-truth labels.
+pub struct SubspaceDataset {
+    /// points, row-major (N × dim)
+    pub x: Matrix,
+    /// planted cluster label per point
+    pub labels: Vec<usize>,
+    /// planted subspace dimension per cluster
+    pub dims: Vec<usize>,
+}
+
+/// Generate clusters of points on random affine subspaces of `[0,1]^dim`.
+/// `spec[j] = (d_j, n_j)`: n_j points on a d_j-dimensional subspace.
+/// Points are shuffled so cluster order carries no signal.
+pub fn subspace_mixture(dim: usize, spec: &[(usize, usize)], seed: u64) -> SubspaceDataset {
+    let total: usize = spec.iter().map(|&(_, n)| n).sum();
+    let mut x = Matrix::zeros(total, dim);
+    let mut labels = vec![0usize; total];
+    let mut rng = Philox4x32::new(seed ^ 0xABCD);
+    let mut row = 0;
+    for (j, &(d, n)) in spec.iter().enumerate() {
+        assert!(d <= dim);
+        let basis = random_orthonormal(dim, d, seed.wrapping_add(j as u64 * 77 + 1));
+        // affine offset inside the unit box
+        let offset: Vec<f64> = (0..dim).map(|_| uniform01(&mut rng)).collect();
+        for _ in 0..n {
+            // coefficients uniform in [-0.5, 0.5] (stay near the box)
+            let coef: Vec<f64> = (0..d).map(|_| uniform01(&mut rng) - 0.5).collect();
+            for i in 0..dim {
+                let mut v = offset[i];
+                for (t, &c) in coef.iter().enumerate() {
+                    v += c * basis[(i, t)];
+                }
+                x[(row, i)] = v;
+            }
+            labels[row] = j;
+            row += 1;
+        }
+    }
+    // shuffle rows
+    let perm = super::permutation(total, seed.wrapping_add(31337));
+    let mut xs = Matrix::zeros(total, dim);
+    let mut ls = vec![0usize; total];
+    for (to, &from) in perm.iter().enumerate() {
+        xs.row_mut(to).copy_from_slice(x.row(from));
+        ls[to] = labels[from];
+    }
+    SubspaceDataset {
+        x: xs,
+        labels: ls,
+        dims: spec.iter().map(|&(d, _)| d).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_gesvd::svd;
+
+    #[test]
+    fn planted_rank_is_visible() {
+        let ds = subspace_mixture(40, &[(5, 60)], 3);
+        assert_eq!(ds.x.shape(), (60, 40));
+        // centered cluster data has exactly rank 5
+        let mut xc = ds.x.clone();
+        for j in 0..40 {
+            let mu: f64 = (0..60).map(|i| xc[(i, j)]).sum::<f64>() / 60.0;
+            for i in 0..60 {
+                xc[(i, j)] -= mu;
+            }
+        }
+        let f = svd(&xc);
+        assert!(f.s[4] > 1e-6, "first 5 alive: {:?}", &f.s[..6]);
+        assert!(f.s[5] < 1e-10 * f.s[0], "rank-5: {:?}", &f.s[..7]);
+    }
+
+    #[test]
+    fn sizes_and_labels() {
+        let ds = subspace_mixture(20, &[(3, 30), (5, 50), (7, 40)], 9);
+        assert_eq!(ds.x.rows(), 120);
+        assert_eq!(ds.dims, vec![3, 5, 7]);
+        let mut counts = [0usize; 3];
+        for &l in &ds.labels {
+            counts[l] += 1;
+        }
+        assert_eq!(counts, [30, 50, 40]);
+        // shuffled: labels not sorted
+        assert!(ds.labels.windows(2).any(|w| w[0] > w[1]));
+    }
+}

@@ -1,0 +1,39 @@
+//! Experiment drivers: one function per paper figure/table, shared by the
+//! `benches/` entry points, `examples/`, and the CLI. Each returns the
+//! `Table` it prints so tests can assert on structure.
+
+pub mod pca_fig1;
+pub mod spectrum_figs;
+pub mod sumc_table1;
+
+pub use pca_fig1::run_pca_figure;
+pub use spectrum_figs::{run_spectrum_figure, SpectrumOpts};
+pub use sumc_table1::run_sumc_table;
+
+use crate::coordinator::{Coordinator, CoordinatorCfg};
+
+/// Boot a coordinator over `artifacts/` if present; host-only otherwise
+/// (benches stay runnable without `make artifacts`, with a loud notice).
+pub fn boot_coordinator() -> Coordinator {
+    let cfg = CoordinatorCfg::default();
+    let dir = artifact_dir();
+    if dir.join("manifest.json").exists() {
+        match Coordinator::start(&dir, cfg.clone()) {
+            Ok(c) => return c,
+            Err(e) => eprintln!("WARN: engine start failed ({e}); host-only mode"),
+        }
+    } else {
+        eprintln!("WARN: {} missing — run `make artifacts`; host-only mode", dir.display());
+    }
+    Coordinator::start_host_only(cfg)
+}
+
+/// artifacts/ at the crate root regardless of the bench/example cwd.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// ceil(pct · n), minimum 1 — the paper's "k% of the eigenvalues".
+pub fn k_of(pct: f64, n: usize) -> usize {
+    ((pct * n as f64).ceil() as usize).max(1)
+}

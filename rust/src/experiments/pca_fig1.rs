@@ -1,0 +1,99 @@
+//! Figure 1: PCA on (synthetic) CelebA at growing image sizes — speedup of
+//! every baseline relative to ours for k ∈ {1,3,5,10,20,30}% of d = 3hw.
+
+use super::k_of;
+use crate::bench_harness::{fmt_secs, fmt_speedup, speedup, time_n, Table};
+use crate::coordinator::{Coordinator, Method, Request};
+use crate::datagen::synthetic_faces;
+
+/// Options for the PCA figure.
+#[derive(Clone, Debug)]
+pub struct PcaOpts {
+    pub n_samples: usize,
+    pub image_sizes: Vec<usize>,
+    pub k_pcts: Vec<f64>,
+    pub repeats: usize,
+    /// full-spectrum baselines only below this d (they are O(N·d²)).
+    pub full_methods_max_d: usize,
+    pub seed: u64,
+}
+
+impl Default for PcaOpts {
+    fn default() -> Self {
+        Self {
+            n_samples: 2048,
+            image_sizes: vec![8, 12],
+            k_pcts: vec![0.01, 0.03, 0.05, 0.10, 0.20, 0.30],
+            repeats: 3,
+            // full-spectrum baselines run at d ∈ {192, 432} by default
+            // (O(N·d²) sequential); raise for the paper-scale sweep
+            full_methods_max_d: 500,
+            seed: 16,
+        }
+    }
+}
+
+/// Run the PCA figure; returns the speedup table.
+pub fn run_pca_figure(coord: &Coordinator, opts: &PcaOpts) -> Table {
+    let mut table = Table::new(
+        &format!(
+            "Figure 1 (PCA on synthetic faces): speedup vs ours (N={}, repeats={})",
+            opts.n_samples, opts.repeats
+        ),
+        &["hxw", "d", "k", "ours mean", "method", "mean", "speedup [lo, hi]"],
+    );
+    for &hw in &opts.image_sizes {
+        let d = 3 * hw * hw;
+        let x = synthetic_faces(opts.n_samples, hw, hw, opts.seed);
+        // full-spectrum baselines are k-independent: time once per size
+        let mut full_cache: Vec<(&str, crate::bench_harness::Timing)> = Vec::new();
+        for &(method, label, full) in super::spectrum_figs::BASELINES {
+            if !full || d > opts.full_methods_max_d {
+                continue;
+            }
+            let t = time_n(opts.repeats, || {
+                coord
+                    .run(Request::Pca { x: x.clone(), k: 1, method, seed: opts.seed })
+                    .outcome
+                    .expect("baseline failed");
+            });
+            full_cache.push((label, t));
+        }
+        for &pct in &opts.k_pcts {
+            let k = k_of(pct, d);
+            let ours = time_n(opts.repeats, || {
+                coord
+                    .run(Request::Pca { x: x.clone(), k, method: Method::Auto, seed: opts.seed })
+                    .outcome
+                    .expect("ours failed");
+            });
+            let mut emit = |label: &str, t: &crate::bench_harness::Timing| {
+                table.row(vec![
+                    format!("{hw}x{hw}"),
+                    d.to_string(),
+                    k.to_string(),
+                    fmt_secs(ours.mean_s),
+                    label.to_string(),
+                    fmt_secs(t.mean_s),
+                    fmt_speedup(speedup(t, &ours)),
+                ]);
+            };
+            for (label, t) in &full_cache {
+                emit(label, t);
+            }
+            for &(method, label, full) in super::spectrum_figs::BASELINES {
+                if full {
+                    continue;
+                }
+                let t = time_n(opts.repeats, || {
+                    coord
+                        .run(Request::Pca { x: x.clone(), k, method, seed: opts.seed })
+                        .outcome
+                        .expect("baseline failed");
+                });
+                emit(label, &t);
+            }
+        }
+    }
+    table
+}

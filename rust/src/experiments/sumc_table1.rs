@@ -1,0 +1,101 @@
+//! Table 1: SuMC subspace clustering with the eigensolver on CPU vs the
+//! device pipeline — elapsed time, solver calls, ARI on planted datasets.
+
+use crate::bench_harness::Table;
+use crate::clustering::{proximity_init, sumc, CpuSolver, ServiceSolver, SubspaceSolver, SumcCfg};
+use crate::coordinator::{Coordinator, Method};
+use crate::datagen::subspace_mixture;
+use std::time::Instant;
+
+/// One dataset spec: (name, dim, [(subspace_dim, n_points)]).
+pub struct SumcDataset {
+    pub name: &'static str,
+    pub dim: usize,
+    pub spec: Vec<(usize, usize)>,
+}
+
+/// The paper's two synthetic datasets, scaled by `scale` (1.0 = paper:
+/// dim=1000, first = 500/1000/2000 pts on 30/50/70-dim subspaces,
+/// second = 10× first).
+pub fn datasets(scale: f64) -> Vec<SumcDataset> {
+    let s = |x: usize| ((x as f64 * scale).round() as usize).max(4);
+    let d = |x: usize| ((x as f64 * scale.sqrt()).round() as usize).max(2);
+    vec![
+        SumcDataset {
+            name: "first",
+            dim: s(1000).max(16),
+            spec: vec![(d(30), s(500)), (d(50), s(1000)), (d(70), s(2000))],
+        },
+        SumcDataset {
+            name: "second",
+            dim: s(1000).max(16),
+            spec: vec![(d(30), s(5000)), (d(50), s(10000)), (d(70), s(20000))],
+        },
+    ]
+}
+
+/// Run Table 1. `backends`: (label, solver factory) pairs are fixed here —
+/// CPU (rust gesvd) and the coordinator service (device routing).
+pub fn run_sumc_table(
+    coord: &Coordinator,
+    scale: f64,
+    max_iters: usize,
+    include_second: bool,
+    seed: u64,
+) -> Table {
+    let mut table = Table::new(
+        &format!("Table 1 (SuMC, scale={scale}): CPU vs device eigensolver"),
+        &["dataset", "solver", "elapsed (s)", "solver calls", "iters", "ARI"],
+    );
+    for ds_spec in datasets(scale) {
+        if ds_spec.name == "second" && !include_second {
+            continue;
+        }
+        let ds = subspace_mixture(ds_spec.dim, &ds_spec.spec, seed);
+        let budget: usize = ds_spec.spec.iter().map(|&(d, _)| d).sum();
+        let cfg = SumcCfg {
+            n_clusters: ds_spec.spec.len(),
+            dim_budget: budget,
+            max_dim: (budget / 2).clamp(8, 86),
+            max_iters,
+            seed,
+        };
+        // the same initialization for both backends (paper: "we started
+        // with the same initialization of points to clusters")
+        let init = proximity_init(&ds.x, cfg.n_clusters, seed ^ 0xF00D);
+
+        // CPU backend
+        {
+            let mut solver = CpuSolver::default();
+            let t0 = Instant::now();
+            let res = sumc(&ds.x, &init, &cfg, &mut solver).expect("sumc cpu");
+            let el = t0.elapsed().as_secs_f64();
+            let ari = crate::clustering::adjusted_rand_index(&res.labels, &ds.labels);
+            table.row(vec![
+                ds_spec.name.into(),
+                "CPU".into(),
+                format!("{el:.1}"),
+                res.solver_calls.to_string(),
+                res.iterations.to_string(),
+                format!("{ari:.3}"),
+            ]);
+        }
+        // device backend through the coordinator
+        {
+            let mut solver = ServiceSolver::new(coord, Method::Auto, seed);
+            let t0 = Instant::now();
+            let res = sumc(&ds.x, &init, &cfg, &mut solver).expect("sumc device");
+            let el = t0.elapsed().as_secs_f64();
+            let ari = crate::clustering::adjusted_rand_index(&res.labels, &ds.labels);
+            table.row(vec![
+                ds_spec.name.into(),
+                if coord.has_engine() { "GPU(device)" } else { "service(host)" }.into(),
+                format!("{el:.1}"),
+                solver.calls().to_string(),
+                res.iterations.to_string(),
+                format!("{ari:.3}"),
+            ]);
+        }
+    }
+    table
+}

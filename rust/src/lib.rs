@@ -1,0 +1,49 @@
+//! # rsvd — GPU-style randomized SVD, reproduced as a rust + JAX/Pallas stack
+//!
+//! Reproduction of *"Efficient GPU implementation of randomized SVD and its
+//! applications"* (Struski, Spurek, Morkisz, Rodriguez Bernabeu, Trzciński,
+//! 2021). The paper's contribution — randomized k-SVD reformulated as fused
+//! BLAS-3 + device-side RNG — lives in the AOT-compiled XLA artifacts
+//! (`python/compile/`, built once by `make artifacts`); this crate is the
+//! runtime: a coordinator that serves decomposition requests by routing them
+//! to either the compiled pipeline ("device" path) or the pure-rust baseline
+//! solvers ("CPU" paths), plus every substrate needed to regenerate the
+//! paper's figures and table.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for measured results.
+
+pub mod bench_harness;
+pub mod clustering;
+pub mod coordinator;
+pub mod experiments;
+pub mod datagen;
+pub mod linalg;
+pub mod pca;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Test/bench helper: A = U·diag(σ)·Vᵀ with Haar-random orthogonal factors
+/// and a caller-controlled spectrum — the construction behind the paper's
+/// Figures 2–4. (The full generator with the paper's three decay profiles
+/// lives in `datagen`.)
+pub fn datagen_test_matrix(
+    m: usize,
+    n: usize,
+    sigma: impl Fn(usize) -> f64,
+    seed: u64,
+) -> linalg::Matrix {
+    use linalg::{gemm::matmul, qr::householder_qr, Matrix};
+    let r = m.min(n);
+    let (u, _) = householder_qr(&Matrix::gaussian(m, r, seed));
+    let (v, _) = householder_qr(&Matrix::gaussian(n, r, seed.wrapping_add(1)));
+    let mut us = u;
+    for i in 0..m {
+        for j in 0..r {
+            us[(i, j)] *= sigma(j);
+        }
+    }
+    matmul(&us, &v.transpose())
+}

@@ -1,0 +1,156 @@
+//! Golub–Kahan Householder bidiagonalization: A(m×n, m≥n) = U·B·Vᵀ with B
+//! upper-bidiagonal. This is the O(mn²) *sequential, BLAS-2* front half of
+//! the dgesvd baseline — the cost centre the randomized method avoids.
+
+use super::blas::householder;
+use super::Matrix;
+
+/// Result of bidiagonalization.
+pub struct Bidiag {
+    /// Left orthonormal factor, m×n.
+    pub u: Matrix,
+    /// Diagonal of B, length n.
+    pub d: Vec<f64>,
+    /// Superdiagonal of B, length n-1.
+    pub e: Vec<f64>,
+    /// Right orthogonal factor, n×n.
+    pub v: Matrix,
+}
+
+/// Bidiagonalize A = U·B·Vᵀ (thin U). Requires m ≥ n.
+pub fn bidiagonalize(a: &Matrix) -> Bidiag {
+    let (m, n) = a.shape();
+    assert!(m >= n, "bidiagonalize needs m >= n (transpose first)");
+    let mut work = a.clone();
+    let mut left: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n); // (v, tau) at col j
+    let mut right: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n.saturating_sub(2));
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n.saturating_sub(1)];
+
+    for j in 0..n {
+        // left reflector annihilates below-diagonal of column j
+        let col: Vec<f64> = (j..m).map(|i| work[(i, j)]).collect();
+        let (v, tau, beta) = householder(&col);
+        d[j] = beta;
+        // apply to trailing columns
+        for c in j + 1..n {
+            let mut w = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                w += vi * work[(j + ii, c)];
+            }
+            let t = tau * w;
+            for (ii, vi) in v.iter().enumerate() {
+                work[(j + ii, c)] -= t * vi;
+            }
+        }
+        left.push((v, tau));
+
+        if j + 2 < n {
+            // right reflector annihilates row j beyond superdiagonal
+            let rowv: Vec<f64> = (j + 1..n).map(|c| work[(j, c)]).collect();
+            let (v, tau, beta) = householder(&rowv);
+            e[j] = beta;
+            // apply to trailing rows (from the right): W ← W (I - tau v vᵀ)
+            for r in j + 1..m {
+                let mut w = 0.0;
+                for (ii, vi) in v.iter().enumerate() {
+                    w += vi * work[(r, j + 1 + ii)];
+                }
+                let t = tau * w;
+                for (ii, vi) in v.iter().enumerate() {
+                    work[(r, j + 1 + ii)] -= t * vi;
+                }
+            }
+            right.push((v, tau));
+        } else if j + 2 == n {
+            e[j] = work[(j, j + 1)];
+        }
+    }
+
+    // accumulate U (m×n): apply left reflectors backwards to [I; 0]
+    let mut u = Matrix::zeros(m, n);
+    for i in 0..n {
+        u[(i, i)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let (v, tau) = &left[j];
+        if *tau == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut w = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                w += vi * u[(j + ii, c)];
+            }
+            let t = tau * w;
+            for (ii, vi) in v.iter().enumerate() {
+                u[(j + ii, c)] -= t * vi;
+            }
+        }
+    }
+
+    // accumulate V (n×n): right reflector at step j acts on rows j+1..n
+    let mut v_acc = Matrix::eye(n);
+    for j in (0..right.len()).rev() {
+        let (v, tau) = &right[j];
+        if *tau == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut w = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                w += vi * v_acc[(j + 1 + ii, c)];
+            }
+            let t = tau * w;
+            for (ii, vi) in v.iter().enumerate() {
+                v_acc[(j + 1 + ii, c)] -= t * vi;
+            }
+        }
+    }
+
+    Bidiag { u, d, e, v: v_acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+
+    fn bidiag_to_dense(d: &[f64], e: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            b[(i, i)] = d[i];
+            if i + 1 < n {
+                b[(i, i + 1)] = e[i];
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn reconstructs() {
+        for &(m, n) in &[(6, 6), (10, 4), (25, 12), (7, 2)] {
+            let a = Matrix::gaussian(m, n, (m * 100 + n) as u64);
+            let bd = bidiagonalize(&a);
+            let b = bidiag_to_dense(&bd.d, &bd.e);
+            let ub = matmul(&bd.u, &b);
+            let ubvt = matmul(&ub, &bd.v.transpose());
+            assert!(ubvt.max_diff(&a) < 1e-10, "reconstruct {m}x{n}: {}", ubvt.max_diff(&a));
+            // orthogonality
+            assert!(matmul_tn(&bd.u, &bd.u).max_diff(&Matrix::eye(n)) < 1e-11);
+            assert!(matmul_tn(&bd.v, &bd.v).max_diff(&Matrix::eye(n)) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn singular_values_preserved() {
+        // ‖A‖_F = ‖B‖_F since U, V orthogonal
+        let a = Matrix::gaussian(15, 9, 44);
+        let bd = bidiagonalize(&a);
+        let bnorm = (bd.d.iter().map(|x| x * x).sum::<f64>()
+            + bd.e.iter().map(|x| x * x).sum::<f64>())
+        .sqrt();
+        assert!((bnorm - a.fro_norm()).abs() < 1e-10);
+    }
+}

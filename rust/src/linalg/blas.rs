@@ -1,0 +1,179 @@
+//! BLAS-1/BLAS-2 routines. These are the *bandwidth-bound* levels the paper
+//! contrasts against BLAS-3; the iterative baselines (power method, Lanczos,
+//! bidiagonal QR) live almost entirely here, which is precisely why they do
+//! not scale on throughput-oriented hardware.
+
+use super::Matrix;
+
+/// dot(x, y) with 4-way unrolled accumulation (helps the scalar core and
+/// keeps rounding behaviour stable across call sites).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y ← y + alpha x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm with scaling guard against overflow/underflow
+/// (LAPACK dnrm2 style).
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &v in x {
+        if v != 0.0 {
+            let a = v.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a).powi(2);
+                scale = a;
+            } else {
+                ssq += (a / scale).powi(2);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// x ← alpha x
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// y ← A x (BLAS-2 gemv, row-major A).
+pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for i in 0..a.rows() {
+        y[i] = dot(a.row(i), x);
+    }
+}
+
+/// y ← Aᵀ x without forming Aᵀ (axpy over rows keeps unit stride).
+pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.fill(0.0);
+    for i in 0..a.rows() {
+        axpy(x[i], a.row(i), y);
+    }
+}
+
+/// Rank-1 update A ← A + alpha x yᵀ (BLAS-2 ger).
+pub fn ger(a: &mut Matrix, alpha: f64, x: &[f64], y: &[f64]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    for i in 0..a.rows() {
+        axpy(alpha * x[i], y, a.row_mut(i));
+    }
+}
+
+/// Householder reflector for a vector: returns (v, tau, beta) such that
+/// (I - tau v vᵀ) x = beta e₁ with v[0] = 1. LAPACK dlarfg convention.
+pub fn householder(x: &[f64]) -> (Vec<f64>, f64, f64) {
+    let n = x.len();
+    let mut v = x.to_vec();
+    if n == 0 {
+        return (v, 0.0, 0.0);
+    }
+    let alpha = x[0];
+    let xnorm = nrm2(&x[1..]);
+    if xnorm == 0.0 {
+        // already e1-aligned: no reflection needed
+        let beta = alpha;
+        v[0] = 1.0;
+        return (v, 0.0, beta);
+    }
+    let beta = -alpha.signum() * (alpha * alpha + xnorm * xnorm).sqrt();
+    let tau = (beta - alpha) / beta;
+    let inv = 1.0 / (alpha - beta);
+    for vi in v.iter_mut().skip(1) {
+        *vi *= inv;
+    }
+    v[0] = 1.0;
+    (v, tau, beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_nrm2() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&x, &y), 35.0);
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        // overflow guard
+        let big = [1e200, 1e200];
+        assert!((nrm2(&big) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-15);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0, 0.0, -1.0];
+        let mut y = [0.0; 2];
+        gemv(&a, &x, &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+        let xt = [1.0, -1.0];
+        let mut yt = [0.0; 3];
+        gemv_t(&a, &xt, &mut yt);
+        assert_eq!(yt, [-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = Matrix::zeros(2, 2);
+        ger(&mut a, 2.0, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(a.as_slice(), &[6.0, 8.0, 12.0, 16.0]);
+    }
+
+    #[test]
+    fn householder_annihilates() {
+        let x = [3.0, 1.0, 2.0, -1.0];
+        let (v, tau, beta) = householder(&x);
+        // apply (I - tau v v^T) x and check = beta e1
+        let vx = dot(&v, &x);
+        let mut hx = x.to_vec();
+        axpy(-tau * vx, &v, &mut hx);
+        assert!((hx[0] - beta).abs() < 1e-12);
+        for &h in &hx[1..] {
+            assert!(h.abs() < 1e-12, "tail {hx:?}");
+        }
+        // norm preserved
+        assert!((beta.abs() - nrm2(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn householder_zero_tail() {
+        let (_, tau, beta) = householder(&[5.0, 0.0, 0.0]);
+        assert_eq!(tau, 0.0);
+        assert_eq!(beta, 5.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Cholesky factorization and triangular solves — the small-matrix core of
+//! CholeskyQR2, which is how the pipeline turns panel orthogonalization
+//! (classically a BLAS-2 Householder sweep) into BLAS-3 work.
+
+use super::Matrix;
+
+/// Errors from factorizations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinalgError {
+    /// Matrix not positive definite (pivot ≤ 0 at given index).
+    NotPositiveDefinite(usize),
+    /// Algorithm failed to converge within the iteration budget.
+    NoConvergence(&'static str),
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(i) => {
+                write!(f, "matrix not positive definite (pivot {i})")
+            }
+            LinalgError::NoConvergence(which) => write!(f, "{which}: no convergence"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Right-looking, row-major friendly.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky needs square input");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(LinalgError::NotPositiveDefinite(i));
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve X·Rᵀ = B for X where R = Lᵀ is upper triangular — equivalently
+/// X = B·(Lᵀ)⁻¹, the trsm applied row-wise after CholeskyQR's Gram step.
+/// B is (m×n), L is (n×n) lower triangular. In-place on `b`.
+pub fn trsm_right_lt(b: &mut Matrix, l: &Matrix) {
+    let (m, n) = b.shape();
+    assert_eq!(l.shape(), (n, n));
+    // Row i of X solves x·Lᵀ = b i.e. for each column j ascending:
+    // x[j] = (b[j] - Σ_{k<j} x[k]·Lᵀ[k,j]) / Lᵀ[j,j]; Lᵀ[k,j] = L[j,k]
+    for i in 0..m {
+        let row = b.row_mut(i);
+        for j in 0..n {
+            let mut s = row[j];
+            for k in 0..j {
+                s -= row[k] * l[(j, k)];
+            }
+            row[j] = s / l[(j, j)];
+        }
+    }
+}
+
+/// Solve L·y = b in place (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
+}
+
+/// Solve Lᵀ·x = y in place (back substitution).
+pub fn solve_lower_t(l: &Matrix, b: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_t, matmul};
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let x = Matrix::gaussian(20, 8, 42);
+        let a = gram_t(&x); // SPD with prob 1
+        let l = cholesky(&a).unwrap();
+        let llt = matmul(&l, &l.transpose());
+        assert!(llt.max_diff(&a) < 1e-9 * a.max_abs().max(1.0));
+        // strictly lower-triangular
+        for i in 0..8 {
+            for j in i + 1..8 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(matches!(cholesky(&a), Err(LinalgError::NotPositiveDefinite(_))));
+    }
+
+    #[test]
+    fn trsm_inverts() {
+        let x = Matrix::gaussian(10, 5, 7);
+        let a = gram_t(&x);
+        let l = cholesky(&a).unwrap();
+        let b = Matrix::gaussian(6, 5, 8);
+        let mut sol = b.clone();
+        trsm_right_lt(&mut sol, &l);
+        // sol · Lᵀ = b
+        let back = matmul(&sol, &l.transpose());
+        assert!(back.max_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let x = Matrix::gaussian(12, 4, 9);
+        let a = gram_t(&x);
+        let l = cholesky(&a).unwrap();
+        let b = vec![1.0, -2.0, 0.5, 3.0];
+        // solve A z = b via L (L^T z) = b
+        let mut z = b.clone();
+        solve_lower(&l, &mut z);
+        solve_lower_t(&l, &mut z);
+        // check A z = b
+        let mut az = vec![0.0; 4];
+        crate::linalg::blas::gemv(&a, &z, &mut az);
+        for (u, v) in az.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9, "{az:?} vs {b:?}");
+        }
+    }
+}

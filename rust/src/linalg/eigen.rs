@@ -1,0 +1,406 @@
+//! Symmetric eigensolvers over the tridiagonal form:
+//!
+//! * `eigh` — full spectrum via implicit-shift QL iteration (LAPACK `dsyev`
+//!   analog; used by the covariance-PCA baselines).
+//! * `eigh_partial` — k *largest* eigenpairs via Sturm-sequence bisection +
+//!   inverse iteration (LAPACK **`dsyevr` analog** — one of the paper's
+//!   partial-spectrum competitors).
+
+use super::blas::nrm2;
+use super::tridiag::tridiagonalize;
+use super::Matrix;
+
+/// Full symmetric eigendecomposition A = Q·diag(w)·Qᵀ, eigenvalues
+/// descending.
+pub fn eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
+    let td = tridiagonalize(a);
+    let mut d = td.d;
+    let mut e = td.e;
+    let mut q = td.q;
+    tql_implicit(&mut d, &mut e, Some(&mut q));
+    // sort descending
+    let n = d.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let qp = Matrix::from_fn(n, n, |i, j| q[(i, idx[j])]);
+    (w, qp)
+}
+
+/// Eigenvalues only, descending.
+pub fn eigvalsh(a: &Matrix) -> Vec<f64> {
+    let td = tridiagonalize(a);
+    let mut d = td.d;
+    let mut e = td.e;
+    tql_implicit(&mut d, &mut e, None);
+    d.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    d
+}
+
+/// k largest eigenpairs via bisection + inverse iteration (dsyevr analog).
+/// Returns (w, V) with w descending (length k) and V n×k.
+pub fn eigh_partial(a: &Matrix, k: usize) -> (Vec<f64>, Matrix) {
+    let n = a.rows();
+    let k = k.min(n);
+    let td = tridiagonalize(a);
+    let w = bisect_largest(&td.d, &td.e, k);
+    // eigenvectors of T by inverse iteration, then rotate back by Q
+    let mut vt = Matrix::zeros(n, k);
+    let mut prev: Vec<Vec<f64>> = Vec::new();
+    for (j, &lambda) in w.iter().enumerate() {
+        let v = inverse_iteration(&td.d, &td.e, lambda, &prev, j as u64);
+        for i in 0..n {
+            vt[(i, j)] = v[i];
+        }
+        prev.push(v);
+    }
+    let v = super::gemm::matmul(&td.q, &vt);
+    (w, v)
+}
+
+/// k largest eigenvalues only (bisection; no vectors).
+pub fn eigvalsh_partial(a: &Matrix, k: usize) -> Vec<f64> {
+    let td = tridiagonalize(a);
+    bisect_largest(&td.d, &td.e, k.min(td.d.len()))
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal (EISPACK `tql2`).
+/// Rotations accumulated into the columns of `z` when provided.
+fn tql_implicit(d: &mut [f64], e: &mut [f64], mut z: Option<&mut Matrix>) {
+    let n = d.len();
+    if n <= 1 {
+        return;
+    }
+    // shift off-diagonal for 1-based style convenience
+    let mut ework = vec![0.0; n];
+    ework[..n - 1].copy_from_slice(e);
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if ework[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter >= 60 {
+                // LAPACK would return info>0 here; we force deflation of
+                // the stuck off-diagonal instead (it is ≤ O(√ε‖T‖) by the
+                // convergence theory, so the eigenvalue error is benign) —
+                // a panic would take the whole coordinator down for one
+                // pathological matrix.
+                ework[l] = 0.0;
+                continue;
+            }
+
+            // form shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * ework[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + ework[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * ework[i];
+                let b = c * ework[i];
+                r = f.hypot(g);
+                ework[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    ework[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                if let Some(zz) = z.as_deref_mut() {
+                    // rotate columns i and i+1
+                    let ncols = zz.cols();
+                    let data = zz.as_mut_slice();
+                    let rows = data.len() / ncols;
+                    for rr in 0..rows {
+                        let base = rr * ncols;
+                        f = data[base + i + 1];
+                        data[base + i + 1] = s * data[base + i] + c * f;
+                        data[base + i] = c * data[base + i] - s * f;
+                    }
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            ework[l] = g;
+            ework[m] = 0.0;
+        }
+    }
+    e[..n - 1].copy_from_slice(&ework[..n - 1]);
+}
+
+/// Sturm-sequence count: number of eigenvalues of T strictly less than x.
+fn sturm_count(d: &[f64], e: &[f64], x: f64) -> usize {
+    let n = d.len();
+    let mut count = 0;
+    let mut q = 1.0f64;
+    let safe = f64::MIN_POSITIVE;
+    for i in 0..n {
+        let e2 = if i == 0 { 0.0 } else { e[i - 1] * e[i - 1] };
+        q = d[i] - x - if i == 0 { 0.0 } else { e2 / q };
+        if q.abs() < safe {
+            q = -safe;
+        }
+        if q < 0.0 {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// k largest eigenvalues by bisection on the Sturm count, descending.
+fn bisect_largest(d: &[f64], e: &[f64], k: usize) -> Vec<f64> {
+    let n = d.len();
+    if n == 0 || k == 0 {
+        return vec![];
+    }
+    // Gershgorin bounds
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..n {
+        let r = (if i > 0 { e[i - 1].abs() } else { 0.0 })
+            + (if i + 1 < n { e[i].abs() } else { 0.0 });
+        lo = lo.min(d[i] - r);
+        hi = hi.max(d[i] + r);
+    }
+    let span = (hi - lo).max(1e-300);
+    let tol = 1e-14 * span.max(1.0) + f64::EPSILON * (lo.abs().max(hi.abs()));
+
+    // eigenvalue with index j (0-based, ascending): find x with count(x) ≤ j,
+    // count(x + δ) ≥ j+1. We need indices n-1 … n-k (largest k), descending.
+    let mut out = Vec::with_capacity(k);
+    for t in 0..k {
+        let target = n - 1 - t; // ascending index
+        let (mut a, mut b) = (lo, hi);
+        for _ in 0..200 {
+            let mid = 0.5 * (a + b);
+            if sturm_count(d, e, mid) <= target {
+                a = mid;
+            } else {
+                b = mid;
+            }
+            if b - a <= tol {
+                break;
+            }
+        }
+        out.push(0.5 * (a + b));
+    }
+    out
+}
+
+/// Inverse iteration for an eigenvector of T at eigenvalue `lambda`, with
+/// orthogonalization against previously found vectors (handles clusters).
+fn inverse_iteration(
+    d: &[f64],
+    e: &[f64],
+    lambda: f64,
+    prev: &[Vec<f64>],
+    seed: u64,
+) -> Vec<f64> {
+    let n = d.len();
+    let scale = d.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1.0);
+    // perturb the shift slightly to keep the solve well-posed for clusters
+    let shift = lambda + 1e-13 * scale * (seed as f64 % 7.0 - 3.0);
+    let mut v = vec![0.0; n];
+    crate::rng::fill_gaussian(seed.wrapping_add(12345), &mut v);
+    let nn = nrm2(&v);
+    for x in &mut v {
+        *x /= nn;
+    }
+    for _ in 0..4 {
+        solve_tridiag_shifted(d, e, shift, &mut v);
+        if !prev.is_empty() {
+            super::qr::mgs_orthogonalize(prev, &mut v);
+        }
+        let nn = nrm2(&v);
+        if nn == 0.0 || !nn.is_finite() {
+            // degenerate restart
+            crate::rng::fill_gaussian(seed.wrapping_add(999), &mut v);
+        } else {
+            for x in &mut v {
+                *x /= nn;
+            }
+        }
+    }
+    v
+}
+
+/// Solve (T − σI) y = b in place via LU with partial pivoting specialized to
+/// tridiagonal structure (Thomas with pivoting).
+fn solve_tridiag_shifted(d: &[f64], e: &[f64], sigma: f64, b: &mut [f64]) {
+    let n = d.len();
+    if n == 1 {
+        let p = d[0] - sigma;
+        b[0] /= if p.abs() < f64::MIN_POSITIVE { f64::MIN_POSITIVE } else { p };
+        return;
+    }
+    // bands: sub (a_i), diag (m_i), super (c_i), and an extra super-super
+    // band that pivoting can introduce.
+    let mut sub = vec![0.0; n]; // sub[i] multiplies row i-1 entry
+    let mut diag = vec![0.0; n];
+    let mut sup = vec![0.0; n];
+    let mut sup2 = vec![0.0; n];
+    for i in 0..n {
+        diag[i] = d[i] - sigma;
+        if i + 1 < n {
+            sup[i] = e[i];
+            sub[i + 1] = e[i];
+        }
+    }
+    let tiny = 1e-300;
+    // forward elimination with row swaps
+    for i in 0..n - 1 {
+        if sub[i + 1].abs() > diag[i].abs() {
+            // swap rows i and i+1
+            b.swap(i, i + 1);
+            std::mem::swap(&mut diag[i], &mut sub[i + 1]);
+            // careful: after swap, row i has (old i+1): [sub -> diag pos]
+            let t = sup[i];
+            sup[i] = diag[i + 1];
+            diag[i + 1] = t;
+            sup2[i] = sup[i + 1];
+            sup[i + 1] = 0.0;
+        }
+        let piv = if diag[i].abs() < tiny { tiny.copysign(diag[i]) } else { diag[i] };
+        let m = sub[i + 1] / piv;
+        diag[i + 1] -= m * sup[i];
+        sup[i + 1] -= m * sup2[i];
+        b[i + 1] -= m * b[i];
+        sub[i + 1] = 0.0;
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        if i + 1 < n {
+            s -= sup[i] * b[i + 1];
+        }
+        if i + 2 < n {
+            s -= sup2[i] * b[i + 2];
+        }
+        let piv = if diag[i].abs() < tiny { tiny.copysign(diag[i]) } else { diag[i] };
+        b[i] = s / piv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_t, matmul, matmul_tn};
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        gram_t(&Matrix::gaussian(n + 5, n, seed))
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        for n in [2usize, 4, 9, 25] {
+            let a = spd(n, n as u64);
+            let (w, q) = eigh(&a);
+            // descending
+            for i in 1..n {
+                assert!(w[i - 1] >= w[i] - 1e-10);
+            }
+            // A Q = Q diag(w)
+            let aq = matmul(&a, &q);
+            let mut qd = q.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    qd[(i, j)] *= w[j];
+                }
+            }
+            assert!(aq.max_diff(&qd) < 1e-8 * a.max_abs().max(1.0), "n={n}");
+            assert!(matmul_tn(&q, &q).max_diff(&Matrix::eye(n)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn eigvals_match_eigh() {
+        let a = spd(12, 3);
+        let (w, _) = eigh(&a);
+        let vals = eigvalsh(&a);
+        for (x, y) in w.iter().zip(&vals) {
+            assert!((x - y).abs() < 1e-9 * w[0]);
+        }
+    }
+
+    #[test]
+    fn partial_matches_full() {
+        let a = spd(20, 7);
+        let (wf, qf) = eigh(&a);
+        let k = 5;
+        let (wp, vp) = eigh_partial(&a, k);
+        for i in 0..k {
+            assert!(
+                (wp[i] - wf[i]).abs() < 1e-8 * wf[0],
+                "eigval {i}: {} vs {}",
+                wp[i],
+                wf[i]
+            );
+            // eigenvector agreement up to sign (non-degenerate case)
+            let dot: f64 = (0..20).map(|r| vp[(r, i)] * qf[(r, i)]).sum();
+            assert!(dot.abs() > 0.99, "eigvec {i} |dot|={}", dot.abs());
+        }
+        // residual check ‖Av − λv‖
+        for i in 0..k {
+            let v = vp.col(i);
+            let mut av = vec![0.0; 20];
+            crate::linalg::blas::gemv(&a, &v, &mut av);
+            for r in 0..20 {
+                av[r] -= wp[i] * v[r];
+            }
+            assert!(nrm2(&av) < 1e-7 * wf[0], "residual {i} = {}", nrm2(&av));
+        }
+    }
+
+    #[test]
+    fn sturm_count_properties() {
+        // T = diag(1, 2, 3) → counts are exact
+        let d = [1.0, 2.0, 3.0];
+        let e = [0.0, 0.0];
+        assert_eq!(sturm_count(&d, &e, 0.5), 0);
+        assert_eq!(sturm_count(&d, &e, 1.5), 1);
+        assert_eq!(sturm_count(&d, &e, 2.5), 2);
+        assert_eq!(sturm_count(&d, &e, 3.5), 3);
+    }
+
+    #[test]
+    fn partial_on_known_spectrum() {
+        // A = Q diag(10, 5, 2, 1, 0.5) Qᵀ
+        let vals = [10.0, 5.0, 2.0, 1.0, 0.5];
+        let g = Matrix::gaussian(5, 5, 9);
+        let (q, _) = crate::linalg::qr::householder_qr(&g);
+        let mut a = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut s = 0.0;
+                for t in 0..5 {
+                    s += q[(i, t)] * vals[t] * q[(j, t)];
+                }
+                a[(i, j)] = s;
+            }
+        }
+        let w = eigvalsh_partial(&a, 3);
+        assert!((w[0] - 10.0).abs() < 1e-8);
+        assert!((w[1] - 5.0).abs() < 1e-8);
+        assert!((w[2] - 2.0).abs() < 1e-8);
+    }
+}

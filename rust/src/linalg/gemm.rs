@@ -1,0 +1,252 @@
+//! BLAS-3 GEMM — the operation the paper's whole argument rests on.
+//!
+//! The randomized pipeline is reformulated so ~all flops land here; on the
+//! device side the analogous tiling is done by the L1 Pallas kernel
+//! (`python/compile/kernels/matmul.py`). This host implementation is a
+//! register-blocked, cache-blocked row-major GEMM used by every pure-rust
+//! baseline and by the native fallback solver.
+//!
+//! Schedule: `C[i,:] += A[i,k] * B[k,:]` (ikj form — unit stride on B and C,
+//! autovectorizes to FMA), with an MR=4 row micro-kernel so each loaded row
+//! of B is reused four times from registers/L1, and KC-blocking so the
+//! working set of B stays cache-resident.
+
+use super::Matrix;
+
+/// Panel height in k (tuned in the §Perf pass; see EXPERIMENTS.md).
+const KC: usize = 256;
+/// Micro-kernel rows of A processed together.
+const MR: usize = 4;
+
+/// C ← alpha·A·B + beta·C. Shapes: A(m×k), B(k×n), C(m×n).
+pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "gemm inner dims {k} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape");
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    let bs = b.as_slice();
+    // kc blocking: each B panel (KC×n) is streamed through while 4 rows of C
+    // stay hot.
+    for kc0 in (0..k).step_by(KC) {
+        let kc1 = (kc0 + KC).min(k);
+        let mut i = 0;
+        while i + MR <= m {
+            gemm_micro::<MR>(alpha, a, bs, n, k, i, kc0, kc1, c);
+            i += MR;
+        }
+        while i < m {
+            gemm_micro::<1>(alpha, a, bs, n, k, i, kc0, kc1, c);
+            i += 1;
+        }
+    }
+}
+
+/// R-row micro-kernel: C[i..i+R, :] += alpha * A[i..i+R, kc0..kc1] * B[kc0..kc1, :]
+#[inline(always)]
+fn gemm_micro<const R: usize>(
+    alpha: f64,
+    a: &Matrix,
+    bs: &[f64],
+    n: usize,
+    _k: usize,
+    i: usize,
+    kc0: usize,
+    kc1: usize,
+    c: &mut Matrix,
+) {
+    // gather the R A-rows up front
+    let mut arows: [&[f64]; R] = [&[]; R];
+    for (r, ar) in arows.iter_mut().enumerate() {
+        *ar = a.row(i + r);
+    }
+    // split_at_mut dance: rows of C are disjoint, take them as one slice
+    let cs = c.as_mut_slice();
+    for kk in kc0..kc1 {
+        let brow = &bs[kk * n..kk * n + n];
+        let mut coef = [0.0f64; R];
+        for r in 0..R {
+            coef[r] = alpha * arows[r][kk];
+        }
+        for r in 0..R {
+            let crow = &mut cs[(i + r) * n..(i + r) * n + n];
+            let cf = coef[r];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += cf * bv;
+            }
+        }
+    }
+}
+
+/// C = A·B (allocating convenience).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// C = Aᵀ·B without materializing Aᵀ.
+/// Schedule: C[j,:] += A[i,j] * B[i,:] — still unit-stride on B and C.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, ka) = a.shape();
+    let (mb, n) = b.shape();
+    assert_eq!(m, mb, "matmul_tn row dims");
+    let mut c = Matrix::zeros(ka, n);
+    let cs_cols = n;
+    {
+        let cs = c.as_mut_slice();
+        for i in 0..m {
+            let arow = a.row(i);
+            let brow = b.row(i);
+            for (j, &aij) in arow.iter().enumerate() {
+                if aij != 0.0 {
+                    let crow = &mut cs[j * cs_cols..j * cs_cols + n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aij * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A·Bᵀ. Inner products of rows — unit stride on both operands.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "matmul_nt inner dims");
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = super::blas::dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// Symmetric Gram matrix G = AᵀA (n×n), computing only the upper triangle
+/// and mirroring — the BLAS dsyrk pattern CholeskyQR relies on.
+pub fn gram_t(a: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    let mut g = Matrix::zeros(n, n);
+    {
+        let gs = g.as_mut_slice();
+        for i in 0..m {
+            let arow = a.row(i);
+            for j in 0..n {
+                let aij = arow[j];
+                if aij != 0.0 {
+                    let grow = &mut gs[j * n + j..j * n + n];
+                    for (gv, av) in grow.iter_mut().zip(&arow[j..]) {
+                        *gv += aij * av;
+                    }
+                }
+            }
+        }
+    }
+    // mirror upper → lower
+    for i in 0..n {
+        for j in i + 1..n {
+            let v = g[(i, j)];
+            g[(j, i)] = v;
+        }
+    }
+    g
+}
+
+/// Symmetric Gram matrix G = A·Aᵀ (m×m), upper triangle + mirror.
+pub fn gram_n(a: &Matrix) -> Matrix {
+    let (m, _) = a.shape();
+    let mut g = Matrix::zeros(m, m);
+    for i in 0..m {
+        let ri = a.row(i);
+        for j in i..m {
+            let v = super::blas::dot(ri, a.row(j));
+            g[(i, j)] = v;
+            g[(j, i)] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (17, 33, 9), (64, 300, 48)] {
+            let a = Matrix::gaussian(m, k, 1);
+            let b = Matrix::gaussian(k, n, 2);
+            let c = matmul(&a, &b);
+            assert!(c.max_diff(&naive(&a, &b)) < 1e-10, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let a = Matrix::gaussian(5, 6, 3);
+        let b = Matrix::gaussian(6, 4, 4);
+        let c0 = Matrix::gaussian(5, 4, 5);
+        let mut c = c0.clone();
+        gemm(2.0, &a, &b, -0.5, &mut c);
+        let mut want = naive(&a, &b);
+        want.scale(2.0);
+        let want = want.add_scaled(-0.5, &c0);
+        assert!(c.max_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn tn_nt_match() {
+        let a = Matrix::gaussian(20, 13, 6);
+        let b = Matrix::gaussian(20, 11, 7);
+        assert!(matmul_tn(&a, &b).max_diff(&matmul(&a.transpose(), &b)) < 1e-12);
+        let b2 = Matrix::gaussian(11, 13, 8);
+        assert!(matmul_nt(&a, &b2).max_diff(&matmul(&a, &b2.transpose())) < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let a = Matrix::gaussian(19, 12, 9);
+        assert!(gram_t(&a).max_diff(&matmul(&a.transpose(), &a)) < 1e-11);
+        assert!(gram_n(&a).max_diff(&matmul(&a, &a.transpose())) < 1e-11);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        assert_eq!(matmul(&a, &b).shape(), (0, 2));
+        let a = Matrix::zeros(2, 0);
+        let b = Matrix::zeros(0, 2);
+        assert_eq!(matmul(&a, &b).as_slice(), &[0.0; 4]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Dense row-major `f64` matrix — the substrate type every solver in this
+//! crate operates on. Row-major is chosen to match XLA's default literal
+//! layout so `runtime/` can marshal buffers without transposition.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// From a closure f(i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Standard-Gaussian matrix from the Philox stream (the host-side Ω).
+    pub fn gaussian(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        crate::rng::fill_gaussian(seed, &mut m.data);
+        m
+    }
+
+    /// Diagonal matrix from a slice (rectangular allowed).
+    pub fn diag(rows: usize, cols: usize, d: &[f64]) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for (i, &v) in d.iter().enumerate().take(rows.min(cols)) {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row i as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column j.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        // blocked transpose for cache friendliness on big matrices
+        const B: usize = 32;
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Sub-matrix copy: rows [r0, r1), cols [c0, c1).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut m = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            m.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        m
+    }
+
+    /// Zero-pad (or keep) to a larger shape; used by coordinator bucketing.
+    /// Padding with zeros appends exact zero singular values, so the top-k
+    /// spectrum is unchanged.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad_to must grow");
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// self + alpha * other (allocating).
+    pub fn add_scaled(&self, alpha: f64, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + alpha * b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Max-abs difference — the test workhorse.
+    pub fn max_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |a, (x, y)| a.max((x - y).abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn eye_diag() {
+        let e = Matrix::eye(3);
+        assert_eq!(e[(1, 1)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+        let d = Matrix::diag(3, 2, &[5.0, 6.0]);
+        assert_eq!(d[(1, 1)], 6.0);
+        assert_eq!(d[(2, 0)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::gaussian(37, 53, 1);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(m[(5, 7)], t[(7, 5)]);
+    }
+
+    #[test]
+    fn submatrix_pad() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = m.submatrix(1, 3, 2, 4);
+        assert_eq!(s.shape(), (2, 2));
+        assert_eq!(s[(0, 0)], 6.0);
+        let p = s.pad_to(3, 4);
+        assert_eq!(p[(0, 0)], 6.0);
+        assert_eq!(p[(2, 3)], 0.0);
+        assert_eq!(p.fro_norm(), s.fro_norm());
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Dense linear algebra substrate: the BLAS levels, factorizations and every
+//! CPU baseline solver the paper compares against, implemented from scratch.
+//!
+//! Solver ↔ paper-baseline mapping (see DESIGN.md §4):
+//!
+//! | paper baseline        | module here                       |
+//! |-----------------------|-----------------------------------|
+//! | LAPACK `dgesvd`       | [`svd_gesvd::svd`]                |
+//! | cuSOLVER GESVD (GPU)  | [`svd_jacobi::svd_jacobi`]        |
+//! | LAPACK `dsyevr`       | [`eigen::eigh_partial`]           |
+//! | RSpectra `svds`       | [`lanczos::svds`]                 |
+//! | R `rsvd` package      | [`rsvd::rsvd`]                    |
+//! | ours (GPU pipeline)   | `runtime` executing AOT artifacts |
+
+pub mod blas;
+pub mod bidiag;
+pub mod cholesky;
+pub mod eigen;
+pub mod gemm;
+pub mod lanczos;
+pub mod matrix;
+pub mod power;
+pub mod qr;
+pub mod rsvd;
+pub mod svd_gesvd;
+pub mod svd_jacobi;
+pub mod tridiag;
+
+pub use cholesky::LinalgError;
+pub use matrix::Matrix;
+pub use svd_gesvd::Svd;

@@ -1,0 +1,133 @@
+//! Power method and block subspace iteration — the paper's §2 motivational
+//! baselines (von Mises iteration) and the building block of Algorithm 1's
+//! step 2 (q power iterations of the sketch).
+
+use super::blas::{gemv, gemv_t, nrm2};
+use super::gemm::{matmul, matmul_tn};
+use super::qr::orthonormalize;
+use super::Matrix;
+
+/// Dominant eigenpair of a symmetric matrix by power iteration.
+/// Returns (λ₁, v₁). The classic slow-converging baseline.
+pub fn power_method(a: &Matrix, tol: f64, max_iter: usize, seed: u64) -> (f64, Vec<f64>) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut v = vec![0.0; n];
+    crate::rng::fill_gaussian(seed, &mut v);
+    let nv = nrm2(&v);
+    for x in &mut v {
+        *x /= nv;
+    }
+    let mut av = vec![0.0; n];
+    let mut lambda = 0.0;
+    for _ in 0..max_iter {
+        gemv(a, &v, &mut av);
+        let na = nrm2(&av);
+        if na == 0.0 {
+            return (0.0, v);
+        }
+        for (x, y) in av.iter().zip(v.iter_mut()) {
+            *y = *x / na;
+        }
+        gemv(a, &v, &mut av);
+        let new_lambda = super::blas::dot(&v, &av);
+        if (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1.0) {
+            return (new_lambda, v);
+        }
+        lambda = new_lambda;
+    }
+    (lambda, v)
+}
+
+/// Dominant singular value of a general matrix via power iteration on AᵀA
+/// without forming it (alternating gemv/gemv_t).
+pub fn power_sigma_max(a: &Matrix, tol: f64, max_iter: usize, seed: u64) -> f64 {
+    let (m, n) = a.shape();
+    let mut v = vec![0.0; n];
+    crate::rng::fill_gaussian(seed, &mut v);
+    let nv = nrm2(&v);
+    for x in &mut v {
+        *x /= nv;
+    }
+    let mut u = vec![0.0; m];
+    let mut sigma = 0.0;
+    for _ in 0..max_iter {
+        gemv(a, &v, &mut u);
+        let su = nrm2(&u);
+        if su == 0.0 {
+            return 0.0;
+        }
+        for x in &mut u {
+            *x /= su;
+        }
+        gemv_t(a, &u, &mut v);
+        let sv = nrm2(&v);
+        for x in &mut v {
+            *x /= sv;
+        }
+        if (sv - sigma).abs() <= tol * sv.max(1.0) {
+            return sv;
+        }
+        sigma = sv;
+    }
+    sigma
+}
+
+/// Block subspace (orthogonal) iteration: Y ← orth((A·Aᵀ)^q · Y₀) — the
+/// randomized range finder of Algorithm 1 step 2/3. Re-orthonormalizes via
+/// CholeskyQR2 after each application to prevent the basis collapsing onto
+/// the dominant direction.
+pub fn subspace_iteration(a: &Matrix, y0: &Matrix, q: usize) -> Matrix {
+    let mut y = orthonormalize(y0);
+    for _ in 0..q {
+        // Z = Aᵀ Y ; Y = A Z, re-orthonormalized
+        let z = matmul_tn(a, &y);
+        let z = orthonormalize(&z);
+        y = orthonormalize(&matmul(a, &z));
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gram_t;
+    use crate::linalg::svd_gesvd::svd;
+
+    #[test]
+    fn power_finds_dominant() {
+        let x = Matrix::gaussian(30, 10, 13);
+        let a = gram_t(&x);
+        let (w, _) = crate::linalg::eigen::eigh(&a);
+        let (lambda, v) = power_method(&a, 1e-12, 10_000, 1);
+        assert!((lambda - w[0]).abs() < 1e-6 * w[0], "{lambda} vs {}", w[0]);
+        // residual
+        let mut av = vec![0.0; 10];
+        gemv(&a, &v, &mut av);
+        for i in 0..10 {
+            av[i] -= lambda * v[i];
+        }
+        assert!(nrm2(&av) < 1e-5 * w[0]);
+    }
+
+    #[test]
+    fn power_sigma_matches_svd() {
+        let a = Matrix::gaussian(25, 18, 17);
+        let f = svd(&a);
+        let s = power_sigma_max(&a, 1e-12, 10_000, 2);
+        assert!((s - f.s[0]).abs() < 1e-6 * f.s[0]);
+    }
+
+    #[test]
+    fn subspace_iteration_captures_range() {
+        // rank-4 A: after iteration, ‖A − QQᵀA‖ ≈ 0
+        let u = Matrix::gaussian(40, 4, 3);
+        let v = Matrix::gaussian(4, 30, 4);
+        let a = matmul(&u, &v);
+        let omega = Matrix::gaussian(30, 8, 6);
+        let y = subspace_iteration(&a, &matmul(&a, &omega), 2);
+        let qta = matmul_tn(&y, &a);
+        let proj = matmul(&y, &qta);
+        assert!(proj.max_diff(&a) < 1e-8 * a.max_abs(), "range not captured");
+    }
+}

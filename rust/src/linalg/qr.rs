@@ -1,0 +1,200 @@
+//! QR factorizations: classic Householder QR (the LAPACK geqrf family the
+//! baselines use) and CholeskyQR2 — the BLAS-3 reformulation the randomized
+//! pipeline uses, mirroring `python/compile/linalg.py`.
+
+use super::blas::{axpy, dot, householder};
+use super::cholesky::{cholesky, trsm_right_lt, LinalgError};
+use super::gemm::{gram_t, matmul};
+use super::Matrix;
+
+/// Thin Householder QR: A(m×n, m≥n) = Q(m×n)·R(n×n).
+/// Returns (Q, R) with Q having orthonormal columns.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr needs m >= n");
+    let mut r = a.clone();
+    // store reflectors: v_j in column j below diagonal, taus separately
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut taus = Vec::with_capacity(n);
+    for j in 0..n {
+        let col: Vec<f64> = (j..m).map(|i| r[(i, j)]).collect();
+        let (v, tau, beta) = householder(&col);
+        // apply reflector to trailing columns of R: R[j.., j..] -= tau v (vᵀ R)
+        for c in j..n {
+            let mut w = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                w += vi * r[(j + ii, c)];
+            }
+            let t = tau * w;
+            for (ii, vi) in v.iter().enumerate() {
+                r[(j + ii, c)] -= t * vi;
+            }
+        }
+        r[(j, j)] = beta;
+        for i in j + 1..m {
+            r[(i, j)] = 0.0;
+        }
+        vs.push(v);
+        taus.push(tau);
+    }
+    // accumulate Q = H_0 H_1 … H_{n-1} · [I; 0]  (apply reflectors backwards)
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let tau = taus[j];
+        if tau == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut w = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                w += vi * q[(j + ii, c)];
+            }
+            let t = tau * w;
+            for (ii, vi) in v.iter().enumerate() {
+                q[(j + ii, c)] -= t * vi;
+            }
+        }
+    }
+    let rtop = r.submatrix(0, n, 0, n);
+    (q, rtop)
+}
+
+/// CholeskyQR: G = AᵀA, G = LLᵀ, Q = A·L⁻ᵀ, R = Lᵀ. One round loses up to
+/// κ(A)² digits; `cholesky_qr2` runs two rounds which is provably as
+/// orthogonal as Householder for κ(A) ≤ 1/√ε. All flops are GEMM/SYRK —
+/// the whole point of the paper's reformulation.
+pub fn cholesky_qr(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
+    let g = gram_t(a);
+    let l = cholesky(&g)?;
+    let mut q = a.clone();
+    trsm_right_lt(&mut q, &l);
+    Ok((q, l.transpose()))
+}
+
+/// CholeskyQR2 (Yamamoto et al. 2015): two rounds of CholeskyQR.
+/// Returns (Q, R) with R = R₂·R₁.
+pub fn cholesky_qr2(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
+    let (q1, r1) = cholesky_qr(a)?;
+    let (q2, r2) = cholesky_qr(&q1)?;
+    Ok((q2, matmul(&r2, &r1)))
+}
+
+/// Orthonormalize with CholeskyQR2, falling back to Householder QR when the
+/// Gram matrix is numerically singular (rank-deficient panel) — the exact
+/// policy the AOT pipeline cannot take (static graph), which is why the
+/// runtime adds oversampling instead.
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    match cholesky_qr2(a) {
+        Ok((q, _)) => q,
+        Err(_) => householder_qr(a).0,
+    }
+}
+
+/// Modified Gram–Schmidt re-orthogonalization of a single vector against the
+/// columns of Q (used by Lanczos). Returns the norm after projection.
+pub fn mgs_orthogonalize(q_cols: &[Vec<f64>], v: &mut [f64]) -> f64 {
+    for q in q_cols {
+        let c = dot(q, v);
+        axpy(-c, q, v);
+    }
+    // second pass for safety ("twice is enough" — Kahan/Parlett)
+    for q in q_cols {
+        let c = dot(q, v);
+        axpy(-c, q, v);
+    }
+    super::blas::nrm2(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_tn;
+
+    fn check_qr(a: &Matrix, q: &Matrix, r: &Matrix, tol: f64) {
+        // Q orthonormal
+        let qtq = matmul_tn(q, q);
+        assert!(qtq.max_diff(&Matrix::eye(q.cols())) < tol, "QtQ err {}", qtq.max_diff(&Matrix::eye(q.cols())));
+        // A = QR
+        let qr = matmul(q, r);
+        assert!(qr.max_diff(a) < tol * a.max_abs().max(1.0), "QR err");
+        // R upper triangular
+        for i in 0..r.rows() {
+            for j in 0..i.min(r.cols()) {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn householder_qr_random() {
+        for &(m, n) in &[(5, 5), (20, 7), (50, 50), (64, 3)] {
+            let a = Matrix::gaussian(m, n, (m * n) as u64);
+            let (q, r) = householder_qr(&a);
+            check_qr(&a, &q, &r, 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_qr2_random() {
+        for &(m, n) in &[(30, 5), (100, 20), (64, 64)] {
+            let a = Matrix::gaussian(m, n, (m + n) as u64);
+            let (q, r) = cholesky_qr2(&a).unwrap();
+            check_qr(&a, &q, &r, 1e-9);
+        }
+    }
+
+    #[test]
+    fn cholesky_qr2_ill_conditioned() {
+        // columns scaled by 10^-6 … κ ~ 1e6: one round of CholeskyQR loses
+        // ~12 digits of orthogonality, two rounds must recover to ~1e-12.
+        let m = 60;
+        let n = 8;
+        let mut a = Matrix::gaussian(m, n, 3);
+        for j in 0..n {
+            let s = 10f64.powi(-(j as i32));
+            for i in 0..m {
+                a[(i, j)] *= s;
+            }
+        }
+        let (q, _r) = cholesky_qr2(&a).unwrap();
+        let qtq = matmul_tn(&q, &q);
+        assert!(qtq.max_diff(&Matrix::eye(n)) < 1e-10);
+    }
+
+    #[test]
+    fn orthonormalize_fallback_on_rank_deficiency() {
+        // duplicate columns → Gram singular → must fall back, still return
+        // orthonormal columns
+        let m = 20;
+        let base = Matrix::gaussian(m, 1, 5);
+        let a = Matrix::from_fn(m, 3, |i, j| if j < 2 { base[(i, 0)] } else { base[(i, 0)] * 2.0 });
+        let q = orthonormalize(&a);
+        assert_eq!(q.shape(), (m, 3));
+        for j in 0..3 {
+            let c = q.col(j);
+            assert!(c.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn mgs_removes_components() {
+        let q1 = {
+            let mut v = vec![0.0; 10];
+            v[0] = 1.0;
+            v
+        };
+        let q2 = {
+            let mut v = vec![0.0; 10];
+            v[1] = 1.0;
+            v
+        };
+        let mut v = vec![1.0; 10];
+        let norm = mgs_orthogonalize(&[q1.clone(), q2.clone()], &mut v);
+        assert!(v[0].abs() < 1e-14 && v[1].abs() < 1e-14);
+        assert!((norm - 8f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,182 @@
+//! Randomized k-SVD — the paper's Algorithm 1, implemented verbatim in
+//! pure rust. This plays two roles:
+//!
+//! 1. it is the **R `rsvd`-package analog** baseline (same algorithm, host
+//!    BLAS, no fused device pipeline), and
+//! 2. it is the coordinator's *native fallback* when a request does not fit
+//!    any AOT artifact bucket.
+//!
+//! Every step maps one-to-one onto the AOT pipeline in
+//! `python/compile/model.py`; the integration test in `tests/` checks the
+//! two produce the same spectrum on the same (A, Ω).
+
+use super::gemm::{matmul, matmul_nt, matmul_tn};
+use super::qr::orthonormalize;
+use super::svd_gesvd::{svd, Svd};
+use super::Matrix;
+
+/// Options mirroring Algorithm 1's knobs.
+#[derive(Clone, Debug)]
+pub struct RsvdOpts {
+    /// Oversampling p: sketch width s = k + p (paper: s = O(k/ε)).
+    pub oversample: usize,
+    /// Power iterations q (paper's step 2).
+    pub power_iters: usize,
+    /// Seed for the Gaussian sketch Ω.
+    pub seed: u64,
+}
+
+impl Default for RsvdOpts {
+    fn default() -> Self {
+        Self { oversample: 10, power_iters: 2, seed: 0x5EED }
+    }
+}
+
+/// Randomized k-SVD of A (Algorithm 1). Returns a truncated `Svd` with
+/// exactly k triplets.
+pub fn rsvd(a: &Matrix, k: usize, opts: &RsvdOpts) -> Svd {
+    let (m, n) = a.shape();
+    let r = m.min(n);
+    let k = k.min(r);
+    let s = (k + opts.oversample).min(r);
+
+    // Step 1: Gaussian sketch Ω ∈ R^{n×s} (Philox — the CuRAND analog).
+    let omega = Matrix::gaussian(n, s, opts.seed);
+
+    // Step 2: Y = (A·Aᵀ)^q · A·Ω, with re-orthonormalization between
+    // applications for numerical stability (standard Halko et al. practice).
+    let mut y = matmul(a, &omega);
+    for _ in 0..opts.power_iters {
+        y = orthonormalize(&y);
+        let z = matmul_tn(a, &y);
+        let z = orthonormalize(&z);
+        y = matmul(a, &z);
+    }
+
+    // Step 3: Q = orth(Y) — CholeskyQR2 (BLAS-3), Householder fallback.
+    let q = orthonormalize(&y);
+
+    // Step 4: B = Qᵀ·A ∈ R^{s×n}.
+    let b = matmul_tn(&q, a);
+
+    // Step 5: SVD of the small B.
+    let sb = svd(&b);
+
+    // Step 6: Ũ = Q·U_B; truncate to k.
+    let ub = sb.u.submatrix(0, s, 0, k.min(sb.s.len()));
+    let u = matmul(&q, &ub);
+    let kk = k.min(sb.s.len());
+    Svd {
+        u,
+        s: sb.s[..kk].to_vec(),
+        v: sb.v.submatrix(0, sb.v.rows(), 0, kk),
+    }
+}
+
+/// k largest singular values only — stops after step 5 (the variant the
+/// spectrum experiments use; paper: "we needed only the matrix Σ").
+pub fn rsvd_values(a: &Matrix, k: usize, opts: &RsvdOpts) -> Vec<f64> {
+    let (m, n) = a.shape();
+    let r = m.min(n);
+    let k = k.min(r);
+    let s = (k + opts.oversample).min(r);
+    let omega = Matrix::gaussian(n, s, opts.seed);
+    let mut y = matmul(a, &omega);
+    for _ in 0..opts.power_iters {
+        y = orthonormalize(&y);
+        let z = matmul_tn(a, &y);
+        let z = orthonormalize(&z);
+        y = matmul(a, &z);
+    }
+    let q = orthonormalize(&y);
+    let b = matmul_tn(&q, a);
+    // values of B via eigenvalues of the small Gram B·Bᵀ (s×s) — the same
+    // contraction the AOT pipeline uses
+    let g = matmul_nt(&b, &b);
+    let w = super::eigen::eigvalsh(&g);
+    w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+}
+
+/// Rank-k approximation error ‖A − QQᵀA‖_F — used to validate the (1+ε)
+/// low-rank property from the paper's §3.
+pub fn projection_error(a: &Matrix, q: &Matrix) -> f64 {
+    let qta = matmul_tn(q, a);
+    let proj = matmul(q, &qta);
+    a.add_scaled(-1.0, &proj).fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_gesvd::svd as full_svd;
+
+    #[test]
+    fn rsvd_matches_full_on_decaying_spectrum() {
+        // fast-decay (paper case i): randomized should be ~exact
+        let n = 40;
+        let a = crate::datagen_test_matrix(60, n, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 7);
+        let k = 5;
+        let r = rsvd(&a, k, &RsvdOpts::default());
+        let f = full_svd(&a);
+        for i in 0..k {
+            assert!(
+                (r.s[i] - f.s[i]).abs() < 1e-9 * f.s[0],
+                "σ{i}: {} vs {}",
+                r.s[i],
+                f.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rsvd_frobenius_bound() {
+        // (1+ε) bound: ‖A − A_k_approx‖_F ≤ (1+ε) ‖A − A_k‖_F with generous ε
+        let a = Matrix::gaussian(50, 35, 3);
+        let k = 8;
+        let opts = RsvdOpts { oversample: 10, power_iters: 2, seed: 1 };
+        let r = rsvd(&a, k, &opts);
+        let f = full_svd(&a);
+        let best: f64 = f.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        // reconstruction error of randomized rank-k
+        let mut us = r.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..k {
+                us[(i, j)] *= r.s[j];
+            }
+        }
+        let rec = matmul(&us, &r.v.transpose());
+        let err = a.add_scaled(-1.0, &rec).fro_norm();
+        assert!(err <= 1.10 * best, "err {err} vs best {best}");
+    }
+
+    #[test]
+    fn rsvd_values_match_rsvd() {
+        let a = crate::datagen_test_matrix(45, 30, |i| 1.0 / (i + 1) as f64, 9);
+        let k = 6;
+        let opts = RsvdOpts { seed: 42, ..Default::default() };
+        let full = rsvd(&a, k, &opts);
+        let vals = rsvd_values(&a, k, &opts);
+        for (x, y) in full.s.iter().zip(&vals) {
+            assert!((x - y).abs() < 1e-8 * full.s[0], "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn rsvd_orthonormal_outputs() {
+        let a = Matrix::gaussian(30, 30, 8);
+        let r = rsvd(&a, 6, &RsvdOpts::default());
+        let utu = matmul_tn(&r.u, &r.u);
+        assert!(utu.max_diff(&Matrix::eye(6)) < 1e-9);
+        let vtv = matmul_tn(&r.v, &r.v);
+        assert!(vtv.max_diff(&Matrix::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn rsvd_deterministic_in_seed() {
+        let a = Matrix::gaussian(20, 20, 10);
+        let o = RsvdOpts { seed: 5, ..Default::default() };
+        let r1 = rsvd(&a, 4, &o);
+        let r2 = rsvd(&a, 4, &o);
+        assert_eq!(r1.s, r2.s);
+    }
+}

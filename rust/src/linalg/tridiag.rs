@@ -1,0 +1,122 @@
+//! Householder tridiagonalization of a symmetric matrix: A = Q·T·Qᵀ with T
+//! symmetric tridiagonal — the LAPACK `dsytrd` front end of both `dsyev`
+//! (QL iteration) and `dsyevr` (bisection + inverse iteration) baselines.
+
+use super::blas::{axpy, dot};
+use super::Matrix;
+
+/// Tridiagonalization result.
+pub struct Tridiag {
+    /// Orthogonal accumulator Q (n×n), A = Q·T·Qᵀ.
+    pub q: Matrix,
+    /// Diagonal of T.
+    pub d: Vec<f64>,
+    /// Off-diagonal of T (length n-1).
+    pub e: Vec<f64>,
+}
+
+/// Householder tridiagonalization (symmetric, full accumulation).
+pub fn tridiagonalize(a: &Matrix) -> Tridiag {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "tridiagonalize needs square symmetric input");
+    let mut w = a.clone();
+    let mut q = Matrix::eye(n);
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n.saturating_sub(1)];
+
+    for j in 0..n.saturating_sub(2) {
+        // reflector on column j below the diagonal
+        let x: Vec<f64> = (j + 1..n).map(|i| w[(i, j)]).collect();
+        let (v, tau, beta) = super::blas::householder(&x);
+        e[j] = beta;
+        if tau != 0.0 {
+            // symmetric update: W22 ← (I−τvvᵀ) W22 (I−τvvᵀ)
+            // p = τ·W22·v ; K = τ/2·(vᵀp) ; w_upd = p − K·v ;
+            // W22 ← W22 − v w_updᵀ − w_upd vᵀ
+            let nn = n - j - 1;
+            let mut p = vec![0.0; nn];
+            for r in 0..nn {
+                let row = &w.row(j + 1 + r)[j + 1..];
+                p[r] = tau * dot(row, &v);
+            }
+            let kcoef = 0.5 * tau * dot(&v, &p);
+            let mut wv = p;
+            axpy(-kcoef, &v, &mut wv);
+            for r in 0..nn {
+                let vr = v[r];
+                let wr = wv[r];
+                let row = &mut w.row_mut(j + 1 + r)[j + 1..];
+                for c in 0..nn {
+                    row[c] -= vr * wv[c] + wr * v[c];
+                }
+            }
+            // accumulate Q ← Q·(I−τvvᵀ) acting on columns j+1..n
+            for r in 0..n {
+                let row = &mut q.row_mut(r)[j + 1..];
+                let s = tau * dot(row, &v);
+                axpy(-s, &v, row);
+            }
+        }
+        // record and clean the factored column/row
+        w[(j + 1, j)] = beta;
+        for i in j + 2..n {
+            w[(i, j)] = 0.0;
+            w[(j, i)] = 0.0;
+        }
+        w[(j, j + 1)] = beta;
+    }
+    for i in 0..n {
+        d[i] = w[(i, i)];
+    }
+    if n >= 2 {
+        e[n - 2] = w[(n - 1, n - 2)];
+    }
+    Tridiag { q, d, e }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram_t, matmul, matmul_tn};
+
+    fn tridiag_dense(d: &[f64], e: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut t = Matrix::zeros(n, n);
+        for i in 0..n {
+            t[(i, i)] = d[i];
+            if i + 1 < n {
+                t[(i, i + 1)] = e[i];
+                t[(i + 1, i)] = e[i];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn reconstructs() {
+        for n in [2usize, 3, 5, 12, 30] {
+            let x = Matrix::gaussian(n + 4, n, n as u64);
+            let a = gram_t(&x);
+            let td = tridiagonalize(&a);
+            let t = tridiag_dense(&td.d, &td.e);
+            let qt = matmul(&td.q, &t);
+            let qtqt = matmul(&qt, &td.q.transpose());
+            assert!(
+                qtqt.max_diff(&a) < 1e-9 * a.max_abs().max(1.0),
+                "n={n} err {}",
+                qtqt.max_diff(&a)
+            );
+            assert!(matmul_tn(&td.q, &td.q).max_diff(&Matrix::eye(n)) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let x = Matrix::gaussian(20, 10, 3);
+        let a = gram_t(&x);
+        let td = tridiagonalize(&a);
+        let tr_a: f64 = (0..10).map(|i| a[(i, i)]).sum();
+        let tr_t: f64 = td.d.iter().sum();
+        assert!((tr_a - tr_t).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,136 @@
+//! `rsvd` CLI — leader entrypoint for the coordinator and the experiment
+//! drivers.
+//!
+//! ```text
+//! rsvd info                         list artifact inventory
+//! rsvd svd   [--m 2000 --n 512 --k 10 --decay fast --method auto]
+//! rsvd pca   [--n-samples 2048 --hw 12 --k 10 --method auto]
+//! rsvd fig1|fig2|fig3|fig4|table1   regenerate a paper figure/table
+//! ```
+
+use rsvd::coordinator::{Method, Request};
+use rsvd::datagen::{spectrum_matrix, synthetic_faces, Decay};
+use rsvd::experiments::{self, SpectrumOpts};
+use rsvd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "svd" => svd_cmd(&args),
+        "pca" => pca_cmd(&args),
+        "fig1" => {
+            let coord = experiments::boot_coordinator();
+            let opts = rsvd::experiments::pca_fig1::PcaOpts {
+                repeats: args.get_usize("repeats", 3),
+                ..Default::default()
+            };
+            experiments::run_pca_figure(&coord, &opts).print();
+        }
+        "fig2" | "fig3" | "fig4" => {
+            let decay = match cmd {
+                "fig2" => Decay::Fast,
+                "fig3" => Decay::Sharp { beta: 10.0 },
+                _ => Decay::Slow,
+            };
+            let coord = experiments::boot_coordinator();
+            let opts = SpectrumOpts {
+                repeats: args.get_usize("repeats", 3),
+                n_grid: args
+                    .get("n-grid")
+                    .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+                    .unwrap_or_else(|| SpectrumOpts::default().n_grid),
+                ..Default::default()
+            };
+            experiments::run_spectrum_figure(&coord, decay, &opts).print();
+        }
+        "table1" => {
+            let coord = experiments::boot_coordinator();
+            let scale = args.get_f64("scale", 0.1);
+            let iters = args.get_usize("max-iters", 30);
+            experiments::run_sumc_table(&coord, scale, iters, args.has("full"), 7).print();
+        }
+        other => {
+            eprintln!("unknown command '{other}' — see the doc comment in rust/src/main.rs");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    let dir = experiments::artifact_dir();
+    match rsvd::runtime::Manifest::load(&dir) {
+        Ok(man) => {
+            println!("artifact inventory at {} ({} entries):", dir.display(), man.artifacts.len());
+            for a in &man.artifacts {
+                println!(
+                    "  {:<44} {:?} m={} n={} s={} q={} [{}]",
+                    a.name, a.kind, a.m, a.n, a.s, a.q, a.impl_name
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn svd_cmd(args: &Args) {
+    let m = args.get_usize("m", 2000);
+    let n = args.get_usize("n", 512);
+    let k = args.get_usize("k", 10);
+    let decay = match args.get("decay").unwrap_or("fast") {
+        "fast" => Decay::Fast,
+        "sharp" => Decay::Sharp { beta: 10.0 },
+        "slow" => Decay::Slow,
+        other => {
+            eprintln!("unknown decay {other}");
+            std::process::exit(2);
+        }
+    };
+    let method = Method::parse(args.get("method").unwrap_or("auto")).unwrap_or(Method::Auto);
+    let coord = experiments::boot_coordinator();
+    let a = spectrum_matrix(m, n, decay, args.get_usize("seed", 1) as u64);
+    let t0 = std::time::Instant::now();
+    let res = coord.run(Request::Svd { a, k, method, want_vectors: false, seed: 1 });
+    match res.outcome {
+        Ok(d) => {
+            println!(
+                "[{}] bucket {:?} exec {:?} total {:?}",
+                d.method_used,
+                d.bucket,
+                res.exec,
+                t0.elapsed()
+            );
+            println!("top-{k} σ: {:?}", &d.values);
+        }
+        Err(e) => {
+            eprintln!("failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn pca_cmd(args: &Args) {
+    let n_samples = args.get_usize("n-samples", 2048);
+    let hw = args.get_usize("hw", 12);
+    let k = args.get_usize("k", 10);
+    let method = Method::parse(args.get("method").unwrap_or("auto")).unwrap_or(Method::Auto);
+    let coord = experiments::boot_coordinator();
+    let x = synthetic_faces(n_samples, hw, hw, 5);
+    let t0 = std::time::Instant::now();
+    let p = rsvd::pca::fit(&coord, &x, k, method, 1).unwrap_or_else(|e| {
+        eprintln!("failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "[{}] {k} PCs of {}×{} in {:?}",
+        p.method_used,
+        n_samples,
+        3 * hw * hw,
+        t0.elapsed()
+    );
+    println!("explained variance ratio: {:?}", p.explained_ratio);
+}

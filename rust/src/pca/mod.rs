@@ -1,0 +1,160 @@
+//! Principal Component Analysis on top of the eigensolver service — the
+//! paper's first application (Figure 1).
+//!
+//! The device path centers in-graph (`pca` artifacts); host paths center
+//! here and defer to any of the baseline solvers via the coordinator's
+//! executor, so the PCA benchmark compares exactly the solver backends the
+//! paper compares.
+
+use crate::coordinator::{Coordinator, Method, Request};
+use crate::linalg::Matrix;
+
+/// PCA result.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// top-k eigenvalues of the covariance (descending) = explained
+    /// variances (biased, /N — matching the paper's convention).
+    pub eigenvalues: Vec<f64>,
+    /// d×k principal components (columns).
+    pub components: Matrix,
+    /// column means of the training data.
+    pub mean: Vec<f64>,
+    /// fraction of total variance captured per component.
+    pub explained_ratio: Vec<f64>,
+    /// backend that served the job.
+    pub method_used: &'static str,
+}
+
+/// Fit k principal components of `x` (N samples × d features) through the
+/// coordinator with the given solver method.
+pub fn fit(coord: &Coordinator, x: &Matrix, k: usize, method: Method, seed: u64) -> Result<Pca, String> {
+    let mean = column_means(x);
+    let total_var = total_variance(x, &mean);
+    let res = coord
+        .run(Request::Pca { x: x.clone(), k, method, seed })
+        .outcome?;
+    let components = res.v.ok_or("PCA backend returned no components")?;
+    let explained_ratio = res
+        .values
+        .iter()
+        .map(|v| if total_var > 0.0 { v / total_var } else { 0.0 })
+        .collect();
+    Ok(Pca {
+        eigenvalues: res.values,
+        components,
+        mean,
+        explained_ratio,
+        method_used: res.method_used,
+    })
+}
+
+/// Project data onto the fitted components: scores = (X − μ)·W.
+pub fn transform(p: &Pca, x: &Matrix) -> Matrix {
+    let mut xc = x.clone();
+    for j in 0..xc.cols() {
+        for i in 0..xc.rows() {
+            xc[(i, j)] -= p.mean[j];
+        }
+    }
+    crate::linalg::gemm::matmul(&xc, &p.components)
+}
+
+/// Reconstruct from scores: X̂ = scores·Wᵀ + μ.
+pub fn inverse_transform(p: &Pca, scores: &Matrix) -> Matrix {
+    let mut x = crate::linalg::gemm::matmul_nt(scores, &p.components);
+    for j in 0..x.cols() {
+        for i in 0..x.rows() {
+            x[(i, j)] += p.mean[j];
+        }
+    }
+    x
+}
+
+pub fn column_means(x: &Matrix) -> Vec<f64> {
+    let (n, d) = x.shape();
+    let mut mu = vec![0.0; d];
+    for i in 0..n {
+        for (j, m) in mu.iter_mut().enumerate() {
+            *m += x[(i, j)];
+        }
+    }
+    for m in &mut mu {
+        *m /= n as f64;
+    }
+    mu
+}
+
+fn total_variance(x: &Matrix, mean: &[f64]) -> f64 {
+    let (n, d) = x.shape();
+    let mut acc = 0.0;
+    for i in 0..n {
+        for j in 0..d {
+            let c = x[(i, j)] - mean[j];
+            acc += c * c;
+        }
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorCfg;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Matrix {
+        // decaying-variance anisotropic cloud with offset
+        let mut x = Matrix::gaussian(n, d, seed);
+        for j in 0..d {
+            let s = 4.0 / (j + 1) as f64;
+            for i in 0..n {
+                x[(i, j)] = x[(i, j)] * s + 2.0;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn pca_host_backends_agree() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let x = cloud(80, 20, 5);
+        let exact = fit(&coord, &x, 4, Method::Gesvd, 1).unwrap();
+        for m in [Method::Jacobi, Method::Lanczos, Method::PartialEigen] {
+            let p = fit(&coord, &x, 4, m, 1).unwrap();
+            for i in 0..4 {
+                let rel = (p.eigenvalues[i] - exact.eigenvalues[i]).abs() / exact.eigenvalues[0];
+                assert!(rel < 1e-7, "{m:?} λ{i} rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn explained_ratio_sums_below_one() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        let x = cloud(60, 15, 7);
+        let p = fit(&coord, &x, 5, Method::Gesvd, 1).unwrap();
+        let sum: f64 = p.explained_ratio.iter().sum();
+        assert!(sum > 0.5 && sum <= 1.0 + 1e-9, "sum {sum}");
+        // descending eigenvalues
+        for i in 1..5 {
+            assert!(p.eigenvalues[i - 1] >= p.eigenvalues[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn transform_reconstruct_roundtrip() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        // exactly rank-3 data (+mean): k=3 PCA reconstructs perfectly
+        let w = Matrix::gaussian(50, 3, 1);
+        let b = Matrix::gaussian(3, 12, 2);
+        let mut x = crate::linalg::gemm::matmul(&w, &b);
+        for i in 0..50 {
+            for j in 0..12 {
+                x[(i, j)] += 3.0;
+            }
+        }
+        let p = fit(&coord, &x, 3, Method::Gesvd, 1).unwrap();
+        let scores = transform(&p, &x);
+        let rec = inverse_transform(&p, &scores);
+        assert!(rec.max_diff(&x) < 1e-8, "roundtrip err {}", rec.max_diff(&x));
+    }
+}

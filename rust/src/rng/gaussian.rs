@@ -1,0 +1,59 @@
+//! Box–Muller Gaussian transform over any uniform stream — the same
+//! transform CuRAND's `curandGenerateNormalDouble` applies to Philox output.
+
+use super::RngCore;
+
+/// Stream of standard-normal doubles. Each Box–Muller step consumes two
+/// uniforms and yields two Gaussians; the second is buffered.
+#[derive(Clone, Debug)]
+pub struct GaussianStream<R: RngCore> {
+    rng: R,
+    spare: Option<f64>,
+}
+
+impl<R: RngCore> GaussianStream<R> {
+    pub fn new(rng: R) -> Self {
+        Self { rng, spare: None }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // u1 in (0,1]: avoid ln(0)
+        let u1 = 1.0 - self.rng.next_f64();
+        let u2 = self.rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (sin, cos) = (std::f64::consts::TAU * u2).sin_cos();
+        self.spare = Some(r * sin);
+        r * cos
+    }
+
+    /// Gaussian with given mean and standard deviation.
+    #[inline]
+    pub fn next_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.next()
+    }
+
+    pub fn into_inner(self) -> R {
+        self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox4x32;
+
+    #[test]
+    fn finite_and_scaled() {
+        let mut g = GaussianStream::new(Philox4x32::new(11));
+        let xs: Vec<f64> = (0..50_000).map(|_| g.next_scaled(3.0, 0.5)).collect();
+        assert!(xs.iter().all(|x| x.is_finite()));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((mean - 3.0).abs() < 0.02, "mean {mean}");
+        assert!((var.sqrt() - 0.5).abs() < 0.02, "std {}", var.sqrt());
+    }
+}

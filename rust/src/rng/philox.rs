@@ -1,0 +1,152 @@
+//! Philox4x32-10 counter-based PRNG (Salmon et al., SC'11) — the default
+//! generator of NVIDIA's CuRAND library that the paper leans on.
+//!
+//! State is a 128-bit counter and a 64-bit key; each `round of the bijection
+//! mixes the four 32-bit counter lanes with multiply-hi/lo and the key. Ten
+//! rounds give crush-resistant output. Because output block i is a pure
+//! function of (key, i), streams can be split across threads by partitioning
+//! the counter space — exactly how CuRAND fills device buffers in parallel.
+
+use super::RngCore;
+
+const PHILOX_M0: u32 = 0xD251_1F53;
+const PHILOX_M1: u32 = 0xCD9E_8D57;
+const PHILOX_W0: u32 = 0x9E37_79B9; // golden ratio
+const PHILOX_W1: u32 = 0xBB67_AE85; // sqrt(3)-1
+
+/// Philox4x32-10 generator. Produces 4 u32 words per counter block.
+#[derive(Clone, Debug)]
+pub struct Philox4x32 {
+    counter: u128,
+    key: [u32; 2],
+    /// buffered output block and read position
+    buf: [u32; 4],
+    pos: usize,
+}
+
+impl Philox4x32 {
+    /// New stream from a 64-bit seed (becomes the key; counter starts at 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_counter(seed, 0)
+    }
+
+    /// New stream with an explicit starting counter block — the parallel
+    /// split API: thread t handling blocks [t*B, (t+1)*B) constructs
+    /// `with_counter(seed, t*B)` and produces output identical to the
+    /// sequential stream over that range.
+    pub fn with_counter(seed: u64, counter: u128) -> Self {
+        Self {
+            counter,
+            key: [seed as u32, (seed >> 32) as u32],
+            buf: [0; 4],
+            pos: 4, // force generation on first draw
+        }
+    }
+
+    /// The Philox bijection: 10 rounds over a counter block.
+    #[inline]
+    pub fn block(key: [u32; 2], counter: u128) -> [u32; 4] {
+        let mut c = [
+            counter as u32,
+            (counter >> 32) as u32,
+            (counter >> 64) as u32,
+            (counter >> 96) as u32,
+        ];
+        let mut k = key;
+        for _ in 0..10 {
+            c = Self::round(c, k);
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+        c
+    }
+
+    #[inline]
+    fn round(c: [u32; 4], k: [u32; 2]) -> [u32; 4] {
+        let p0 = (c[0] as u64).wrapping_mul(PHILOX_M0 as u64);
+        let p1 = (c[2] as u64).wrapping_mul(PHILOX_M1 as u64);
+        let (hi0, lo0) = ((p0 >> 32) as u32, p0 as u32);
+        let (hi1, lo1) = ((p1 >> 32) as u32, p1 as u32);
+        [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0]
+    }
+
+    /// Skip ahead `blocks` counter blocks (4 u32 outputs each). O(1).
+    pub fn skip_blocks(&mut self, blocks: u128) {
+        self.counter = self.counter.wrapping_add(blocks);
+        self.pos = 4;
+    }
+}
+
+impl RngCore for Philox4x32 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos == 4 {
+            self.buf = Self::block(self.key, self.counter);
+            self.counter = self.counter.wrapping_add(1);
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::RngCore;
+
+    /// Known-answer test from the Random123 reference implementation
+    /// (philox4x32x10, counter = key = 0).
+    #[test]
+    fn philox_kat_zero() {
+        let out = Philox4x32::block([0, 0], 0);
+        assert_eq!(out, [0x6627_e8d5, 0xe169_c58d, 0xbc57_ac4c, 0x9b00_dbd8]);
+    }
+
+    /// Regression vector: all-ones counter and key. (Implementation is
+    /// pinned by the published zero-KAT above; these freeze the exact
+    /// output so any refactor that changes the stream fails loudly.)
+    #[test]
+    fn philox_regression_ones() {
+        let out = Philox4x32::block([0xffff_ffff, 0xffff_ffff], u128::MAX);
+        assert_eq!(out, [1083123565, 1103641358, 2718681030, 1834242557]);
+    }
+
+    /// Regression vector: pi-digits counter/key pattern.
+    #[test]
+    fn philox_regression_pi() {
+        // counter = {0x243f6a88, 0x85a308d3, 0x13198a2e, 0x03707344}
+        // key     = {0xa4093822, 0x299f31d0}
+        let counter = (0x243f_6a88u128)
+            | (0x85a3_08d3u128 << 32)
+            | (0x1319_8a2eu128 << 64)
+            | (0x0370_7344u128 << 96);
+        let out = Philox4x32::block([0xa409_3822, 0x299f_31d0], counter);
+        assert_eq!(out, [3513581065, 2499661035, 1342301216, 605187745]);
+    }
+
+    #[test]
+    fn skip_matches_sequential() {
+        let mut a = Philox4x32::new(99);
+        for _ in 0..4 * 17 {
+            a.next_u32();
+        }
+        let mut b = Philox4x32::new(99);
+        b.skip_blocks(17);
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn parallel_split_equals_sequential() {
+        // two "threads" each filling half the counter space match the
+        // one-stream output — the CuRAND-style parallel fill invariant.
+        let mut seq = Philox4x32::new(5);
+        let seq_out: Vec<u32> = (0..32).map(|_| seq.next_u32()).collect();
+        let mut t0 = Philox4x32::with_counter(5, 0);
+        let mut t1 = Philox4x32::with_counter(5, 4);
+        let mut par: Vec<u32> = (0..16).map(|_| t0.next_u32()).collect();
+        par.extend((0..16).map(|_| t1.next_u32()));
+        assert_eq!(seq_out, par);
+    }
+}

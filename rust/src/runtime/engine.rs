@@ -1,0 +1,241 @@
+//! Executable engine: lazy compile cache + typed execute entry points.
+
+use super::manifest::{ArtifactKind, ArtifactSpec, Manifest};
+use crate::linalg::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Output of an rsvd/pca artifact execution, padded shapes already sliced
+/// back to the caller's (m, n).
+pub struct RsvdOutput {
+    /// Q (m×s): orthonormal range basis (empty for values-only artifacts).
+    pub q: Option<Matrix>,
+    /// B = QᵀA (s×n) (empty for values-only artifacts).
+    pub b: Option<Matrix>,
+    /// G = BBᵀ (s×s): the small Gram handed to the host eigensolver.
+    pub g: Matrix,
+    /// Wall time of the device execution only.
+    pub exec_time: std::time::Duration,
+}
+
+/// PJRT client + compiled-executable cache. `Engine` is `Sync`-safe via an
+/// internal mutex on the cache; executions themselves are serialized by the
+/// single CPU device anyway.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative compile time (visible in metrics/EXPERIMENTS.md)
+    compile_time: Mutex<std::time::Duration>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifact_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_time: Mutex::new(Default::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn total_compile_time(&self) -> std::time::Duration {
+        *self.compile_time.lock().unwrap()
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    pub fn executable(
+        &self,
+        spec: &ArtifactSpec,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parse HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {}", spec.name))?;
+        let exe = std::sync::Arc::new(exe);
+        *self.compile_time.lock().unwrap() += t0.elapsed();
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of the given kinds (server warmup).
+    pub fn warmup(&self, kinds: &[ArtifactKind], impl_name: &str) -> Result<usize> {
+        let mut count = 0;
+        let specs: Vec<ArtifactSpec> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| kinds.contains(&a.kind) && a.impl_name == impl_name)
+            .cloned()
+            .collect();
+        for spec in specs {
+            self.executable(&spec)?;
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    /// Execute an rsvd-family artifact on matrix `a` (padded to bucket as
+    /// needed). Returns outputs sliced back to the *bucket* sizes; spectral
+    /// quantities are invariant to the zero padding.
+    pub fn run_rsvd(&self, spec: &ArtifactSpec, a: &Matrix, seed: [u32; 2]) -> Result<RsvdOutput> {
+        anyhow::ensure!(
+            matches!(
+                spec.kind,
+                ArtifactKind::Rsvd | ArtifactKind::RsvdValues | ArtifactKind::Pca
+            ),
+            "run_rsvd on {:?}",
+            spec.kind
+        );
+        anyhow::ensure!(
+            a.rows() <= spec.m && a.cols() <= spec.n,
+            "matrix {}x{} exceeds bucket {}x{}",
+            a.rows(),
+            a.cols(),
+            spec.m,
+            spec.n
+        );
+        if spec.kind == ArtifactKind::Pca {
+            anyhow::ensure!(
+                a.rows() == spec.m,
+                "pca bucket needs exact sample count {} (got {})",
+                spec.m,
+                a.rows()
+            );
+        }
+        let exe = self.executable(spec)?;
+        let padded;
+        let input = if a.shape() == (spec.m, spec.n) {
+            a
+        } else {
+            padded = a.pad_to(spec.m, spec.n);
+            &padded
+        };
+        let a_lit = matrix_to_literal(input)?;
+        let seed_lit = xla::Literal::vec1(&seed[..]);
+
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&[a_lit, seed_lit])?[0][0].to_literal_sync()?;
+        let exec_time = t0.elapsed();
+
+        let parts = result.to_tuple()?;
+        match spec.kind {
+            ArtifactKind::RsvdValues => {
+                anyhow::ensure!(parts.len() == 1, "values artifact returned {}", parts.len());
+                let g = literal_to_matrix(&parts[0], spec.s, spec.s)?;
+                Ok(RsvdOutput { q: None, b: None, g, exec_time })
+            }
+            _ => {
+                anyhow::ensure!(parts.len() == 3, "rsvd artifact returned {}", parts.len());
+                let q = literal_to_matrix(&parts[0], spec.m, spec.s)?;
+                let b = literal_to_matrix(&parts[1], spec.s, spec.n)?;
+                let g = literal_to_matrix(&parts[2], spec.s, spec.s)?;
+                Ok(RsvdOutput { q: Some(q), b: Some(b), g, exec_time })
+            }
+        }
+    }
+
+    /// Execute a gemm artifact: C = A·B.
+    pub fn run_gemm(&self, spec: &ArtifactSpec, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(spec.kind == ArtifactKind::Gemm, "run_gemm on {:?}", spec.kind);
+        anyhow::ensure!(
+            a.shape() == (spec.m, spec.n) && b.shape() == (spec.n, spec.s),
+            "gemm shapes {:?}·{:?} vs bucket ({}, {}, {})",
+            a.shape(),
+            b.shape(),
+            spec.m,
+            spec.n,
+            spec.s
+        );
+        let exe = self.executable(spec)?;
+        let a_lit = matrix_to_literal(a)?;
+        let b_lit = matrix_to_literal(b)?;
+        let result = exe.execute::<xla::Literal>(&[a_lit, b_lit])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        literal_to_matrix(&parts[0], spec.m, spec.s)
+    }
+}
+
+/// Row-major Matrix → f64 literal of the same shape.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(m.as_slice());
+    Ok(lit.reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Literal (f64, any layout — `to_vec` linearizes in logical row-major
+/// order) → Matrix with expected shape.
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = lit.to_vec::<f64>()?;
+    anyhow::ensure!(
+        v.len() == rows * cols,
+        "literal has {} elements, expected {}x{}",
+        v.len(),
+        rows,
+        cols
+    );
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// Complete an rsvd artifact output into (U, σ, V) with the host
+/// eigensolver — the step-5/6 finish described in DESIGN.md §6b.
+/// `k` ≤ s; `orig_n` slices V back when the input was column-padded.
+pub fn finish_rsvd(out: &RsvdOutput, k: usize, orig_m: usize, orig_n: usize) -> crate::linalg::Svd {
+    let s = out.g.rows();
+    let k = k.min(s);
+    let (w, wvec) = crate::linalg::eigen::eigh(&out.g);
+    // σ = √λ (clamped: padding/roundoff can give tiny negatives)
+    let sigma: Vec<f64> = w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect();
+    let wk = wvec.submatrix(0, s, 0, k);
+    let u = match &out.q {
+        Some(q) => {
+            let full = crate::linalg::gemm::matmul(q, &wk);
+            full.submatrix(0, orig_m.min(full.rows()), 0, k)
+        }
+        None => Matrix::zeros(0, 0),
+    };
+    let v = match &out.b {
+        Some(b) => {
+            // V = Bᵀ W Σ⁻¹
+            let bw = crate::linalg::gemm::matmul_tn(b, &wk); // n×k
+            let mut v = bw.submatrix(0, orig_n.min(bw.rows()), 0, k);
+            for j in 0..k {
+                let inv = if sigma[j] > 0.0 { 1.0 / sigma[j] } else { 0.0 };
+                for i in 0..v.rows() {
+                    v[(i, j)] *= inv;
+                }
+            }
+            v
+        }
+        None => Matrix::zeros(0, 0),
+    };
+    crate::linalg::Svd { u, s: sigma, v }
+}
+
+/// σ-only finish: eigenvalues of G.
+pub fn finish_values(out: &RsvdOutput, k: usize) -> Vec<f64> {
+    let w = crate::linalg::eigen::eigvalsh(&out.g);
+    w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+}

@@ -1,0 +1,191 @@
+//! Artifact manifest: what `aot.py` exported and how to call each entry.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Kind of computation an artifact performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// (A, seed) → (Q m×s, B s×n, G s×s)
+    Rsvd,
+    /// (A, seed) → (G s×s,)
+    RsvdValues,
+    /// (X, seed) → (Q, B, G) on mean-centered X
+    Pca,
+    /// (A, B) → (C,)
+    Gemm,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rsvd" => Some(Self::Rsvd),
+            "rsvd_values" => Some(Self::RsvdValues),
+            "pca" => Some(Self::Pca),
+            "gemm" => Some(Self::Gemm),
+            _ => None,
+        }
+    }
+}
+
+/// One exported artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: PathBuf,
+    /// rows of the input matrix (m for rsvd, n_samples for pca).
+    pub m: usize,
+    /// cols of the input matrix (n for rsvd, d for pca); inner dim for gemm.
+    pub n: usize,
+    /// sketch width (rsvd kinds) / output cols (gemm).
+    pub s: usize,
+    /// power iterations (rsvd kinds only).
+    pub q: usize,
+    /// "pallas" or "xladot".
+    pub impl_name: String,
+}
+
+/// Parsed manifest with the artifact inventory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest: missing artifacts")?
+        {
+            let kind = ArtifactKind::parse(a.str_field("kind")?)
+                .ok_or_else(|| format!("unknown kind in {a}"))?;
+            let (m, n, s, q) = match kind {
+                ArtifactKind::Gemm => (
+                    a.usize_field("m")?,
+                    a.usize_field("k")?,
+                    a.usize_field("n")?,
+                    0,
+                ),
+                _ => (
+                    a.usize_field("m")?,
+                    a.usize_field("n")?,
+                    a.usize_field("s")?,
+                    a.usize_field("q")?,
+                ),
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.str_field("name")?.to_string(),
+                kind,
+                file: dir.join(a.str_field("file")?),
+                m,
+                n,
+                s,
+                q,
+                impl_name: a.str_field("impl")?.to_string(),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Artifacts of a kind + impl, for bucket selection.
+    pub fn of_kind<'a>(
+        &'a self,
+        kind: ArtifactKind,
+        impl_name: &'a str,
+    ) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(move |a| a.kind == kind && a.impl_name == impl_name)
+    }
+
+    /// Smallest bucket that fits an (m, n, min_s) request for `kind`,
+    /// by padded area (cost proxy: the pipeline is O(m·n·s)).
+    pub fn pick_bucket(
+        &self,
+        kind: ArtifactKind,
+        impl_name: &str,
+        m: usize,
+        n: usize,
+        min_s: usize,
+        q: Option<usize>,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.impl_name == impl_name)
+            .filter(|a| a.m >= m && a.n >= n && a.s >= min_s.min(a.n))
+            .filter(|a| q.map(|qq| a.q == qq).unwrap_or(true))
+            .min_by_key(|a| a.m * a.n * a.s)
+    }
+
+    /// Exact-m bucket variant: the PCA pipeline centers in-graph, so the
+    /// sample count must match exactly (row padding would shift the mean).
+    pub fn pick_pca_bucket(
+        &self,
+        impl_name: &str,
+        n_samples: usize,
+        d: usize,
+        min_s: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Pca && a.impl_name == impl_name)
+            .filter(|a| a.m == n_samples && a.n >= d && a.s >= min_s.min(a.n))
+            .min_by_key(|a| a.n * a.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest(dir: &Path) -> Manifest {
+        let text = r#"{"version":1,"artifacts":[
+          {"name":"r1","kind":"rsvd","file":"r1.hlo.txt","m":2048,"n":512,"s":64,"q":2,"impl":"xladot"},
+          {"name":"r2","kind":"rsvd","file":"r2.hlo.txt","m":2048,"n":1024,"s":64,"q":2,"impl":"xladot"},
+          {"name":"r3","kind":"rsvd","file":"r3.hlo.txt","m":2048,"n":512,"s":128,"q":2,"impl":"xladot"},
+          {"name":"p1","kind":"pca","file":"p1.hlo.txt","m":2048,"n":768,"s":64,"q":2,"impl":"xladot"},
+          {"name":"g1","kind":"gemm","file":"g1.hlo.txt","m":256,"k":256,"n":256,"impl":"pallas"}
+        ]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn parse_and_pick() {
+        let dir = std::env::temp_dir().join("rsvd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let man = toy_manifest(&dir);
+        assert_eq!(man.artifacts.len(), 5);
+        // smallest fitting bucket by m·n·s
+        let b = man
+            .pick_bucket(ArtifactKind::Rsvd, "xladot", 2000, 500, 40, None)
+            .unwrap();
+        assert_eq!(b.name, "r1");
+        // s too big for r1 → r3
+        let b = man
+            .pick_bucket(ArtifactKind::Rsvd, "xladot", 2000, 500, 100, None)
+            .unwrap();
+        assert_eq!(b.name, "r3");
+        // n too big for r1/r3 → r2
+        let b = man
+            .pick_bucket(ArtifactKind::Rsvd, "xladot", 2000, 600, 40, None)
+            .unwrap();
+        assert_eq!(b.name, "r2");
+        // nothing fits
+        assert!(man
+            .pick_bucket(ArtifactKind::Rsvd, "xladot", 4096, 512, 40, None)
+            .is_none());
+        // pca requires exact sample count
+        assert!(man.pick_pca_bucket("xladot", 2048, 700, 30).is_some());
+        assert!(man.pick_pca_bucket("xladot", 2047, 700, 30).is_none());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them — the
+//! "device" half of the system. Wraps the `xla` crate's PJRT CPU client
+//! with a manifest-driven, lazily-compiled executable cache.
+//!
+//! The rust side never traces or builds graphs; it only compiles the HLO
+//! text that `python/compile/aot.py` exported once at build time, then
+//! feeds it `Literal` buffers on the hot path.
+
+mod engine;
+mod manifest;
+
+pub use engine::{
+    finish_rsvd, finish_values, literal_to_matrix, matrix_to_literal, Engine, RsvdOutput,
+};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

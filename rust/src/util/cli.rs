@@ -1,0 +1,79 @@
+//! Tiny CLI argument parser substrate: `--flag`, `--key value`, positional.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn of(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = of("serve --n 512 --full --out=path.csv input.txt");
+        assert_eq!(a.positional, vec!["serve", "input.txt"]);
+        assert_eq!(a.get_usize("n", 0), 512);
+        assert!(a.has("full"));
+        assert_eq!(a.get("out"), Some("path.csv"));
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = of("--quick --n 8");
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("n", 0), 8);
+    }
+}

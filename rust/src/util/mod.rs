@@ -1,0 +1,4 @@
+//! Small shared utilities: JSON parsing (manifest), CLI argument parsing.
+
+pub mod cli;
+pub mod json;

@@ -1,0 +1,153 @@
+//! Integration: the full coordinator stack over the real artifact
+//! inventory — routing decisions, device/host agreement, concurrent mixed
+//! workloads, and the padding invariance end to end.
+
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::svd_gesvd::svd;
+use std::sync::Arc;
+
+fn boot() -> Option<Coordinator> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built");
+        return None;
+    }
+    Some(Coordinator::start(&dir, CoordinatorCfg::default()).expect("start"))
+}
+
+#[test]
+fn auto_uses_device_and_matches_exact() {
+    let Some(coord) = boot() else { return };
+    let a = spectrum_matrix(500, 256, Decay::Fast, 3);
+    let r = coord.run(Request::Svd {
+        a: a.clone(),
+        k: 8,
+        method: Method::Auto,
+        want_vectors: false,
+        seed: 5,
+    });
+    let d = r.outcome.expect("ok");
+    assert_eq!(d.method_used, "device", "bucket should fit");
+    assert!(d.bucket.is_some());
+    let exact = svd(&a);
+    for i in 0..8 {
+        assert!(
+            (d.values[i] - exact.s[i]).abs() < 1e-8 * exact.s[0],
+            "σ{i}: {} vs {}",
+            d.values[i],
+            exact.s[i]
+        );
+    }
+}
+
+#[test]
+fn device_and_host_methods_agree() {
+    let Some(coord) = boot() else { return };
+    let a = spectrum_matrix(400, 200, Decay::Sharp { beta: 10.0 }, 9);
+    let k = 6;
+    let dev = coord
+        .run(Request::Svd { a: a.clone(), k, method: Method::Auto, want_vectors: false, seed: 1 })
+        .outcome
+        .unwrap();
+    for m in [Method::Gesvd, Method::Lanczos, Method::PartialEigen] {
+        let host = coord
+            .run(Request::Svd { a: a.clone(), k, method: m, want_vectors: false, seed: 1 })
+            .outcome
+            .unwrap();
+        for i in 0..k {
+            assert!(
+                (dev.values[i] - host.values[i]).abs() < 1e-7 * dev.values[0],
+                "{m:?} σ{i}: {} vs {}",
+                dev.values[i],
+                host.values[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_mixed_workload_no_failures() {
+    let Some(coord) = boot() else { return };
+    let coord = Arc::new(coord);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..3 {
+            let coord = coord.clone();
+            handles.push(scope.spawn(move || {
+                for i in 0..4 {
+                    let seed = (t * 10 + i) as u64;
+                    let a = spectrum_matrix(300 + 40 * i, 150 + 20 * t, Decay::Fast, seed);
+                    let method = [Method::Auto, Method::Lanczos, Method::NativeRsvd][i % 3];
+                    let r = coord.run(Request::Svd {
+                        a,
+                        k: 4,
+                        method,
+                        want_vectors: i % 2 == 0,
+                        seed,
+                    });
+                    let d = r.outcome.expect("job must not fail");
+                    assert_eq!(d.values.len(), 4);
+                    if i % 2 == 0 {
+                        assert!(d.v.is_some());
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, 12);
+    assert_eq!(snap.jobs_failed, 0);
+}
+
+#[test]
+fn padding_invariance_through_coordinator() {
+    let Some(coord) = boot() else { return };
+    // 300x200 rides a 512x256 (or larger) bucket: results must match the
+    // exact solver on the *unpadded* matrix
+    let a = spectrum_matrix(300, 200, Decay::Fast, 21);
+    let d = coord
+        .run(Request::Svd { a: a.clone(), k: 5, method: Method::Auto, want_vectors: true, seed: 2 })
+        .outcome
+        .unwrap();
+    assert_eq!(d.method_used, "device");
+    let u = d.u.unwrap();
+    let v = d.v.unwrap();
+    assert_eq!(u.rows(), 300, "U sliced back to caller rows");
+    assert_eq!(v.rows(), 200, "V sliced back to caller cols");
+    let exact = svd(&a);
+    for i in 0..5 {
+        assert!((d.values[i] - exact.s[i]).abs() < 1e-8 * exact.s[0]);
+    }
+}
+
+#[test]
+fn pca_device_route_and_quality() {
+    let Some(coord) = boot() else { return };
+    // bucket requires the exact exported sample count (2048 or the tiny 64)
+    let x = rsvd::datagen::synthetic_faces(2048, 8, 8, 4);
+    let p = rsvd::pca::fit(&coord, &x, 10, Method::Auto, 3).expect("pca");
+    assert_eq!(p.method_used, "device");
+    assert_eq!(p.components.rows(), 192);
+    // eigenvalues descending, explained ratio sane
+    for i in 1..10 {
+        assert!(p.eigenvalues[i - 1] >= p.eigenvalues[i] - 1e-12);
+    }
+    let sum: f64 = p.explained_ratio.iter().sum();
+    assert!(sum > 0.3 && sum <= 1.0 + 1e-9, "explained {sum}");
+}
+
+#[test]
+fn failure_surfaces_cleanly() {
+    let Some(coord) = boot() else { return };
+    // k = 0 is degenerate but must not crash anything; values empty or err
+    let a = spectrum_matrix(64, 48, Decay::Fast, 1);
+    let r = coord.run(Request::Svd { a, k: 0, method: Method::Lanczos, want_vectors: false, seed: 1 });
+    match r.outcome {
+        Ok(d) => assert!(d.values.is_empty()),
+        Err(e) => assert!(!e.is_empty()),
+    }
+}

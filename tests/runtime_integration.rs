@@ -1,0 +1,204 @@
+//! Integration: AOT artifacts (tiny buckets) loaded and executed via PJRT
+//! must agree numerically with the pure-rust solvers — the cross-layer
+//! correctness contract of the whole system.
+//!
+//! Requires `make artifacts` (skips, loudly, if artifacts/ is missing).
+
+use rsvd::linalg::{gemm::matmul, rsvd::RsvdOpts, svd_gesvd::svd, Matrix};
+use rsvd::runtime::{finish_rsvd, finish_values, ArtifactKind, Engine};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn gemm_artifact_matches_host_gemm() {
+    let Some(eng) = engine() else { return };
+    for impl_name in ["xladot", "pallas"] {
+        let spec = eng
+            .manifest()
+            .pick_bucket(ArtifactKind::Gemm, impl_name, 64, 64, 64, None)
+            .expect("gemm bucket")
+            .clone();
+        let a = Matrix::gaussian(spec.m, spec.n, 1);
+        let b = Matrix::gaussian(spec.n, spec.s, 2);
+        let c = eng.run_gemm(&spec, &a, &b).expect("run gemm");
+        let want = matmul(&a, &b);
+        let err = c.max_diff(&want);
+        assert!(err < 1e-10, "{impl_name}: gemm err {err}");
+    }
+}
+
+#[test]
+fn gemm_artifact_nonsquare_layout() {
+    // guards against any row/column-major marshalling mixup: use a matrix
+    // whose transpose would give a very different product
+    let Some(eng) = engine() else { return };
+    let spec = eng
+        .manifest()
+        .pick_bucket(ArtifactKind::Gemm, "xladot", 64, 64, 64, None)
+        .unwrap()
+        .clone();
+    let a = Matrix::from_fn(spec.m, spec.n, |i, j| (i * 1000 + j) as f64);
+    let b = Matrix::from_fn(spec.n, spec.s, |i, j| if i == j { 1.0 } else { 0.0 });
+    let c = eng.run_gemm(&spec, &a, &b).unwrap();
+    // A·I = A exactly
+    assert_eq!(c.as_slice(), a.as_slice());
+}
+
+#[test]
+fn rsvd_artifact_values_match_rust_baselines() {
+    let Some(eng) = engine() else { return };
+    for impl_name in ["xladot", "pallas"] {
+        let spec = eng
+            .manifest()
+            .pick_bucket(ArtifactKind::Rsvd, impl_name, 64, 48, 16, None)
+            .expect("rsvd bucket")
+            .clone();
+        // fast-decay test matrix at the exact bucket shape
+        let a = rsvd::datagen_test_matrix(spec.m, spec.n, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 3);
+        let out = eng.run_rsvd(&spec, &a, [0, 7]).expect("run rsvd");
+        let k = 5;
+        let got = finish_values(&out, k);
+        let exact = svd(&a);
+        for i in 0..k {
+            let rel = (got[i] - exact.s[i]).abs() / exact.s[0];
+            assert!(rel < 1e-8, "{impl_name} σ{i}: {} vs {} (rel {rel})", got[i], exact.s[i]);
+        }
+    }
+}
+
+#[test]
+fn rsvd_artifact_full_reconstruction() {
+    let Some(eng) = engine() else { return };
+    let spec = eng
+        .manifest()
+        .pick_bucket(ArtifactKind::Rsvd, "xladot", 64, 48, 16, None)
+        .unwrap()
+        .clone();
+    let a = rsvd::datagen_test_matrix(spec.m, spec.n, |i| 1.0 / (1 + i * i) as f64, 9);
+    let out = eng.run_rsvd(&spec, &a, [1, 2]).unwrap();
+    let k = 6;
+    let f = finish_rsvd(&out, k, spec.m, spec.n);
+    // U orthonormal, V orthonormal
+    let utu = rsvd::linalg::gemm::matmul_tn(&f.u, &f.u);
+    assert!(utu.max_diff(&Matrix::eye(k)) < 1e-8, "U orth");
+    // reconstruction ≈ best rank-k
+    let mut us = f.u.clone();
+    for i in 0..us.rows() {
+        for j in 0..k {
+            us[(i, j)] *= f.s[j];
+        }
+    }
+    let rec = matmul(&us, &f.v.transpose());
+    let exact = svd(&a);
+    let best: f64 = exact.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+    let err = a.add_scaled(-1.0, &rec).fro_norm();
+    assert!(err <= 1.05 * best + 1e-12, "err {err} vs best {best}");
+}
+
+#[test]
+fn rsvd_artifact_padding_invariance() {
+    // submit a smaller matrix than the bucket: top-k spectrum must match
+    // the unpadded host computation — the bucket-routing precondition.
+    let Some(eng) = engine() else { return };
+    let spec = eng
+        .manifest()
+        .pick_bucket(ArtifactKind::Rsvd, "xladot", 50, 30, 16, None)
+        .unwrap()
+        .clone();
+    assert!(spec.m > 50 && spec.n > 30, "want a padding case");
+    let a = rsvd::datagen_test_matrix(50, 30, |i| 1.0 / ((i + 1) as f64).powi(2), 5);
+    let out = eng.run_rsvd(&spec, &a, [3, 4]).unwrap();
+    let got = finish_values(&out, 4);
+    let exact = svd(&a);
+    for i in 0..4 {
+        assert!(
+            (got[i] - exact.s[i]).abs() < 1e-8 * exact.s[0],
+            "padded σ{i}: {} vs {}",
+            got[i],
+            exact.s[i]
+        );
+    }
+}
+
+#[test]
+fn artifact_agrees_with_native_rsvd_quality() {
+    // artifact pipeline and pure-rust Algorithm 1 use different RNG streams
+    // (Threefry vs Philox) so values differ at randomization error scale;
+    // both must satisfy the same approximation bound.
+    let Some(eng) = engine() else { return };
+    let spec = eng
+        .manifest()
+        .pick_bucket(ArtifactKind::Rsvd, "xladot", 64, 48, 16, None)
+        .unwrap()
+        .clone();
+    let a = Matrix::gaussian(spec.m, spec.n, 11);
+    let k = 4;
+    let exact = svd(&a);
+    let best: f64 = exact.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    let out = eng.run_rsvd(&spec, &a, [5, 6]).unwrap();
+    let dev = finish_rsvd(&out, k, spec.m, spec.n);
+    let host = rsvd::linalg::rsvd::rsvd(&a, k, &RsvdOpts::default());
+    for f in [&dev, &host] {
+        let mut us = f.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..k {
+                us[(i, j)] *= f.s[j];
+            }
+        }
+        let rec = matmul(&us, &f.v.transpose());
+        let err = a.add_scaled(-1.0, &rec).fro_norm();
+        assert!(err <= 1.10 * best, "err {err} vs best {best}");
+    }
+}
+
+#[test]
+fn pca_artifact_matches_host_pca() {
+    let Some(eng) = engine() else { return };
+    let spec = eng
+        .manifest()
+        .pick_pca_bucket("xladot", 64, 48, 16)
+        .expect("pca bucket")
+        .clone();
+    // data with a fast-decaying covariance spectrum (so the s=16 sketch
+    // captures everything significant) and a strong mean offset (so the
+    // in-graph centering must matter)
+    let mut x = Matrix::gaussian(spec.m, spec.n, 21);
+    for i in 0..x.rows() {
+        for j in 0..x.cols() {
+            let scale = 1.0 / ((j + 1) * (j + 1)) as f64;
+            x[(i, j)] = x[(i, j)] * scale + 10.0;
+        }
+    }
+    let out = eng.run_rsvd(&spec, &x, [9, 9]).unwrap();
+    let k = 4;
+    let evals: Vec<f64> = finish_values(&out, k)
+        .iter()
+        .map(|s| s * s / spec.m as f64)
+        .collect();
+    // host reference: eigvals of covariance of centered data
+    let mut xc = x.clone();
+    for j in 0..xc.cols() {
+        let mu: f64 = (0..xc.rows()).map(|i| xc[(i, j)]).sum::<f64>() / xc.rows() as f64;
+        for i in 0..xc.rows() {
+            xc[(i, j)] -= mu;
+        }
+    }
+    let cov = {
+        let mut g = rsvd::linalg::gemm::gram_t(&xc);
+        g.scale(1.0 / spec.m as f64);
+        g
+    };
+    let want = rsvd::linalg::eigen::eigvalsh(&cov);
+    for i in 0..k {
+        let rel = (evals[i] - want[i]).abs() / want[0];
+        assert!(rel < 1e-8, "PCA λ{i}: {} vs {} (rel {rel})", evals[i], want[i]);
+    }
+}
