@@ -75,7 +75,7 @@ fn ablate_oversampling(repeats: usize) {
     let exact = svd(&a);
     let k = 12;
     for p in [2usize, 5, 10, 20] {
-        let opts = RsvdOpts { oversample: p, power_iters: 2, seed: 9 };
+        let opts = RsvdOpts { oversample: p, power_iters: 2, seed: 9, ..Default::default() };
         let mut worst = 0.0f64;
         let t = time_n(repeats, || {
             let vals = rsvd::linalg::rsvd::rsvd_values(&a, k, &opts);

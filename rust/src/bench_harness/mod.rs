@@ -117,6 +117,25 @@ impl Table {
     }
 }
 
+/// GFLOP/s for an operation of `flops` floating point ops at `mean_s`.
+pub fn gflops(flops: f64, mean_s: f64) -> f64 {
+    if mean_s > 0.0 {
+        flops / mean_s / 1e9
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Write a JSON document to `path` (CI bench artifacts — e.g.
+/// `BENCH_gemm.json`, uploaded by the workflow to track the perf
+/// trajectory across PRs).
+pub fn save_json(path: &str, value: &crate::util::json::Json) {
+    match std::fs::write(path, format!("{value}\n")) {
+        Ok(()) => println!("(json saved to {path})"),
+        Err(e) => eprintln!("WARN: could not write {path}: {e}"),
+    }
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -161,6 +180,28 @@ mod tests {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert!((gflops(1e9, 0.5) - 2.0).abs() < 1e-12);
+        assert!(gflops(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn save_json_roundtrips() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("rsvd_bench_json_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("gemm".into()));
+        obj.insert("gflops".to_string(), Json::Num(12.5));
+        save_json(&path, &Json::Obj(obj));
+        let back = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(back.str_field("bench").unwrap(), "gemm");
+        assert_eq!(back.get("gflops").unwrap().as_f64().unwrap(), 12.5);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

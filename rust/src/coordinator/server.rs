@@ -26,6 +26,12 @@ pub struct CoordinatorCfg {
     pub batch_window: Duration,
     /// eagerly compile all rsvd-family artifacts at startup
     pub warmup: bool,
+    /// BLAS-3 thread-team size for host solver execution; `None` inherits
+    /// the process default (`RSVD_NUM_THREADS` / hardware). Set this when
+    /// several coordinators (or other compute) share the machine so jobs
+    /// partition cores instead of oversubscribing. Results are bitwise
+    /// identical for any value.
+    pub solver_threads: Option<usize>,
 }
 
 impl Default for CoordinatorCfg {
@@ -35,6 +41,7 @@ impl Default for CoordinatorCfg {
             max_batch: 8,
             batch_window: Duration::ZERO,
             warmup: false,
+            solver_threads: None,
         }
     }
 }
@@ -215,7 +222,9 @@ fn dispatch_loop(
                 let t0 = Instant::now();
                 // a panicking solver must fail the job, not the dispatcher
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    super::exec::execute(&job.request, r, engine.as_ref())
+                    crate::linalg::with_threads_opt(cfg.solver_threads, || {
+                        super::exec::execute(&job.request, r, engine.as_ref())
+                    })
                 }))
                 .unwrap_or_else(|p| {
                     let msg = p
@@ -328,6 +337,31 @@ mod tests {
         assert_eq!(d.values.len(), 2);
         assert!(d.values[0] >= d.values[1]);
         assert!(d.v.is_some());
+    }
+
+    #[test]
+    fn solver_threads_partitioning_is_result_invariant() {
+        // core partitioning must never change job results (bitwise). The
+        // matrix is sized so the solver's GEMMs clear PAR_FLOP_THRESHOLD
+        // and the team actually fans out — a small job would pass
+        // vacuously through the serial fallback.
+        let run = |threads: Option<usize>| {
+            let coord = Coordinator::start_host_only(CoordinatorCfg {
+                solver_threads: threads,
+                ..Default::default()
+            });
+            let r = coord.run(Request::Svd {
+                a: Matrix::gaussian(600, 400, 17),
+                k: 8,
+                method: Method::NativeRsvd,
+                want_vectors: false,
+                seed: 5,
+            });
+            r.outcome.expect("ok").values
+        };
+        let one = run(Some(1));
+        assert_eq!(one, run(Some(4)));
+        assert_eq!(one, run(None));
     }
 
     #[test]

@@ -63,13 +63,28 @@ pub fn scal(alpha: f64, x: &mut [f64]) {
     }
 }
 
-/// y ← A x (BLAS-2 gemv, row-major A).
+/// y ← A x (BLAS-2 gemv, row-major A). Rows are independent dot products,
+/// so the thread team splits `y` for large matrices (the Lanczos/power
+/// baselines are gemv-bound); per-element arithmetic is unchanged for any
+/// team size.
 pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
-    for i in 0..a.rows() {
-        y[i] = dot(a.row(i), x);
+    let (m, n) = a.shape();
+    let flops = 2.0 * m as f64 * n as f64;
+    let team = super::threading::Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { super::threading::partition(m, team, 1) } else { Vec::new() };
+    if chunks.len() <= 1 {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot(a.row(i), x);
+        }
+        return;
     }
+    super::threading::scoped_bands(y, &chunks, 1, |i0, _i1, band| {
+        for (r, yi) in band.iter_mut().enumerate() {
+            *yi = dot(a.row(i0 + r), x);
+        }
+    });
 }
 
 /// y ← Aᵀ x without forming Aᵀ (axpy over rows keeps unit stride).

@@ -54,21 +54,39 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
 /// Solve X·Rᵀ = B for X where R = Lᵀ is upper triangular — equivalently
 /// X = B·(Lᵀ)⁻¹, the trsm applied row-wise after CholeskyQR's Gram step.
 /// B is (m×n), L is (n×n) lower triangular. In-place on `b`.
+///
+/// Each row of B is an independent n² triangular solve, so the BLAS-3 team
+/// (see [`super::threading`]) splits the rows; per-row arithmetic is
+/// unchanged, keeping results bitwise independent of the team size.
 pub fn trsm_right_lt(b: &mut Matrix, l: &Matrix) {
     let (m, n) = b.shape();
     assert_eq!(l.shape(), (n, n));
+    if m == 0 || n == 0 {
+        return;
+    }
     // Row i of X solves x·Lᵀ = b i.e. for each column j ascending:
     // x[j] = (b[j] - Σ_{k<j} x[k]·Lᵀ[k,j]) / Lᵀ[j,j]; Lᵀ[k,j] = L[j,k]
-    for i in 0..m {
-        let row = b.row_mut(i);
-        for j in 0..n {
-            let mut s = row[j];
-            for k in 0..j {
-                s -= row[k] * l[(j, k)];
+    let solve_rows = |band: &mut [f64]| {
+        for row in band.chunks_mut(n) {
+            for j in 0..n {
+                let mut s = row[j];
+                for k in 0..j {
+                    s -= row[k] * l[(j, k)];
+                }
+                row[j] = s / l[(j, j)];
             }
-            row[j] = s / l[(j, j)];
         }
+    };
+    let flops = m as f64 * n as f64 * n as f64;
+    let team = super::threading::Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { super::threading::partition(m, team, 1) } else { Vec::new() };
+    if chunks.len() <= 1 {
+        solve_rows(b.as_mut_slice());
+        return;
     }
+    super::threading::scoped_bands(b.as_mut_slice(), &chunks, n, |_i0, _i1, band| {
+        solve_rows(band)
+    });
 }
 
 /// Solve L·y = b in place (forward substitution).

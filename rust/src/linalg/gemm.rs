@@ -2,20 +2,41 @@
 //!
 //! The randomized pipeline is reformulated so ~all flops land here; on the
 //! device side the analogous tiling is done by the L1 Pallas kernel
-//! (`python/compile/kernels/matmul.py`). This host implementation is a
-//! register-blocked, cache-blocked row-major GEMM used by every pure-rust
+//! (`python/compile/kernels/matmul.py`). This host implementation is the
+//! parallel, packed, cache-blocked row-major GEMM used by every pure-rust
 //! baseline and by the native fallback solver.
 //!
-//! Schedule: `C[i,:] += A[i,k] * B[k,:]` (ikj form — unit stride on B and C,
-//! autovectorizes to FMA), with an MR=4 row micro-kernel so each loaded row
-//! of B is reused four times from registers/L1, and KC-blocking so the
-//! working set of B stays cache-resident.
+//! Schedule (BLIS-style three-level blocking, see DESIGN.md §GEMM):
+//!
+//! ```text
+//! for jc in 0..n step NC          # C/B column panel (fits shared cache)
+//!   for kc in 0..k step KC        # reduction panel
+//!     pack B[kc, jc]  → B̃ (KC×NC, contiguous rows)
+//!     for ic in i0..i1 step MC    # A row block (fits L2); [i0,i1) is
+//!       pack A[ic, kc] → Ã        #   this thread's row range
+//!       for ir in 0..mc step MR   # MR×NC micro-kernel: C += alpha·Ã·B̃
+//! ```
+//!
+//! The team (size from [`super::threading`]) splits the *rows of C* into
+//! contiguous MR-aligned chunks, one `std::thread::scope` worker per chunk;
+//! each worker runs the full packed schedule over its rows with private
+//! pack buffers. Because every C element is owned by exactly one worker and
+//! the k-reduction order per element (KC blocks ascending, then k ascending
+//! within a block) does not depend on the partition, results are **bitwise
+//! identical for any thread count** — the determinism contract the
+//! coordinator and the tier-1 suite rely on. Calls below the flop threshold
+//! run serially on the calling thread with the same schedule.
 
+use super::threading::{partition, partition_triangular, scoped_bands, Parallelism};
 use super::Matrix;
 
-/// Panel height in k (tuned in the §Perf pass; see EXPERIMENTS.md).
+/// Reduction (k) panel depth: B̃ rows streamed per pack, Ã working set depth.
 const KC: usize = 256;
-/// Micro-kernel rows of A processed together.
+/// A-block height per pack: MC×KC panel of A held hot while B̃ streams.
+const MC: usize = 128;
+/// C/B column panel width: bounds the B̃ pack buffer at KC·NC doubles (2 MiB).
+const NC: usize = 1024;
+/// Micro-kernel rows: each B̃ row loaded is reused MR times from registers.
 const MR: usize = 4;
 
 /// C ← alpha·A·B + beta·C. Shapes: A(m×k), B(k×n), C(m×n).
@@ -36,52 +57,129 @@ pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
         return;
     }
 
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let team = Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { partition(m, team, MR) } else { Vec::new() };
     let bs = b.as_slice();
-    // kc blocking: each B panel (KC×n) is streamed through while 4 rows of C
-    // stay hot.
-    for kc0 in (0..k).step_by(KC) {
-        let kc1 = (kc0 + KC).min(k);
-        let mut i = 0;
-        while i + MR <= m {
-            gemm_micro::<MR>(alpha, a, bs, n, k, i, kc0, kc1, c);
-            i += MR;
-        }
-        while i < m {
-            gemm_micro::<1>(alpha, a, bs, n, k, i, kc0, kc1, c);
-            i += 1;
-        }
+
+    if chunks.len() <= 1 {
+        gemm_rows(alpha, a, bs, n, k, 0, m, c.as_mut_slice());
+        return;
     }
+    scoped_bands(c.as_mut_slice(), &chunks, n, |i0, i1, band| {
+        gemm_rows(alpha, a, bs, n, k, i0, i1, band)
+    });
 }
 
-/// R-row micro-kernel: C[i..i+R, :] += alpha * A[i..i+R, kc0..kc1] * B[kc0..kc1, :]
-#[inline(always)]
-fn gemm_micro<const R: usize>(
+/// One worker's share: the full packed schedule over C rows [i0, i1).
+/// `c_band` holds exactly those rows (row-major, width n).
+fn gemm_rows(
     alpha: f64,
     a: &Matrix,
     bs: &[f64],
     n: usize,
-    _k: usize,
-    i: usize,
-    kc0: usize,
-    kc1: usize,
-    c: &mut Matrix,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    c_band: &mut [f64],
 ) {
-    // gather the R A-rows up front
-    let mut arows: [&[f64]; R] = [&[]; R];
-    for (r, ar) in arows.iter_mut().enumerate() {
-        *ar = a.row(i + r);
-    }
-    // split_at_mut dance: rows of C are disjoint, take them as one slice
-    let cs = c.as_mut_slice();
-    for kk in kc0..kc1 {
-        let brow = &bs[kk * n..kk * n + n];
-        let mut coef = [0.0f64; R];
-        for r in 0..R {
-            coef[r] = alpha * arows[r][kk];
+    let mut bpack = vec![0.0; KC.min(k) * NC.min(n)];
+    // Ã holds full MR-high micro-panels, so round the block height up
+    let mut apack = vec![0.0; MC.min(i1 - i0).div_ceil(MR) * MR * KC.min(k)];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for kk0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - kk0);
+            pack_b(bs, n, kk0, kc, jc, nc, &mut bpack);
+            for ic in (i0..i1).step_by(MC) {
+                let mc = MC.min(i1 - ic);
+                pack_a(a, ic, mc, kk0, kc, &mut apack);
+                macro_kernel(alpha, &apack, &bpack, mc, nc, kc, c_band, ic - i0, jc, n);
+            }
         }
-        for r in 0..R {
-            let crow = &mut cs[(i + r) * n..(i + r) * n + n];
-            let cf = coef[r];
+    }
+}
+
+/// B̃ ← B[kk0..kk0+kc, jc..jc+nc], rows made contiguous (stride n → nc).
+#[inline]
+fn pack_b(bs: &[f64], n: usize, kk0: usize, kc: usize, jc: usize, nc: usize, bpack: &mut [f64]) {
+    for kk in 0..kc {
+        let src = &bs[(kk0 + kk) * n + jc..(kk0 + kk) * n + jc + nc];
+        bpack[kk * nc..kk * nc + nc].copy_from_slice(src);
+    }
+}
+
+/// Ã ← A[ic..ic+mc, kk0..kk0+kc] in micro-panel order: for each MR-row
+/// panel, the MR entries of one k-column sit contiguously (`[kk·MR + r]`),
+/// so the micro-kernel reads its coefficients with unit stride. Ragged
+/// final panels are zero-padded (the pad slots are never read back into C).
+#[inline]
+fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, apack: &mut [f64]) {
+    for (p, r0) in (0..mc).step_by(MR).enumerate() {
+        let h = MR.min(mc - r0);
+        let base = p * MR * kc;
+        for r in 0..MR {
+            if r < h {
+                let arow = &a.row(ic + r0 + r)[kk0..kk0 + kc];
+                for (kk, &v) in arow.iter().enumerate() {
+                    apack[base + kk * MR + r] = v;
+                }
+            } else {
+                for kk in 0..kc {
+                    apack[base + kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// C band rows [ir_base.., cols jc..jc+nc] += alpha · Ã · B̃ for one packed
+/// (mc×kc)·(kc×nc) block, sweeping MR-row micro-panels.
+#[inline]
+fn macro_kernel(
+    alpha: f64,
+    apack: &[f64],
+    bpack: &[f64],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c_band: &mut [f64],
+    ir_base: usize,
+    jc: usize,
+    n: usize,
+) {
+    for (p, r0) in (0..mc).step_by(MR).enumerate() {
+        let h = MR.min(mc - r0);
+        let panel = &apack[p * MR * kc..p * MR * kc + MR * kc];
+        micro_kernel(alpha, panel, bpack, h, nc, kc, c_band, ir_base + r0, jc, n);
+    }
+}
+
+/// MR×nc micro-kernel: for each k, broadcast the (≤MR) A coefficients and
+/// axpy the B̃ row into the C rows — unit stride on B̃ and C, autovectorizes
+/// to FMA. Per C element the k-order is strictly ascending, independent of
+/// panel height or thread partition (the determinism contract).
+#[inline(always)]
+fn micro_kernel(
+    alpha: f64,
+    apanel: &[f64],
+    bpack: &[f64],
+    h: usize,
+    nc: usize,
+    kc: usize,
+    c_band: &mut [f64],
+    row0: usize,
+    jc: usize,
+    n: usize,
+) {
+    for kk in 0..kc {
+        let brow = &bpack[kk * nc..kk * nc + nc];
+        let coef = &apanel[kk * MR..kk * MR + MR];
+        // no zero-coefficient skip: 0·Inf/0·NaN must still propagate NaN,
+        // matching the by-definition product
+        for r in 0..h {
+            let cf = alpha * coef[r];
+            let crow = &mut c_band[(row0 + r) * n + jc..(row0 + r) * n + jc + nc];
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += cf * bv;
             }
@@ -97,66 +195,111 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// C = Aᵀ·B without materializing Aᵀ.
-/// Schedule: C[j,:] += A[i,j] * B[i,:] — still unit-stride on B and C.
+/// Schedule: C[j,:] += A[i,j] * B[i,:] — unit stride on B and C. The team
+/// splits the rows of C (= columns of A): each worker owns C[j0..j1, :] and
+/// sweeps all of A/B, so the i-reduction order per element matches the
+/// serial schedule exactly for any thread count.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, ka) = a.shape();
     let (mb, n) = b.shape();
     assert_eq!(m, mb, "matmul_tn row dims");
     let mut c = Matrix::zeros(ka, n);
-    let cs_cols = n;
-    {
-        let cs = c.as_mut_slice();
+    if m == 0 || ka == 0 || n == 0 {
+        return c;
+    }
+    let flops = 2.0 * m as f64 * ka as f64 * n as f64;
+    let team = Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { partition(ka, team, 1) } else { Vec::new() };
+
+    let tn_rows = |j0: usize, j1: usize, band: &mut [f64]| {
         for i in 0..m {
-            let arow = a.row(i);
+            let arow = &a.row(i)[j0..j1];
             let brow = b.row(i);
-            for (j, &aij) in arow.iter().enumerate() {
+            for (jj, &aij) in arow.iter().enumerate() {
                 if aij != 0.0 {
-                    let crow = &mut cs[j * cs_cols..j * cs_cols + n];
+                    let crow = &mut band[jj * n..jj * n + n];
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += aij * bv;
                     }
                 }
             }
         }
+    };
+
+    if chunks.len() <= 1 {
+        tn_rows(0, ka, c.as_mut_slice());
+        return c;
     }
+    scoped_bands(c.as_mut_slice(), &chunks, n, tn_rows);
     c
 }
 
-/// C = A·Bᵀ. Inner products of rows — unit stride on both operands.
+/// C = A·Bᵀ. Inner products of rows — unit stride on both operands; the
+/// team splits the rows of C.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_nt inner dims");
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            crow[j] = super::blas::dot(arow, b.row(j));
-        }
+    if m == 0 || n == 0 {
+        return c;
     }
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let team = Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { partition(m, team, 1) } else { Vec::new() };
+
+    let nt_rows = |i0: usize, i1: usize, band: &mut [f64]| {
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let crow = &mut band[(i - i0) * n..(i - i0) * n + n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = super::blas::dot(arow, b.row(j));
+            }
+        }
+    };
+
+    if chunks.len() <= 1 {
+        nt_rows(0, m, c.as_mut_slice());
+        return c;
+    }
+    scoped_bands(c.as_mut_slice(), &chunks, n, nt_rows);
     c
 }
 
 /// Symmetric Gram matrix G = AᵀA (n×n), computing only the upper triangle
-/// and mirroring — the BLAS dsyrk pattern CholeskyQR relies on.
+/// and mirroring — the BLAS dsyrk pattern CholeskyQR relies on. The team
+/// splits the rows of G with a triangular partition (row j costs ~(n−j)
+/// axpys), then the mirror pass runs serially.
 pub fn gram_t(a: &Matrix) -> Matrix {
     let (m, n) = a.shape();
     let mut g = Matrix::zeros(n, n);
-    {
-        let gs = g.as_mut_slice();
+    if m == 0 || n == 0 {
+        return g;
+    }
+    // upper triangle ≈ half the full m·n² product
+    let flops = m as f64 * n as f64 * n as f64;
+    let team = Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { partition_triangular(n, team) } else { Vec::new() };
+
+    let upper_rows = |j0: usize, j1: usize, band: &mut [f64]| {
         for i in 0..m {
             let arow = a.row(i);
-            for j in 0..n {
+            for j in j0..j1 {
                 let aij = arow[j];
                 if aij != 0.0 {
-                    let grow = &mut gs[j * n + j..j * n + n];
+                    let grow = &mut band[(j - j0) * n + j..(j - j0) * n + n];
                     for (gv, av) in grow.iter_mut().zip(&arow[j..]) {
                         *gv += aij * av;
                     }
                 }
             }
         }
+    };
+
+    if chunks.len() <= 1 {
+        upper_rows(0, n, g.as_mut_slice());
+    } else {
+        scoped_bands(g.as_mut_slice(), &chunks, n, upper_rows);
     }
     // mirror upper → lower
     for i in 0..n {
@@ -168,15 +311,35 @@ pub fn gram_t(a: &Matrix) -> Matrix {
     g
 }
 
-/// Symmetric Gram matrix G = A·Aᵀ (m×m), upper triangle + mirror.
+/// Symmetric Gram matrix G = A·Aᵀ (m×m), upper triangle + mirror, with the
+/// same triangular row partition as [`gram_t`].
 pub fn gram_n(a: &Matrix) -> Matrix {
-    let (m, _) = a.shape();
+    let (m, k) = a.shape();
     let mut g = Matrix::zeros(m, m);
+    if m == 0 {
+        return g;
+    }
+    let flops = m as f64 * m as f64 * k as f64;
+    let team = Parallelism::current().team_for_flops(flops);
+    let chunks = if team > 1 { partition_triangular(m, team) } else { Vec::new() };
+
+    let upper_rows = |i0: usize, i1: usize, band: &mut [f64]| {
+        for i in i0..i1 {
+            let ri = a.row(i);
+            for j in i..m {
+                band[(i - i0) * m + j] = super::blas::dot(ri, a.row(j));
+            }
+        }
+    };
+
+    if chunks.len() <= 1 {
+        upper_rows(0, m, g.as_mut_slice());
+    } else {
+        scoped_bands(g.as_mut_slice(), &chunks, m, upper_rows);
+    }
     for i in 0..m {
-        let ri = a.row(i);
-        for j in i..m {
-            let v = super::blas::dot(ri, a.row(j));
-            g[(i, j)] = v;
+        for j in i + 1..m {
+            let v = g[(i, j)];
             g[(j, i)] = v;
         }
     }
@@ -186,6 +349,7 @@ pub fn gram_n(a: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::threading::with_threads;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
         let mut c = Matrix::zeros(a.rows(), b.cols());
@@ -208,6 +372,22 @@ mod tests {
             let b = Matrix::gaussian(k, n, 2);
             let c = matmul(&a, &b);
             assert!(c.max_diff(&naive(&a, &b)) < 1e-10, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_across_blocking_edges() {
+        // shapes straddling the KC/MC/NC panel boundaries and MR raggedness
+        for &(m, k, n) in &[
+            (MR, KC, 8),
+            (MC + 3, KC + 5, 17),
+            (2 * MC + 1, 2 * KC + 1, 33),
+            (130, 511, 70),
+        ] {
+            let a = Matrix::gaussian(m, k, (m + k) as u64);
+            let b = Matrix::gaussian(k, n, (k + n) as u64);
+            let c = matmul(&a, &b);
+            assert!(c.max_diff(&naive(&a, &b)) < 1e-9, "shape {m}x{k}x{n}");
         }
     }
 
@@ -248,5 +428,33 @@ mod tests {
         let a = Matrix::zeros(2, 0);
         let b = Matrix::zeros(0, 2);
         assert_eq!(matmul(&a, &b).as_slice(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn parallel_bitwise_matches_serial() {
+        // the determinism contract: identical bits for any team size, on
+        // shapes large enough to clear the flop threshold and odd enough to
+        // exercise ragged partitions
+        for &(m, k, n) in &[(257, 193, 129), (260, 128, 200)] {
+            let a = Matrix::gaussian(m, k, 11);
+            let b = Matrix::gaussian(k, n, 12);
+            let serial = with_threads(1, || matmul(&a, &b));
+            for t in [2, 3, crate::linalg::threading::available_threads()] {
+                let par = with_threads(t, || matmul(&a, &b));
+                assert_eq!(serial.as_slice(), par.as_slice(), "gemm t={t} {m}x{k}x{n}");
+            }
+            let serial = with_threads(1, || matmul_tn(&a, &a));
+            let par = with_threads(4, || matmul_tn(&a, &a));
+            assert_eq!(serial.as_slice(), par.as_slice(), "tn");
+            let serial = with_threads(1, || matmul_nt(&a, &a));
+            let par = with_threads(4, || matmul_nt(&a, &a));
+            assert_eq!(serial.as_slice(), par.as_slice(), "nt");
+            let serial = with_threads(1, || gram_t(&a));
+            let par = with_threads(4, || gram_t(&a));
+            assert_eq!(serial.as_slice(), par.as_slice(), "gram_t");
+            let serial = with_threads(1, || gram_n(&a));
+            let par = with_threads(4, || gram_n(&a));
+            assert_eq!(serial.as_slice(), par.as_slice(), "gram_n");
+        }
     }
 }

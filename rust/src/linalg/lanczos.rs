@@ -122,12 +122,8 @@ pub fn svds_opts(a: &Matrix, k: usize, opts: &LanczosOpts) -> Svd {
                 }
             }
             beta.push(b_j);
-            if vs.len() < ncv {
-                vs.push(w);
-            } else {
-                // keep the residual vector for the convergence test
-                vs.push(w);
-            }
+            // past ncv this is the residual vector the convergence test uses
+            vs.push(w);
         }
 
         // SVD of the small bidiagonal B (ncv×ncv: diag=alpha, super=beta)

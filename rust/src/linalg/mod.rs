@@ -11,6 +11,11 @@
 //! | RSpectra `svds`       | [`lanczos::svds`]                 |
 //! | R `rsvd` package      | [`rsvd::rsvd`]                    |
 //! | ours (GPU pipeline)   | `runtime` executing AOT artifacts |
+//!
+//! The BLAS-3 entry points ([`gemm`], plus the trsm in [`cholesky`]) run on
+//! a thread team configured by [`threading`] (`RSVD_NUM_THREADS`, scoped
+//! overrides, serial fallback for small work); results are bitwise
+//! independent of the team size — see DESIGN.md §GEMM.
 
 pub mod blas;
 pub mod bidiag;
@@ -24,8 +29,10 @@ pub mod qr;
 pub mod rsvd;
 pub mod svd_gesvd;
 pub mod svd_jacobi;
+pub mod threading;
 pub mod tridiag;
 
 pub use cholesky::LinalgError;
 pub use matrix::Matrix;
 pub use svd_gesvd::Svd;
+pub use threading::{with_threads, with_threads_opt, Parallelism};

@@ -1,6 +1,12 @@
 //! QR factorizations: classic Householder QR (the LAPACK geqrf family the
 //! baselines use) and CholeskyQR2 — the BLAS-3 reformulation the randomized
 //! pipeline uses, mirroring `python/compile/linalg.py`.
+//!
+//! CholeskyQR2 inherits the thread team automatically: its flops are the
+//! Gram product ([`gram_t`]) and the row-wise trsm
+//! ([`super::cholesky::trsm_right_lt`]), both parallelized over the BLAS-3
+//! team with bitwise thread-count-invariant results. Householder QR stays
+//! serial — it is the BLAS-2 fallback the paper's reformulation avoids.
 
 use super::blas::{axpy, dot, householder};
 use super::cholesky::{cholesky, trsm_right_lt, LinalgError};

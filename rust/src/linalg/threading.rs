@@ -1,0 +1,322 @@
+//! Threading configuration for the BLAS-3 layer.
+//!
+//! The paper's reformulation funnels ~all flops into GEMM precisely so that
+//! parallel hardware can saturate them; on the host side that means the
+//! BLAS-3 entry points in [`super::gemm`] fan out over a thread team. This
+//! module is the single knob that controls the team size:
+//!
+//! * `RSVD_NUM_THREADS` (env) pins the default team size for the process;
+//!   unset or invalid falls back to [`std::thread::available_parallelism`].
+//! * [`with_threads`] overrides the team size for the duration of a closure
+//!   on the current thread — the coordinator uses it to partition cores
+//!   between concurrent jobs instead of letting each job grab every core.
+//! * [`Parallelism::team_for_flops`] applies a serial fallback below a flop
+//!   threshold so the small matrices that dominate tests and experiment
+//!   tails never pay thread-spawn latency.
+//!
+//! **Determinism contract:** thread count never changes results. The GEMM
+//! schedules partition *output* elements (rows/columns of C) across the
+//! team and keep the k-reduction order per element identical to the serial
+//! schedule, so any operation is bitwise identical for 1 or N threads. The
+//! tier-1 suite asserts this for `rsvd` end to end.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Below this many flops (2·m·n·k for GEMM) the work is run serially:
+/// spawning a scoped thread costs ~10µs, which a sub-millisecond kernel
+/// cannot amortize.
+pub const PAR_FLOP_THRESHOLD: f64 = 4.0e6;
+
+/// Thread-team configuration for one BLAS-3 call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Exactly one thread (the calling thread) — no spawning at all.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// A fixed team size (clamped to ≥ 1).
+    pub fn fixed(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// The ambient configuration: the innermost [`with_threads`] override on
+    /// this thread, else the process default (`RSVD_NUM_THREADS` env, else
+    /// `available_parallelism`).
+    pub fn current() -> Parallelism {
+        let t = OVERRIDE.with(|o| o.get());
+        match t {
+            Some(n) => Parallelism::fixed(n),
+            None => Parallelism::fixed(process_default_threads()),
+        }
+    }
+
+    /// Configured team size (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Team size to actually use for a kernel of `flops` floating point
+    /// operations: serial below [`PAR_FLOP_THRESHOLD`], and never more
+    /// threads than keep each member above the threshold, so tiny matrices
+    /// and sliver panels don't regress.
+    pub fn team_for_flops(&self, flops: f64) -> usize {
+        if self.threads <= 1 || flops < PAR_FLOP_THRESHOLD {
+            return 1;
+        }
+        let by_work = (flops / PAR_FLOP_THRESHOLD) as usize;
+        self.threads.min(by_work.max(1))
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::current()
+    }
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Run `f` with the BLAS-3 team size pinned to `threads` on this thread
+/// (nests; restores the previous override on exit, including on panic).
+pub fn with_threads<T>(threads: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(threads.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Like [`with_threads`] but `None` leaves the ambient configuration alone —
+/// the shape every `Option<usize>` knob (RsvdOpts, CoordinatorCfg) funnels
+/// through.
+pub fn with_threads_opt<T>(threads: Option<usize>, f: impl FnOnce() -> T) -> T {
+    match threads {
+        Some(n) => with_threads(n, f),
+        None => f(),
+    }
+}
+
+/// Process-wide default team size, computed once: `RSVD_NUM_THREADS` if set
+/// to a positive integer, else `available_parallelism`, else 1.
+pub fn process_default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        parse_env_threads(std::env::var("RSVD_NUM_THREADS").ok().as_deref())
+            .unwrap_or_else(available_threads)
+    })
+}
+
+/// Hardware parallelism with a serial fallback (the value
+/// `available_parallelism` errors on restricted platforms).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse an `RSVD_NUM_THREADS` value: positive integers only; `0`, empty,
+/// or garbage mean "not set" (fall through to hardware detection).
+fn parse_env_threads(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Split `n` work items into `teams` contiguous chunks, each a multiple of
+/// `quantum` (except the last), covering [0, n) exactly. Returns the chunk
+/// boundaries as (start, end) pairs; never returns empty chunks.
+pub fn partition(n: usize, teams: usize, quantum: usize) -> Vec<(usize, usize)> {
+    let quantum = quantum.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let teams = teams.max(1).min(n.div_ceil(quantum));
+    // chunk size in quanta, spread as evenly as possible
+    let quanta = n.div_ceil(quantum);
+    let base = quanta / teams;
+    let extra = quanta % teams;
+    let mut out = Vec::with_capacity(teams);
+    let mut start = 0;
+    for t in 0..teams {
+        let q = base + usize::from(t < extra);
+        let end = (start + q * quantum).min(n);
+        if end > start {
+            out.push((start, end));
+        }
+        start = end;
+    }
+    out
+}
+
+/// Split row-major `data` (`width` elements per row) into the disjoint row
+/// bands given by `chunks` and run `f(start, end, band)` on one scoped
+/// thread per band — the shared fan-out under every parallel BLAS entry
+/// point. `mem::take` moves the long-lived borrow out so each band lives
+/// for the whole scope. Callers handle the serial (≤ 1 chunk) case before
+/// calling; chunks must tile `data` exactly.
+pub fn scoped_bands<T, F>(data: &mut [T], chunks: &[(usize, usize)], width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let mut rest = data;
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (idx, &(s, e)) in chunks.iter().enumerate() {
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut((e - s) * width);
+            rest = tail;
+            if idx + 1 == chunks.len() {
+                // the calling thread takes the final band instead of idling
+                // in scope-join: team of N costs N−1 spawns
+                f(s, e, band);
+            } else {
+                scope.spawn(move || f(s, e, band));
+            }
+        }
+    });
+}
+
+/// Partition rows [0, n) into ≤ `teams` contiguous chunks balanced for
+/// *triangular* work, where row i costs ~(n − i) (the dsyrk/Gram upper
+/// triangle). Equal-area boundaries sit at n·(1 − √(1 − t/T)); uniform
+/// chunks would hand the first thread ~2× the mean load.
+pub fn partition_triangular(n: usize, teams: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let teams = teams.max(1).min(n);
+    if teams == 1 {
+        return vec![(0, n)];
+    }
+    let mut bounds = Vec::with_capacity(teams + 1);
+    bounds.push(0usize);
+    for t in 1..teams {
+        let frac = t as f64 / teams as f64;
+        let x = (n as f64 * (1.0 - (1.0 - frac).sqrt())).round() as usize;
+        let prev = *bounds.last().unwrap();
+        // keep boundaries strictly increasing with room for the remaining
+        // teams to get ≥ 1 row each
+        bounds.push(x.clamp(prev + 1, n - (teams - t)));
+    }
+    bounds.push(n);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_parsing() {
+        assert_eq!(parse_env_threads(Some("4")), Some(4));
+        assert_eq!(parse_env_threads(Some(" 8 ")), Some(8));
+        assert_eq!(parse_env_threads(Some("0")), None);
+        assert_eq!(parse_env_threads(Some("-2")), None);
+        assert_eq!(parse_env_threads(Some("lots")), None);
+        assert_eq!(parse_env_threads(Some("")), None);
+        assert_eq!(parse_env_threads(None), None);
+    }
+
+    #[test]
+    fn override_scoping() {
+        let ambient = Parallelism::current().threads();
+        let inner = with_threads(3, || {
+            let mid = Parallelism::current().threads();
+            let nested = with_threads(1, || Parallelism::current().threads());
+            (mid, nested)
+        });
+        assert_eq!(inner, (3, 1));
+        assert_eq!(Parallelism::current().threads(), ambient, "override restored");
+    }
+
+    #[test]
+    fn override_restored_on_panic() {
+        let before = Parallelism::current().threads();
+        let r = std::panic::catch_unwind(|| with_threads(7, || panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(Parallelism::current().threads(), before);
+    }
+
+    #[test]
+    fn flop_threshold_gates_team() {
+        let p = Parallelism::fixed(8);
+        assert_eq!(p.team_for_flops(1000.0), 1, "tiny work stays serial");
+        assert_eq!(p.team_for_flops(2.0 * 1024.0 * 1024.0 * 1024.0), 8);
+        // medium work gets a partial team: each member keeps ≥ threshold
+        let t = p.team_for_flops(3.0 * PAR_FLOP_THRESHOLD);
+        assert!(t >= 1 && t <= 3, "partial team {t}");
+        assert_eq!(Parallelism::serial().team_for_flops(1e12), 1);
+    }
+
+    #[test]
+    fn partition_covers_exactly() {
+        for &(n, teams, quantum) in
+            &[(10usize, 3usize, 1usize), (100, 7, 4), (4, 8, 4), (17, 2, 4), (1, 4, 4), (64, 4, 4)]
+        {
+            let chunks = partition(n, teams, quantum);
+            assert!(!chunks.is_empty());
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, n);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(s, e) in &chunks[..chunks.len() - 1] {
+                assert_eq!((e - s) % quantum, 0, "quantum-aligned chunk ({n},{teams},{quantum})");
+            }
+        }
+        assert!(partition(0, 4, 4).is_empty());
+    }
+
+    #[test]
+    fn scoped_bands_tiles_exactly() {
+        // 9 rows of width 3, uneven 4-way partition: every element written
+        // exactly once, with the right (start, end) handed to each worker
+        let mut data = vec![0usize; 27];
+        let chunks = partition(9, 4, 1);
+        scoped_bands(&mut data, &chunks, 3, |s, e, band| {
+            assert_eq!(band.len(), (e - s) * 3);
+            for (i, x) in band.iter_mut().enumerate() {
+                *x = s * 3 + i + 1;
+            }
+        });
+        let want: Vec<usize> = (1..=27).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn triangular_partition_covers_and_balances() {
+        for &(n, teams) in &[(100usize, 4usize), (7, 7), (7, 16), (513, 3), (2, 2), (1, 4)] {
+            let chunks = partition_triangular(n, teams);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, n);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].0 < w[0].1);
+            }
+        }
+        // area balance: no chunk of a big partition does > 2× mean work
+        let n = 1000usize;
+        let teams = 8usize;
+        let total: usize = (0..n).map(|i| n - i).sum();
+        for (s, e) in partition_triangular(n, teams) {
+            let area: usize = (s..e).map(|i| n - i).sum();
+            assert!(area * teams <= 2 * total, "chunk [{s},{e}) area {area}");
+        }
+        assert!(partition_triangular(0, 4).is_empty());
+    }
+
+    #[test]
+    fn with_threads_opt_passthrough() {
+        let ambient = Parallelism::current().threads();
+        assert_eq!(with_threads_opt(None, || Parallelism::current().threads()), ambient);
+        assert_eq!(with_threads_opt(Some(2), || Parallelism::current().threads()), 2);
+    }
+}

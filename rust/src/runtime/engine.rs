@@ -1,11 +1,18 @@
 //! Executable engine: lazy compile cache + typed execute entry points.
+//!
+//! The PJRT client comes from the `xla` crate, which needs the XLA C++
+//! runtime at build time. That dependency is **feature-gated** (`--features
+//! xla`, off by default) so the crate builds and the full host stack runs
+//! on a bare toolchain: without the feature, [`Engine::new`] returns an
+//! error and every route falls back to the host solvers (the coordinator
+//! and benches already handle engine-less operation). The artifact
+//! *finish* steps ([`finish_rsvd`], [`finish_values`]) are pure host
+//! linalg and are always available.
 
 use super::manifest::{ArtifactKind, ArtifactSpec, Manifest};
 use crate::linalg::Matrix;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::Mutex;
-use std::time::Instant;
+
+pub use pjrt::Engine;
 
 /// Output of an rsvd/pca artifact execution, padded shapes already sliced
 /// back to the caller's (m, n).
@@ -20,183 +27,282 @@ pub struct RsvdOutput {
     pub exec_time: std::time::Duration,
 }
 
-/// PJRT client + compiled-executable cache. `Engine` is `Sync`-safe via an
-/// internal mutex on the cache; executions themselves are serialized by the
-/// single CPU device anyway.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    /// cumulative compile time (visible in metrics/EXPERIMENTS.md)
-    compile_time: Mutex<std::time::Duration>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    use std::time::Instant;
 
-impl Engine {
-    /// Create a CPU PJRT engine over an artifact directory.
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
-        let manifest = Manifest::load(&artifact_dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            compile_time: Mutex::new(Default::default()),
-        })
+    /// PJRT client + compiled-executable cache. `Engine` is `Sync`-safe via
+    /// an internal mutex on the cache; executions themselves are serialized
+    /// by the single CPU device anyway.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+        /// cumulative compile time (visible in metrics/EXPERIMENTS.md)
+        compile_time: Mutex<std::time::Duration>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn total_compile_time(&self) -> std::time::Duration {
-        *self.compile_time.lock().unwrap()
-    }
-
-    /// Compile (or fetch cached) executable for an artifact.
-    pub fn executable(
-        &self,
-        spec: &ArtifactSpec,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(&spec.name) {
-            return Ok(e.clone());
+    impl Engine {
+        /// Create a CPU PJRT engine over an artifact directory.
+        pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine, String> {
+            let manifest = Manifest::load(&artifact_dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("create PJRT CPU client: {e}"))?;
+            Ok(Engine {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+                compile_time: Mutex::new(Default::default()),
+            })
         }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .with_context(|| format!("parse HLO text {:?}", spec.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile artifact {}", spec.name))?;
-        let exe = std::sync::Arc::new(exe);
-        *self.compile_time.lock().unwrap() += t0.elapsed();
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(spec.name.clone(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Eagerly compile every artifact of the given kinds (server warmup).
-    pub fn warmup(&self, kinds: &[ArtifactKind], impl_name: &str) -> Result<usize> {
-        let mut count = 0;
-        let specs: Vec<ArtifactSpec> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| kinds.contains(&a.kind) && a.impl_name == impl_name)
-            .cloned()
-            .collect();
-        for spec in specs {
-            self.executable(&spec)?;
-            count += 1;
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        Ok(count)
-    }
 
-    /// Execute an rsvd-family artifact on matrix `a` (padded to bucket as
-    /// needed). Returns outputs sliced back to the *bucket* sizes; spectral
-    /// quantities are invariant to the zero padding.
-    pub fn run_rsvd(&self, spec: &ArtifactSpec, a: &Matrix, seed: [u32; 2]) -> Result<RsvdOutput> {
-        anyhow::ensure!(
-            matches!(
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn total_compile_time(&self) -> std::time::Duration {
+            *self.compile_time.lock().unwrap()
+        }
+
+        /// Compile (or fetch cached) executable for an artifact.
+        pub fn executable(
+            &self,
+            spec: &ArtifactSpec,
+        ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, String> {
+            if let Some(e) = self.cache.lock().unwrap().get(&spec.name) {
+                return Ok(e.clone());
+            }
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| format!("parse HLO text {:?}: {e}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile artifact {}: {e}", spec.name))?;
+            let exe = std::sync::Arc::new(exe);
+            *self.compile_time.lock().unwrap() += t0.elapsed();
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(spec.name.clone(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Eagerly compile every artifact of the given kinds (server warmup).
+        pub fn warmup(&self, kinds: &[ArtifactKind], impl_name: &str) -> Result<usize, String> {
+            let mut count = 0;
+            let specs: Vec<ArtifactSpec> = self
+                .manifest
+                .artifacts
+                .iter()
+                .filter(|a| kinds.contains(&a.kind) && a.impl_name == impl_name)
+                .cloned()
+                .collect();
+            for spec in specs {
+                self.executable(&spec)?;
+                count += 1;
+            }
+            Ok(count)
+        }
+
+        /// Execute an rsvd-family artifact on matrix `a` (padded to bucket
+        /// as needed). Returns outputs sliced back to the *bucket* sizes;
+        /// spectral quantities are invariant to the zero padding.
+        pub fn run_rsvd(
+            &self,
+            spec: &ArtifactSpec,
+            a: &Matrix,
+            seed: [u32; 2],
+        ) -> Result<RsvdOutput, String> {
+            if !matches!(
                 spec.kind,
                 ArtifactKind::Rsvd | ArtifactKind::RsvdValues | ArtifactKind::Pca
-            ),
-            "run_rsvd on {:?}",
-            spec.kind
-        );
-        anyhow::ensure!(
-            a.rows() <= spec.m && a.cols() <= spec.n,
-            "matrix {}x{} exceeds bucket {}x{}",
-            a.rows(),
-            a.cols(),
-            spec.m,
-            spec.n
-        );
-        if spec.kind == ArtifactKind::Pca {
-            anyhow::ensure!(
-                a.rows() == spec.m,
-                "pca bucket needs exact sample count {} (got {})",
-                spec.m,
-                a.rows()
-            );
+            ) {
+                return Err(format!("run_rsvd on {:?}", spec.kind));
+            }
+            if a.rows() > spec.m || a.cols() > spec.n {
+                return Err(format!(
+                    "matrix {}x{} exceeds bucket {}x{}",
+                    a.rows(),
+                    a.cols(),
+                    spec.m,
+                    spec.n
+                ));
+            }
+            if spec.kind == ArtifactKind::Pca && a.rows() != spec.m {
+                return Err(format!(
+                    "pca bucket needs exact sample count {} (got {})",
+                    spec.m,
+                    a.rows()
+                ));
+            }
+            let exe = self.executable(spec)?;
+            let padded;
+            let input = if a.shape() == (spec.m, spec.n) {
+                a
+            } else {
+                padded = a.pad_to(spec.m, spec.n);
+                &padded
+            };
+            let a_lit = matrix_to_literal(input)?;
+            let seed_lit = xla::Literal::vec1(&seed[..]);
+
+            let t0 = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, seed_lit])
+                .map_err(|e| format!("execute {}: {e}", spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result of {}: {e}", spec.name))?;
+            let exec_time = t0.elapsed();
+
+            let parts = result
+                .to_tuple()
+                .map_err(|e| format!("untuple result of {}: {e}", spec.name))?;
+            match spec.kind {
+                ArtifactKind::RsvdValues => {
+                    if parts.len() != 1 {
+                        return Err(format!("values artifact returned {}", parts.len()));
+                    }
+                    let g = literal_to_matrix(&parts[0], spec.s, spec.s)?;
+                    Ok(RsvdOutput { q: None, b: None, g, exec_time })
+                }
+                _ => {
+                    if parts.len() != 3 {
+                        return Err(format!("rsvd artifact returned {}", parts.len()));
+                    }
+                    let q = literal_to_matrix(&parts[0], spec.m, spec.s)?;
+                    let b = literal_to_matrix(&parts[1], spec.s, spec.n)?;
+                    let g = literal_to_matrix(&parts[2], spec.s, spec.s)?;
+                    Ok(RsvdOutput { q: Some(q), b: Some(b), g, exec_time })
+                }
+            }
         }
-        let exe = self.executable(spec)?;
-        let padded;
-        let input = if a.shape() == (spec.m, spec.n) {
-            a
-        } else {
-            padded = a.pad_to(spec.m, spec.n);
-            &padded
-        };
-        let a_lit = matrix_to_literal(input)?;
-        let seed_lit = xla::Literal::vec1(&seed[..]);
 
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(&[a_lit, seed_lit])?[0][0].to_literal_sync()?;
-        let exec_time = t0.elapsed();
-
-        let parts = result.to_tuple()?;
-        match spec.kind {
-            ArtifactKind::RsvdValues => {
-                anyhow::ensure!(parts.len() == 1, "values artifact returned {}", parts.len());
-                let g = literal_to_matrix(&parts[0], spec.s, spec.s)?;
-                Ok(RsvdOutput { q: None, b: None, g, exec_time })
+        /// Execute a gemm artifact: C = A·B.
+        pub fn run_gemm(
+            &self,
+            spec: &ArtifactSpec,
+            a: &Matrix,
+            b: &Matrix,
+        ) -> Result<Matrix, String> {
+            if spec.kind != ArtifactKind::Gemm {
+                return Err(format!("run_gemm on {:?}", spec.kind));
             }
-            _ => {
-                anyhow::ensure!(parts.len() == 3, "rsvd artifact returned {}", parts.len());
-                let q = literal_to_matrix(&parts[0], spec.m, spec.s)?;
-                let b = literal_to_matrix(&parts[1], spec.s, spec.n)?;
-                let g = literal_to_matrix(&parts[2], spec.s, spec.s)?;
-                Ok(RsvdOutput { q: Some(q), b: Some(b), g, exec_time })
+            if a.shape() != (spec.m, spec.n) || b.shape() != (spec.n, spec.s) {
+                return Err(format!(
+                    "gemm shapes {:?}·{:?} vs bucket ({}, {}, {})",
+                    a.shape(),
+                    b.shape(),
+                    spec.m,
+                    spec.n,
+                    spec.s
+                ));
             }
+            let exe = self.executable(spec)?;
+            let a_lit = matrix_to_literal(a)?;
+            let b_lit = matrix_to_literal(b)?;
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, b_lit])
+                .map_err(|e| format!("execute {}: {e}", spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result of {}: {e}", spec.name))?;
+            let parts = result
+                .to_tuple()
+                .map_err(|e| format!("untuple result of {}: {e}", spec.name))?;
+            if parts.is_empty() {
+                return Err(format!("gemm artifact {} returned an empty tuple", spec.name));
+            }
+            literal_to_matrix(&parts[0], spec.m, spec.s)
         }
     }
 
-    /// Execute a gemm artifact: C = A·B.
-    pub fn run_gemm(&self, spec: &ArtifactSpec, a: &Matrix, b: &Matrix) -> Result<Matrix> {
-        anyhow::ensure!(spec.kind == ArtifactKind::Gemm, "run_gemm on {:?}", spec.kind);
-        anyhow::ensure!(
-            a.shape() == (spec.m, spec.n) && b.shape() == (spec.n, spec.s),
-            "gemm shapes {:?}·{:?} vs bucket ({}, {}, {})",
-            a.shape(),
-            b.shape(),
-            spec.m,
-            spec.n,
-            spec.s
-        );
-        let exe = self.executable(spec)?;
-        let a_lit = matrix_to_literal(a)?;
-        let b_lit = matrix_to_literal(b)?;
-        let result = exe.execute::<xla::Literal>(&[a_lit, b_lit])?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        literal_to_matrix(&parts[0], spec.m, spec.s)
+    /// Row-major Matrix → f64 literal of the same shape.
+    pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal, String> {
+        let lit = xla::Literal::vec1(m.as_slice());
+        lit.reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| format!("reshape literal: {e}"))
+    }
+
+    /// Literal (f64, any layout — `to_vec` linearizes in logical row-major
+    /// order) → Matrix with expected shape.
+    pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix, String> {
+        let v = lit.to_vec::<f64>().map_err(|e| format!("literal to_vec: {e}"))?;
+        if v.len() != rows * cols {
+            return Err(format!("literal has {} elements, expected {rows}x{cols}", v.len()));
+        }
+        Ok(Matrix::from_vec(rows, cols, v))
     }
 }
 
-/// Row-major Matrix → f64 literal of the same shape.
-pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(m.as_slice());
-    Ok(lit.reshape(&[m.rows() as i64, m.cols() as i64])?)
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{literal_to_matrix, matrix_to_literal};
 
-/// Literal (f64, any layout — `to_vec` linearizes in logical row-major
-/// order) → Matrix with expected shape.
-pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
-    let v = lit.to_vec::<f64>()?;
-    anyhow::ensure!(
-        v.len() == rows * cols,
-        "literal has {} elements, expected {}x{}",
-        v.len(),
-        rows,
-        cols
-    );
-    Ok(Matrix::from_vec(rows, cols, v))
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::*;
+
+    /// Uninhabitable stand-in when the crate is built without the `xla`
+    /// feature: [`Engine::new`] always errors (after validating the
+    /// manifest, so configuration problems still surface), which routes
+    /// every caller down its existing host-fallback path. The uninhabited
+    /// field lets the accessor methods typecheck without any runtime cost
+    /// or `unreachable!` panics.
+    pub struct Engine {
+        void: std::convert::Infallible,
+    }
+
+    impl Engine {
+        /// Always fails: device execution requires `--features xla` (and a
+        /// vendored `xla` crate — see DESIGN.md §Runtime).
+        pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine, String> {
+            Manifest::load(&artifact_dir)?;
+            Err("built without the `xla` feature: device artifacts cannot execute \
+                 (host solvers serve every route; see DESIGN.md §Runtime)"
+                .to_string())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            match self.void {}
+        }
+
+        pub fn platform(&self) -> String {
+            match self.void {}
+        }
+
+        pub fn total_compile_time(&self) -> std::time::Duration {
+            match self.void {}
+        }
+
+        pub fn warmup(&self, _kinds: &[ArtifactKind], _impl_name: &str) -> Result<usize, String> {
+            match self.void {}
+        }
+
+        pub fn run_rsvd(
+            &self,
+            _spec: &ArtifactSpec,
+            _a: &Matrix,
+            _seed: [u32; 2],
+        ) -> Result<RsvdOutput, String> {
+            match self.void {}
+        }
+
+        pub fn run_gemm(
+            &self,
+            _spec: &ArtifactSpec,
+            _a: &Matrix,
+            _b: &Matrix,
+        ) -> Result<Matrix, String> {
+            match self.void {}
+        }
+    }
 }
 
 /// Complete an rsvd artifact output into (U, σ, V) with the host
@@ -238,4 +344,34 @@ pub fn finish_rsvd(out: &RsvdOutput, k: usize, orig_m: usize, orig_n: usize) -> 
 pub fn finish_values(out: &RsvdOutput, k: usize) -> Vec<f64> {
     let w = crate::linalg::eigen::eigvalsh(&out.g);
     w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("rsvd_stub_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version":1,"artifacts":[]}"#).unwrap();
+        let err = Engine::new(&dir).err().expect("stub engine must not construct");
+        assert!(err.contains("xla"), "{err}");
+        // a bad manifest still surfaces its own error first
+        let missing = std::env::temp_dir().join("rsvd_stub_engine_missing");
+        std::fs::create_dir_all(&missing).unwrap();
+        let _ = std::fs::remove_file(missing.join("manifest.json"));
+        let err = Engine::new(&missing).err().unwrap();
+        assert!(err.contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn finish_values_from_gram() {
+        // G = diag(9, 4, 1) → σ = 3, 2, 1
+        let g = Matrix::diag(3, 3, &[9.0, 4.0, 1.0]);
+        let out = RsvdOutput { q: None, b: None, g, exec_time: Default::default() };
+        let v = finish_values(&out, 2);
+        assert!((v[0] - 3.0).abs() < 1e-10);
+        assert!((v[1] - 2.0).abs() < 1e-10);
+    }
 }

@@ -5,11 +5,16 @@
 //! The rust side never traces or builds graphs; it only compiles the HLO
 //! text that `python/compile/aot.py` exported once at build time, then
 //! feeds it `Literal` buffers on the hot path.
+//!
+//! The `xla` crate dependency is feature-gated (`--features xla`, off by
+//! default): a bare `cargo build` produces a fully functional host-only
+//! stack whose [`Engine::new`] errors cleanly, routing everything to the
+//! host solvers. See DESIGN.md §Runtime.
 
 mod engine;
 mod manifest;
 
-pub use engine::{
-    finish_rsvd, finish_values, literal_to_matrix, matrix_to_literal, Engine, RsvdOutput,
-};
+pub use engine::{finish_rsvd, finish_values, Engine, RsvdOutput};
+#[cfg(feature = "xla")]
+pub use engine::{literal_to_matrix, matrix_to_literal};
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

@@ -1,0 +1,156 @@
+//! Integration: the parallel BLAS-3 layer must be (a) correct against a
+//! naive reference on odd shapes and (b) **bitwise deterministic in the
+//! thread count** — the contract that lets `RSVD_NUM_THREADS` / the
+//! coordinator's core partitioning change only wall time, never results.
+//! (`RSVD_NUM_THREADS` and the scoped `with_threads` override configure the
+//! same team size; tests pin the team per call so they are independent of
+//! the environment the runner sets.)
+
+use rsvd::linalg::gemm::{gemm, gram_n, gram_t, matmul, matmul_nt, matmul_tn};
+use rsvd::linalg::rsvd::{rsvd, rsvd_values, RsvdOpts};
+use rsvd::linalg::threading::available_threads;
+use rsvd::linalg::{with_threads, Matrix};
+
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+/// Thread counts exercised everywhere: serial, two, and the machine max.
+fn teams() -> Vec<usize> {
+    let mut t = vec![1, 2, available_threads()];
+    t.dedup();
+    t
+}
+
+#[test]
+fn gemm_equivalent_across_thread_counts_and_odd_shapes() {
+    // odd shapes straddle the MR/MC/KC/NC blocking boundaries and the
+    // per-thread row partition; sizes chosen so the larger ones clear the
+    // parallel flop threshold
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (7, 13, 5),
+        (129, 65, 33),
+        (253, 129, 67),
+        (260, 517, 131),
+    ] {
+        let a = Matrix::gaussian(m, k, (m * 7 + k) as u64);
+        let b = Matrix::gaussian(k, n, (k * 3 + n) as u64);
+        let want = naive_matmul(&a, &b);
+        let mut per_team = Vec::new();
+        for t in teams() {
+            let c = with_threads(t, || matmul(&a, &b));
+            assert!(
+                c.max_diff(&want) < 1e-9 * (k as f64).sqrt(),
+                "{m}x{k}x{n} t={t}: err {}",
+                c.max_diff(&want)
+            );
+            per_team.push(c);
+        }
+        for c in &per_team[1..] {
+            assert_eq!(
+                c.as_slice(),
+                per_team[0].as_slice(),
+                "{m}x{k}x{n}: thread count changed bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_accumulate_form_thread_invariant() {
+    // C ← alpha·A·B + beta·C with nontrivial alpha/beta (large enough that
+    // team_for_flops actually grants > 1 worker)
+    let a = Matrix::gaussian(200, 300, 1);
+    let b = Matrix::gaussian(300, 150, 2);
+    let c0 = Matrix::gaussian(200, 150, 3);
+    let mut want = None;
+    for t in teams() {
+        let mut c = c0.clone();
+        with_threads(t, || gemm(1.5, &a, &b, -0.25, &mut c));
+        match &want {
+            None => want = Some(c),
+            Some(w) => assert_eq!(c.as_slice(), w.as_slice(), "t={t}"),
+        }
+    }
+}
+
+#[test]
+fn tn_nt_gram_thread_invariant() {
+    // sizes chosen so every form clears 2× the flop threshold (team ≥ 2)
+    let a = Matrix::gaussian(320, 240, 5);
+    let b = Matrix::gaussian(320, 140, 6);
+    let serial = with_threads(1, || {
+        (matmul_tn(&a, &b), matmul_nt(&a, &a), gram_t(&a), gram_n(&a))
+    });
+    for t in teams().into_iter().skip(1) {
+        let par = with_threads(t, || {
+            (matmul_tn(&a, &b), matmul_nt(&a, &a), gram_t(&a), gram_n(&a))
+        });
+        assert_eq!(serial.0.as_slice(), par.0.as_slice(), "matmul_tn t={t}");
+        assert_eq!(serial.1.as_slice(), par.1.as_slice(), "matmul_nt t={t}");
+        assert_eq!(serial.2.as_slice(), par.2.as_slice(), "gram_t t={t}");
+        assert_eq!(serial.3.as_slice(), par.3.as_slice(), "gram_n t={t}");
+    }
+    // and correctness of the specialized forms against plain matmul
+    assert!(serial.0.max_diff(&naive_matmul(&a.transpose(), &b)) < 1e-9);
+    assert!(serial.2.max_diff(&naive_matmul(&a.transpose(), &a)) < 1e-9);
+}
+
+#[test]
+fn rsvd_bitwise_identical_for_any_thread_count() {
+    // end-to-end Algorithm 1 on a matrix large enough that its GEMMs
+    // actually fan out; singular values AND vectors must be bit-identical
+    // whether the team is 1, 2, or every core (the `RSVD_NUM_THREADS`
+    // contract)
+    let a = Matrix::gaussian(600, 400, 42);
+    let k = 8;
+    let base = rsvd(&a, k, &RsvdOpts { threads: Some(1), ..Default::default() });
+    for t in teams().into_iter().skip(1) {
+        let r = rsvd(&a, k, &RsvdOpts { threads: Some(t), ..Default::default() });
+        assert_eq!(base.s, r.s, "singular values differ at t={t}");
+        assert_eq!(base.u.as_slice(), r.u.as_slice(), "U differs at t={t}");
+        assert_eq!(base.v.as_slice(), r.v.as_slice(), "V differs at t={t}");
+    }
+    // the scoped override must behave identically to the opts knob
+    let scoped = with_threads(available_threads(), || {
+        rsvd(&a, k, &RsvdOpts::default())
+    });
+    assert_eq!(base.s, scoped.s, "ambient override changed the spectrum");
+
+    let vals1 = rsvd_values(&a, k, &RsvdOpts { threads: Some(1), ..Default::default() });
+    let vals_n = rsvd_values(
+        &a,
+        k,
+        &RsvdOpts { threads: Some(available_threads()), ..Default::default() },
+    );
+    assert_eq!(vals1, vals_n, "rsvd_values differ by thread count");
+}
+
+#[test]
+fn rsvd_is_accurate_when_parallel() {
+    // sanity beyond determinism: the parallel pipeline still approximates
+    // the spectrum (fast decay ⇒ near-exact on the head)
+    let a = rsvd::datagen_test_matrix(300, 200, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 9);
+    let k = 6;
+    let r = with_threads(available_threads(), || rsvd(&a, k, &RsvdOpts::default()));
+    let exact = rsvd::linalg::svd_gesvd::svd(&a);
+    for i in 0..k {
+        assert!(
+            (r.s[i] - exact.s[i]).abs() < 1e-9 * exact.s[0],
+            "σ{i}: {} vs {}",
+            r.s[i],
+            exact.s[i]
+        );
+    }
+}
