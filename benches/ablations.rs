@@ -159,7 +159,9 @@ fn ablate_batching() {
         "A5: dynamic batching (24 bursty jobs, host-only)",
         &["batch window", "elapsed", "batches", "jobs/batch"],
     );
-    for (label, window_ms, max_batch) in [("off (1 job/batch)", 0u64, 1usize), ("2ms window", 2, 8)] {
+    for (label, window_ms, max_batch) in
+        [("off (1 job/batch)", 0u64, 1usize), ("2ms window", 2, 8)]
+    {
         let coord = Coordinator::start_host_only(CoordinatorCfg {
             max_batch,
             batch_window: std::time::Duration::from_millis(window_ms),

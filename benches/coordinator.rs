@@ -1,0 +1,123 @@
+//! Coordinator throughput bench: fused same-matrix batch execution vs
+//! sequential per-job solves — the serving-side payoff of the paper's
+//! "make everything a wide BLAS-3 call" reformulation.
+//!
+//! ```sh
+//! cargo bench --bench coordinator -- [--jobs 8] [--repeats 3] [--k 8]
+//! cargo bench --bench coordinator -- --smoke   # fast CI mode → BENCH_coordinator.json
+//! ```
+//!
+//! The workload is the PCA/spectrum serving scenario: many requests against
+//! the *same* 600×400 matrix with different seeds/k. Sequential baseline =
+//! one `rsvd_values` call per job (what a batch-less coordinator executes);
+//! fused = the coordinator's wide-sketch batch path. The bench also checks
+//! the two spectra are bitwise identical and writes `BENCH_coordinator.json`
+//! (cargo runs bench binaries with CWD = the package root, so the file
+//! lands at `rust/BENCH_coordinator.json`), which CI uploads next to
+//! `BENCH_gemm.json`.
+
+use rsvd::bench_harness::{fmt_secs, save_json, Table};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let jobs = args.get_usize("jobs", 8);
+    let repeats = args.get_usize("repeats", if smoke { 2 } else { 3 });
+    let k = args.get_usize("k", 8);
+    bench_fused_vs_sequential(jobs, k, repeats);
+}
+
+/// One measured round: returns (sequential elapsed, fused elapsed,
+/// bitwise-identical?). A fresh coordinator per round keeps its metrics
+/// (and any warm state) from leaking across rounds.
+fn run_round(a: &rsvd::linalg::Matrix, jobs: usize, k: usize) -> (Duration, Duration, bool) {
+    // sequential baseline: per-job thin solves, ambient thread config
+    let t0 = Instant::now();
+    let seq: Vec<Vec<f64>> = (0..jobs)
+        .map(|i| rsvd_values(a, k, &RsvdOpts { seed: i as u64, ..Default::default() }))
+        .collect();
+    let t_seq = t0.elapsed();
+
+    // fused: one burst through the coordinator's wide-sketch batch path
+    let coord = Coordinator::start_host_only(CoordinatorCfg {
+        max_batch: jobs.max(1),
+        drain_cap: Some(jobs.max(1)),
+        batch_window: Duration::from_millis(20),
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            coord.submit(Request::Svd {
+                a: a.clone(),
+                k,
+                method: Method::NativeRsvd,
+                want_vectors: false,
+                seed: i as u64,
+            })
+        })
+        .collect();
+    let fused: Vec<Vec<f64>> =
+        handles.into_iter().map(|h| h.wait().outcome.expect("job ok")).map(|d| d.values).collect();
+    let t_fused = t0.elapsed();
+    (t_seq, t_fused, seq == fused)
+}
+
+fn bench_fused_vs_sequential(jobs: usize, k: usize, repeats: usize) {
+    let (m, n) = (600usize, 400usize);
+    let a = spectrum_matrix(m, n, Decay::Fast, 3);
+    let mut table = Table::new(
+        &format!("coordinator throughput: {jobs} same-matrix rsvd_values jobs ({m}x{n}, k={k})"),
+        &["round", "sequential", "fused batch", "speedup", "bitwise"],
+    );
+
+    // warmup round (absorbs thread-pool and allocator cold start)
+    let _ = run_round(&a, jobs, k);
+    let mut best_seq = Duration::MAX;
+    let mut best_fused = Duration::MAX;
+    let mut all_bitwise = true;
+    for round in 0..repeats {
+        let (t_seq, t_fused, bitwise) = run_round(&a, jobs, k);
+        best_seq = best_seq.min(t_seq);
+        best_fused = best_fused.min(t_fused);
+        all_bitwise &= bitwise;
+        table.row(vec![
+            round.to_string(),
+            fmt_secs(t_seq.as_secs_f64()),
+            fmt_secs(t_fused.as_secs_f64()),
+            format!("{:.2}x", t_seq.as_secs_f64() / t_fused.as_secs_f64()),
+            bitwise.to_string(),
+        ]);
+    }
+    table.print();
+    assert!(all_bitwise, "fused spectra must be bitwise identical to sequential");
+
+    let speedup = best_seq.as_secs_f64() / best_fused.as_secs_f64();
+    let seq_jps = jobs as f64 / best_seq.as_secs_f64();
+    let fused_jps = jobs as f64 / best_fused.as_secs_f64();
+    println!(
+        "best-of-{repeats}: sequential {:.2} jobs/s, fused {:.2} jobs/s, speedup {speedup:.2}x",
+        seq_jps, fused_jps
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("coordinator".into()));
+    doc.insert("shape".to_string(), Json::Str(format!("{m}x{n}")));
+    doc.insert("jobs".to_string(), Json::Num(jobs as f64));
+    doc.insert("k".to_string(), Json::Num(k as f64));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert("sequential_s".to_string(), Json::Num(best_seq.as_secs_f64()));
+    doc.insert("fused_s".to_string(), Json::Num(best_fused.as_secs_f64()));
+    doc.insert("sequential_jobs_per_s".to_string(), Json::Num(seq_jps));
+    doc.insert("fused_jobs_per_s".to_string(), Json::Num(fused_jps));
+    doc.insert("speedup".to_string(), Json::Num(speedup));
+    doc.insert("bitwise_identical".to_string(), Json::Bool(all_bitwise));
+    save_json("BENCH_coordinator.json", &Json::Obj(doc));
+}

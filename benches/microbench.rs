@@ -125,7 +125,8 @@ fn bench_device_gemm(repeats: usize) {
         println!("device benches skipped: no artifacts");
         return;
     };
-    let mut table = Table::new("device GEMM artifacts (f64)", &["artifact", "mean exec", "GFLOP/s"]);
+    let mut table =
+        Table::new("device GEMM artifacts (f64)", &["artifact", "mean exec", "GFLOP/s"]);
     for impl_name in ["xladot", "pallas"] {
         for sz in [256usize, 1024] {
             let Some(spec) = engine
@@ -198,7 +199,8 @@ fn bench_solvers(repeats: usize) {
 
 /// Phase split of the native pipeline — identifies the hot path for §Perf.
 fn bench_pipeline_phases(repeats: usize) {
-    let mut table = Table::new("native Alg.1 phase split (2000x512, s=36, q=2)", &["phase", "mean"]);
+    let mut table =
+        Table::new("native Alg.1 phase split (2000x512, s=36, q=2)", &["phase", "mean"]);
     let a = spectrum_matrix(2000, 512, Decay::Fast, 7);
     let s = 36;
     let omega = Matrix::gaussian(512, s, 1);

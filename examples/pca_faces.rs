@@ -45,7 +45,11 @@ fn main() {
     // quality: energy captured + reconstruction error of the served fit
     let p = fitted.expect("at least one fit");
     let captured: f64 = p.explained_ratio.iter().sum();
-    println!("\n[{}] top-{k} PCs capture {:.1}% of pixel variance", p.method_used, captured * 100.0);
+    println!(
+        "\n[{}] top-{k} PCs capture {:.1}% of pixel variance",
+        p.method_used,
+        captured * 100.0
+    );
     let scores = pca::transform(&p, &x);
     let rec = pca::inverse_transform(&p, &scores);
     let err = rec.add_scaled(-1.0, &x).fro_norm() / x.fro_norm();

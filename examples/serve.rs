@@ -65,7 +65,13 @@ fn main() {
                 let check = (id % decays.len() == 0).then(|| (a.clone(), k));
                 payloads[c].push((
                     check,
-                    Request::Svd { a, k, method: Method::Auto, want_vectors: false, seed: id as u64 },
+                    Request::Svd {
+                        a,
+                        k,
+                        method: Method::Auto,
+                        want_vectors: false,
+                        seed: id as u64,
+                    },
                 ));
             }
         }

@@ -3,10 +3,16 @@
 //! Jobs that resolve to the same device artifact are executed as one batch:
 //! a single executable-cache hit, warm device state, and (on a multi-device
 //! PJRT topology) a single batched dispatch. Host jobs batch by method so a
-//! pool worker keeps its instruction cache warm. The planning step is pure
-//! (and property-tested): conservation — every job appears in exactly one
-//! batch, order preserved within a batch, never exceeding `max_batch`.
+//! pool worker keeps its instruction cache warm — and host native-rsvd SVD
+//! jobs additionally key on (matrix fingerprint, shape, power iterations,
+//! want_vectors) so a batch is always safe to hand to the fused wide-sketch
+//! executor ([`crate::linalg::rsvd::rsvd_batch`]). The planning step is
+//! pure (and property-tested): conservation — every job appears in exactly
+//! one batch, order preserved within a batch, never exceeding `max_batch`.
 
+use super::job::{Method, Request};
+use super::router::Route;
+use crate::linalg::rsvd::RsvdOpts;
 use std::collections::BTreeMap;
 
 /// Batch of job indices sharing a route key.
@@ -14,6 +20,41 @@ use std::collections::BTreeMap;
 pub struct Batch {
     pub key: String,
     pub jobs: Vec<usize>,
+}
+
+/// Coarse batch key: route target only (the pre-fusion grouping).
+pub fn route_key(route: &Route) -> String {
+    match route {
+        Route::Device { name } => format!("dev:{name}"),
+        Route::Host { method } => format!("host:{}", method.name()),
+    }
+}
+
+/// Whether a routed job is a candidate for fused batch execution (a host
+/// native-rsvd SVD). The dispatcher uses this to skip fingerprint hashing
+/// entirely in drain cycles with fewer than two candidates — a lone job
+/// can never fuse, so it should not pay the O(m·n) content hash.
+pub fn is_fusable(req: &Request, route: &Route) -> bool {
+    matches!((route, req), (Route::Host { method: Method::NativeRsvd }, Request::Svd { .. }))
+}
+
+/// Fusion-aware batch key. Host native-rsvd SVD jobs carry the matrix
+/// content fingerprint, shape, power-iteration count, and output flavor,
+/// so `plan_batches` can only ever group jobs that the fused executor may
+/// legally stack into one wide sketch (same matrix, same q, same finish).
+/// Everything else falls back to the coarse [`route_key`]. The power-iter
+/// count is the host default ([`RsvdOpts::default`]) because that is what
+/// the host executor runs with.
+pub fn fuse_key(req: &Request, route: &Route) -> String {
+    if let (Route::Host { method: Method::NativeRsvd }, Request::Svd { a, want_vectors, .. }) =
+        (route, req)
+    {
+        let (m, n) = a.shape();
+        let q = RsvdOpts::default().power_iters;
+        let flavor = if *want_vectors { "uv" } else { "vals" };
+        return format!("host:native_rsvd:fp{:016x}:{m}x{n}:q{q}:{flavor}", a.fingerprint());
+    }
+    route_key(route)
 }
 
 /// Group `keys[i]` (the route key of job i) into batches of ≤ `max_batch`,
@@ -68,6 +109,87 @@ mod tests {
         let b = plan_batches(&keys(&["z", "a", "z"]), 10);
         assert_eq!(b[0].key, "z"); // z arrived first
         assert_eq!(b[1].key, "a");
+    }
+
+    #[test]
+    fn fuse_key_discriminates_content_shape_and_flavor() {
+        use crate::linalg::Matrix;
+        let route = Route::Host { method: Method::NativeRsvd };
+        let req = |a: Matrix, vecs: bool| Request::Svd {
+            a,
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: vecs,
+            seed: 1,
+        };
+        let a = Matrix::gaussian(8, 6, 1);
+        let k_base = fuse_key(&req(a.clone(), false), &route);
+        assert!(k_base.starts_with("host:native_rsvd:fp"), "{k_base}");
+        // same content → same key regardless of k/seed metadata
+        let mut other = req(a.clone(), false);
+        if let Request::Svd { k, seed, .. } = &mut other {
+            *k = 5;
+            *seed = 99;
+        }
+        assert_eq!(fuse_key(&other, &route), k_base);
+        // different content, different flavor, different shape → new keys
+        assert_ne!(fuse_key(&req(Matrix::gaussian(8, 6, 2), false), &route), k_base);
+        assert_ne!(fuse_key(&req(a.clone(), true), &route), k_base);
+        assert_ne!(fuse_key(&req(Matrix::gaussian(6, 8, 1), false), &route), k_base);
+        // non-fusable routes keep the coarse key
+        let gesvd = Route::Host { method: Method::Gesvd };
+        assert_eq!(fuse_key(&req(a.clone(), false), &gesvd), "host:gesvd");
+        let dev = Route::Device { name: "r_small".into() };
+        assert_eq!(fuse_key(&req(a, false), &dev), "dev:r_small");
+        let pca =
+            Request::Pca { x: Matrix::gaussian(8, 6, 1), k: 2, method: Method::Auto, seed: 0 };
+        assert_eq!(fuse_key(&pca, &route), "host:native_rsvd");
+    }
+
+    /// Property: planning over fusion-aware keys never groups jobs with
+    /// mismatched fingerprints, shapes, or output flavors into one batch.
+    #[test]
+    fn prop_fused_batches_never_mix_matrices() {
+        use crate::linalg::Matrix;
+        testkit::check(60, |g: &mut Gen| {
+            // a small pool of distinct payload matrices
+            let shapes = [(6usize, 4usize), (5, 5), (4, 6)];
+            let pool: Vec<Matrix> = (0..g.usize(1..4))
+                .map(|i| Matrix::gaussian(shapes[i % 3].0, shapes[i % 3].1, g.u64()))
+                .collect();
+            let n = g.usize(1..25);
+            let reqs: Vec<Request> = (0..n)
+                .map(|_| Request::Svd {
+                    a: g.choose(&pool).clone(),
+                    k: g.usize(1..4),
+                    method: *g.choose(&[Method::NativeRsvd, Method::Gesvd, Method::Lanczos]),
+                    want_vectors: g.bool(),
+                    seed: g.u64(),
+                })
+                .collect();
+            let routes: Vec<Route> =
+                reqs.iter().map(|r| Route::Host { method: r.method() }).collect();
+            let keys: Vec<String> =
+                reqs.iter().zip(&routes).map(|(r, rt)| fuse_key(r, rt)).collect();
+            let batches = plan_batches(&keys, g.usize(1..6));
+            for b in &batches {
+                let first = b.jobs[0];
+                for &i in &b.jobs {
+                    if b.key.starts_with("host:native_rsvd:fp") {
+                        testkit::assert_that(
+                            reqs[i].fingerprint() == reqs[first].fingerprint(),
+                            "fused batch mixes matrix contents",
+                        )?;
+                        testkit::assert_that(
+                            reqs[i].shape() == reqs[first].shape(),
+                            "fused batch mixes shapes",
+                        )?;
+                    }
+                    testkit::assert_that(keys[i] == b.key, "job in wrong batch")?;
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Property: conservation + ordering, over random key sequences.

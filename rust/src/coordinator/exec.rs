@@ -3,13 +3,16 @@
 
 use super::job::{Decomposition, Method, Request};
 use super::router::Route;
-use crate::linalg::{
-    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Matrix,
-};
+use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
+use crate::linalg::{eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Matrix};
 use crate::runtime::{finish_rsvd, finish_values, Engine};
 
 /// Execute one request along its route.
-pub fn execute(req: &Request, route: &Route, engine: Option<&Engine>) -> Result<Decomposition, String> {
+pub fn execute(
+    req: &Request,
+    route: &Route,
+    engine: Option<&Engine>,
+) -> Result<Decomposition, String> {
     match route {
         Route::Device { name } => {
             let engine = engine.ok_or("device route but no engine attached")?;
@@ -17,6 +20,72 @@ pub fn execute(req: &Request, route: &Route, engine: Option<&Engine>) -> Result<
         }
         Route::Host { method } => run_host(req, *method),
     }
+}
+
+/// Fused execution of a route-homogeneous batch, if it qualifies: every
+/// request must be a host native-rsvd SVD over the *same* matrix with the
+/// same output flavor (the batcher's fuse key guarantees this; the content
+/// equality re-check here is cheap insurance against fingerprint
+/// collisions). Per-job sketches stack column-wise and the range-finder
+/// flops run as single wide BLAS-3 calls ([`native_rsvd::rsvd_batch`]);
+/// results are bitwise identical to per-job [`execute`]. Returns `None`
+/// when the batch does not qualify — callers then fall back to the
+/// sequential per-job path.
+pub fn try_execute_fused(
+    reqs: &[&Request],
+    route: &Route,
+) -> Option<Vec<Result<Decomposition, String>>> {
+    if reqs.len() < 2 || !matches!(route, Route::Host { method: Method::NativeRsvd }) {
+        return None;
+    }
+    let mut jobs = Vec::with_capacity(reqs.len());
+    let mut shared: Option<(&Matrix, bool)> = None;
+    for r in reqs {
+        let Request::Svd { a, k, want_vectors, seed, .. } = r else { return None };
+        match shared {
+            None => shared = Some((a, *want_vectors)),
+            Some((fa, fv)) => {
+                if fv != *want_vectors || fa != a {
+                    return None;
+                }
+            }
+        }
+        jobs.push(SketchJob::from_opts(*k, &RsvdOpts { seed: *seed, ..Default::default() }));
+    }
+    let (a, want_vectors) = shared?;
+    // threads stay ambient: the caller (executor worker) has already pinned
+    // its team via with_threads_opt, exactly as the sequential path does
+    let opts = BatchOpts::default();
+    let out = if want_vectors {
+        native_rsvd::rsvd_batch(a, &jobs, &opts)
+            .into_iter()
+            .map(|s| {
+                // rsvd_batch already truncates U/V/σ to k columns — no
+                // further slicing needed (host_svd's trunc is a no-op here)
+                Ok(Decomposition {
+                    values: s.s,
+                    u: Some(s.u),
+                    v: Some(s.v),
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            })
+            .collect()
+    } else {
+        native_rsvd::rsvd_values_batch(a, &jobs, &opts)
+            .into_iter()
+            .map(|values| {
+                Ok(Decomposition {
+                    values,
+                    u: None,
+                    v: None,
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            })
+            .collect()
+    };
+    Some(out)
 }
 
 fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decomposition, String> {
@@ -221,7 +290,13 @@ mod tests {
     fn host_methods_agree_on_values() {
         let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) as f64).powi(2), 5);
         let exact = svd_gesvd::svd(&a);
-        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen, Method::NativeRsvd] {
+        for m in [
+            Method::Gesvd,
+            Method::Jacobi,
+            Method::Lanczos,
+            Method::PartialEigen,
+            Method::NativeRsvd,
+        ] {
             let d = run_host(&req(a.clone(), 4, m, false), m).unwrap();
             assert_eq!(d.values.len(), 4);
             for i in 0..4 {
@@ -250,6 +325,53 @@ mod tests {
                 assert!(res < 1e-6 * d.values[0], "{m:?} triplet {t} residual {res}");
             }
         }
+    }
+
+    #[test]
+    fn fused_batch_matches_per_job_execute() {
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / (i + 1) as f64, 11);
+        let route = Route::Host { method: Method::NativeRsvd };
+        for vecs in [false, true] {
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request::Svd {
+                    a: a.clone(),
+                    k: 3 + i % 2,
+                    method: Method::NativeRsvd,
+                    want_vectors: vecs,
+                    seed: i as u64,
+                })
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "vecs={vecs}");
+                assert_eq!(f.u, s.u, "vecs={vecs}");
+                assert_eq!(f.v, s.v, "vecs={vecs}");
+                assert_eq!(f.method_used, s.method_used);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_rejects_mixed_or_foreign_batches() {
+        let a = Matrix::gaussian(10, 8, 1);
+        let r1 = req(a.clone(), 2, Method::NativeRsvd, false);
+        let r2 = req(Matrix::gaussian(10, 8, 2), 2, Method::NativeRsvd, false);
+        let route = Route::Host { method: Method::NativeRsvd };
+        // different matrix content → no fusion
+        assert!(try_execute_fused(&[&r1, &r2], &route).is_none());
+        // mixed output flavor → no fusion
+        let r3 = req(a.clone(), 2, Method::NativeRsvd, true);
+        assert!(try_execute_fused(&[&r1, &r3], &route).is_none());
+        // singleton or non-native routes → no fusion
+        assert!(try_execute_fused(&[&r1], &route).is_none());
+        let gesvd = Route::Host { method: Method::Gesvd };
+        assert!(try_execute_fused(&[&r1, &r1], &gesvd).is_none());
+        // PCA requests never fuse
+        let p = Request::Pca { x: a, k: 2, method: Method::NativeRsvd, seed: 0 };
+        assert!(try_execute_fused(&[&p, &p], &route).is_none());
     }
 
     #[test]

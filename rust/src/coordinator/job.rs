@@ -91,6 +91,17 @@ impl Request {
             Request::Pca { x, .. } => x.shape(),
         }
     }
+
+    /// Content fingerprint of the request's matrix
+    /// ([`Matrix::fingerprint`]): one streaming pass over the payload. The
+    /// batcher keys fusable jobs on it so only same-matrix requests are
+    /// ever stacked into one wide sketch.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            Request::Svd { a, .. } => a.fingerprint(),
+            Request::Pca { x, .. } => x.fingerprint(),
+        }
+    }
 }
 
 /// Successful decomposition.

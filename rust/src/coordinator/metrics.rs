@@ -67,6 +67,26 @@ impl Histogram {
     }
 }
 
+/// Per-backend batch-width accounting: how wide the batches handed to one
+/// backend actually are (the fused path's win scales with width).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchWidth {
+    pub batches: u64,
+    pub jobs: u64,
+    pub max_width: u64,
+}
+
+impl BatchWidth {
+    /// Mean jobs per batch for this backend.
+    pub fn mean_width(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / self.batches as f64
+        }
+    }
+}
+
 /// Point-in-time snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
@@ -75,6 +95,10 @@ pub struct Snapshot {
     pub solver_calls: BTreeMap<String, u64>,
     pub batches: u64,
     pub batched_jobs: u64,
+    /// Jobs served by the fused wide-sketch batch path.
+    pub fused_jobs: u64,
+    /// Batch-width stats keyed by backend ("device", "native_rsvd", …).
+    pub batch_widths: BTreeMap<String, BatchWidth>,
     pub queue_mean: Duration,
     pub queue_p95: Duration,
     pub exec_mean: Duration,
@@ -89,11 +113,20 @@ impl Snapshot {
         println!("── coordinator metrics ──");
         println!("jobs: {} ok, {} failed", self.jobs_completed, self.jobs_failed);
         println!(
-            "batches: {} ({} jobs batched, {:.2} jobs/batch)",
+            "batches: {} ({} jobs batched, {:.2} jobs/batch, {} fused)",
             self.batches,
             self.batched_jobs,
-            if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 }
+            if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
+            self.fused_jobs
         );
+        for (backend, w) in &self.batch_widths {
+            println!(
+                "batch width [{backend}]: {} batches, mean {:.2}, max {}",
+                w.batches,
+                w.mean_width(),
+                w.max_width
+            );
+        }
         println!("queue: mean {:?}, p95 {:?}", self.queue_mean, self.queue_p95);
         println!(
             "exec: mean {:?}, p50 {:?}, p95 {:?}, p99 {:?}, max {:?}",
@@ -118,6 +151,8 @@ struct Inner {
     solver_calls: BTreeMap<String, u64>,
     batches: u64,
     batched_jobs: u64,
+    fused_jobs: u64,
+    batch_widths: BTreeMap<String, BatchWidth>,
     queue: Option<Histogram>,
     exec: Option<Histogram>,
 }
@@ -128,21 +163,55 @@ impl Metrics {
     }
 
     pub fn record_job(&self, backend: &str, queued: Duration, exec: Duration, ok: bool) {
+        self.record_job_impl(backend, queued, exec, ok, true);
+    }
+
+    /// Like [`Metrics::record_job`] but without solver-call attribution —
+    /// the per-job accounting of a fused batch, whose *single* wide solver
+    /// call is counted by [`Metrics::record_fused`] instead (so the
+    /// "solver calls" column genuinely reflects the fusion win).
+    pub fn record_fused_job(&self, backend: &str, queued: Duration, exec: Duration, ok: bool) {
+        self.record_job_impl(backend, queued, exec, ok, false);
+    }
+
+    fn record_job_impl(
+        &self,
+        backend: &str,
+        queued: Duration,
+        exec: Duration,
+        ok: bool,
+        count_call: bool,
+    ) {
         let mut g = self.inner.lock().unwrap();
         if ok {
             g.completed += 1;
         } else {
             g.failed += 1;
         }
-        *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
+        if count_call {
+            *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
+        }
         g.queue.get_or_insert_with(Histogram::new).record(queued);
         g.exec.get_or_insert_with(Histogram::new).record(exec);
     }
 
-    pub fn record_batch(&self, size: usize) {
+    pub fn record_batch(&self, backend: &str, size: usize) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batched_jobs += size as u64;
+        let w = g.batch_widths.entry(backend.to_string()).or_default();
+        w.batches += 1;
+        w.jobs += size as u64;
+        w.max_width = w.max_width.max(size as u64);
+    }
+
+    /// Account `size` jobs served by one fused wide-sketch solver call:
+    /// `size` fused jobs, but exactly *one* solver call for the backend
+    /// (per-job completion/latency comes from [`Metrics::record_fused_job`]).
+    pub fn record_fused(&self, backend: &str, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.fused_jobs += size as u64;
+        *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
     }
 
     /// Total solver calls across backends (Table 1 accounting).
@@ -161,6 +230,8 @@ impl Metrics {
             solver_calls: g.solver_calls.clone(),
             batches: g.batches,
             batched_jobs: g.batched_jobs,
+            fused_jobs: g.fused_jobs,
+            batch_widths: g.batch_widths.clone(),
             queue_mean: queue.mean(),
             queue_p95: queue.quantile(0.95),
             exec_mean: exec.mean(),
@@ -198,14 +269,30 @@ mod tests {
         m.record_job("device", Duration::from_micros(5), Duration::from_millis(2), true);
         m.record_job("device", Duration::from_micros(7), Duration::from_millis(3), true);
         m.record_job("gesvd", Duration::from_micros(9), Duration::from_millis(90), false);
-        m.record_batch(2);
+        m.record_batch("device", 2);
+        m.record_batch("native_rsvd", 5);
+        m.record_batch("native_rsvd", 3);
+        // a fused batch of 5 jobs = 5 completions but ONE solver call
+        m.record_fused("native_rsvd", 5);
+        let (q, e) = (Duration::from_micros(2), Duration::from_millis(4));
+        for _ in 0..5 {
+            m.record_fused_job("native_rsvd", q, e, true);
+        }
         let s = m.snapshot();
-        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_completed, 7);
         assert_eq!(s.jobs_failed, 1);
         assert_eq!(s.solver_calls["device"], 2);
         assert_eq!(s.solver_calls["gesvd"], 1);
-        assert_eq!(m.total_solver_calls(), 3);
-        assert_eq!(s.batches, 1);
-        assert_eq!(s.batched_jobs, 2);
+        assert_eq!(s.solver_calls["native_rsvd"], 1, "one wide call for 5 fused jobs");
+        assert_eq!(m.total_solver_calls(), 4);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batched_jobs, 10);
+        assert_eq!(s.fused_jobs, 5);
+        let w = s.batch_widths["native_rsvd"];
+        assert_eq!(w.batches, 2);
+        assert_eq!(w.jobs, 8);
+        assert_eq!(w.max_width, 5);
+        assert!((w.mean_width() - 4.0).abs() < 1e-12);
+        assert_eq!(s.batch_widths["device"].max_width, 2);
     }
 }

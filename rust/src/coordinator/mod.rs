@@ -1,16 +1,19 @@
 //! L3 coordinator: the serving layer around the decomposition solvers.
 //!
 //! ```text
-//! submit(Request) ─▶ queue ─▶ [batch window] ─▶ router ─▶ executor ─▶ reply
+//! submit(Request) ─▶ queue ─▶ [batch window] ─▶ router ─▶ worker pool ─▶ reply
 //!                                │                │
 //!                                │                ├─ Device: PJRT artifact
-//!                                └─ batcher       └─ Host: rust baselines
+//!                                └─ batcher       ├─ Host: rust baselines
+//!                                   (fuse keys)   └─ fused wide-sketch batch
 //! ```
 //!
 //! The paper's contribution is the solver pipeline itself; this layer is
 //! what makes it a *system*: shape-bucketed artifact routing with zero-pad
-//! invariance, dynamic batching, backend fallback, and the metrics that
-//! Table 1 ("solver calls") and the serve example report.
+//! invariance, fingerprint-keyed dynamic batching with a fused same-matrix
+//! wide-sketch path (bitwise identical to per-job execution), an executor
+//! worker pool, backend fallback, and the metrics that Table 1 ("solver
+//! calls") and the serve example report.
 
 pub mod batcher;
 pub mod exec;
@@ -20,6 +23,6 @@ pub mod router;
 pub mod server;
 
 pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Request};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{BatchWidth, Metrics, Snapshot};
 pub use router::{Route, RouterCfg};
 pub use server::{Coordinator, CoordinatorCfg};

@@ -73,15 +73,9 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     };
     match bucket {
         Some(spec) => Route::Device { name: spec.name.clone() },
-        None => {
-            if method == Method::Device {
-                // explicit device request with no bucket: surface the miss
-                // as a host fallback with the same algorithm
-                Route::Host { method: Method::NativeRsvd }
-            } else {
-                Route::Host { method: Method::NativeRsvd }
-            }
-        }
+        // no bucket (including an explicit Device request that misses):
+        // host fallback with the same algorithm
+        None => Route::Host { method: Method::NativeRsvd },
     }
 }
 
@@ -148,7 +142,13 @@ mod tests {
     fn explicit_methods_respected() {
         let man = toy_manifest();
         let cfg = RouterCfg::default();
-        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen, Method::NativeRsvd] {
+        for m in [
+            Method::Gesvd,
+            Method::Jacobi,
+            Method::Lanczos,
+            Method::PartialEigen,
+            Method::NativeRsvd,
+        ] {
             match route(&svd_req(200, 100, 8, m), &man, &cfg) {
                 Route::Host { method } => assert_eq!(method, m),
                 other => panic!("{other:?}"),
@@ -160,13 +160,15 @@ mod tests {
     fn pca_routes_to_exact_sample_bucket() {
         let man = toy_manifest();
         let cfg = RouterCfg::default();
-        let req = Request::Pca { x: Matrix::zeros(2048, 700), k: 10, method: Method::Auto, seed: 0 };
+        let req =
+            Request::Pca { x: Matrix::zeros(2048, 700), k: 10, method: Method::Auto, seed: 0 };
         match route(&req, &man, &cfg) {
             Route::Device { name } => assert_eq!(name, "p_one"),
             other => panic!("{other:?}"),
         }
         // sample count mismatch → host
-        let req = Request::Pca { x: Matrix::zeros(1000, 700), k: 10, method: Method::Auto, seed: 0 };
+        let req =
+            Request::Pca { x: Matrix::zeros(1000, 700), k: 10, method: Method::Auto, seed: 0 };
         assert!(matches!(route(&req, &man, &cfg), Route::Host { .. }));
     }
 

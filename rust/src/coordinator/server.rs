@@ -1,18 +1,24 @@
-//! The coordinator server: job queue → dynamic batcher → router → executor.
+//! The coordinator server: job queue → dynamic batcher → router → executor
+//! worker pool.
 //!
 //! Thread model (no async runtime is needed — jobs are CPU-bound solver
 //! calls): one dispatcher thread owns the queue; it drains a batching
-//! window, groups jobs by route (batcher), and executes groups, replying
-//! through per-job channels. The PJRT engine is shared behind `Arc`.
+//! window, groups jobs by fusion-aware route key (batcher), and hands
+//! planned batches to a pool of executor workers over a channel, so
+//! distinct batches overlap instead of serializing behind the dispatcher.
+//! Same-matrix native-rsvd batches execute through the fused wide-sketch
+//! path ([`super::exec::try_execute_fused`]), bitwise identical to per-job
+//! execution. Device batches run inline on the dispatcher because the PJRT
+//! engine is pinned to that thread.
 
-use super::batcher::plan_batches;
+use super::batcher::{fuse_key, is_fusable, plan_batches, route_key};
 use super::job::{Job, JobHandle, JobResult, Request};
 use super::metrics::Metrics;
 use super::router::{route, Route, RouterCfg};
 use crate::runtime::{ArtifactKind, Engine};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -29,9 +35,24 @@ pub struct CoordinatorCfg {
     /// BLAS-3 thread-team size for host solver execution; `None` inherits
     /// the process default (`RSVD_NUM_THREADS` / hardware). Set this when
     /// several coordinators (or other compute) share the machine so jobs
-    /// partition cores instead of oversubscribing. Results are bitwise
-    /// identical for any value.
+    /// partition cores instead of oversubscribing. With `workers > 1` the
+    /// team is split evenly across the pool. Results are bitwise identical
+    /// for any value.
     pub solver_threads: Option<usize>,
+    /// Executor worker pool size: planned host batches are fanned out to
+    /// this many worker threads so distinct batches overlap. `1` keeps a
+    /// single (still pipelined) executor; results are identical for any
+    /// value — only scheduling changes.
+    pub workers: usize,
+    /// Fuse same-matrix native-rsvd batches into one wide-sketch solver
+    /// call (bitwise identical to sequential execution; see DESIGN.md §7).
+    /// Off restores pre-fusion per-job execution — the ablation baseline.
+    pub fuse: bool,
+    /// Max jobs drained from the queue per dispatch cycle — bounds how much
+    /// work one planning pass can grab ahead of the pool. `None` keeps the
+    /// historical `max_batch * 4` (previously hardwired), for every
+    /// `max_batch`.
+    pub drain_cap: Option<usize>,
 }
 
 impl Default for CoordinatorCfg {
@@ -42,6 +63,9 @@ impl Default for CoordinatorCfg {
             batch_window: Duration::ZERO,
             warmup: false,
             solver_threads: None,
+            workers: 1,
+            fuse: true,
+            drain_cap: None,
         }
     }
 }
@@ -131,16 +155,26 @@ impl Coordinator {
         self.has_engine
     }
 
-    /// Submit a request; returns a handle to await the result.
+    /// Submit a request; returns a handle to await the result. If the
+    /// dispatcher is gone (it died, or the coordinator is shutting down),
+    /// the handle resolves to an error `JobResult` instead of panicking
+    /// the caller.
     pub fn submit(&self, request: Request) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        let job = Job { id, request, submitted: Instant::now(), reply };
-        self.tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(job)
-            .expect("dispatcher alive");
+        let job = Job { id, request, submitted: Instant::now(), reply: reply.clone() };
+        let sent = match self.tx.as_ref() {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        };
+        if !sent {
+            let _ = reply.send(JobResult {
+                id,
+                outcome: Err("coordinator dispatcher is not running".into()),
+                queued: Duration::ZERO,
+                exec: Duration::ZERO,
+            });
+        }
         JobHandle { id, rx }
     }
 
@@ -160,25 +194,57 @@ impl Drop for Coordinator {
     }
 }
 
+/// A routed batch ready for an executor: the jobs (owned), their shared
+/// route, and whether the planner keyed them as fusable.
+struct PlannedBatch {
+    jobs: Vec<Job>,
+    route: Route,
+    fusable: bool,
+}
+
 fn dispatch_loop(
     rx: mpsc::Receiver<Job>,
     engine: Option<Engine>,
     cfg: CoordinatorCfg,
     metrics: Arc<Metrics>,
 ) {
+    // executor worker pool: host batches flow through this channel; the
+    // shared receiver hands each batch to exactly one idle worker
+    let (btx, brx) = mpsc::channel::<PlannedBatch>();
+    let brx = Arc::new(Mutex::new(brx));
+    let workers: Vec<JoinHandle<()>> = (0..cfg.workers.max(1))
+        .map(|w| {
+            let brx = brx.clone();
+            let metrics = metrics.clone();
+            let per_worker = worker_threads(&cfg, w);
+            std::thread::Builder::new()
+                .name(format!("rsvd-exec-{w}"))
+                .spawn(move || loop {
+                    // recv while holding the lock: one waiter gets the next
+                    // batch, the rest queue on the mutex — the guard (a
+                    // statement temporary) is dropped before execution. A
+                    // recv error means the dispatcher closed the channel.
+                    let Ok(pb) = brx.lock().unwrap().recv() else { return };
+                    run_batch(pb, None, per_worker, &metrics);
+                })
+                .expect("spawn executor worker")
+        })
+        .collect();
+
     loop {
         // block for the first job
         let first = match rx.recv() {
             Ok(j) => j,
-            Err(_) => return, // all senders dropped → shutdown
+            Err(_) => break, // all senders dropped → shutdown
         };
         // drain the batching window. A zero window (the latency-first
         // default) still batches co-arrived bursts via try_recv but never
         // delays a lone job; a positive window trades first-job latency
         // for larger batches (ablation A5 measures this).
         let mut jobs = vec![first];
+        let drain_cap = cfg.drain_cap.unwrap_or(cfg.max_batch * 4);
         if cfg.batch_window.is_zero() {
-            while jobs.len() < cfg.max_batch * 4 {
+            while jobs.len() < drain_cap {
                 match rx.try_recv() {
                     Ok(j) => jobs.push(j),
                     Err(_) => break,
@@ -186,7 +252,7 @@ fn dispatch_loop(
             }
         } else {
             let deadline = Instant::now() + cfg.batch_window;
-            while jobs.len() < cfg.max_batch * 4 {
+            while jobs.len() < drain_cap {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -199,51 +265,124 @@ fn dispatch_loop(
             }
         }
 
-        // route every job, batch by route key
+        // route every job, batch by (fusion-aware) route key. Fingerprint
+        // hashing is O(m·n) per job, so only pay it when this cycle holds
+        // at least two fusion candidates — a lone candidate cannot fuse.
         let routes: Vec<Route> = jobs
             .iter()
             .map(|j| route(&j.request, manifest_of(&engine), &cfg.router))
             .collect();
-        let keys: Vec<String> = routes
+        let candidates = if cfg.fuse {
+            jobs.iter().zip(&routes).filter(|(j, r)| is_fusable(&j.request, r)).count()
+        } else {
+            0
+        };
+        let keys: Vec<String> = jobs
             .iter()
-            .map(|r| match r {
-                Route::Device { name } => format!("dev:{name}"),
-                Route::Host { method } => format!("host:{}", method.name()),
-            })
+            .zip(&routes)
+            .map(|(j, r)| if candidates >= 2 { fuse_key(&j.request, r) } else { route_key(r) })
             .collect();
         let batches = plan_batches(&keys, cfg.max_batch);
 
+        let mut slots: Vec<Option<Job>> = jobs.into_iter().map(Some).collect();
         for batch in batches {
-            metrics.record_batch(batch.jobs.len());
-            for &ji in &batch.jobs {
-                let job = &jobs[ji];
-                let r = &routes[ji];
-                let queued = job.submitted.elapsed();
-                let t0 = Instant::now();
-                // a panicking solver must fail the job, not the dispatcher
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    crate::linalg::with_threads_opt(cfg.solver_threads, || {
-                        super::exec::execute(&job.request, r, engine.as_ref())
-                    })
-                }))
-                .unwrap_or_else(|p| {
-                    let msg = p
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| p.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "solver panicked".into());
-                    Err(format!("solver panic: {msg}"))
-                });
-                let exec = t0.elapsed();
-                let backend = match r {
-                    Route::Device { .. } => "device",
-                    Route::Host { method } => method.name(),
-                };
-                metrics.record_job(backend, queued, exec, outcome.is_ok());
-                let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+            let route = routes[batch.jobs[0]].clone();
+            let fusable = cfg.fuse && batch.key.starts_with("host:native_rsvd:fp");
+            let owned: Vec<Job> =
+                batch.jobs.iter().map(|&ji| slots[ji].take().expect("job planned once")).collect();
+            let pb = PlannedBatch { jobs: owned, route, fusable };
+            if matches!(pb.route, Route::Device { .. }) {
+                // the engine is pinned to this thread — device batches
+                // execute inline
+                run_batch(pb, engine.as_ref(), cfg.solver_threads, &metrics);
+            } else {
+                let _ = btx.send(pb);
             }
         }
     }
+    drop(btx);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+/// BLAS-3 team size for worker `worker`: the configured (or
+/// ambient-default) solver team is split across the pool so N workers
+/// never oversubscribe the machine, with the remainder cores handed one
+/// each to the first `total % workers` workers so none of the operator's
+/// budget idles (thread count never changes results — §GEMM).
+fn worker_threads(cfg: &CoordinatorCfg, worker: usize) -> Option<usize> {
+    let workers = cfg.workers.max(1);
+    if workers == 1 {
+        return cfg.solver_threads;
+    }
+    let total = cfg
+        .solver_threads
+        .unwrap_or_else(crate::linalg::threading::process_default_threads);
+    let share = total / workers + usize::from(worker < total % workers);
+    Some(share.max(1))
+}
+
+/// Execute one planned batch and reply to every job. Fusable batches go
+/// through the fused wide-sketch executor as a single solver call (a panic
+/// there fails the whole batch — isolation stays per batch); everything
+/// else keeps the per-job execute + per-job panic isolation.
+fn run_batch(pb: PlannedBatch, engine: Option<&Engine>, threads: Option<usize>, metrics: &Metrics) {
+    let backend = match &pb.route {
+        Route::Device { .. } => "device",
+        Route::Host { method } => method.name(),
+    };
+    metrics.record_batch(backend, pb.jobs.len());
+
+    if pb.fusable && pb.jobs.len() > 1 {
+        let queued: Vec<Duration> = pb.jobs.iter().map(|j| j.submitted.elapsed()).collect();
+        let reqs: Vec<&Request> = pb.jobs.iter().map(|j| &j.request).collect();
+        let t0 = Instant::now();
+        let fused = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::linalg::with_threads_opt(threads, || {
+                super::exec::try_execute_fused(&reqs, &pb.route)
+            })
+        }))
+        .unwrap_or_else(|p| {
+            Some(vec![Err(format!("solver panic: {}", panic_msg(p))); reqs.len()])
+        });
+        if let Some(outcomes) = fused {
+            // per-job exec time is the whole fused call: the jobs' flops
+            // ran as one set of wide BLAS-3 products and cannot be split
+            let exec = t0.elapsed();
+            metrics.record_fused(backend, pb.jobs.len());
+            for ((job, outcome), queued) in pb.jobs.iter().zip(outcomes).zip(queued) {
+                metrics.record_fused_job(backend, queued, exec, outcome.is_ok());
+                let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+            }
+            return;
+        }
+        // didn't qualify after all (e.g. fingerprint collision) → fall
+        // through to the sequential per-job path
+    }
+
+    for job in &pb.jobs {
+        let queued = job.submitted.elapsed();
+        let t0 = Instant::now();
+        // a panicking solver must fail the job, not its executor thread
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::linalg::with_threads_opt(threads, || {
+                super::exec::execute(&job.request, &pb.route, engine)
+            })
+        }))
+        .unwrap_or_else(|p| Err(format!("solver panic: {}", panic_msg(p))));
+        let exec = t0.elapsed();
+        metrics.record_job(backend, queued, exec, outcome.is_ok());
+        let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+    }
+}
+
+/// Best-effort payload extraction from a caught panic.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "solver panicked".into())
 }
 
 fn manifest_of(engine: &Option<Engine>) -> &crate::runtime::Manifest {
@@ -369,5 +508,102 @@ mod tests {
         let coord = Coordinator::start_host_only(CoordinatorCfg::default());
         let _ = coord.run(svd_req(10, 8, 2, Method::Jacobi));
         drop(coord); // must not hang
+    }
+
+    #[test]
+    fn submit_after_dispatcher_death_errors_instead_of_panicking() {
+        let mut coord = Coordinator::start_host_only(CoordinatorCfg::default());
+        // sever the queue: the dispatcher drains and exits, exactly the
+        // state a died dispatcher leaves behind
+        coord.tx = None;
+        if let Some(h) = coord.dispatcher.take() {
+            h.join().unwrap();
+        }
+        let r = coord.run(svd_req(10, 8, 2, Method::Gesvd));
+        let err = r.outcome.expect_err("dead dispatcher must surface an error");
+        assert!(err.contains("not running"), "{err}");
+    }
+
+    #[test]
+    fn worker_pool_completes_mixed_burst() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            workers: 3,
+            max_batch: 4,
+            batch_window: Duration::from_millis(5),
+            ..Default::default()
+        });
+        let handles: Vec<_> = (0..18)
+            .map(|i| {
+                let method = match i % 3 {
+                    0 => Method::NativeRsvd,
+                    1 => Method::Lanczos,
+                    _ => Method::Jacobi,
+                };
+                coord.submit(svd_req(25, 15, 2, method))
+            })
+            .collect();
+        for h in handles {
+            assert!(h.wait().outcome.is_ok());
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 18);
+        assert_eq!(snap.jobs_failed, 0);
+    }
+
+    #[test]
+    fn fused_batch_results_match_unfused_bitwise() {
+        // same burst through a fusing and a non-fusing coordinator: the
+        // wide-sketch path must be invisible in the results
+        let a = Matrix::gaussian(120, 80, 23);
+        let burst = |fuse: bool| -> Vec<Vec<f64>> {
+            let coord = Coordinator::start_host_only(CoordinatorCfg {
+                fuse,
+                max_batch: 8,
+                batch_window: Duration::from_millis(200),
+                ..Default::default()
+            });
+            let handles: Vec<_> = (0..6)
+                .map(|i| {
+                    coord.submit(Request::Svd {
+                        a: a.clone(),
+                        k: 3 + (i % 3),
+                        method: Method::NativeRsvd,
+                        want_vectors: false,
+                        seed: i as u64,
+                    })
+                })
+                .collect();
+            let out: Vec<Vec<f64>> =
+                handles.into_iter().map(|h| h.wait().outcome.expect("ok").values).collect();
+            let snap = coord.metrics.snapshot();
+            if fuse {
+                assert!(snap.fused_jobs >= 2, "fusion engaged ({} fused)", snap.fused_jobs);
+                let w = snap.batch_widths["native_rsvd"];
+                assert!(w.max_width >= 2, "wide batch recorded");
+            } else {
+                assert_eq!(snap.fused_jobs, 0, "fuse=false must not fuse");
+            }
+            out
+        };
+        assert_eq!(burst(true), burst(false));
+    }
+
+    #[test]
+    fn drain_cap_bounds_one_dispatch_cycle() {
+        // a drain cap of 1 forces one job per planning cycle → every batch
+        // has exactly one job even though the burst is homogeneous
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            drain_cap: Some(1),
+            batch_window: Duration::from_millis(2),
+            ..Default::default()
+        });
+        let handles: Vec<_> =
+            (0..5).map(|_| coord.submit(svd_req(20, 12, 2, Method::Gesvd))).collect();
+        for h in handles {
+            assert!(h.wait().outcome.is_ok());
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batches, 5);
+        assert_eq!(snap.batch_widths["gesvd"].max_width, 1);
     }
 }

@@ -133,7 +133,14 @@ fn push_row(table: &mut Table, n: usize, k: usize, ours: &Timing, label: &str, t
 
 /// Accuracy gate from §4: ours must match GESVD to ≤1e-8 relative error on
 /// the computed k values (checked once per (decay, n), not per repeat).
-pub fn accuracy_gate(coord: &Coordinator, decay: Decay, m: usize, n: usize, k: usize, seed: u64) -> f64 {
+pub fn accuracy_gate(
+    coord: &Coordinator,
+    decay: Decay,
+    m: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> f64 {
     let a = spectrum_matrix(m, n, decay, seed);
     let ours = coord
         .run(Request::Svd { a: a.clone(), k, method: Method::Auto, want_vectors: false, seed })

@@ -137,7 +137,8 @@ pub fn svds_opts(a: &Matrix, k: usize, opts: &LanczosOpts) -> Svd {
         let sb = super::svd_gesvd::svd(&bm);
         // convergence: |β_last · u_B[last, i]| ≤ tol·σ₁ for i < k
         let blast = beta[ncv - 1];
-        let ok = (0..k).all(|i| (blast * sb.u[(ncv - 1, i)]).abs() <= opts.tol * sb.s[0].max(1e-300));
+        let ok =
+            (0..k).all(|i| (blast * sb.u[(ncv - 1, i)]).abs() <= opts.tol * sb.s[0].max(1e-300));
         svd_b = Some(sb);
         if ok {
             converged = true;

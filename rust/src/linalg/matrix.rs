@@ -154,6 +154,59 @@ impl Matrix {
         m
     }
 
+    /// Fast 64-bit content fingerprint: FNV-1a over the shape and the raw
+    /// bit patterns of every element (one multiply per word — a single
+    /// streaming pass, ~memory speed), finished with a splitmix64-style
+    /// avalanche so nearby contents spread over the full range. The
+    /// coordinator uses this to group same-matrix requests for fused batch
+    /// execution; hashing bit patterns (not values) means `0.0` and `-0.0`
+    /// fingerprint differently, which is exactly right for a key that
+    /// promises bitwise-identical results.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h: u64 = 0xcbf29ce484222325;
+        h = (h ^ self.rows as u64).wrapping_mul(PRIME);
+        h = (h ^ self.cols as u64).wrapping_mul(PRIME);
+        for v in &self.data {
+            h = (h ^ v.to_bits()).wrapping_mul(PRIME);
+        }
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d049bb133111eb);
+        h ^ (h >> 31)
+    }
+
+    /// Column-wise concatenation `[A₁ | A₂ | …]`; every part must have the
+    /// same row count. Used by the fused rsvd batch path to stack per-job
+    /// sketch panels into one wide GEMM operand.
+    pub fn hstack(parts: &[Matrix]) -> Matrix {
+        assert!(!parts.is_empty(), "hstack of nothing");
+        let rows = parts[0].rows;
+        let cols = parts.iter().map(|p| p.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let mut at = 0;
+            let orow = out.row_mut(i);
+            for p in parts {
+                assert_eq!(p.rows, rows, "hstack row mismatch");
+                orow[at..at + p.cols].copy_from_slice(p.row(i));
+                at += p.cols;
+            }
+        }
+        out
+    }
+
+    /// Overwrite the column block starting at `c0` with `src` (same rows).
+    pub fn set_col_block(&mut self, c0: usize, src: &Matrix) {
+        assert_eq!(src.rows, self.rows, "set_col_block row mismatch");
+        assert!(c0 + src.cols <= self.cols, "set_col_block out of range");
+        for i in 0..self.rows {
+            let cols = self.cols;
+            self.data[i * cols + c0..i * cols + c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
@@ -270,6 +323,37 @@ mod tests {
         assert_eq!(p[(0, 0)], 6.0);
         assert_eq!(p[(2, 3)], 0.0);
         assert_eq!(p.fro_norm(), s.fro_norm());
+    }
+
+    #[test]
+    fn fingerprint_content_sensitivity() {
+        let a = Matrix::gaussian(9, 7, 1);
+        assert_eq!(a.fingerprint(), a.clone().fingerprint(), "pure function of content");
+        let mut b = a.clone();
+        b[(8, 6)] += 1.0;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "content change");
+        // same data, different shape
+        let flat = Matrix::from_vec(1, 63, a.as_slice().to_vec());
+        assert_ne!(a.fingerprint(), flat.fingerprint(), "shape is part of the key");
+        // -0.0 == 0.0 numerically but must fingerprint differently
+        let z = Matrix::zeros(2, 2);
+        let mut nz = Matrix::zeros(2, 2);
+        nz[(0, 0)] = -0.0;
+        assert_ne!(z.fingerprint(), nz.fingerprint(), "bit patterns, not values");
+    }
+
+    #[test]
+    fn hstack_and_col_block() {
+        let a = Matrix::from_fn(3, 2, |i, j| (10 * i + j) as f64);
+        let b = Matrix::from_fn(3, 1, |i, _| 100.0 + i as f64);
+        let s = Matrix::hstack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape(), (3, 3));
+        assert_eq!(s.submatrix(0, 3, 0, 2), a);
+        assert_eq!(s.submatrix(0, 3, 2, 3), b);
+        let mut t = Matrix::zeros(3, 3);
+        t.set_col_block(0, &a);
+        t.set_col_block(2, &b);
+        assert_eq!(t, s);
     }
 
     #[test]

@@ -123,7 +123,8 @@ mod tests {
     fn check_qr(a: &Matrix, q: &Matrix, r: &Matrix, tol: f64) {
         // Q orthonormal
         let qtq = matmul_tn(q, q);
-        assert!(qtq.max_diff(&Matrix::eye(q.cols())) < tol, "QtQ err {}", qtq.max_diff(&Matrix::eye(q.cols())));
+        let qtq_err = qtq.max_diff(&Matrix::eye(q.cols()));
+        assert!(qtq_err < tol, "QtQ err {qtq_err}");
         // A = QR
         let qr = matmul(q, r);
         assert!(qr.max_diff(a) < tol * a.max_abs().max(1.0), "QR err");

@@ -39,75 +39,165 @@ impl Default for RsvdOpts {
 
 /// Randomized k-SVD of A (Algorithm 1). Returns a truncated `Svd` with
 /// exactly k triplets.
+///
+/// Implemented as a single-job [`rsvd_batch`] — one shared range-finder
+/// implementation means the fused coordinator path and the standalone call
+/// cannot drift apart (the bitwise-identity contract is structural, not
+/// just test-enforced).
 pub fn rsvd(a: &Matrix, k: usize, opts: &RsvdOpts) -> Svd {
-    with_threads_opt(opts.threads, || rsvd_inner(a, k, opts))
-}
-
-fn rsvd_inner(a: &Matrix, k: usize, opts: &RsvdOpts) -> Svd {
-    let (m, n) = a.shape();
-    let r = m.min(n);
-    let k = k.min(r);
-    let s = (k + opts.oversample).min(r);
-
-    // Step 1: Gaussian sketch Ω ∈ R^{n×s} (Philox — the CuRAND analog).
-    let omega = Matrix::gaussian(n, s, opts.seed);
-
-    // Step 2: Y = (A·Aᵀ)^q · A·Ω, with re-orthonormalization between
-    // applications for numerical stability (standard Halko et al. practice).
-    let mut y = matmul(a, &omega);
-    for _ in 0..opts.power_iters {
-        y = orthonormalize(&y);
-        let z = matmul_tn(a, &y);
-        let z = orthonormalize(&z);
-        y = matmul(a, &z);
-    }
-
-    // Step 3: Q = orth(Y) — CholeskyQR2 (BLAS-3), Householder fallback.
-    let q = orthonormalize(&y);
-
-    // Step 4: B = Qᵀ·A ∈ R^{s×n}.
-    let b = matmul_tn(&q, a);
-
-    // Step 5: SVD of the small B.
-    let sb = svd(&b);
-
-    // Step 6: Ũ = Q·U_B; truncate to k.
-    let ub = sb.u.submatrix(0, s, 0, k.min(sb.s.len()));
-    let u = matmul(&q, &ub);
-    let kk = k.min(sb.s.len());
-    Svd {
-        u,
-        s: sb.s[..kk].to_vec(),
-        v: sb.v.submatrix(0, sb.v.rows(), 0, kk),
-    }
+    let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
+    rsvd_batch(a, &[SketchJob::from_opts(k, opts)], &batch).pop().expect("one job in, one out")
 }
 
 /// k largest singular values only — stops after step 5 (the variant the
 /// spectrum experiments use; paper: "we needed only the matrix Σ").
+/// Single-job [`rsvd_values_batch`], for the same reason as [`rsvd`].
 pub fn rsvd_values(a: &Matrix, k: usize, opts: &RsvdOpts) -> Vec<f64> {
-    with_threads_opt(opts.threads, || rsvd_values_inner(a, k, opts))
+    let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
+    rsvd_values_batch(a, &[SketchJob::from_opts(k, opts)], &batch)
+        .pop()
+        .expect("one job in, one out")
 }
 
-fn rsvd_values_inner(a: &Matrix, k: usize, opts: &RsvdOpts) -> Vec<f64> {
+/// One job of a fused same-matrix batch: its own truncation rank, sketch
+/// width, and sketch seed. Batch-level knobs live in [`BatchOpts`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchJob {
+    /// Truncation rank k.
+    pub k: usize,
+    /// Oversampling p: this job's sketch width is s = k + p.
+    pub oversample: usize,
+    /// Seed for this job's Gaussian sketch Ω.
+    pub seed: u64,
+}
+
+impl SketchJob {
+    /// Per-job knobs lifted out of an [`RsvdOpts`] (the batch-level knobs —
+    /// power iterations, threads — come from [`BatchOpts`] instead).
+    pub fn from_opts(k: usize, opts: &RsvdOpts) -> SketchJob {
+        SketchJob { k, oversample: opts.oversample, seed: opts.seed }
+    }
+}
+
+/// Batch-level knobs shared by every job of a fused batch.
+#[derive(Clone, Debug)]
+pub struct BatchOpts {
+    /// Power iterations q — must be common to the batch because the power
+    /// loop walks all stacked panels in lockstep.
+    pub power_iters: usize,
+    /// BLAS-3 thread-team size, like [`RsvdOpts::threads`].
+    pub threads: Option<usize>,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        let d = RsvdOpts::default();
+        Self { power_iters: d.power_iters, threads: None }
+    }
+}
+
+/// Fused randomized k-SVD of one matrix for many jobs: the per-job sketches
+/// are stacked column-wise (`Ω = [Ω₁|Ω₂|…]`) so the range-finder flops —
+/// `A·Ω`, the power-iteration products `Aᵀ·Y` / `A·Z`, and `B = Qᵀ·A` —
+/// run as single wide BLAS-3 calls over A instead of one thin pass per job.
+/// Column-mixing steps (CholeskyQR2 orthonormalization, the small SVDs)
+/// stay per-panel, and the packed GEMM's k-reduction order per output
+/// element is independent of operand width, so every job's result is
+/// **bitwise identical** to a standalone [`rsvd`] call with the same
+/// (k, oversample, seed, power_iters).
+pub fn rsvd_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Svd> {
+    with_threads_opt(opts.threads, || {
+        let (q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
+        layout
+            .iter()
+            .map(|&(k, c0, c1)| {
+                let s = c1 - c0;
+                let bj = b.submatrix(c0, c1, 0, b.cols());
+                let sb = svd(&bj);
+                let ub = sb.u.submatrix(0, s, 0, k.min(sb.s.len()));
+                let qj = q.submatrix(0, q.rows(), c0, c1);
+                let u = matmul(&qj, &ub);
+                let kk = k.min(sb.s.len());
+                Svd { u, s: sb.s[..kk].to_vec(), v: sb.v.submatrix(0, sb.v.rows(), 0, kk) }
+            })
+            .collect()
+    })
+}
+
+/// Values-only fused batch — the [`rsvd_values`] analog of [`rsvd_batch`]:
+/// per-job Gram matrices `Gⱼ = Bⱼ·Bⱼᵀ` are contracted from the stacked B
+/// panel rows and finished with the same small eigensolve, bitwise
+/// identical to standalone calls.
+pub fn rsvd_values_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Vec<f64>> {
+    with_threads_opt(opts.threads, || {
+        let (_q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
+        layout
+            .iter()
+            .map(|&(k, c0, c1)| {
+                let bj = b.submatrix(c0, c1, 0, b.cols());
+                let g = matmul_nt(&bj, &bj);
+                let w = super::eigen::eigvalsh(&g);
+                w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+            })
+            .collect()
+    })
+}
+
+/// Shared wide range finder (Algorithm 1, steps 1–4) for a batch of jobs
+/// against one matrix. Returns the stacked orthonormal basis Q (m×S,
+/// S = Σsⱼ), the stacked projection B = Qᵀ·A (S×n), and the per-job layout
+/// (k, column/row offset range) — columns of Q and rows of B in `[c0, c1)`
+/// belong to job j. With a single job this *is* the standalone pipeline.
+fn batch_range_finder(
+    a: &Matrix,
+    jobs: &[SketchJob],
+    power_iters: usize,
+) -> (Matrix, Matrix, Vec<(usize, usize, usize)>) {
+    assert!(!jobs.is_empty(), "empty rsvd batch");
     let (m, n) = a.shape();
     let r = m.min(n);
-    let k = k.min(r);
-    let s = (k + opts.oversample).min(r);
-    let omega = Matrix::gaussian(n, s, opts.seed);
+    let mut layout = Vec::with_capacity(jobs.len());
+    let mut omegas = Vec::with_capacity(jobs.len());
+    let mut off = 0;
+    for j in jobs {
+        let k = j.k.min(r);
+        let s = (k + j.oversample).min(r);
+        // Step 1: Gaussian sketch Ωⱼ ∈ R^{n×sⱼ} (Philox — the CuRAND analog).
+        omegas.push(Matrix::gaussian(n, s, j.seed));
+        layout.push((k, off, off + s));
+        off += s;
+    }
+    let omega = Matrix::hstack(&omegas);
+
+    // Step 2: Y = (A·Aᵀ)^q · A·Ω, re-orthonormalizing between applications
+    // for numerical stability (standard Halko et al. practice) — wide GEMMs
+    // over the stacked sketch, per-panel orthonormalization.
     let mut y = matmul(a, &omega);
-    for _ in 0..opts.power_iters {
-        y = orthonormalize(&y);
-        let z = matmul_tn(a, &y);
-        let z = orthonormalize(&z);
+    for _ in 0..power_iters {
+        y = orth_panels(&y, &layout);
+        let z = orth_panels(&matmul_tn(a, &y), &layout);
         y = matmul(a, &z);
     }
-    let q = orthonormalize(&y);
+
+    // Step 3: Q = orth(Y) — CholeskyQR2 (BLAS-3), Householder fallback.
+    let q = orth_panels(&y, &layout);
+
+    // Step 4: B = Qᵀ·A, one wide GEMM; job j owns rows [c0, c1).
     let b = matmul_tn(&q, a);
-    // values of B via eigenvalues of the small Gram B·Bᵀ (s×s) — the same
-    // contraction the AOT pipeline uses
-    let g = matmul_nt(&b, &b);
-    let w = super::eigen::eigvalsh(&g);
-    w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+    (q, b, layout)
+}
+
+/// Per-panel orthonormalization of a stacked sketch: each job's column
+/// block is orthonormalized independently (CholeskyQR2 mixes columns, so
+/// fusing it across jobs would change results; keeping it per-panel is
+/// what makes the batch bitwise identical to sequential calls).
+fn orth_panels(y: &Matrix, layout: &[(usize, usize, usize)]) -> Matrix {
+    let mut out = Matrix::zeros(y.rows(), y.cols());
+    for &(_k, c0, c1) in layout {
+        let panel = orthonormalize(&y.submatrix(0, y.rows(), c0, c1));
+        out.set_col_block(c0, &panel);
+    }
+    out
 }
 
 /// Rank-k approximation error ‖A − QQᵀA‖_F — used to validate the (1+ε)
@@ -182,6 +272,45 @@ mod tests {
         assert!(utu.max_diff(&Matrix::eye(6)) < 1e-9);
         let vtv = matmul_tn(&r.v, &r.v);
         assert!(vtv.max_diff(&Matrix::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn batch_single_job_is_bitwise_rsvd() {
+        let a = crate::datagen_test_matrix(50, 35, |i| 1.0 / (i + 1) as f64, 13);
+        let opts = RsvdOpts { seed: 7, ..Default::default() };
+        let job = SketchJob::from_opts(6, &opts);
+        let batch = rsvd_batch(&a, &[job], &BatchOpts::default());
+        let single = rsvd(&a, 6, &opts);
+        assert_eq!(batch[0].s, single.s);
+        assert_eq!(batch[0].u, single.u);
+        assert_eq!(batch[0].v, single.v);
+        let vals = rsvd_values_batch(&a, &[job], &BatchOpts::default());
+        assert_eq!(vals[0], rsvd_values(&a, 6, &opts));
+    }
+
+    #[test]
+    fn batch_mixed_jobs_bitwise_match_sequential() {
+        // mixed seeds, ranks, and sketch widths against the same matrix
+        let a = Matrix::gaussian(60, 45, 21);
+        let jobs = [
+            SketchJob { k: 4, oversample: 10, seed: 1 },
+            SketchJob { k: 9, oversample: 10, seed: 2 },
+            SketchJob { k: 4, oversample: 6, seed: 3 },
+            SketchJob { k: 12, oversample: 10, seed: 1 },
+        ];
+        let fused = rsvd_values_batch(&a, &jobs, &BatchOpts::default());
+        for (j, f) in jobs.iter().zip(&fused) {
+            let opts = RsvdOpts { oversample: j.oversample, seed: j.seed, ..Default::default() };
+            assert_eq!(f, &rsvd_values(&a, j.k, &opts), "job {j:?}");
+        }
+        let fused = rsvd_batch(&a, &jobs, &BatchOpts::default());
+        for (j, f) in jobs.iter().zip(&fused) {
+            let opts = RsvdOpts { oversample: j.oversample, seed: j.seed, ..Default::default() };
+            let single = rsvd(&a, j.k, &opts);
+            assert_eq!(f.s, single.s, "job {j:?}");
+            assert_eq!(f.u, single.u, "job {j:?}");
+            assert_eq!(f.v, single.v, "job {j:?}");
+        }
     }
 
     #[test]

@@ -27,7 +27,13 @@ pub struct Pca {
 
 /// Fit k principal components of `x` (N samples × d features) through the
 /// coordinator with the given solver method.
-pub fn fit(coord: &Coordinator, x: &Matrix, k: usize, method: Method, seed: u64) -> Result<Pca, String> {
+pub fn fit(
+    coord: &Coordinator,
+    x: &Matrix,
+    k: usize,
+    method: Method,
+    seed: u64,
+) -> Result<Pca, String> {
     let mean = column_means(x);
     let total_var = total_variance(x, &mean);
     let res = coord

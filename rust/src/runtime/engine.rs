@@ -233,7 +233,11 @@ mod pjrt {
 
     /// Literal (f64, any layout — `to_vec` linearizes in logical row-major
     /// order) → Matrix with expected shape.
-    pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix, String> {
+    pub fn literal_to_matrix(
+        lit: &xla::Literal,
+        rows: usize,
+        cols: usize,
+    ) -> Result<Matrix, String> {
         let v = lit.to_vec::<f64>().map_err(|e| format!("literal to_vec: {e}"))?;
         if v.len() != rows * cols {
             return Err(format!("literal has {} elements, expected {rows}x{cols}", v.len()));

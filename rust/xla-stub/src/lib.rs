@@ -1,0 +1,122 @@
+//! API stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The real bindings need a vendored XLA C++ runtime at build time, which
+//! the default toolchain does not have. This stub mirrors exactly the API
+//! surface `rsvd::runtime::engine` uses, so `cargo check --features xla`
+//! keeps the feature-gated engine code compiling in CI ("the stub engine
+//! can never silently rot"). Every entry point that would touch PJRT
+//! returns an error at runtime; constructing a client fails first, so the
+//! coordinator falls back to its host solvers exactly as it does when the
+//! feature is off.
+//!
+//! To run on a real device, point the `xla` path dependency in
+//! `rust/Cargo.toml` at an xla-rs checkout instead of this stub (see
+//! DESIGN.md §Runtime).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the shape the engine formats with `{e}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("xla stub: {what} requires the real xla-rs bindings (see DESIGN.md §Runtime)"))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: never constructed, execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_stub() {
+        assert!(PjRtClient::cpu().err().unwrap().to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(lit.reshape(&[1, 2]).is_err());
+        assert!(lit.to_vec::<f64>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+}

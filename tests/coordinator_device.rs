@@ -153,7 +153,8 @@ fn failure_surfaces_cleanly() {
     let Some(coord) = boot() else { return };
     // k = 0 is degenerate but must not crash anything; values empty or err
     let a = spectrum_matrix(64, 48, Decay::Fast, 1);
-    let r = coord.run(Request::Svd { a, k: 0, method: Method::Lanczos, want_vectors: false, seed: 1 });
+    let r =
+        coord.run(Request::Svd { a, k: 0, method: Method::Lanczos, want_vectors: false, seed: 1 });
     match r.outcome {
         Ok(d) => assert!(d.values.is_empty()),
         Err(e) => assert!(!e.is_empty()),
