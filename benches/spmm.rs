@@ -1,0 +1,147 @@
+//! Sparse workload bench: CSR SpMM vs dense GEMM on the densified twin,
+//! and the operator-backed sparse rSVD vs the dense pipeline — the payoff
+//! the sparse `LinOp` backend exists for (the sketch pipeline's flops are
+//! 2·nnz·p instead of 2·m·n·p, so speedup ≈ 1/density).
+//!
+//! ```sh
+//! cargo bench --bench spmm -- [--repeats 3] [--p 32] [--k 8]
+//! cargo bench --bench spmm -- --smoke   # fast CI mode → BENCH_spmm.json
+//! ```
+//!
+//! `--smoke` writes `BENCH_spmm.json` (effective GFLOP/s + sparse-vs-dense
+//! speedups), uploaded by CI next to `BENCH_gemm.json` /
+//! `BENCH_coordinator.json` and guarded by the bench-guard job. Cargo runs
+//! bench binaries with CWD = the package root, so the file lands at
+//! `rust/BENCH_spmm.json`.
+
+use rsvd::bench_harness::{fmt_secs, gflops, save_json, time_n, Table};
+use rsvd::datagen::sparse::power_law;
+use rsvd::linalg::gemm::matmul;
+use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::linalg::Matrix;
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let repeats = args.get_usize("repeats", if smoke { 2 } else { 3 });
+    let p = args.get_usize("p", 32);
+    let k = args.get_usize("k", 8);
+    bench_spmm(smoke, repeats, p, k);
+}
+
+/// One workload row: SpMM vs dense GEMM timings and the sparse-vs-dense
+/// rSVD end-to-end comparison, as a JSON object for the CI artifact.
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    table: &mut Table,
+    m: usize,
+    n: usize,
+    max_degree: usize,
+    repeats: usize,
+    p: usize,
+    k: usize,
+    seed: u64,
+) -> Json {
+    let a = power_law(m, n, max_degree, 0.7, seed);
+    let dense = a.to_dense();
+    let nnz = a.nnz();
+    let density = nnz as f64 / (m * n) as f64;
+    let x = Matrix::gaussian(n, p, seed.wrapping_add(1));
+
+    // SpMM A·X vs dense GEMM on the densified twin — bitwise-equal results
+    let t_sp = time_n(repeats, || {
+        let _ = a.spmm(&x);
+    });
+    let t_dn = time_n(repeats, || {
+        let _ = matmul(&dense, &x);
+    });
+    assert_eq!(a.spmm(&x), matmul(&dense, &x), "SpMM must match dense GEMM bitwise");
+    let sp_gf = gflops(2.0 * nnz as f64 * p as f64, t_sp.mean_s);
+    let dn_gf = gflops(2.0 * (m * n * p) as f64, t_dn.mean_s);
+    let spmm_speedup = t_dn.mean_s / t_sp.mean_s;
+
+    // operator-backed sparse rSVD vs dense pipeline on the densified twin
+    let opts = RsvdOpts { seed: seed.wrapping_add(2), ..Default::default() };
+    let t_rs_sp = time_n(repeats, || {
+        let _ = rsvd_values(&a, k, &opts);
+    });
+    let t_rs_dn = time_n(repeats, || {
+        let _ = rsvd_values(&dense, k, &opts);
+    });
+    assert_eq!(
+        rsvd_values(&a, k, &opts),
+        rsvd_values(&dense, k, &opts),
+        "sparse rSVD must match the dense pipeline bitwise"
+    );
+    let rsvd_speedup = t_rs_dn.mean_s / t_rs_sp.mean_s;
+
+    table.row(vec![
+        format!("{m}x{n}"),
+        format!("{nnz} ({:.2}%)", 100.0 * density),
+        format!("{} / {}", fmt_secs(t_sp.mean_s), fmt_secs(t_dn.mean_s)),
+        format!("{sp_gf:.2}"),
+        format!("{spmm_speedup:.2}x"),
+        format!("{} / {}", fmt_secs(t_rs_sp.mean_s), fmt_secs(t_rs_dn.mean_s)),
+        format!("{rsvd_speedup:.2}x"),
+    ]);
+
+    let mut row = BTreeMap::new();
+    row.insert("m".to_string(), Json::Num(m as f64));
+    row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("nnz".to_string(), Json::Num(nnz as f64));
+    row.insert("density".to_string(), Json::Num(density));
+    row.insert("p".to_string(), Json::Num(p as f64));
+    row.insert("k".to_string(), Json::Num(k as f64));
+    row.insert("spmm_effective_gflops".to_string(), Json::Num(sp_gf));
+    row.insert("dense_gemm_gflops".to_string(), Json::Num(dn_gf));
+    row.insert("spmm_vs_dense_speedup".to_string(), Json::Num(spmm_speedup));
+    row.insert("sparse_rsvd_s".to_string(), Json::Num(t_rs_sp.mean_s));
+    row.insert("dense_rsvd_s".to_string(), Json::Num(t_rs_dn.mean_s));
+    row.insert(
+        "sparse_rsvd_jobs_per_s".to_string(),
+        Json::Num(if t_rs_sp.mean_s > 0.0 { 1.0 / t_rs_sp.mean_s } else { f64::INFINITY }),
+    );
+    row.insert("rsvd_sparse_vs_dense_speedup".to_string(), Json::Num(rsvd_speedup));
+    Json::Obj(row)
+}
+
+fn bench_spmm(smoke: bool, repeats: usize, p: usize, k: usize) {
+    let mut table = Table::new(
+        &format!("CSR SpMM + sparse rSVD vs densified twin (p={p}, k={k})"),
+        &[
+            "shape",
+            "nnz (density)",
+            "spmm / gemm",
+            "spmm GFLOP/s",
+            "spmm speedup",
+            "rsvd sp / dn",
+            "rsvd speedup",
+        ],
+    );
+    let cases: &[(usize, usize, usize)] = if smoke {
+        &[(1200, 800, 48), (2400, 1600, 32)]
+    } else {
+        &[(1200, 800, 48), (2400, 1600, 32), (4800, 3200, 48), (4800, 3200, 128)]
+    };
+    let mut rows = Vec::new();
+    for (i, &(m, n, d)) in cases.iter().enumerate() {
+        rows.push(run_case(&mut table, m, n, d, repeats, p, k, 11 + i as u64));
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("spmm");
+        return;
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("spmm".into()));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert(
+        "threads".to_string(),
+        Json::Num(rsvd::linalg::threading::available_threads() as f64),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    save_json("BENCH_spmm.json", &Json::Obj(doc));
+}

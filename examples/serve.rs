@@ -55,6 +55,22 @@ fn main() {
                     None,
                     Request::Pca { x, k: 8, method: Method::Auto, seed: id as u64 },
                 ));
+            } else if id % 7 == 3 {
+                // sparse leg of the mix: power-law-degree CSR payloads
+                // served by the operator-backed sketch pipeline (their
+                // flat spectra are reported, not accuracy-gated — same
+                // policy as slow decay)
+                let a = rsvd::datagen::sparse::power_law(m, n, 48, 0.7, id as u64);
+                payloads[c].push((
+                    None,
+                    Request::SvdSparse {
+                        a,
+                        k: 5 + id % 13,
+                        method: Method::Auto,
+                        want_vectors: false,
+                        seed: id as u64,
+                    },
+                ));
             } else {
                 let decay = decays[id % decays.len()];
                 let a = spectrum_matrix(m, n, decay, id as u64);

@@ -1,0 +1,172 @@
+//! Bench-regression comparator: the engine behind `rsvd bench-compare`,
+//! CI's bench-guard job. It walks a baseline and a current `BENCH_*.json`
+//! document, pairs up every *throughput* metric by JSON path, and flags
+//! any metric that dropped by more than the tolerance.
+//!
+//! Throughput metrics are recognized by field name — `*gflops*` and
+//! `*_per_s` — so every bench artifact (gemm, coordinator, spmm, future
+//! ones) is guarded without per-bench schema code; higher is always
+//! better for these. Latency-like and configuration fields (`*_s`,
+//! `repeats`, `threads`, `speedup`, shapes) are deliberately ignored:
+//! speedup ratios double-count their numerator/denominator and flip sign
+//! depending on which side regressed.
+
+use crate::util::json::Json;
+
+/// One throughput metric paired across baseline and current.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// JSON path, e.g. `results[1].parallel_gflops`.
+    pub path: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl Metric {
+    /// current / baseline — > 1 is an improvement.
+    pub fn ratio(&self) -> f64 {
+        if self.baseline > 0.0 {
+            self.current / self.baseline
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Regression iff current < (1 − tolerance) · baseline.
+    pub fn regressed(&self, tolerance: f64) -> bool {
+        self.current < (1.0 - tolerance) * self.baseline
+    }
+}
+
+/// Whether a JSON field name denotes a higher-is-better throughput metric.
+pub fn is_throughput_field(name: &str) -> bool {
+    name.contains("gflops") || name.ends_with("_per_s")
+}
+
+/// Collect every throughput metric in `doc` as (path, value), in document
+/// order (objects iterate key-sorted — `Json::Obj` is a BTreeMap — so the
+/// listing is deterministic).
+pub fn throughput_metrics(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    walk(doc, "", &mut out);
+    out
+}
+
+fn walk(j: &Json, path: &str, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                if let Json::Num(x) = v {
+                    if is_throughput_field(k) {
+                        out.push((sub, *x));
+                    }
+                } else {
+                    walk(v, &sub, out);
+                }
+            }
+        }
+        Json::Arr(v) => {
+            for (i, x) in v.iter().enumerate() {
+                walk(x, &format!("{path}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Pair up the throughput metrics of two documents by path. Metrics
+/// present on only one side are skipped (a bench that gained or lost a
+/// case should not trip the guard — the tolerance check is for metrics
+/// that exist on both sides).
+pub fn pair_metrics(baseline: &Json, current: &Json) -> Vec<Metric> {
+    let base = throughput_metrics(baseline);
+    let cur = throughput_metrics(current);
+    cur.iter()
+        .filter_map(|(path, c)| {
+            base.iter()
+                .find(|(bp, _)| bp == path)
+                .map(|(_, b)| Metric { path: path.clone(), baseline: *b, current: *c })
+        })
+        .collect()
+}
+
+/// Compare two bench documents: all paired metrics, and the subset that
+/// regressed beyond `tolerance` (0.25 ⇒ fail under 75% of baseline).
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> (Vec<Metric>, Vec<Metric>) {
+    let all = pair_metrics(baseline, current);
+    let bad = all.iter().filter(|m| m.regressed(tolerance)).cloned().collect();
+    (all, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn throughput_fields_recognized() {
+        assert!(is_throughput_field("parallel_gflops"));
+        assert!(is_throughput_field("spmm_effective_gflops"));
+        assert!(is_throughput_field("fused_jobs_per_s"));
+        assert!(!is_throughput_field("speedup"));
+        assert!(!is_throughput_field("sequential_s"));
+        assert!(!is_throughput_field("repeats"));
+        assert!(!is_throughput_field("n"));
+    }
+
+    #[test]
+    fn walks_nested_documents() {
+        let j = doc(
+            r#"{"bench":"gemm","threads":8,
+                "results":[{"n":256,"parallel_gflops":10.0,"speedup":4.0},
+                           {"n":512,"parallel_gflops":20.0}],
+                "fused_jobs_per_s":3.5}"#,
+        );
+        let m = throughput_metrics(&j);
+        assert_eq!(
+            m,
+            vec![
+                ("fused_jobs_per_s".to_string(), 3.5),
+                ("results[0].parallel_gflops".to_string(), 10.0),
+                ("results[1].parallel_gflops".to_string(), 20.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn regression_detection() {
+        let base = doc(r#"{"results":[{"parallel_gflops":10.0},{"parallel_gflops":8.0}]}"#);
+        let good = doc(r#"{"results":[{"parallel_gflops":9.0},{"parallel_gflops":8.5}]}"#);
+        let (all, bad) = compare(&base, &good, 0.25);
+        assert_eq!(all.len(), 2);
+        assert!(bad.is_empty(), "10% dip is inside a 25% tolerance");
+        // a 50% collapse on one metric trips the guard
+        let slow = doc(r#"{"results":[{"parallel_gflops":4.9},{"parallel_gflops":8.0}]}"#);
+        let (_, bad) = compare(&base, &slow, 0.25);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].path, "results[0].parallel_gflops");
+        assert!(bad[0].ratio() < 0.5);
+        // exactly at the edge: 7.5 vs 10.0 with tol 0.25 is NOT a
+        // regression (strict less-than)
+        let edge = doc(r#"{"results":[{"parallel_gflops":7.5},{"parallel_gflops":8.0}]}"#);
+        let (_, bad) = compare(&base, &edge, 0.25);
+        assert!(bad.is_empty(), "{bad:?}");
+    }
+
+    #[test]
+    fn unpaired_metrics_are_skipped() {
+        let base = doc(r#"{"a_gflops":10.0}"#);
+        let cur = doc(r#"{"a_gflops":9.0,"b_gflops":1.0}"#);
+        let (all, bad) = compare(&base, &cur, 0.25);
+        assert_eq!(all.len(), 1, "new metric has no baseline to regress from");
+        assert!(bad.is_empty());
+        // zero/negative baselines never divide-by-zero
+        let m = Metric { path: "x".into(), baseline: 0.0, current: 1.0 };
+        assert!(m.ratio().is_infinite());
+        assert!(!m.regressed(0.25));
+    }
+}

@@ -6,6 +6,11 @@
 //!   interval = [ (mean(*) − std(*)) / (mean(ours) + std(ours)),
 //!                (mean(*) + std(*)) / (mean(ours) − std(ours)) ]
 //! with ratio > 1 meaning "ours is faster".
+//!
+//! [`compare`] holds the bench-regression comparator CI's bench-guard job
+//! runs over the `BENCH_*.json` artifacts.
+
+pub mod compare;
 
 use std::time::{Duration, Instant};
 

@@ -31,30 +31,62 @@ pub fn route_key(route: &Route) -> String {
 }
 
 /// Whether a routed job is a candidate for fused batch execution (a host
-/// native-rsvd SVD). The dispatcher uses this to skip fingerprint hashing
-/// entirely in drain cycles with fewer than two candidates — a lone job
-/// can never fuse, so it should not pay the O(m·n) content hash.
+/// native-rsvd SVD, dense or sparse). The dispatcher uses this to skip
+/// fingerprint hashing entirely in drain cycles with fewer than two
+/// candidates — a lone job can never fuse, so it should not pay the
+/// O(payload) content hash.
 pub fn is_fusable(req: &Request, route: &Route) -> bool {
-    matches!((route, req), (Route::Host { method: Method::NativeRsvd }, Request::Svd { .. }))
+    matches!(
+        (route, req),
+        (
+            Route::Host { method: Method::NativeRsvd },
+            Request::Svd { .. } | Request::SvdSparse { .. }
+        )
+    )
 }
 
-/// Fusion-aware batch key. Host native-rsvd SVD jobs carry the matrix
+/// Fusion-aware batch key. Host native-rsvd SVD jobs carry the payload
 /// content fingerprint, shape, power-iteration count, and output flavor,
 /// so `plan_batches` can only ever group jobs that the fused executor may
-/// legally stack into one wide sketch (same matrix, same q, same finish).
-/// Everything else falls back to the coarse [`route_key`]. The power-iter
-/// count is the host default ([`RsvdOpts::default`]) because that is what
-/// the host executor runs with.
+/// legally stack into one wide sketch (same operator, same q, same
+/// finish). Dense payloads key as `fp…`, sparse as `spfp…` — besides the
+/// salted fingerprints, the distinct prefixes make it structurally
+/// impossible for a dense job and its sparse twin to share a batch (their
+/// product kernels differ). Everything else falls back to the coarse
+/// [`route_key`]. The power-iter count is the host default
+/// ([`RsvdOpts::default`]) because that is what the host executor runs
+/// with.
 pub fn fuse_key(req: &Request, route: &Route) -> String {
-    if let (Route::Host { method: Method::NativeRsvd }, Request::Svd { a, want_vectors, .. }) =
-        (route, req)
-    {
-        let (m, n) = a.shape();
+    if let Route::Host { method: Method::NativeRsvd } = route {
         let q = RsvdOpts::default().power_iters;
-        let flavor = if *want_vectors { "uv" } else { "vals" };
-        return format!("host:native_rsvd:fp{:016x}:{m}x{n}:q{q}:{flavor}", a.fingerprint());
+        match req {
+            Request::Svd { a, want_vectors, .. } => {
+                let (m, n) = a.shape();
+                let flavor = if *want_vectors { "uv" } else { "vals" };
+                return format!(
+                    "host:native_rsvd:fp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    a.fingerprint()
+                );
+            }
+            Request::SvdSparse { a, want_vectors, .. } => {
+                let (m, n) = a.shape();
+                let flavor = if *want_vectors { "uv" } else { "vals" };
+                return format!(
+                    "host:native_rsvd:spfp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    a.fingerprint()
+                );
+            }
+            Request::Pca { .. } => {}
+        }
     }
     route_key(route)
+}
+
+/// Whether a planned batch key is a fused wide-sketch key (dense or
+/// sparse) rather than a coarse route key — the server's dispatch loop
+/// uses this to decide which batches go through the fused executor.
+pub fn is_fused_key(key: &str) -> bool {
+    key.starts_with("host:native_rsvd:fp") || key.starts_with("host:native_rsvd:spfp")
 }
 
 /// Group `keys[i]` (the route key of job i) into batches of ≤ `max_batch`,
@@ -144,6 +176,45 @@ mod tests {
         let pca =
             Request::Pca { x: Matrix::gaussian(8, 6, 1), k: 2, method: Method::Auto, seed: 0 };
         assert_eq!(fuse_key(&pca, &route), "host:native_rsvd");
+    }
+
+    #[test]
+    fn sparse_fuse_key_discriminates_and_never_matches_dense() {
+        use crate::linalg::Csr;
+        let route = Route::Host { method: Method::NativeRsvd };
+        let a = Csr::from_coo(8, 6, &[(0, 0, 1.0), (3, 4, 2.0), (7, 5, -1.0)]).unwrap();
+        let req = |a: Csr, vecs: bool| Request::SvdSparse {
+            a,
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: vecs,
+            seed: 1,
+        };
+        let base = fuse_key(&req(a.clone(), false), &route);
+        assert!(base.starts_with("host:native_rsvd:spfp"), "{base}");
+        assert!(is_fused_key(&base));
+        // same content → same key; flavor/content changes → new keys
+        assert_eq!(fuse_key(&req(a.clone(), false), &route), base);
+        assert_ne!(fuse_key(&req(a.clone(), true), &route), base);
+        let b = Csr::from_coo(8, 6, &[(0, 0, 1.5)]).unwrap();
+        assert_ne!(fuse_key(&req(b, false), &route), base);
+        // a dense twin with equal numeric content gets a disjoint key space
+        let dense = Request::Svd {
+            a: a.to_dense(),
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let dense_key = fuse_key(&dense, &route);
+        assert!(dense_key.starts_with("host:native_rsvd:fp"), "{dense_key}");
+        assert_ne!(dense_key, base);
+        // non-fusable routes keep the coarse key, which is not a fused key
+        let gesvd = Route::Host { method: Method::Gesvd };
+        assert_eq!(fuse_key(&req(a, false), &gesvd), "host:gesvd");
+        assert!(!is_fused_key("host:gesvd"));
+        assert!(!is_fused_key("host:native_rsvd"));
+        assert!(!is_fused_key("dev:r_small"));
     }
 
     /// Property: planning over fusion-aware keys never groups jobs with

@@ -4,7 +4,9 @@
 use super::job::{Decomposition, Method, Request};
 use super::router::Route;
 use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
-use crate::linalg::{eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Matrix};
+use crate::linalg::{
+    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, Matrix,
+};
 use crate::runtime::{finish_rsvd, finish_values, Engine};
 
 /// Execute one request along its route.
@@ -23,13 +25,16 @@ pub fn execute(
 }
 
 /// Fused execution of a route-homogeneous batch, if it qualifies: every
-/// request must be a host native-rsvd SVD over the *same* matrix with the
+/// request must be a host native-rsvd SVD over the *same* payload — all
+/// dense over one matrix, or all sparse over one CSR operator — with the
 /// same output flavor (the batcher's fuse key guarantees this; the content
 /// equality re-check here is cheap insurance against fingerprint
-/// collisions). Per-job sketches stack column-wise and the range-finder
-/// flops run as single wide BLAS-3 calls ([`native_rsvd::rsvd_batch`]);
-/// results are bitwise identical to per-job [`execute`]. Returns `None`
-/// when the batch does not qualify — callers then fall back to the
+/// collisions, and mixing dense with sparse never qualifies even when the
+/// numeric contents agree, because the product kernels differ). Per-job
+/// sketches stack column-wise and the range-finder flops run as single
+/// wide block products ([`native_rsvd::rsvd_batch`] — GEMM dense, SpMM
+/// sparse); results are bitwise identical to per-job [`execute`]. Returns
+/// `None` when the batch does not qualify — callers then fall back to the
 /// sequential per-job path.
 pub fn try_execute_fused(
     reqs: &[&Request],
@@ -38,26 +43,59 @@ pub fn try_execute_fused(
     if reqs.len() < 2 || !matches!(route, Route::Host { method: Method::NativeRsvd }) {
         return None;
     }
+    enum Payload<'a> {
+        Dense(&'a Matrix),
+        Sparse(&'a Csr),
+    }
     let mut jobs = Vec::with_capacity(reqs.len());
-    let mut shared: Option<(&Matrix, bool)> = None;
+    let mut shared: Option<(Payload, bool)> = None;
     for r in reqs {
-        let Request::Svd { a, k, want_vectors, seed, .. } = r else { return None };
-        match shared {
-            None => shared = Some((a, *want_vectors)),
-            Some((fa, fv)) => {
-                if fv != *want_vectors || fa != a {
+        let (payload, k, want_vectors, seed) = match r {
+            Request::Svd { a, k, want_vectors, seed, .. } => {
+                (Payload::Dense(a), *k, *want_vectors, *seed)
+            }
+            Request::SvdSparse { a, k, want_vectors, seed, .. } => {
+                (Payload::Sparse(a), *k, *want_vectors, *seed)
+            }
+            Request::Pca { .. } => return None,
+        };
+        match &shared {
+            None => shared = Some((payload, want_vectors)),
+            Some((first, fv)) => {
+                if *fv != want_vectors {
+                    return None;
+                }
+                let same = match (first, &payload) {
+                    (Payload::Dense(fa), Payload::Dense(a)) => fa == a,
+                    (Payload::Sparse(fa), Payload::Sparse(a)) => fa == a,
+                    _ => false,
+                };
+                if !same {
                     return None;
                 }
             }
         }
-        jobs.push(SketchJob::from_opts(*k, &RsvdOpts { seed: *seed, ..Default::default() }));
+        jobs.push(SketchJob::from_opts(k, &RsvdOpts { seed, ..Default::default() }));
     }
-    let (a, want_vectors) = shared?;
+    let (payload, want_vectors) = shared?;
     // threads stay ambient: the caller (executor worker) has already pinned
     // its team via with_threads_opt, exactly as the sequential path does
+    Some(match payload {
+        Payload::Dense(a) => run_fused(a, &jobs, want_vectors),
+        Payload::Sparse(a) => run_fused(a, &jobs, want_vectors),
+    })
+}
+
+/// The shared fused finish over any operator backend: one wide-sketch
+/// batch solve, one `Decomposition` per job.
+fn run_fused<A: crate::linalg::LinOp + ?Sized>(
+    a: &A,
+    jobs: &[SketchJob],
+    want_vectors: bool,
+) -> Vec<Result<Decomposition, String>> {
     let opts = BatchOpts::default();
-    let out = if want_vectors {
-        native_rsvd::rsvd_batch(a, &jobs, &opts)
+    if want_vectors {
+        native_rsvd::rsvd_batch(a, jobs, &opts)
             .into_iter()
             .map(|s| {
                 // rsvd_batch already truncates U/V/σ to k columns — no
@@ -72,7 +110,7 @@ pub fn try_execute_fused(
             })
             .collect()
     } else {
-        native_rsvd::rsvd_values_batch(a, &jobs, &opts)
+        native_rsvd::rsvd_values_batch(a, jobs, &opts)
             .into_iter()
             .map(|values| {
                 Ok(Decomposition {
@@ -84,8 +122,7 @@ pub fn try_execute_fused(
                 })
             })
             .collect()
-    };
-    Some(out)
+    }
 }
 
 fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decomposition, String> {
@@ -97,6 +134,9 @@ fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decompos
         .ok_or_else(|| format!("artifact {artifact} not in manifest"))?
         .clone();
     match req {
+        // the router never sends sparse payloads to a device artifact
+        // (buckets take dense literals) — fail loudly if one slips through
+        Request::SvdSparse { .. } => Err("sparse requests have no device artifacts".into()),
         Request::Svd { a, k, want_vectors, seed, .. } => {
             let out = engine
                 .run_rsvd(&spec, a, split_seed(*seed))
@@ -144,7 +184,49 @@ fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
         Request::Svd { a, k, want_vectors, seed, .. } => {
             host_svd(a, *k, method, *want_vectors, *seed)
         }
+        Request::SvdSparse { a, k, want_vectors, seed, .. } => {
+            host_sparse_svd(a, *k, method, *want_vectors, *seed)
+        }
         Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
+    }
+}
+
+/// Sparse SVD on the host. The sketch-pipeline methods run the operator
+/// path — SpMM/SpMMᵀ products straight off the CSR structure, no dense A
+/// ever materialized. An explicitly requested exact/iterative solver
+/// densifies first (correctness over speed for the long tail; the router
+/// only sends sparse jobs here when the caller asked by name).
+fn host_sparse_svd(
+    a: &Csr,
+    k: usize,
+    method: Method,
+    want_vectors: bool,
+    seed: u64,
+) -> Result<Decomposition, String> {
+    match method {
+        Method::NativeRsvd | Method::Auto | Method::Device => {
+            let k = k.min(a.rows().min(a.cols()));
+            let opts = native_rsvd::RsvdOpts { seed, ..Default::default() };
+            if want_vectors {
+                let s = native_rsvd::rsvd(a, k, &opts);
+                Ok(Decomposition {
+                    values: s.s,
+                    u: Some(s.u),
+                    v: Some(s.v),
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            } else {
+                Ok(Decomposition {
+                    values: native_rsvd::rsvd_values(a, k, &opts),
+                    u: None,
+                    v: None,
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            }
+        }
+        exact => host_svd(&a.to_dense(), k, exact, want_vectors, seed),
     }
 }
 
@@ -372,6 +454,106 @@ mod tests {
         // PCA requests never fuse
         let p = Request::Pca { x: a, k: 2, method: Method::NativeRsvd, seed: 0 };
         assert!(try_execute_fused(&[&p, &p], &route).is_none());
+    }
+
+    /// Deterministic banded CSR test operator with a few diagonals.
+    fn test_csr(m: usize, n: usize) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..m {
+            for d in [0usize, 2, 5] {
+                let j = i + d;
+                if j < n {
+                    trips.push((i, j, 1.0 + ((i * 31 + j * 7) % 13) as f64 / 4.0));
+                }
+            }
+        }
+        Csr::from_coo(m, n, &trips).unwrap()
+    }
+
+    #[test]
+    fn sparse_host_operator_path_matches_dense_solver() {
+        // the operator path's SpMM products are bitwise-equal to the dense
+        // GEMMs on the densified twin, and every downstream step is a
+        // deterministic function of its inputs — so the spectra agree
+        // exactly, not just approximately
+        let a = test_csr(40, 30);
+        let d = a.to_dense();
+        let sreq = Request::SvdSparse {
+            a: a.clone(),
+            k: 4,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 3,
+        };
+        let got = run_host(&sreq, Method::NativeRsvd).unwrap();
+        assert_eq!(got.method_used, "native_rsvd");
+        let dense_got = run_host(&req(d.clone(), 4, Method::NativeRsvd, false), Method::NativeRsvd)
+            .unwrap();
+        assert_eq!(got.values, dense_got.values);
+        // explicit exact method on a sparse payload densifies and matches
+        let exact = svd_gesvd::svd(&d);
+        let sreq =
+            Request::SvdSparse { a, k: 4, method: Method::Gesvd, want_vectors: false, seed: 3 };
+        let got = run_host(&sreq, Method::Gesvd).unwrap();
+        assert_eq!(got.method_used, "gesvd");
+        for i in 0..4 {
+            assert!((got.values[i] - exact.s[i]).abs() < 1e-9 * exact.s[0]);
+        }
+    }
+
+    #[test]
+    fn fused_sparse_batch_matches_per_job_execute() {
+        let a = test_csr(40, 30);
+        let route = Route::Host { method: Method::NativeRsvd };
+        for vecs in [false, true] {
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request::SvdSparse {
+                    a: a.clone(),
+                    k: 3 + i % 2,
+                    method: Method::NativeRsvd,
+                    want_vectors: vecs,
+                    seed: i as u64,
+                })
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "vecs={vecs}");
+                assert_eq!(f.u, s.u, "vecs={vecs}");
+                assert_eq!(f.v, s.v, "vecs={vecs}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_never_mixes_dense_and_sparse() {
+        let sp = test_csr(10, 8);
+        let dense = sp.to_dense();
+        let route = Route::Host { method: Method::NativeRsvd };
+        let rs = Request::SvdSparse {
+            a: sp.clone(),
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let rd = req(dense, 2, Method::NativeRsvd, false);
+        // numerically equal payloads, different kernels → never fused
+        assert!(try_execute_fused(&[&rs, &rd], &route).is_none());
+        assert!(try_execute_fused(&[&rd, &rs], &route).is_none());
+        // different sparse content → no fusion; same content → fuses
+        let other = test_csr(10, 7);
+        let ro = Request::SvdSparse {
+            a: other,
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 2,
+        };
+        assert!(try_execute_fused(&[&rs, &ro], &route).is_none());
+        assert!(try_execute_fused(&[&rs, &rs], &route).is_some());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Job model: decomposition requests, results, and solver selection.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Csr, Matrix};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -62,6 +62,16 @@ pub enum Request {
         want_vectors: bool,
         seed: u64,
     },
+    /// k largest singular triplets (or values only) of a CSR sparse `a` —
+    /// served by the operator-backed sketch pipeline (SpMM products, never
+    /// densified) unless an exact host method is explicitly requested.
+    SvdSparse {
+        a: Csr,
+        k: usize,
+        method: Method,
+        want_vectors: bool,
+        seed: u64,
+    },
     /// k principal components of row-sample matrix `x` (centered by the
     /// solver). Returns eigenvalues of the covariance and components in `v`.
     Pca {
@@ -75,30 +85,35 @@ pub enum Request {
 impl Request {
     pub fn k(&self) -> usize {
         match self {
-            Request::Svd { k, .. } | Request::Pca { k, .. } => *k,
+            Request::Svd { k, .. } | Request::SvdSparse { k, .. } | Request::Pca { k, .. } => *k,
         }
     }
 
     pub fn method(&self) -> Method {
         match self {
-            Request::Svd { method, .. } | Request::Pca { method, .. } => *method,
+            Request::Svd { method, .. }
+            | Request::SvdSparse { method, .. }
+            | Request::Pca { method, .. } => *method,
         }
     }
 
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Request::Svd { a, .. } => a.shape(),
+            Request::SvdSparse { a, .. } => a.shape(),
             Request::Pca { x, .. } => x.shape(),
         }
     }
 
-    /// Content fingerprint of the request's matrix
-    /// ([`Matrix::fingerprint`]): one streaming pass over the payload. The
-    /// batcher keys fusable jobs on it so only same-matrix requests are
-    /// ever stacked into one wide sketch.
+    /// Content fingerprint of the request's payload ([`Matrix::fingerprint`]
+    /// / [`Csr::fingerprint`]): one streaming pass. The batcher keys
+    /// fusable jobs on it so only same-operator requests are ever stacked
+    /// into one wide sketch; the CSR fingerprint is salted so a sparse
+    /// matrix never shares a key with its densified twin.
     pub fn fingerprint(&self) -> u64 {
         match self {
             Request::Svd { a, .. } => a.fingerprint(),
+            Request::SvdSparse { a, .. } => a.fingerprint(),
             Request::Pca { x, .. } => x.fingerprint(),
         }
     }
@@ -193,5 +208,25 @@ mod tests {
         assert_eq!(r.k(), 2);
         assert_eq!(r.shape(), (5, 3));
         assert_eq!(r.method(), Method::Auto);
+    }
+
+    #[test]
+    fn sparse_request_accessors() {
+        let a = Csr::from_coo(4, 6, &[(0, 1, 2.0), (3, 5, -1.0)]).unwrap();
+        let fp = a.fingerprint();
+        let dense_fp = a.to_dense().fingerprint();
+        let r = Request::SvdSparse {
+            a,
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: true,
+            seed: 9,
+        };
+        assert_eq!(r.k(), 3);
+        assert_eq!(r.shape(), (4, 6));
+        assert_eq!(r.method(), Method::NativeRsvd);
+        assert_eq!(r.fingerprint(), fp);
+        // the sparse salt keeps dense and sparse twins apart in the batcher
+        assert_ne!(r.fingerprint(), dense_fp);
     }
 }

@@ -47,6 +47,18 @@ impl Default for RouterCfg {
 /// Decide the route for a request against the artifact inventory.
 pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     let method = req.method();
+    // Sparse payloads: no device artifact takes CSR inputs, and densifying
+    // to chase an exact solver defeats the point of the sparse path — under
+    // Auto the operator-backed sketch pipeline always serves them (Tomás et
+    // al.: the randomized pipeline dominates on sparse inputs at any k the
+    // sketch fits). An explicitly requested host method is still honored
+    // (exec densifies for the exact solvers).
+    if let Request::SvdSparse { .. } = req {
+        return match method {
+            Method::Auto | Method::Device => Route::Host { method: Method::NativeRsvd },
+            other => Route::Host { method: other },
+        };
+    }
     if method != Method::Auto && method != Method::Device {
         return Route::Host { method };
     }
@@ -61,6 +73,7 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
 
     let s = (k + cfg.oversample).min(r);
     let bucket = match req {
+        Request::SvdSparse { .. } => unreachable!("sparse requests routed above"),
         Request::Svd { .. } => manifest.pick_bucket(
             ArtifactKind::Rsvd,
             &cfg.impl_name,
@@ -170,6 +183,35 @@ mod tests {
         let req =
             Request::Pca { x: Matrix::zeros(1000, 700), k: 10, method: Method::Auto, seed: 0 };
         assert!(matches!(route(&req, &man, &cfg), Route::Host { .. }));
+    }
+
+    #[test]
+    fn sparse_routes_to_host_never_device() {
+        use crate::linalg::Csr;
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        let a = Csr::from_coo(200, 100, &[(0, 0, 1.0), (199, 99, 2.0)]).unwrap();
+        let req = |method| Request::SvdSparse {
+            a: a.clone(),
+            k: 8,
+            method,
+            want_vectors: false,
+            seed: 0,
+        };
+        // Auto and Device both land on the operator-backed sketch pipeline
+        for m in [Method::Auto, Method::Device] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, Method::NativeRsvd),
+                other => panic!("{other:?}"),
+            }
+        }
+        // explicit host methods are honored (exec densifies where needed)
+        for m in [Method::Gesvd, Method::Lanczos, Method::NativeRsvd] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, m),
+                other => panic!("{other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! execution. Device batches run inline on the dispatcher because the PJRT
 //! engine is pinned to that thread.
 
-use super::batcher::{fuse_key, is_fusable, plan_batches, route_key};
+use super::batcher::{fuse_key, is_fusable, is_fused_key, plan_batches, route_key};
 use super::job::{Job, JobHandle, JobResult, Request};
 use super::metrics::Metrics;
 use super::router::{route, Route, RouterCfg};
@@ -287,7 +287,7 @@ fn dispatch_loop(
         let mut slots: Vec<Option<Job>> = jobs.into_iter().map(Some).collect();
         for batch in batches {
             let route = routes[batch.jobs[0]].clone();
-            let fusable = cfg.fuse && batch.key.starts_with("host:native_rsvd:fp");
+            let fusable = cfg.fuse && is_fused_key(&batch.key);
             let owned: Vec<Job> =
                 batch.jobs.iter().map(|&ji| slots[ji].take().expect("job planned once")).collect();
             let pb = PlannedBatch { jobs: owned, route, fusable };
@@ -586,6 +586,53 @@ mod tests {
             out
         };
         assert_eq!(burst(true), burst(false));
+    }
+
+    #[test]
+    fn sparse_burst_fuses_and_matches_dense_solve() {
+        use crate::linalg::rsvd::{rsvd_values, RsvdOpts};
+        use crate::linalg::Csr;
+        // banded sparse payload; the fused sparse path must be invisible
+        // in results (equal to standalone sparse solves, which in turn
+        // equal the dense solves on the densified twin)
+        let mut trips = Vec::new();
+        for i in 0..80usize {
+            for d in [0usize, 1, 4] {
+                if i + d < 60 {
+                    trips.push((i, i + d, 1.0 + ((i * 13 + d * 5) % 7) as f64));
+                }
+            }
+        }
+        let a = Csr::from_coo(80, 60, &trips).unwrap();
+        let dense = a.to_dense();
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            max_batch: 6,
+            drain_cap: Some(6),
+            batch_window: Duration::from_millis(200),
+            ..Default::default()
+        });
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                coord.submit(Request::SvdSparse {
+                    a: a.clone(),
+                    k: 3 + (i % 2),
+                    method: Method::NativeRsvd,
+                    want_vectors: false,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        let served: Vec<Vec<f64>> =
+            handles.into_iter().map(|h| h.wait().outcome.expect("ok").values).collect();
+        for (i, got) in served.iter().enumerate() {
+            let o = RsvdOpts { seed: i as u64, ..Default::default() };
+            let k = 3 + (i % 2);
+            assert_eq!(got, &rsvd_values(&a, k, &o), "sparse job {i}");
+            assert_eq!(got, &rsvd_values(&dense, k, &o), "dense twin job {i}");
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 6);
+        assert!(snap.fused_jobs >= 2, "sparse fusion engaged ({})", snap.fused_jobs);
     }
 
     #[test]

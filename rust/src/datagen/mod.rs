@@ -5,12 +5,17 @@
 //! * [`faces`] — CelebA substitute: random smooth "face-like" images with a
 //!   natural-image covariance profile (Figure 1).
 //! * [`subspaces`] — planted subspace mixtures for SuMC (Table 1).
+//! * [`sparse`] — CSR workloads for the operator-backed rSVD path: banded
+//!   matrices with closed-form spectra and power-law-degree random
+//!   matrices.
 
 pub mod faces;
+pub mod sparse;
 pub mod spectrum;
 pub mod subspaces;
 
 pub use faces::synthetic_faces;
+pub use sparse::{banded, power_law, tridiag_toeplitz, tridiag_toeplitz_spectrum};
 pub use spectrum::{spectrum_matrix, Decay};
 pub use subspaces::{subspace_mixture, SubspaceDataset};
 

@@ -1,0 +1,145 @@
+//! Sparse workload generators for the operator-backed rSVD path: banded
+//! matrices with analytically known spectra and power-law-degree random
+//! sparse matrices (the web-graph/recommender degree profile the sparse
+//! SpMM literature benchmarks on).
+
+use crate::linalg::Csr;
+use crate::rng::{Philox4x32, RngCore};
+
+/// Symmetric tridiagonal Toeplitz matrix: `diag` on the main diagonal and
+/// `off` on both adjacent diagonals. Its eigenvalues are known in closed
+/// form — λ_j = diag + 2·off·cos(jπ/(n+1)), j = 1..n — so the singular
+/// values are `|λ_j|` sorted descending ([`tridiag_toeplitz_spectrum`]):
+/// a sparse matrix with an *exactly* known spectrum, the sparse analog of
+/// [`super::spectrum_matrix`].
+pub fn tridiag_toeplitz(n: usize, diag: f64, off: f64) -> Csr {
+    let mut trips = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        if i > 0 {
+            trips.push((i, i - 1, off));
+        }
+        trips.push((i, i, diag));
+        if i + 1 < n {
+            trips.push((i, i + 1, off));
+        }
+    }
+    Csr::from_coo(n, n, &trips).expect("tridiagonal construction is always valid")
+}
+
+/// The singular values of [`tridiag_toeplitz`]`(n, diag, off)`, descending.
+pub fn tridiag_toeplitz_spectrum(n: usize, diag: f64, off: f64) -> Vec<f64> {
+    let mut s: Vec<f64> = (1..=n)
+        .map(|j| {
+            let theta = j as f64 * std::f64::consts::PI / (n as f64 + 1.0);
+            (diag + 2.0 * off * theta.cos()).abs()
+        })
+        .collect();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s
+}
+
+/// Random banded m×n matrix: every stored entry sits within `bandwidth`
+/// of the diagonal, values standard-Gaussian-ish from the Philox stream.
+/// Deterministic in the seed.
+pub fn banded(m: usize, n: usize, bandwidth: usize, seed: u64) -> Csr {
+    let mut rng = Philox4x32::new(seed);
+    let mut trips = Vec::new();
+    for i in 0..m {
+        let lo = i.saturating_sub(bandwidth);
+        let hi = (i + bandwidth + 1).min(n);
+        for j in lo..hi {
+            trips.push((i, j, 2.0 * rng.next_f64() - 1.0));
+        }
+    }
+    Csr::from_coo(m, n, &trips).expect("banded construction is always valid")
+}
+
+/// Random m×n sparse matrix with a power-law row-degree profile: row i
+/// stores ~`max_degree / (i+1)^alpha` entries (clamped to ≥ 1 and ≤ n) at
+/// uniformly chosen distinct columns — the heavy-head degree distribution
+/// of link graphs and user-item matrices, which is exactly the shape that
+/// makes naive row-uniform SpMM partitions unbalanced (the nnz-balanced
+/// bands in [`Csr::spmm`] exist for this workload). Deterministic in the
+/// seed.
+pub fn power_law(m: usize, n: usize, max_degree: usize, alpha: f64, seed: u64) -> Csr {
+    assert!(n > 0, "power_law needs at least one column");
+    let mut rng = Philox4x32::new(seed);
+    let mut trips = Vec::new();
+    let mut cols: Vec<usize> = Vec::new();
+    for i in 0..m {
+        let frac = max_degree as f64 / ((i + 1) as f64).powf(alpha);
+        let want = (frac.floor() as usize).clamp(1, n);
+        // sample `want` distinct columns: floyd-ish rejection off a small
+        // scratch list (want ≪ n in every realistic profile; degenerate
+        // want ≈ n still terminates because duplicates get rarer per hit)
+        cols.clear();
+        while cols.len() < want {
+            let c = (rng.next_f64() * n as f64) as usize;
+            let c = c.min(n - 1);
+            if !cols.contains(&c) {
+                cols.push(c);
+            }
+        }
+        for &c in &cols {
+            trips.push((i, c, 2.0 * rng.next_f64() - 1.0));
+        }
+    }
+    Csr::from_coo(m, n, &trips).expect("power-law construction is always valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_gesvd;
+
+    #[test]
+    fn tridiag_spectrum_is_exact() {
+        let n = 24;
+        let a = tridiag_toeplitz(n, 2.0, -1.0);
+        assert_eq!(a.nnz(), 3 * n - 2);
+        let want = tridiag_toeplitz_spectrum(n, 2.0, -1.0);
+        let got = svd_gesvd::svd(&a.to_dense());
+        for i in 0..n {
+            assert!(
+                (got.s[i] - want[i]).abs() < 1e-10,
+                "σ{i}: {} vs {}",
+                got.s[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn banded_respects_bandwidth() {
+        let a = banded(30, 25, 3, 7);
+        let (indptr, indices, _) = a.parts();
+        for i in 0..30 {
+            for p in indptr[i]..indptr[i + 1] {
+                let j = indices[p];
+                assert!(j + 3 >= i && j <= i + 3, "entry ({i},{j}) outside band");
+            }
+        }
+        // deterministic in the seed
+        assert_eq!(banded(30, 25, 3, 7), a);
+        assert_ne!(banded(30, 25, 3, 8), a);
+    }
+
+    #[test]
+    fn power_law_degree_profile() {
+        let a = power_law(100, 400, 64, 1.0, 3);
+        let (indptr, indices, _) = a.parts();
+        // head rows are heavy, tail rows are ~1
+        let deg = |i: usize| indptr[i + 1] - indptr[i];
+        assert_eq!(deg(0), 64);
+        assert!(deg(99) <= 2, "tail degree {}", deg(99));
+        assert!(deg(0) > deg(50), "monotone-ish head→tail");
+        // distinct, in-range, sorted columns per row (CSR invariant held)
+        for i in 0..100 {
+            let cols_i = &indices[indptr[i]..indptr[i + 1]];
+            for w in cols_i.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        assert_eq!(power_law(100, 400, 64, 1.0, 3), a, "deterministic");
+    }
+}

@@ -103,15 +103,25 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Copy of column j.
+    /// Copy of column j — one strided walk over the backing slice instead
+    /// of per-element (i, j) indexing (no repeated offset multiplies).
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        debug_assert!(j < self.cols);
+        if self.rows == 0 {
+            return Vec::new();
+        }
+        self.data[j..].iter().step_by(self.cols).copied().collect()
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
         assert_eq!(v.len(), self.rows);
-        for i in 0..self.rows {
-            self[(i, j)] = v[i];
+        debug_assert!(j < self.cols || self.rows == 0);
+        if self.rows == 0 {
+            return;
+        }
+        let cols = self.cols;
+        for (dst, &x) in self.data[j..].iter_mut().step_by(cols).zip(v) {
+            *dst = x;
         }
     }
 
@@ -163,18 +173,13 @@ impl Matrix {
     /// fingerprint differently, which is exactly right for a key that
     /// promises bitwise-identical results.
     pub fn fingerprint(&self) -> u64 {
-        const PRIME: u64 = 0x100000001b3;
-        let mut h: u64 = 0xcbf29ce484222325;
-        h = (h ^ self.rows as u64).wrapping_mul(PRIME);
-        h = (h ^ self.cols as u64).wrapping_mul(PRIME);
+        let mut f = FnvStream::new();
+        f.word(self.rows as u64);
+        f.word(self.cols as u64);
         for v in &self.data {
-            h = (h ^ v.to_bits()).wrapping_mul(PRIME);
+            f.word(v.to_bits());
         }
-        h ^= h >> 30;
-        h = h.wrapping_mul(0xbf58476d1ce4e5b9);
-        h ^= h >> 27;
-        h = h.wrapping_mul(0x94d049bb133111eb);
-        h ^ (h >> 31)
+        f.finish()
     }
 
     /// Column-wise concatenation `[A₁ | A₂ | …]`; every part must have the
@@ -246,6 +251,42 @@ impl Matrix {
     }
 }
 
+/// Streaming FNV-1a over 64-bit words, finished with a splitmix64-style
+/// avalanche — the single hash behind every fingerprint in the crate
+/// ([`Matrix::fingerprint`], `Csr::fingerprint`, the `op` wrapper
+/// combinator). The batcher's collision-safety story assumes all
+/// fingerprints share these exact constants; keep them here only.
+pub(crate) struct FnvStream(u64);
+
+impl Default for FnvStream {
+    fn default() -> Self {
+        FnvStream::new()
+    }
+}
+
+impl FnvStream {
+    const PRIME: u64 = 0x100000001b3;
+
+    /// Start at the FNV-1a offset basis.
+    pub(crate) fn new() -> FnvStream {
+        FnvStream(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub(crate) fn word(&mut self, w: u64) {
+        self.0 = (self.0 ^ w).wrapping_mul(Self::PRIME);
+    }
+
+    pub(crate) fn finish(self) -> u64 {
+        let mut h = self.0;
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d049bb133111eb);
+        h ^ (h >> 31)
+    }
+}
+
 impl Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline]
@@ -311,6 +352,49 @@ mod tests {
         assert_eq!(t.shape(), (53, 37));
         assert_eq!(t.transpose(), m);
         assert_eq!(m[(5, 7)], t[(7, 5)]);
+    }
+
+    #[test]
+    fn blocked_transpose_is_bitwise_naive_on_odd_shapes() {
+        // the 32×32 tiling is a pure reordering — it must reproduce the
+        // naive element-at-a-time transpose exactly, including on shapes
+        // that straddle tile boundaries and degenerate slivers
+        let naive = |m: &Matrix| {
+            let mut t = Matrix::zeros(m.cols(), m.rows());
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    t[(j, i)] = m[(i, j)];
+                }
+            }
+            t
+        };
+        let shapes =
+            [(1usize, 1usize), (1, 97), (97, 1), (31, 33), (32, 32), (33, 31), (65, 127), (40, 96)];
+        for &(r, c) in &shapes {
+            let m = Matrix::gaussian(r, c, (r * 1000 + c) as u64);
+            let t = m.transpose();
+            assert_eq!(t.as_slice(), naive(&m).as_slice(), "shape {r}x{c}");
+        }
+        assert_eq!(Matrix::zeros(0, 5).transpose().shape(), (5, 0));
+    }
+
+    #[test]
+    fn col_walks_match_indexing() {
+        let m = Matrix::gaussian(23, 17, 4);
+        for j in [0usize, 1, 16] {
+            let want: Vec<f64> = (0..23).map(|i| m[(i, j)]).collect();
+            assert_eq!(m.col(j), want, "col {j}");
+        }
+        let mut w = Matrix::zeros(23, 17);
+        let v: Vec<f64> = (0..23).map(|i| i as f64).collect();
+        w.set_col(3, &v);
+        for i in 0..23 {
+            assert_eq!(w[(i, 3)], i as f64);
+            assert_eq!(w[(i, 4)], 0.0);
+        }
+        // zero-row edge cases
+        assert!(Matrix::zeros(0, 4).col(2).is_empty());
+        Matrix::zeros(0, 4).set_col(2, &[]);
     }
 
     #[test]

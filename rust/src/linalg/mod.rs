@@ -24,9 +24,11 @@ pub mod eigen;
 pub mod gemm;
 pub mod lanczos;
 pub mod matrix;
+pub mod op;
 pub mod power;
 pub mod qr;
 pub mod rsvd;
+pub mod sparse;
 pub mod svd_gesvd;
 pub mod svd_jacobi;
 pub mod threading;
@@ -34,5 +36,7 @@ pub mod tridiag;
 
 pub use cholesky::LinalgError;
 pub use matrix::Matrix;
+pub use op::LinOp;
+pub use sparse::Csr;
 pub use svd_gesvd::Svd;
 pub use threading::{with_threads, with_threads_opt, Parallelism};

@@ -1,0 +1,253 @@
+//! `LinOp` — the abstract matrix the sketch pipeline actually needs.
+//!
+//! Algorithm 1 never reads individual entries of A: every flop it spends on
+//! A is a multi-column product (`A·Ω`, the power-iteration products, and
+//! the projection `B = Qᵀ·A`). Abstracting exactly those three products
+//! lets one range finder serve dense matrices, CSR sparse matrices
+//! ([`super::sparse::Csr`]), and composed/scaled operators without ever
+//! densifying — the workload Tomás et al. (sparse SpMM) and Lu et al.
+//! (block out-of-core) show the randomized pipeline dominates on.
+//!
+//! **Bitwise-frozen dense specialization:** `impl LinOp for Matrix`
+//! delegates to the exact BLAS-3 entry points the pre-trait pipeline
+//! called (`matmul`, `matmul_tn` — including [`LinOp::project`], which
+//! overrides the generic `apply_t + transpose` default with the historical
+//! `matmul_tn(q, a)` kernel). The generic [`super::rsvd::rsvd_batch`] on a
+//! dense `Matrix` is therefore the *same computation*, not an equivalent
+//! one — the PR-2 fused-batch bitwise contract survives the refactor by
+//! construction. `tests/sparse_rsvd.rs` pins this.
+
+use super::gemm::{matmul, matmul_tn};
+use super::Matrix;
+
+/// An m×n linear operator exposed through multi-column products — the only
+/// access pattern the randomized range finder needs.
+///
+/// Implementations must be deterministic and thread-count-invariant: for a
+/// fixed operand, `apply`/`apply_t`/`project` return bitwise-identical
+/// results for any ambient [`super::threading`] configuration (every
+/// backend here partitions *output* elements and keeps per-element
+/// reduction order fixed, like the dense GEMM).
+pub trait LinOp {
+    /// (rows, cols) of the operator.
+    fn shape(&self) -> (usize, usize);
+
+    /// Y = A·X for a dense block X (cols(A) × p → rows(A) × p).
+    fn apply(&self, x: &Matrix) -> Matrix;
+
+    /// Z = Aᵀ·X for a dense block X (rows(A) × p → cols(A) × p).
+    fn apply_t(&self, x: &Matrix) -> Matrix;
+
+    /// Content fingerprint with [`Matrix::fingerprint`] semantics: one
+    /// streaming pass, bit patterns not values, shape mixed in. The
+    /// coordinator's batcher keys fused batches on it, so two operators
+    /// may share a fingerprint only if their products are bitwise
+    /// interchangeable. Distinct operator *kinds* (dense vs CSR vs scaled)
+    /// must salt the hash so a dense matrix and its sparse twin never
+    /// collide into one fused batch.
+    fn fingerprint(&self) -> u64;
+
+    /// B = Qᵀ·A (p × cols(A)) for an orthonormal block Q. Default:
+    /// `apply_t(q)` transposed. Backends with a native Qᵀ·A kernel
+    /// override this — the dense impl must, to stay bitwise-frozen.
+    fn project(&self, q: &Matrix) -> Matrix {
+        self.apply_t(q).transpose()
+    }
+
+    #[inline]
+    fn rows(&self) -> usize {
+        self.shape().0
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.shape().1
+    }
+}
+
+impl LinOp for Matrix {
+    fn shape(&self) -> (usize, usize) {
+        Matrix::shape(self)
+    }
+
+    fn apply(&self, x: &Matrix) -> Matrix {
+        matmul(self, x)
+    }
+
+    fn apply_t(&self, x: &Matrix) -> Matrix {
+        matmul_tn(self, x)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        Matrix::fingerprint(self)
+    }
+
+    /// The historical dense kernel: one wide `matmul_tn(q, a)`. (The
+    /// default `apply_t + transpose` is mathematically identical but goes
+    /// through a different code path; overriding keeps the dense pipeline
+    /// byte-for-byte the pre-trait computation.)
+    fn project(&self, q: &Matrix) -> Matrix {
+        matmul_tn(q, self)
+    }
+}
+
+/// α·A as an operator — no scaled copy of A is ever materialized. Scaling
+/// is applied to the (much smaller) product block.
+pub struct Scaled<'a, A: LinOp + ?Sized> {
+    pub alpha: f64,
+    pub inner: &'a A,
+}
+
+impl<'a, A: LinOp + ?Sized> Scaled<'a, A> {
+    pub fn new(alpha: f64, inner: &'a A) -> Self {
+        Scaled { alpha, inner }
+    }
+}
+
+impl<A: LinOp + ?Sized> LinOp for Scaled<'_, A> {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+
+    fn apply(&self, x: &Matrix) -> Matrix {
+        let mut y = self.inner.apply(x);
+        y.scale(self.alpha);
+        y
+    }
+
+    fn apply_t(&self, x: &Matrix) -> Matrix {
+        let mut z = self.inner.apply_t(x);
+        z.scale(self.alpha);
+        z
+    }
+
+    fn fingerprint(&self) -> u64 {
+        mix(0x5CA1ED, &[self.alpha.to_bits(), self.inner.fingerprint()])
+    }
+}
+
+/// A·B as one operator (shape rows(A) × cols(B)) — the product is never
+/// formed; each sketch block flows through B then A. This is how a
+/// normalized or preconditioned input (D·A, A·E, …) rides the same range
+/// finder without a dense intermediate.
+pub struct Composed<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> {
+    pub left: &'a A,
+    pub right: &'a B,
+}
+
+impl<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> Composed<'a, A, B> {
+    pub fn new(left: &'a A, right: &'a B) -> Self {
+        assert_eq!(
+            left.cols(),
+            right.rows(),
+            "compose inner dims {} vs {}",
+            left.cols(),
+            right.rows()
+        );
+        Composed { left, right }
+    }
+}
+
+impl<A: LinOp + ?Sized, B: LinOp + ?Sized> LinOp for Composed<'_, A, B> {
+    fn shape(&self) -> (usize, usize) {
+        (self.left.rows(), self.right.cols())
+    }
+
+    fn apply(&self, x: &Matrix) -> Matrix {
+        self.left.apply(&self.right.apply(x))
+    }
+
+    fn apply_t(&self, x: &Matrix) -> Matrix {
+        self.right.apply_t(&self.left.apply_t(x))
+    }
+
+    fn fingerprint(&self) -> u64 {
+        mix(0xC0_3905ED, &[self.left.fingerprint(), self.right.fingerprint()])
+    }
+}
+
+/// FNV-1a over a salt and a word list ([`super::matrix::FnvStream`], the
+/// crate's single fingerprint hash) — the shared combinator for operator
+/// wrappers. The salt keys the operator *kind*, so wrappers never collide
+/// with their inner operand's own fingerprint.
+pub(crate) fn mix(salt: u64, words: &[u64]) -> u64 {
+    let mut f = super::matrix::FnvStream::new();
+    f.word(salt);
+    for &w in words {
+        f.word(w);
+    }
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_linop_is_the_plain_blas_calls() {
+        let a = Matrix::gaussian(13, 9, 1);
+        let x = Matrix::gaussian(9, 4, 2);
+        let y = Matrix::gaussian(13, 4, 3);
+        let op: &dyn LinOp = &a;
+        assert_eq!(op.shape(), (13, 9));
+        assert_eq!(op.apply(&x), matmul(&a, &x));
+        assert_eq!(op.apply_t(&y), matmul_tn(&a, &y));
+        assert_eq!(op.project(&y), matmul_tn(&y, &a));
+        assert_eq!(op.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn default_project_matches_dense_override_numerically() {
+        // the default (apply_t + transpose) and the dense override are the
+        // same sum in a different walk order — equal to fp round-off
+        let a = Matrix::gaussian(20, 15, 4);
+        let q = Matrix::gaussian(20, 6, 5);
+        let via_default = a.apply_t(&q).transpose();
+        let via_override = LinOp::project(&a, &q);
+        assert!(via_default.max_diff(&via_override) < 1e-12);
+    }
+
+    #[test]
+    fn scaled_operator() {
+        let a = Matrix::gaussian(10, 7, 6);
+        let x = Matrix::gaussian(7, 3, 7);
+        let s = Scaled::new(-2.5, &a);
+        assert_eq!(s.shape(), (10, 7));
+        let mut want = matmul(&a, &x);
+        want.scale(-2.5);
+        assert_eq!(s.apply(&x), want);
+        let y = Matrix::gaussian(10, 3, 8);
+        let mut want_t = matmul_tn(&a, &y);
+        want_t.scale(-2.5);
+        assert_eq!(s.apply_t(&y), want_t);
+        // fingerprint depends on alpha and inner content
+        assert_ne!(s.fingerprint(), a.fingerprint());
+        assert_ne!(s.fingerprint(), Scaled::new(2.5, &a).fingerprint());
+        assert_eq!(s.fingerprint(), Scaled::new(-2.5, &a).fingerprint());
+    }
+
+    #[test]
+    fn composed_operator() {
+        let a = Matrix::gaussian(8, 5, 9);
+        let b = Matrix::gaussian(5, 6, 10);
+        let c = Composed::new(&a, &b);
+        assert_eq!(c.shape(), (8, 6));
+        let x = Matrix::gaussian(6, 2, 11);
+        assert!(c.apply(&x).max_diff(&matmul(&matmul(&a, &b), &x)) < 1e-12);
+        let y = Matrix::gaussian(8, 2, 12);
+        assert!(c.apply_t(&y).max_diff(&matmul_tn(&matmul(&a, &b), &y)) < 1e-12);
+        // order matters in the fingerprint: BᵀAᵀ hashes differently from AB
+        let bt = b.transpose();
+        let at = a.transpose();
+        let d = Composed::new(&bt, &at);
+        assert_ne!(c.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "compose inner dims")]
+    fn composed_checks_dims() {
+        let a = Matrix::gaussian(4, 3, 1);
+        let b = Matrix::gaussian(4, 3, 2);
+        let _ = Composed::new(&a, &b);
+    }
+}

@@ -11,6 +11,7 @@
 //! two produce the same spectrum on the same (A, Ω).
 
 use super::gemm::{matmul, matmul_nt, matmul_tn};
+use super::op::LinOp;
 use super::qr::orthonormalize;
 use super::svd_gesvd::{svd, Svd};
 use super::threading::with_threads_opt;
@@ -38,13 +39,15 @@ impl Default for RsvdOpts {
 }
 
 /// Randomized k-SVD of A (Algorithm 1). Returns a truncated `Svd` with
-/// exactly k triplets.
+/// exactly k triplets. `A` is any [`LinOp`] — a dense `Matrix`, a CSR
+/// sparse matrix, or a composed/scaled operator; the pipeline only ever
+/// touches it through block products.
 ///
 /// Implemented as a single-job [`rsvd_batch`] — one shared range-finder
 /// implementation means the fused coordinator path and the standalone call
 /// cannot drift apart (the bitwise-identity contract is structural, not
 /// just test-enforced).
-pub fn rsvd(a: &Matrix, k: usize, opts: &RsvdOpts) -> Svd {
+pub fn rsvd<A: LinOp + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Svd {
     let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
     rsvd_batch(a, &[SketchJob::from_opts(k, opts)], &batch).pop().expect("one job in, one out")
 }
@@ -52,7 +55,7 @@ pub fn rsvd(a: &Matrix, k: usize, opts: &RsvdOpts) -> Svd {
 /// k largest singular values only — stops after step 5 (the variant the
 /// spectrum experiments use; paper: "we needed only the matrix Σ").
 /// Single-job [`rsvd_values_batch`], for the same reason as [`rsvd`].
-pub fn rsvd_values(a: &Matrix, k: usize, opts: &RsvdOpts) -> Vec<f64> {
+pub fn rsvd_values<A: LinOp + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Vec<f64> {
     let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
     rsvd_values_batch(a, &[SketchJob::from_opts(k, opts)], &batch)
         .pop()
@@ -105,7 +108,13 @@ impl Default for BatchOpts {
 /// element is independent of operand width, so every job's result is
 /// **bitwise identical** to a standalone [`rsvd`] call with the same
 /// (k, oversample, seed, power_iters).
-pub fn rsvd_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Svd> {
+///
+/// Generic over [`LinOp`]: a dense `Matrix` runs the exact historical
+/// BLAS-3 calls (`impl LinOp for Matrix` delegates to `matmul` /
+/// `matmul_tn`, see `op.rs`), so the dense specialization is bitwise
+/// identical to the pre-trait pipeline; a [`super::sparse::Csr`] runs
+/// SpMM/SpMMᵀ and never densifies.
+pub fn rsvd_batch<A: LinOp + ?Sized>(a: &A, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Svd> {
     with_threads_opt(opts.threads, || {
         let (q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
         layout
@@ -128,7 +137,11 @@ pub fn rsvd_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Svd> 
 /// per-job Gram matrices `Gⱼ = Bⱼ·Bⱼᵀ` are contracted from the stacked B
 /// panel rows and finished with the same small eigensolve, bitwise
 /// identical to standalone calls.
-pub fn rsvd_values_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Vec<f64>> {
+pub fn rsvd_values_batch<A: LinOp + ?Sized>(
+    a: &A,
+    jobs: &[SketchJob],
+    opts: &BatchOpts,
+) -> Vec<Vec<f64>> {
     with_threads_opt(opts.threads, || {
         let (_q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
         layout
@@ -148,8 +161,12 @@ pub fn rsvd_values_batch(a: &Matrix, jobs: &[SketchJob], opts: &BatchOpts) -> Ve
 /// S = Σsⱼ), the stacked projection B = Qᵀ·A (S×n), and the per-job layout
 /// (k, column/row offset range) — columns of Q and rows of B in `[c0, c1)`
 /// belong to job j. With a single job this *is* the standalone pipeline.
-fn batch_range_finder(
-    a: &Matrix,
+///
+/// The operator is touched only through [`LinOp::apply`],
+/// [`LinOp::apply_t`], and [`LinOp::project`] — everything else (sketch
+/// generation, per-panel orthonormalization) is dense block work.
+fn batch_range_finder<A: LinOp + ?Sized>(
+    a: &A,
     jobs: &[SketchJob],
     power_iters: usize,
 ) -> (Matrix, Matrix, Vec<(usize, usize, usize)>) {
@@ -170,20 +187,21 @@ fn batch_range_finder(
     let omega = Matrix::hstack(&omegas);
 
     // Step 2: Y = (A·Aᵀ)^q · A·Ω, re-orthonormalizing between applications
-    // for numerical stability (standard Halko et al. practice) — wide GEMMs
-    // over the stacked sketch, per-panel orthonormalization.
-    let mut y = matmul(a, &omega);
+    // for numerical stability (standard Halko et al. practice) — wide
+    // block products over the stacked sketch (GEMM when A is dense, SpMM
+    // when sparse), per-panel orthonormalization.
+    let mut y = a.apply(&omega);
     for _ in 0..power_iters {
         y = orth_panels(&y, &layout);
-        let z = orth_panels(&matmul_tn(a, &y), &layout);
-        y = matmul(a, &z);
+        let z = orth_panels(&a.apply_t(&y), &layout);
+        y = a.apply(&z);
     }
 
     // Step 3: Q = orth(Y) — CholeskyQR2 (BLAS-3), Householder fallback.
     let q = orth_panels(&y, &layout);
 
-    // Step 4: B = Qᵀ·A, one wide GEMM; job j owns rows [c0, c1).
-    let b = matmul_tn(&q, a);
+    // Step 4: B = Qᵀ·A, one wide product; job j owns rows [c0, c1).
+    let b = a.project(&q);
     (q, b, layout)
 }
 

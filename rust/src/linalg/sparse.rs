@@ -1,0 +1,504 @@
+//! CSR sparse matrices and the parallel SpMM kernels behind the sparse
+//! [`LinOp`](super::op::LinOp) backend.
+//!
+//! The paper's reformulation funnels all range-finder flops into products
+//! with a thin dense block, which means a sparse A only ever needs
+//! SpMM (`A·X`) and SpMMᵀ (`Aᵀ·X`) — never random entry access. Both
+//! kernels here parallelize over *output* row bands via the existing
+//! [`super::threading`] machinery and keep the per-element reduction order
+//! identical to the serial sweep, so results are **bitwise invariant in
+//! the thread count**, exactly like the dense GEMM (DESIGN.md §GEMM).
+//!
+//! Because stored entries are column-sorted within each row and the dense
+//! GEMM accumulates the k-reduction in ascending order while a zero term
+//! contributes an exact `+0.0`, SpMM on finite data matches
+//! `matmul(to_dense(), x)` to 0 ULP — `tests/sparse_rsvd.rs` pins this.
+
+use super::op::LinOp;
+use super::threading::{scoped_bands, Parallelism};
+use super::Matrix;
+
+/// Compressed sparse row matrix of `f64`.
+///
+/// Invariants (enforced by [`Csr::new`]):
+/// * `indptr.len() == rows + 1`, `indptr[0] == 0`,
+///   `indptr[rows] == indices.len() == data.len()`, non-decreasing;
+/// * within each row, column indices are strictly increasing and `< cols`
+///   (sorted, no duplicates — the bitwise SpMM contract needs a fixed,
+///   canonical term order per output element).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Csr {
+    /// Validated construction from raw CSR arrays.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Result<Csr, String> {
+        if indptr.len() != rows + 1 {
+            return Err(format!("indptr len {} != rows+1 {}", indptr.len(), rows + 1));
+        }
+        if indptr[0] != 0 {
+            return Err(format!("indptr[0] = {} != 0", indptr[0]));
+        }
+        if *indptr.last().unwrap() != indices.len() || indices.len() != data.len() {
+            return Err(format!(
+                "nnz mismatch: indptr end {}, {} indices, {} values",
+                indptr.last().unwrap(),
+                indices.len(),
+                data.len()
+            ));
+        }
+        // full monotonicity pass BEFORE any slicing: with the nnz equality
+        // above it bounds every indptr[r] ≤ indices.len(), so a hostile
+        // indptr (e.g. [0, 5, 2] with 2 stored entries) errors instead of
+        // panicking on an out-of-range slice below
+        for r in 0..rows {
+            if indptr[r] > indptr[r + 1] {
+                return Err(format!("indptr decreasing at row {r}"));
+            }
+        }
+        for r in 0..rows {
+            let cols_r = &indices[indptr[r]..indptr[r + 1]];
+            for w in cols_r.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "row {r}: column indices not strictly increasing ({} then {})",
+                        w[0], w[1]
+                    ));
+                }
+            }
+            if let Some(&last) = cols_r.last() {
+                if last >= cols {
+                    return Err(format!("row {r}: column {last} out of range (cols = {cols})"));
+                }
+            }
+        }
+        Ok(Csr { rows, cols, indptr, indices, data })
+    }
+
+    /// Build from COO triplets `(row, col, value)` in any order; duplicate
+    /// coordinates are summed (in triplet order, so the result is a pure
+    /// function of the input sequence). Entries that sum to exactly `0.0`
+    /// are kept — dropping them would change the stored-pattern
+    /// fingerprint, and explicit zeros are legal CSR.
+    pub fn from_coo(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Csr, String> {
+        for &(r, c, _) in triplets {
+            if r >= rows || c >= cols {
+                return Err(format!("triplet ({r},{c}) outside {rows}x{cols}"));
+            }
+        }
+        // stable sort by (row, col): equal coordinates stay in triplet
+        // order, so duplicate accumulation below is order-deterministic
+        let mut order: Vec<usize> = (0..triplets.len()).collect();
+        order.sort_by_key(|&t| (triplets[t].0, triplets[t].1));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut data: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last_rc = None;
+        for &t in &order {
+            let (r, c, v) = triplets[t];
+            if last_rc == Some((r, c)) {
+                // same (row, col) as the previous kept entry → accumulate
+                let at = data.len() - 1;
+                data[at] += v;
+            } else {
+                indices.push(c);
+                data.push(v);
+                indptr[r + 1] += 1;
+                last_rc = Some((r, c));
+            }
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr::new(rows, cols, indptr, indices, data)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Stored entry count (explicit zeros included).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Raw CSR views, in (indptr, indices, data) order.
+    pub fn parts(&self) -> (&[usize], &[usize], &[f64]) {
+        (&self.indptr, &self.indices, &self.data)
+    }
+
+    /// Dense equivalent — tests and the exact-solver fallback only; the
+    /// sketch pipeline itself never densifies.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = m.row_mut(r);
+            for p in self.indptr[r]..self.indptr[r + 1] {
+                row[self.indices[p]] = self.data[p];
+            }
+        }
+        m
+    }
+
+    /// Content fingerprint with [`Matrix::fingerprint`] semantics (bit
+    /// patterns, shape included), salted so a CSR matrix never collides
+    /// with the dense fingerprint of its densified twin — the batcher must
+    /// not fuse a sparse job with a dense one even when the operators are
+    /// numerically equal, because their product kernels differ.
+    pub fn fingerprint(&self) -> u64 {
+        let mut f = super::matrix::FnvStream::new();
+        f.word(0x5BA_25E); // sparse-kind salt: never collides with dense
+        f.word(self.rows as u64);
+        f.word(self.cols as u64);
+        for &p in &self.indptr {
+            f.word(p as u64);
+        }
+        for &c in &self.indices {
+            f.word(c as u64);
+        }
+        for v in &self.data {
+            f.word(v.to_bits());
+        }
+        f.finish()
+    }
+
+    /// C = A·X (SpMM): dense output rows(A) × p. Each output row r is the
+    /// stored-order sum `Σ_p data[p] · X[indices[p], :]` — unit stride on
+    /// X rows and C rows. The team splits output rows into nnz-balanced
+    /// contiguous bands; per-element term order is the stored (sorted)
+    /// order regardless of the partition.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows(), "spmm inner dims {} vs {}", self.cols, x.rows());
+        let p = x.cols();
+        let mut c = Matrix::zeros(self.rows, p);
+        if self.rows == 0 || p == 0 || self.nnz() == 0 {
+            return c;
+        }
+        let flops = 2.0 * self.nnz() as f64 * p as f64;
+        let team = Parallelism::current().team_for_flops(flops);
+        let chunks =
+            if team > 1 { partition_rows_by_nnz(&self.indptr, team) } else { Vec::new() };
+
+        let rows_kernel = |r0: usize, r1: usize, band: &mut [f64]| {
+            for r in r0..r1 {
+                let crow = &mut band[(r - r0) * p..(r - r0) * p + p];
+                for q in self.indptr[r]..self.indptr[r + 1] {
+                    let v = self.data[q];
+                    let xrow = x.row(self.indices[q]);
+                    for (cv, xv) in crow.iter_mut().zip(xrow) {
+                        *cv += v * xv;
+                    }
+                }
+            }
+        };
+
+        if chunks.len() <= 1 {
+            rows_kernel(0, self.rows, c.as_mut_slice());
+            return c;
+        }
+        scoped_bands(c.as_mut_slice(), &chunks, p, rows_kernel);
+        c
+    }
+
+    /// C = Aᵀ·X (SpMMᵀ): dense output cols(A) × p, without materializing
+    /// a CSC twin. Mirrors the dense [`super::gemm::matmul_tn`] schedule:
+    /// the team splits the *output* rows (= columns of A) into contiguous
+    /// bands; every worker walks the rows in storage order and binary-
+    /// searches each row's sorted column list for its band's contiguous
+    /// subrange (visiting only owned entries — no per-entry filtering), so
+    /// the per-element term order (rows ascending, stored order within a
+    /// row) is the serial order for any team size.
+    pub fn spmm_t(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.rows, x.rows(), "spmm_t row dims {} vs {}", self.rows, x.rows());
+        let p = x.cols();
+        let mut c = Matrix::zeros(self.cols, p);
+        if self.cols == 0 || p == 0 || self.nnz() == 0 {
+            return c;
+        }
+        let flops = 2.0 * self.nnz() as f64 * p as f64;
+        let team = Parallelism::current().team_for_flops(flops);
+        let chunks = if team > 1 {
+            super::threading::partition(self.cols, team, 1)
+        } else {
+            Vec::new()
+        };
+
+        let cols_kernel = |j0: usize, j1: usize, band: &mut [f64]| {
+            for r in 0..self.rows {
+                // in-row columns are strictly increasing, so the band's
+                // entries form the contiguous subrange [lo+a, lo+b) —
+                // binary search instead of filtering all nnz per worker
+                // (same entries, same order: the bitwise contract holds)
+                let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+                let row_cols = &self.indices[lo..hi];
+                let a = lo + row_cols.partition_point(|&c| c < j0);
+                let b = lo + row_cols.partition_point(|&c| c < j1);
+                if a == b {
+                    continue;
+                }
+                let xrow = x.row(r);
+                for q in a..b {
+                    let j = self.indices[q];
+                    let v = self.data[q];
+                    let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
+                    for (cv, xv) in crow.iter_mut().zip(xrow) {
+                        *cv += v * xv;
+                    }
+                }
+            }
+        };
+
+        if chunks.len() <= 1 {
+            cols_kernel(0, self.cols, c.as_mut_slice());
+            return c;
+        }
+        scoped_bands(c.as_mut_slice(), &chunks, p, cols_kernel);
+        c
+    }
+}
+
+impl LinOp for Csr {
+    fn shape(&self) -> (usize, usize) {
+        Csr::shape(self)
+    }
+
+    fn apply(&self, x: &Matrix) -> Matrix {
+        self.spmm(x)
+    }
+
+    fn apply_t(&self, x: &Matrix) -> Matrix {
+        self.spmm_t(x)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        Csr::fingerprint(self)
+    }
+    // project() keeps the default (spmm_t + blocked transpose): CSR has no
+    // cheaper native Qᵀ·A than Aᵀ·Q, and no frozen-bitwise history to
+    // preserve.
+}
+
+/// Split output rows [0, nrows) into ≤ `teams` contiguous bands with
+/// ~equal stored-entry counts, using the CSR `indptr` as the exact prefix
+/// work sum. A plain row split would hand a power-law-degree matrix's
+/// heavy head to one thread. Boundaries never produce an empty band; like
+/// every partition here, they change scheduling only, never results.
+fn partition_rows_by_nnz(indptr: &[usize], teams: usize) -> Vec<(usize, usize)> {
+    let nrows = indptr.len() - 1;
+    if nrows == 0 {
+        return Vec::new();
+    }
+    let teams = teams.max(1).min(nrows);
+    let total = indptr[nrows];
+    let mut out = Vec::with_capacity(teams);
+    let mut start = 0usize;
+    for t in 0..teams {
+        if start >= nrows {
+            break;
+        }
+        // target prefix for the end of band t (ceil-ish split of nnz)
+        let target = (total as u128 * (t as u128 + 1) / teams as u128) as usize;
+        // smallest end > start with indptr[end] >= target, capped so the
+        // remaining teams can take ≥ 1 row each
+        let cap = nrows - (teams - 1 - t);
+        let mut end = start + 1;
+        while end < cap && indptr[end] < target {
+            end += 1;
+        }
+        if t + 1 == teams {
+            end = nrows;
+        }
+        out.push((start, end));
+        start = end;
+    }
+    if let Some(last) = out.last_mut() {
+        last.1 = nrows;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::linalg::threading::{available_threads, with_threads};
+    use crate::rng::RngCore;
+
+    /// ~`density` random sparse matrix via the Philox stream (deterministic
+    /// in the seed) — test-local; the workload generators live in datagen.
+    fn random_csr(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = crate::rng::Philox4x32::new(seed);
+        let mut trips = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.next_f64() < density {
+                    trips.push((r, c, 2.0 * rng.next_f64() - 1.0));
+                }
+            }
+        }
+        Csr::from_coo(rows, cols, &trips).unwrap()
+    }
+
+    #[test]
+    fn new_validates() {
+        // 2x3: [[1, 0, 2], [0, 3, 0]]
+        let ok = Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(ok.nnz(), 3);
+        assert_eq!(ok.to_dense()[(0, 2)], 2.0);
+        assert_eq!(ok.to_dense()[(1, 1)], 3.0);
+        // bad indptr length
+        assert!(Csr::new(2, 3, vec![0, 2], vec![0, 2], vec![1.0, 2.0]).is_err());
+        // decreasing indptr
+        assert!(Csr::new(2, 3, vec![0, 2, 1], vec![0, 2], vec![1.0, 2.0]).is_err());
+        // hostile indptr whose early rows point past nnz must Err (not
+        // panic): the decrease is only visible at row 1, but row 0's
+        // range [0, 5) already exceeds the 2 stored entries
+        assert!(Csr::new(2, 3, vec![0, 5, 2], vec![0, 2], vec![1.0, 2.0]).is_err());
+        // unsorted columns within a row
+        assert!(Csr::new(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]).is_err());
+        // duplicate column within a row
+        assert!(Csr::new(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err());
+        // column out of range
+        assert!(Csr::new(1, 3, vec![0, 1], vec![3], vec![1.0]).is_err());
+        // nnz mismatch
+        assert!(Csr::new(1, 3, vec![0, 2], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn from_coo_sorts_and_sums_duplicates() {
+        let c = Csr::from_coo(
+            3,
+            4,
+            &[(2, 1, 5.0), (0, 3, 1.0), (0, 0, 2.0), (2, 1, -2.0), (1, 2, 4.0)],
+        )
+        .unwrap();
+        let d = c.to_dense();
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(0, 3)], 1.0);
+        assert_eq!(d[(1, 2)], 4.0);
+        assert_eq!(d[(2, 1)], 3.0, "duplicates summed");
+        assert_eq!(c.nnz(), 4);
+        // out-of-range triplet rejected
+        assert!(Csr::from_coo(2, 2, &[(2, 0, 1.0)]).is_err());
+        // empty is legal
+        let e = Csr::from_coo(2, 2, &[]).unwrap();
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.spmm(&Matrix::eye(2)), Matrix::zeros(2, 2));
+    }
+
+    #[test]
+    fn spmm_matches_dense_bitwise() {
+        for &(m, n, p, dens) in
+            &[(1usize, 1usize, 1usize, 1.0), (7, 5, 3, 0.4), (40, 30, 8, 0.1), (23, 57, 5, 0.05)]
+        {
+            let a = random_csr(m, n, dens, (m * n) as u64);
+            let d = a.to_dense();
+            let x = Matrix::gaussian(n, p, 3);
+            assert_eq!(a.spmm(&x), matmul(&d, &x), "spmm {m}x{n}x{p}");
+            let y = Matrix::gaussian(m, p, 4);
+            assert_eq!(a.spmm_t(&y), matmul_tn(&d, &y), "spmm_t {m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn spmm_parallel_bitwise_matches_serial() {
+        // sized so team_for_flops grants ≥ 4 workers: nnz ≈ 0.1·800·600 =
+        // 48k, ×2×p(200) ≈ 19e6 flops ≈ 4.8× PAR_FLOP_THRESHOLD
+        let a = random_csr(800, 600, 0.1, 9);
+        let x = Matrix::gaussian(600, 200, 5);
+        let y = Matrix::gaussian(800, 200, 6);
+        let s = with_threads(1, || a.spmm(&x));
+        let st = with_threads(1, || a.spmm_t(&y));
+        for t in [2, 3, available_threads()] {
+            assert_eq!(s, with_threads(t, || a.spmm(&x)), "spmm t={t}");
+            assert_eq!(st, with_threads(t, || a.spmm_t(&y)), "spmm_t t={t}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        // row 1 has no entries; matrix with zero stored entries
+        let a = Csr::new(3, 3, vec![0, 1, 1, 2], vec![0, 2], vec![1.0, -1.0]).unwrap();
+        let x = Matrix::gaussian(3, 2, 7);
+        assert_eq!(a.spmm(&x), matmul(&a.to_dense(), &x));
+        let z = Csr::from_coo(4, 5, &[]).unwrap();
+        assert_eq!(z.spmm(&Matrix::gaussian(5, 3, 8)), Matrix::zeros(4, 3));
+        assert_eq!(z.spmm_t(&Matrix::gaussian(4, 3, 9)), Matrix::zeros(5, 3));
+    }
+
+    #[test]
+    fn fingerprint_semantics() {
+        let a = random_csr(9, 7, 0.3, 1);
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+        // content change
+        let mut b = a.clone();
+        b.data[0] += 1.0;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // sparse never collides with its dense twin
+        assert_ne!(a.fingerprint(), a.to_dense().fingerprint());
+        // pattern-only change (explicit zero) still changes the key
+        let with_zero = Csr::from_coo(2, 2, &[(0, 0, 1.0), (1, 1, 0.0)]).unwrap();
+        let without = Csr::from_coo(2, 2, &[(0, 0, 1.0)]).unwrap();
+        assert_ne!(with_zero.fingerprint(), without.fingerprint());
+    }
+
+    #[test]
+    fn nnz_partition_covers_and_balances() {
+        // heavy-head indptr: first row owns half the entries
+        let indptr = vec![0usize, 50, 55, 60, 70, 80, 90, 100];
+        for teams in [1usize, 2, 3, 7, 20] {
+            let chunks = partition_rows_by_nnz(&indptr, teams);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, 7);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].0 < w[0].1, "non-empty");
+            }
+            assert!(chunks.len() <= teams.max(1));
+        }
+        // the heavy head sits alone when teams ≥ 2
+        let chunks = partition_rows_by_nnz(&indptr, 2);
+        assert_eq!(chunks[0], (0, 1), "heavy first row isolated: {chunks:?}");
+        assert!(partition_rows_by_nnz(&[0], 4).is_empty());
+    }
+
+    #[test]
+    fn linop_impl_delegates() {
+        let a = random_csr(12, 9, 0.3, 21);
+        let op: &dyn LinOp = &a;
+        assert_eq!(op.shape(), (12, 9));
+        let x = Matrix::gaussian(9, 4, 1);
+        assert_eq!(op.apply(&x), a.spmm(&x));
+        let y = Matrix::gaussian(12, 4, 2);
+        assert_eq!(op.apply_t(&y), a.spmm_t(&y));
+        assert_eq!(op.project(&y), a.spmm_t(&y).transpose());
+        assert_eq!(op.fingerprint(), a.fingerprint());
+    }
+}

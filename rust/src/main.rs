@@ -6,6 +6,8 @@
 //! rsvd svd   [--m 2000 --n 512 --k 10 --decay fast --method auto]
 //! rsvd pca   [--n-samples 2048 --hw 12 --k 10 --method auto]
 //! rsvd fig1|fig2|fig3|fig4|table1   regenerate a paper figure/table
+//! rsvd bench-compare [--baseline bench-baseline --current bench-current
+//!                     --tolerance 0.25]      CI bench-regression guard
 //! ```
 
 use rsvd::coordinator::{Method, Request};
@@ -20,6 +22,7 @@ fn main() {
         "info" => info(),
         "svd" => svd_cmd(&args),
         "pca" => pca_cmd(&args),
+        "bench-compare" => bench_compare_cmd(&args),
         "fig1" => {
             let coord = experiments::boot_coordinator();
             let opts = rsvd::experiments::pca_fig1::PcaOpts {
@@ -56,6 +59,119 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// CI bench-guard: compare every `BENCH_*.json` in `--current` against the
+/// same-named file in `--baseline`; exit 1 if any throughput metric fell
+/// by more than `--tolerance` (fraction, default 0.25). Files with no
+/// baseline are reported and skipped — the first run on a fresh cache
+/// seeds the baseline instead of failing.
+fn bench_compare_cmd(args: &Args) {
+    use rsvd::bench_harness::compare::compare;
+    use rsvd::util::json::Json;
+
+    let baseline_dir = std::path::Path::new(args.get("baseline").unwrap_or("bench-baseline"));
+    let current_dir = std::path::Path::new(args.get("current").unwrap_or("bench-current"));
+    let tolerance = args.get_f64("tolerance", 0.25);
+
+    let mut files: Vec<String> = match std::fs::read_dir(current_dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("bench-compare: cannot read {}: {e}", current_dir.display());
+            std::process::exit(2);
+        }
+    };
+    files.sort();
+    if files.is_empty() {
+        eprintln!(
+            "bench-compare: no BENCH_*.json in {} — nothing was benched?",
+            current_dir.display()
+        );
+        std::process::exit(2);
+    }
+
+    let load = |path: &std::path::Path| -> Option<Json> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench-compare: cannot read {}: {e}", path.display());
+                return None;
+            }
+        };
+        match Json::parse(text.trim()) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!("bench-compare: unparseable {}: {e}", path.display());
+                None
+            }
+        }
+    };
+
+    let mut table = rsvd::bench_harness::Table::new(
+        &format!("bench-guard (tolerance {:.0}%)", tolerance * 100.0),
+        &["file", "metric", "baseline", "current", "ratio", "status"],
+    );
+    let mut regressions = 0usize;
+    let mut broken = 0usize;
+    let mut compared = 0usize;
+    for name in &files {
+        let Some(cur) = load(&current_dir.join(name)) else {
+            // a present-but-broken current artifact fails the guard, but
+            // as a broken artifact — not masquerading as a perf regression
+            dash_row(&mut table, name, "BROKEN current artifact");
+            broken += 1;
+            continue;
+        };
+        let base_path = baseline_dir.join(name);
+        if !base_path.exists() {
+            dash_row(&mut table, name, "no baseline (seeding)");
+            continue;
+        }
+        let Some(base) = load(&base_path) else {
+            dash_row(&mut table, name, "baseline unparseable (reseeding)");
+            continue;
+        };
+        let (all, bad) = compare(&base, &cur, tolerance);
+        compared += all.len();
+        for m in &all {
+            let status = if m.regressed(tolerance) { "REGRESSED" } else { "ok" };
+            table.row(vec![
+                name.clone(),
+                m.path.clone(),
+                format!("{:.3}", m.baseline),
+                format!("{:.3}", m.current),
+                format!("{:.2}x", m.ratio()),
+                status.into(),
+            ]);
+        }
+        regressions += bad.len();
+    }
+    table.print();
+    println!("\n{compared} metrics compared, {regressions} regression(s), {broken} broken file(s)");
+    if broken > 0 {
+        eprintln!("bench-guard FAILED: {broken} unreadable/unparseable bench artifact(s)");
+    }
+    if regressions > 0 {
+        eprintln!(
+            "bench-guard FAILED: throughput fell by more than {:.0}% on {} metric(s)",
+            tolerance * 100.0,
+            regressions
+        );
+    }
+    if regressions + broken > 0 {
+        std::process::exit(1);
+    }
+    println!("bench-guard OK");
+}
+
+/// A placeholder bench-guard table row for files without a usable baseline.
+fn dash_row(table: &mut rsvd::bench_harness::Table, name: &str, status: &str) {
+    let d = "—".to_string();
+    table.row(vec![name.to_string(), d.clone(), d.clone(), d.clone(), d, status.to_string()]);
 }
 
 fn info() {

@@ -1,7 +1,9 @@
-//! Minimal JSON parser and writer — enough for `artifacts/manifest.json`
-//! and `configs/experiments.json` (objects, arrays, strings, numbers,
-//! bools, null; UTF-8 passthrough, \u escapes decoded to chars).
+//! Minimal JSON parser and writer — enough for `artifacts/manifest.json`,
+//! `configs/experiments.json`, the CI bench artifacts, and the CSR
+//! request payload codec (objects, arrays, strings, numbers, bools, null;
+//! UTF-8 passthrough, \u escapes decoded to chars).
 
+use crate::linalg::Csr;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -72,6 +74,84 @@ impl Json {
             .and_then(|v| v.as_usize())
             .ok_or_else(|| format!("missing/invalid numeric field '{key}'"))
     }
+
+    /// Object field that is an array of non-negative integers.
+    pub fn usize_arr_field(&self, key: &str) -> Result<Vec<usize>, String> {
+        let arr = self
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("missing/invalid array field '{key}'"))?;
+        arr.iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+                    .map(|x| x as usize)
+                    .ok_or_else(|| format!("non-integer element in '{key}'"))
+            })
+            .collect()
+    }
+
+    /// Object field that is an array of numbers.
+    pub fn f64_arr_field(&self, key: &str) -> Result<Vec<f64>, String> {
+        let arr = self
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("missing/invalid array field '{key}'"))?;
+        arr.iter()
+            .map(|v| v.as_f64().ok_or_else(|| format!("non-number element in '{key}'")))
+            .collect()
+    }
+}
+
+/// Encode a CSR matrix as the wire object
+/// `{"format":"csr","rows":…,"cols":…,"indptr":[…],"indices":[…],"data":[…]}`
+/// — the sparse request payload the serving layer speaks. Values print
+/// with Rust's shortest-roundtrip float formatting, so
+/// [`csr_from_json`] ∘ [`csr_to_json`] is exact.
+pub fn csr_to_json(c: &Csr) -> Json {
+    let (indptr, indices, data) = c.parts();
+    let mut obj = BTreeMap::new();
+    obj.insert("format".to_string(), Json::Str("csr".into()));
+    obj.insert("rows".to_string(), Json::Num(c.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(c.cols() as f64));
+    obj.insert(
+        "indptr".to_string(),
+        Json::Arr(indptr.iter().map(|&x| Json::Num(x as f64)).collect()),
+    );
+    obj.insert(
+        "indices".to_string(),
+        Json::Arr(indices.iter().map(|&x| Json::Num(x as f64)).collect()),
+    );
+    obj.insert("data".to_string(), Json::Arr(data.iter().map(|&x| Json::Num(x)).collect()));
+    Json::Obj(obj)
+}
+
+/// Decode a [`csr_to_json`] object back into a validated CSR matrix —
+/// every structural invariant (integer dimensions, indptr monotone,
+/// sorted in-range columns, length agreement) is re-checked here or by
+/// [`Csr::new`], so a hostile payload cannot construct an inconsistent
+/// operator.
+pub fn csr_from_json(j: &Json) -> Result<Csr, String> {
+    if let Some(fmt_tag) = j.get("format") {
+        if fmt_tag.as_str() != Some("csr") {
+            return Err(format!("unsupported sparse format {fmt_tag}"));
+        }
+    }
+    // strict integer dimensions (the lax `usize_field` would truncate
+    // 2.7 → 2 and saturate negatives — silently altered shapes)
+    let dim = |key: &str| -> Result<usize, String> {
+        j.get(key)
+            .and_then(|v| v.as_f64())
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| format!("missing/invalid non-negative integer field '{key}'"))
+    };
+    let rows = dim("rows")?;
+    let cols = dim("cols")?;
+    let indptr = j.usize_arr_field("indptr")?;
+    let indices = j.usize_arr_field("indices")?;
+    let data = j.f64_arr_field("data")?;
+    Csr::new(rows, cols, indptr, indices, data)
 }
 
 impl fmt::Display for Json {
@@ -344,5 +424,57 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-1.5e3").unwrap().as_f64().unwrap(), -1500.0);
         assert_eq!(Json::parse("0.01").unwrap().as_f64().unwrap(), 0.01);
+    }
+
+    #[test]
+    fn csr_roundtrip_is_exact() {
+        let c = Csr::from_coo(
+            3,
+            5,
+            &[(0, 4, 1.25), (2, 0, -3.0), (2, 3, 0.1), (1, 1, 1e-300)],
+        )
+        .unwrap();
+        let j = csr_to_json(&c);
+        // through the wire: serialize, reparse, decode
+        let back = csr_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c, "payload roundtrip must be exact");
+        assert_eq!(back.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn csr_decode_rejects_malformed() {
+        let good = csr_to_json(&Csr::from_coo(2, 2, &[(0, 1, 2.0)]).unwrap());
+        // wrong format tag
+        let mut bad = match good.clone() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad.insert("format".into(), Json::Str("coo".into()));
+        assert!(csr_from_json(&Json::Obj(bad)).is_err());
+        // structural damage: indices out of range gets caught by Csr::new
+        let mut bad = match good.clone() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad.insert("indices".into(), Json::Arr(vec![Json::Num(9.0)]));
+        assert!(csr_from_json(&Json::Obj(bad)).is_err());
+        // missing field
+        let mut bad = match good {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad.remove("data");
+        assert!(csr_from_json(&Json::Obj(bad)).is_err());
+        // non-integer indptr element
+        assert!(Json::parse(r#"{"rows":1,"cols":1,"indptr":[0,0.5],"indices":[],"data":[]}"#)
+            .map(|j| csr_from_json(&j).is_err())
+            .unwrap());
+        // non-integer / negative dimensions must be rejected, not truncated
+        for s in [
+            r#"{"rows":2.7,"cols":1,"indptr":[0,0,0],"indices":[],"data":[]}"#,
+            r#"{"rows":-1,"cols":1,"indptr":[0],"indices":[],"data":[]}"#,
+        ] {
+            assert!(csr_from_json(&Json::parse(s).unwrap()).is_err(), "{s}");
+        }
     }
 }

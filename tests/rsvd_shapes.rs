@@ -1,0 +1,104 @@
+//! rSVD edge-shape coverage: sketch-width clamping when
+//! `k + oversample > min(m, n)`, tall-skinny and wide inputs, and
+//! rank-deficient matrices — asserting the generic dense `LinOp` path and
+//! the concrete `rsvd` agree bitwise across 1/2/max solver threads.
+
+use rsvd::linalg::rsvd::{rsvd, rsvd_batch, rsvd_values, BatchOpts, RsvdOpts, SketchJob};
+use rsvd::linalg::svd_gesvd::svd;
+use rsvd::linalg::threading::{available_threads, with_threads};
+use rsvd::linalg::{gemm, LinOp, Matrix};
+
+/// Run one shape through the concrete call and the explicit trait-object
+/// path at 1/2/max threads; assert every combination is bitwise identical
+/// to the single-threaded concrete result, then return that result.
+fn check_bitwise_everywhere(a: &Matrix, k: usize, opts: &RsvdOpts) -> rsvd::linalg::Svd {
+    let reference = with_threads(1, || rsvd(a, k, opts));
+    let job = SketchJob::from_opts(k, opts);
+    for t in [1, 2, available_threads()] {
+        let concrete = with_threads(t, || rsvd(a, k, opts));
+        assert_eq!(concrete.s, reference.s, "concrete σ t={t}");
+        assert_eq!(concrete.u, reference.u, "concrete U t={t}");
+        assert_eq!(concrete.v, reference.v, "concrete V t={t}");
+        let op: &dyn LinOp = a;
+        let batch = BatchOpts { power_iters: opts.power_iters, threads: None };
+        let via_op = with_threads(t, || rsvd_batch(op, &[job], &batch).pop().unwrap());
+        assert_eq!(via_op.s, reference.s, "LinOp σ t={t}");
+        assert_eq!(via_op.u, reference.u, "LinOp U t={t}");
+        assert_eq!(via_op.v, reference.v, "LinOp V t={t}");
+    }
+    reference
+}
+
+#[test]
+fn oversample_clamps_to_short_side() {
+    // k + oversample = 22 ≫ min(m, n) = 15: the sketch width must clamp
+    // to 15 and the solver must still return exactly min(k, r) triplets
+    let a = Matrix::gaussian(20, 15, 3);
+    let opts = RsvdOpts { oversample: 10, seed: 5, ..Default::default() };
+    let r = check_bitwise_everywhere(&a, 12, &opts);
+    assert_eq!(r.s.len(), 12);
+    assert_eq!(r.u.shape(), (20, 12));
+    assert_eq!(r.v.shape(), (15, 12));
+    // k beyond the spectrum clamps to r = 15
+    let r = check_bitwise_everywhere(&a, 40, &opts);
+    assert_eq!(r.s.len(), 15);
+    // with the full-width sketch the "randomized" solve is exact
+    let exact = svd(&a);
+    for i in 0..15 {
+        assert!((r.s[i] - exact.s[i]).abs() < 1e-9 * exact.s[0], "σ{i}");
+    }
+    // values-only flavor agrees on the clamped width too
+    let vals = rsvd_values(&a, 40, &opts);
+    assert_eq!(vals.len(), 15);
+    assert_eq!(vals, rsvd_values(&a, 40, &opts), "deterministic");
+}
+
+#[test]
+fn tall_skinny_input() {
+    // m ≫ n: the sketch is tiny, Q is tall; a fast-decay spectrum so the
+    // top-k comparison against the exact solver is meaningful, and sized
+    // so A·Ω (2·3000·48·16 ≈ 4.6e6 flops) clears the parallel threshold
+    let a = rsvd::datagen_test_matrix(3000, 48, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 7);
+    let opts = RsvdOpts { seed: 11, ..Default::default() };
+    let r = check_bitwise_everywhere(&a, 6, &opts);
+    assert_eq!(r.u.shape(), (3000, 6));
+    assert_eq!(r.v.shape(), (48, 6));
+    let exact = svd(&a);
+    for i in 0..6 {
+        assert!((r.s[i] - exact.s[i]).abs() < 1e-7 * exact.s[0], "σ{i}");
+    }
+}
+
+#[test]
+fn wide_input() {
+    // n ≫ m: the transposed regime — Ω is huge (n × s), B is wide
+    let a = rsvd::datagen_test_matrix(48, 3000, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 9);
+    let opts = RsvdOpts { seed: 13, ..Default::default() };
+    let r = check_bitwise_everywhere(&a, 6, &opts);
+    assert_eq!(r.u.shape(), (48, 6));
+    assert_eq!(r.v.shape(), (3000, 6));
+    let exact = svd(&a);
+    for i in 0..6 {
+        assert!((r.s[i] - exact.s[i]).abs() < 1e-7 * exact.s[0], "σ{i}");
+    }
+}
+
+#[test]
+fn rank_deficient_input() {
+    // exact rank 4 (outer product of thin gaussians): requesting k = 9
+    // must not blow up in the orthonormalization (CholeskyQR2 falls back
+    // to Householder on rank-deficient panels) and the tail σ must be ~0
+    let left = Matrix::gaussian(60, 4, 15);
+    let right = Matrix::gaussian(4, 45, 16);
+    let a = gemm::matmul(&left, &right);
+    let opts = RsvdOpts { seed: 17, ..Default::default() };
+    let r = check_bitwise_everywhere(&a, 9, &opts);
+    assert_eq!(r.s.len(), 9);
+    let exact = svd(&a);
+    for i in 0..4 {
+        assert!((r.s[i] - exact.s[i]).abs() < 1e-8 * exact.s[0], "head σ{i}");
+    }
+    for i in 4..9 {
+        assert!(r.s[i].abs() < 1e-8 * exact.s[0], "tail σ{i} = {}", r.s[i]);
+    }
+}
