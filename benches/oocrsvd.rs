@@ -1,0 +1,151 @@
+//! Out-of-core rSVD bench: the tiled row-panel backend (in-memory and
+//! disk-spilled panel stores) vs the dense pipeline, and the single-pass
+//! `rsvd_once` vs two-pass q = 0 — the A-passes economy Lu et al.'s
+//! co-visit trick exists for (two-pass q = 0 reads A twice per solve, the
+//! single pass once; on a spilled store the read really is I/O).
+//!
+//! ```sh
+//! cargo bench --bench oocrsvd -- [--repeats 3] [--k 8]
+//! cargo bench --bench oocrsvd -- --smoke   # fast CI mode → BENCH_oocrsvd.json
+//! ```
+//!
+//! `--smoke` writes `BENCH_oocrsvd.json` (jobs/s for every variant plus
+//! the effective streaming GFLOP/s of the panel sweep), uploaded by CI in
+//! the shared `bench-json` artifact and guarded by the bench-guard job.
+//! Cargo runs bench binaries with CWD = the package root, so the file
+//! lands at `rust/BENCH_oocrsvd.json`.
+
+use rsvd::bench_harness::{fmt_secs, gflops, save_json, time_n, Table};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::linalg::tiled::rsvd_once;
+use rsvd::linalg::TiledMatrix;
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let repeats = args.get_usize("repeats", if smoke { 2 } else { 3 });
+    let k = args.get_usize("k", 8);
+    bench_oocrsvd(smoke, repeats, k);
+}
+
+/// One workload row: dense vs tiled (mem + disk) two-pass rSVD, plus the
+/// single-pass variant, as a JSON object for the CI artifact.
+fn run_case(
+    table: &mut Table,
+    m: usize,
+    n: usize,
+    tile: usize,
+    repeats: usize,
+    k: usize,
+    seed: u64,
+) -> Json {
+    let a = spectrum_matrix(m, n, Decay::Fast, seed);
+    let mem = TiledMatrix::from_dense(&a, tile);
+    let disk = TiledMatrix::from_dense_spilled(&a, tile).expect("scratch spill");
+    let opts = RsvdOpts { seed: seed.wrapping_add(2), ..Default::default() };
+    let opts_q0 = RsvdOpts { power_iters: 0, ..opts.clone() };
+
+    // two-pass pipeline: dense vs tiled must be bitwise identical — the
+    // bench asserts the contract it measures
+    let dense_vals = rsvd_values(&a, k, &opts);
+    assert_eq!(dense_vals, rsvd_values(&mem, k, &opts), "tiled(mem) must match dense bitwise");
+    assert_eq!(dense_vals, rsvd_values(&disk, k, &opts), "tiled(disk) must match dense bitwise");
+
+    let t_dense = time_n(repeats, || {
+        let _ = rsvd_values(&a, k, &opts);
+    });
+    let t_mem = time_n(repeats, || {
+        let _ = rsvd_values(&mem, k, &opts);
+    });
+    let t_disk = time_n(repeats, || {
+        let _ = rsvd_values(&disk, k, &opts);
+    });
+    // single pass (q = 0 co-visit) vs two-pass q = 0 on the spilled store
+    let t_once = time_n(repeats, || {
+        let _ = rsvd_once(&disk, k, &opts_q0);
+    });
+    let t_two_q0 = time_n(repeats, || {
+        let _ = rsvd_values(&disk, k, &opts_q0);
+    });
+
+    // effective streaming rate of the panel sweep: the q-pass pipeline
+    // moves ~(2 + 2q)·2·m·n·s flops through the store per solve
+    let s = k + opts.oversample;
+    let sweep_flops = (2 + 2 * opts.power_iters) as f64 * 2.0 * (m * n) as f64 * s as f64;
+    let stream_gf = gflops(sweep_flops, t_disk.mean_s);
+
+    table.row(vec![
+        format!("{m}x{n}/{tile}"),
+        format!(
+            "{} / {} / {}",
+            fmt_secs(t_dense.mean_s),
+            fmt_secs(t_mem.mean_s),
+            fmt_secs(t_disk.mean_s)
+        ),
+        format!("{:.2}x", t_dense.mean_s / t_mem.mean_s),
+        format!("{:.2}x", t_dense.mean_s / t_disk.mean_s),
+        format!("{stream_gf:.2}"),
+        format!("{} / {}", fmt_secs(t_once.mean_s), fmt_secs(t_two_q0.mean_s)),
+        format!("{:.2}x", t_two_q0.mean_s / t_once.mean_s),
+    ]);
+
+    let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
+    let mut row = BTreeMap::new();
+    row.insert("m".to_string(), Json::Num(m as f64));
+    row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("tile_rows".to_string(), Json::Num(tile as f64));
+    row.insert("k".to_string(), Json::Num(k as f64));
+    row.insert("dense_rsvd_jobs_per_s".to_string(), Json::Num(per_s(t_dense.mean_s)));
+    row.insert("tiled_mem_rsvd_jobs_per_s".to_string(), Json::Num(per_s(t_mem.mean_s)));
+    row.insert("tiled_disk_rsvd_jobs_per_s".to_string(), Json::Num(per_s(t_disk.mean_s)));
+    row.insert("stream_effective_gflops".to_string(), Json::Num(stream_gf));
+    row.insert("once_jobs_per_s".to_string(), Json::Num(per_s(t_once.mean_s)));
+    row.insert("two_pass_q0_jobs_per_s".to_string(), Json::Num(per_s(t_two_q0.mean_s)));
+    row.insert(
+        "once_vs_two_pass_speedup".to_string(),
+        Json::Num(t_two_q0.mean_s / t_once.mean_s),
+    );
+    Json::Obj(row)
+}
+
+fn bench_oocrsvd(smoke: bool, repeats: usize, k: usize) {
+    let mut table = Table::new(
+        &format!("out-of-core tiled rSVD vs dense (k={k})"),
+        &[
+            "shape/tile",
+            "dense / mem / disk",
+            "mem ratio",
+            "disk ratio",
+            "stream GFLOP/s",
+            "once / 2-pass q0",
+            "once speedup",
+        ],
+    );
+    let cases: &[(usize, usize, usize)] = if smoke {
+        &[(800, 500, 128), (1600, 600, 256)]
+    } else {
+        &[(800, 500, 128), (1600, 600, 256), (3200, 1200, 256), (3200, 1200, 64)]
+    };
+    let mut rows = Vec::new();
+    for (i, &(m, n, tile)) in cases.iter().enumerate() {
+        rows.push(run_case(&mut table, m, n, tile, repeats, k, 31 + i as u64));
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("oocrsvd");
+        return;
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("oocrsvd".into()));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert(
+        "threads".to_string(),
+        Json::Num(rsvd::linalg::threading::available_threads() as f64),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    save_json("BENCH_oocrsvd.json", &Json::Obj(doc));
+}

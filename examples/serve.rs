@@ -37,7 +37,8 @@ fn main() {
     };
     println!("coordinator up in {:?} (includes artifact warmup)", t0.elapsed());
 
-    // the workload mix: small/medium k-SVD jobs across decays + PCA jobs.
+    // the workload mix: small/medium k-SVD jobs across decays + PCA jobs,
+    // with sparse (CSR) and out-of-core tiled legs riding the same queue.
     // payloads are pre-generated so the serving clock measures the
     // coordinator, not the workload generator.
     let shapes = [(500usize, 256usize), (1000, 256), (2000, 512), (1500, 1024)];
@@ -66,6 +67,32 @@ fn main() {
                     Request::SvdSparse {
                         a,
                         k: 5 + id % 13,
+                        method: Method::Auto,
+                        want_vectors: false,
+                        seed: id as u64,
+                    },
+                ));
+            } else if id % 7 == 6 {
+                // tiled leg of the mix: the same spectrum payloads served
+                // through the out-of-core row-panel backend (alternating
+                // in-memory and disk-spilled panel stores). The tiled
+                // pipeline is bitwise identical to the dense one, so these
+                // jobs are accuracy-gated exactly like the fast-decay dense
+                // leg.
+                let a = spectrum_matrix(m, n, Decay::Fast, id as u64);
+                let k = 5 + id % 13;
+                let tile = 64 + (id % 5) * 37;
+                let t = if id % 2 == 0 {
+                    rsvd::linalg::TiledMatrix::from_dense_spilled(&a, tile)
+                        .unwrap_or_else(|_| rsvd::linalg::TiledMatrix::from_dense(&a, tile))
+                } else {
+                    rsvd::linalg::TiledMatrix::from_dense(&a, tile)
+                };
+                payloads[c].push((
+                    Some((a, k)),
+                    Request::SvdTiled {
+                        a: t,
+                        k,
                         method: Method::Auto,
                         want_vectors: false,
                         seed: id as u64,

@@ -31,16 +31,17 @@ pub fn route_key(route: &Route) -> String {
 }
 
 /// Whether a routed job is a candidate for fused batch execution (a host
-/// native-rsvd SVD, dense or sparse). The dispatcher uses this to skip
-/// fingerprint hashing entirely in drain cycles with fewer than two
+/// native-rsvd SVD — dense, sparse, or tiled). The dispatcher uses this to
+/// skip fingerprint hashing entirely in drain cycles with fewer than two
 /// candidates — a lone job can never fuse, so it should not pay the
-/// O(payload) content hash.
+/// O(payload) content hash (tiled payloads cache their fingerprint at
+/// construction, but the rule stays uniform).
 pub fn is_fusable(req: &Request, route: &Route) -> bool {
     matches!(
         (route, req),
         (
             Route::Host { method: Method::NativeRsvd },
-            Request::Svd { .. } | Request::SvdSparse { .. }
+            Request::Svd { .. } | Request::SvdSparse { .. } | Request::SvdTiled { .. }
         )
     )
 }
@@ -49,10 +50,12 @@ pub fn is_fusable(req: &Request, route: &Route) -> bool {
 /// content fingerprint, shape, power-iteration count, and output flavor,
 /// so `plan_batches` can only ever group jobs that the fused executor may
 /// legally stack into one wide sketch (same operator, same q, same
-/// finish). Dense payloads key as `fp…`, sparse as `spfp…` — besides the
-/// salted fingerprints, the distinct prefixes make it structurally
-/// impossible for a dense job and its sparse twin to share a batch (their
-/// product kernels differ). Everything else falls back to the coarse
+/// finish). Dense payloads key as `fp…`, sparse as `spfp…`, tiled as
+/// `tlfp…` — besides the salted fingerprints, the distinct prefixes make
+/// it structurally impossible for a dense job and its sparse or tiled twin
+/// to share a batch (their product kernels differ; two *tilings* of the
+/// same data do share a key, because their products are bitwise
+/// interchangeable). Everything else falls back to the coarse
 /// [`route_key`]. The power-iter count is the host default
 /// ([`RsvdOpts::default`]) because that is what the host executor runs
 /// with.
@@ -76,17 +79,27 @@ pub fn fuse_key(req: &Request, route: &Route) -> String {
                     a.fingerprint()
                 );
             }
+            Request::SvdTiled { a, want_vectors, .. } => {
+                let (m, n) = a.shape();
+                let flavor = if *want_vectors { "uv" } else { "vals" };
+                return format!(
+                    "host:native_rsvd:tlfp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    a.fingerprint()
+                );
+            }
             Request::Pca { .. } => {}
         }
     }
     route_key(route)
 }
 
-/// Whether a planned batch key is a fused wide-sketch key (dense or
-/// sparse) rather than a coarse route key — the server's dispatch loop
+/// Whether a planned batch key is a fused wide-sketch key (dense, sparse,
+/// or tiled) rather than a coarse route key — the server's dispatch loop
 /// uses this to decide which batches go through the fused executor.
 pub fn is_fused_key(key: &str) -> bool {
-    key.starts_with("host:native_rsvd:fp") || key.starts_with("host:native_rsvd:spfp")
+    key.starts_with("host:native_rsvd:fp")
+        || key.starts_with("host:native_rsvd:spfp")
+        || key.starts_with("host:native_rsvd:tlfp")
 }
 
 /// Group `keys[i]` (the route key of job i) into batches of ≤ `max_batch`,
@@ -215,6 +228,41 @@ mod tests {
         assert!(!is_fused_key("host:gesvd"));
         assert!(!is_fused_key("host:native_rsvd"));
         assert!(!is_fused_key("dev:r_small"));
+    }
+
+    #[test]
+    fn tiled_fuse_key_discriminates_and_never_matches_dense() {
+        use crate::linalg::{Matrix, TiledMatrix};
+        let route = Route::Host { method: Method::NativeRsvd };
+        let d = Matrix::gaussian(8, 6, 1);
+        let req = |a: TiledMatrix, vecs: bool| Request::SvdTiled {
+            a,
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: vecs,
+            seed: 1,
+        };
+        let base = fuse_key(&req(TiledMatrix::from_dense(&d, 3), false), &route);
+        assert!(base.starts_with("host:native_rsvd:tlfp"), "{base}");
+        assert!(is_fused_key(&base));
+        // a different tiling of the same data shares the key: the blocked
+        // products are bitwise interchangeable, so fusing them is legal
+        assert_eq!(fuse_key(&req(TiledMatrix::from_dense(&d, 5), false), &route), base);
+        // flavor/content changes → new keys
+        assert_ne!(fuse_key(&req(TiledMatrix::from_dense(&d, 3), true), &route), base);
+        let other = Matrix::gaussian(8, 6, 2);
+        assert_ne!(fuse_key(&req(TiledMatrix::from_dense(&other, 3), false), &route), base);
+        // the dense twin keys into a disjoint space
+        let dense = Request::Svd {
+            a: d,
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let dense_key = fuse_key(&dense, &route);
+        assert!(dense_key.starts_with("host:native_rsvd:fp"), "{dense_key}");
+        assert_ne!(dense_key, base);
     }
 
     /// Property: planning over fusion-aware keys never groups jobs with

@@ -5,7 +5,7 @@ use super::job::{Decomposition, Method, Request};
 use super::router::Route;
 use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
 use crate::linalg::{
-    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, Matrix,
+    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, Matrix, TiledMatrix,
 };
 use crate::runtime::{finish_rsvd, finish_values, Engine};
 
@@ -26,11 +26,13 @@ pub fn execute(
 
 /// Fused execution of a route-homogeneous batch, if it qualifies: every
 /// request must be a host native-rsvd SVD over the *same* payload — all
-/// dense over one matrix, or all sparse over one CSR operator — with the
-/// same output flavor (the batcher's fuse key guarantees this; the content
-/// equality re-check here is cheap insurance against fingerprint
-/// collisions, and mixing dense with sparse never qualifies even when the
-/// numeric contents agree, because the product kernels differ). Per-job
+/// dense over one matrix, all sparse over one CSR operator, or all tiled
+/// over one panel store's content — with the same output flavor (the
+/// batcher's fuse key guarantees this; the content equality re-check here
+/// is cheap insurance against fingerprint collisions, and mixing payload
+/// kinds never qualifies even when the numeric contents agree, because the
+/// product kernels differ. Two *tilings* of the same content do qualify —
+/// the blocked products are bitwise interchangeable). Per-job
 /// sketches stack column-wise and the range-finder flops run as single
 /// wide block products ([`native_rsvd::rsvd_batch`] — GEMM dense, SpMM
 /// sparse); results are bitwise identical to per-job [`execute`]. Returns
@@ -46,6 +48,7 @@ pub fn try_execute_fused(
     enum Payload<'a> {
         Dense(&'a Matrix),
         Sparse(&'a Csr),
+        Tiled(&'a TiledMatrix),
     }
     let mut jobs = Vec::with_capacity(reqs.len());
     let mut shared: Option<(Payload, bool)> = None;
@@ -56,6 +59,9 @@ pub fn try_execute_fused(
             }
             Request::SvdSparse { a, k, want_vectors, seed, .. } => {
                 (Payload::Sparse(a), *k, *want_vectors, *seed)
+            }
+            Request::SvdTiled { a, k, want_vectors, seed, .. } => {
+                (Payload::Tiled(a), *k, *want_vectors, *seed)
             }
             Request::Pca { .. } => return None,
         };
@@ -68,6 +74,10 @@ pub fn try_execute_fused(
                 let same = match (first, &payload) {
                     (Payload::Dense(fa), Payload::Dense(a)) => fa == a,
                     (Payload::Sparse(fa), Payload::Sparse(a)) => fa == a,
+                    // TiledMatrix equality is content equality (shared-store
+                    // fast path, else a streaming panel compare) — different
+                    // tile heights of the same data legally fuse
+                    (Payload::Tiled(fa), Payload::Tiled(a)) => fa == a,
                     _ => false,
                 };
                 if !same {
@@ -83,6 +93,7 @@ pub fn try_execute_fused(
     Some(match payload {
         Payload::Dense(a) => run_fused(a, &jobs, want_vectors),
         Payload::Sparse(a) => run_fused(a, &jobs, want_vectors),
+        Payload::Tiled(a) => run_fused(a, &jobs, want_vectors),
     })
 }
 
@@ -134,9 +145,10 @@ fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decompos
         .ok_or_else(|| format!("artifact {artifact} not in manifest"))?
         .clone();
     match req {
-        // the router never sends sparse payloads to a device artifact
+        // the router never sends sparse/tiled payloads to a device artifact
         // (buckets take dense literals) — fail loudly if one slips through
         Request::SvdSparse { .. } => Err("sparse requests have no device artifacts".into()),
+        Request::SvdTiled { .. } => Err("tiled requests have no device artifacts".into()),
         Request::Svd { a, k, want_vectors, seed, .. } => {
             let out = engine
                 .run_rsvd(&spec, a, split_seed(*seed))
@@ -185,19 +197,25 @@ fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
             host_svd(a, *k, method, *want_vectors, *seed)
         }
         Request::SvdSparse { a, k, want_vectors, seed, .. } => {
-            host_sparse_svd(a, *k, method, *want_vectors, *seed)
+            host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
+        }
+        Request::SvdTiled { a, k, want_vectors, seed, .. } => {
+            host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
         }
         Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
     }
 }
 
-/// Sparse SVD on the host. The sketch-pipeline methods run the operator
-/// path — SpMM/SpMMᵀ products straight off the CSR structure, no dense A
-/// ever materialized. An explicitly requested exact/iterative solver
-/// densifies first (correctness over speed for the long tail; the router
-/// only sends sparse jobs here when the caller asked by name).
-fn host_sparse_svd(
-    a: &Csr,
+/// Operator-backed SVD on the host — the shared body behind the sparse
+/// and tiled request paths. The sketch-pipeline methods run the generic
+/// [`crate::linalg::LinOp`] range finder (SpMM products for CSR, panel
+/// sweeps for tiled — no dense A ever materialized). An explicitly
+/// requested exact/iterative solver densifies first (correctness over
+/// resources for the long tail; the router only sends these jobs here
+/// when the caller asked by name).
+fn host_operator_svd<A: crate::linalg::LinOp + ?Sized>(
+    a: &A,
+    densify: impl FnOnce() -> Matrix,
     k: usize,
     method: Method,
     want_vectors: bool,
@@ -226,7 +244,7 @@ fn host_sparse_svd(
                 })
             }
         }
-        exact => host_svd(&a.to_dense(), k, exact, want_vectors, seed),
+        exact => host_svd(&densify(), k, exact, want_vectors, seed),
     }
 }
 
@@ -554,6 +572,99 @@ mod tests {
         };
         assert!(try_execute_fused(&[&rs, &ro], &route).is_none());
         assert!(try_execute_fused(&[&rs, &rs], &route).is_some());
+    }
+
+    #[test]
+    fn tiled_host_operator_path_matches_dense_solver_bitwise() {
+        let d = crate::datagen_test_matrix(40, 30, |i| 1.0 / (i + 1) as f64, 19);
+        let t = TiledMatrix::from_dense(&d, 11);
+        let treq = Request::SvdTiled {
+            a: t.clone(),
+            k: 4,
+            method: Method::NativeRsvd,
+            want_vectors: true,
+            seed: 3,
+        };
+        let got = run_host(&treq, Method::NativeRsvd).unwrap();
+        assert_eq!(got.method_used, "native_rsvd");
+        let dense_got =
+            run_host(&req(d.clone(), 4, Method::NativeRsvd, true), Method::NativeRsvd).unwrap();
+        assert_eq!(got.values, dense_got.values);
+        assert_eq!(got.u, dense_got.u);
+        assert_eq!(got.v, dense_got.v);
+        // explicit exact method densifies and matches the exact spectrum
+        let exact = svd_gesvd::svd(&d);
+        let treq = Request::SvdTiled {
+            a: t,
+            k: 4,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 3,
+        };
+        let got = run_host(&treq, Method::Gesvd).unwrap();
+        assert_eq!(got.method_used, "gesvd");
+        for i in 0..4 {
+            assert!((got.values[i] - exact.s[i]).abs() < 1e-9 * exact.s[0]);
+        }
+    }
+
+    #[test]
+    fn fused_tiled_batch_matches_per_job_and_allows_mixed_tilings() {
+        let d = crate::datagen_test_matrix(40, 30, |i| 1.0 / (i + 1) as f64, 23);
+        let route = Route::Host { method: Method::NativeRsvd };
+        // deliberately different tile heights over the same content: the
+        // equality re-check must accept them (products are bitwise
+        // interchangeable), and every job must match its solo execution
+        let tilings = [7usize, 40, 1, 16];
+        for vecs in [false, true] {
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request::SvdTiled {
+                    a: TiledMatrix::from_dense(&d, tilings[i]),
+                    k: 3 + i % 2,
+                    method: Method::NativeRsvd,
+                    want_vectors: vecs,
+                    seed: i as u64,
+                })
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "vecs={vecs}");
+                assert_eq!(f.u, s.u, "vecs={vecs}");
+                assert_eq!(f.v, s.v, "vecs={vecs}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_never_mixes_tiled_with_dense_or_sparse() {
+        let d = Matrix::gaussian(12, 9, 31);
+        let t = TiledMatrix::from_dense(&d, 4);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let rt = Request::SvdTiled {
+            a: t.clone(),
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let rd = req(d, 2, Method::NativeRsvd, false);
+        // numerically equal payloads, different kernels → never fused
+        assert!(try_execute_fused(&[&rt, &rd], &route).is_none());
+        assert!(try_execute_fused(&[&rd, &rt], &route).is_none());
+        // different tiled content → no fusion; same content → fuses
+        let other = TiledMatrix::from_dense(&Matrix::gaussian(12, 9, 32), 4);
+        let ro = Request::SvdTiled {
+            a: other,
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 2,
+        };
+        assert!(try_execute_fused(&[&rt, &ro], &route).is_none());
+        assert!(try_execute_fused(&[&rt, &rt], &route).is_some());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Job model: decomposition requests, results, and solver selection.
 
-use crate::linalg::{Csr, Matrix};
+use crate::linalg::{Csr, Matrix, TiledMatrix};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -72,6 +72,17 @@ pub enum Request {
         want_vectors: bool,
         seed: u64,
     },
+    /// k largest singular triplets (or values only) of a tiled, possibly
+    /// disk-backed `a` — served by the out-of-core operator path (one panel
+    /// sweep per block product, bitwise identical to the dense pipeline)
+    /// unless an exact host method is explicitly requested.
+    SvdTiled {
+        a: TiledMatrix,
+        k: usize,
+        method: Method,
+        want_vectors: bool,
+        seed: u64,
+    },
     /// k principal components of row-sample matrix `x` (centered by the
     /// solver). Returns eigenvalues of the covariance and components in `v`.
     Pca {
@@ -85,7 +96,10 @@ pub enum Request {
 impl Request {
     pub fn k(&self) -> usize {
         match self {
-            Request::Svd { k, .. } | Request::SvdSparse { k, .. } | Request::Pca { k, .. } => *k,
+            Request::Svd { k, .. }
+            | Request::SvdSparse { k, .. }
+            | Request::SvdTiled { k, .. }
+            | Request::Pca { k, .. } => *k,
         }
     }
 
@@ -93,6 +107,7 @@ impl Request {
         match self {
             Request::Svd { method, .. }
             | Request::SvdSparse { method, .. }
+            | Request::SvdTiled { method, .. }
             | Request::Pca { method, .. } => *method,
         }
     }
@@ -101,6 +116,7 @@ impl Request {
         match self {
             Request::Svd { a, .. } => a.shape(),
             Request::SvdSparse { a, .. } => a.shape(),
+            Request::SvdTiled { a, .. } => a.shape(),
             Request::Pca { x, .. } => x.shape(),
         }
     }
@@ -114,6 +130,7 @@ impl Request {
         match self {
             Request::Svd { a, .. } => a.fingerprint(),
             Request::SvdSparse { a, .. } => a.fingerprint(),
+            Request::SvdTiled { a, .. } => a.fingerprint(),
             Request::Pca { x, .. } => x.fingerprint(),
         }
     }
@@ -228,5 +245,25 @@ mod tests {
         assert_eq!(r.fingerprint(), fp);
         // the sparse salt keeps dense and sparse twins apart in the batcher
         assert_ne!(r.fingerprint(), dense_fp);
+    }
+
+    #[test]
+    fn tiled_request_accessors() {
+        let d = Matrix::gaussian(6, 4, 1);
+        let t = TiledMatrix::from_dense(&d, 2);
+        let fp = t.fingerprint();
+        let r = Request::SvdTiled {
+            a: t,
+            k: 2,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 3,
+        };
+        assert_eq!(r.k(), 2);
+        assert_eq!(r.shape(), (6, 4));
+        assert_eq!(r.method(), Method::Auto);
+        assert_eq!(r.fingerprint(), fp);
+        // the tiled salt keeps dense twins apart in the batcher
+        assert_ne!(r.fingerprint(), d.fingerprint());
     }
 }

@@ -53,7 +53,11 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     // al.: the randomized pipeline dominates on sparse inputs at any k the
     // sketch fits). An explicitly requested host method is still honored
     // (exec densifies for the exact solvers).
-    if let Request::SvdSparse { .. } = req {
+    // Tiled payloads follow the same policy: no device bucket streams row
+    // panels, and the operator path is the whole point of the tiling (an
+    // explicitly requested exact method densifies in exec — correctness
+    // over memory for the long tail).
+    if matches!(req, Request::SvdSparse { .. } | Request::SvdTiled { .. }) {
         return match method {
             Method::Auto | Method::Device => Route::Host { method: Method::NativeRsvd },
             other => Route::Host { method: other },
@@ -73,7 +77,9 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
 
     let s = (k + cfg.oversample).min(r);
     let bucket = match req {
-        Request::SvdSparse { .. } => unreachable!("sparse requests routed above"),
+        Request::SvdSparse { .. } | Request::SvdTiled { .. } => {
+            unreachable!("sparse/tiled requests routed above")
+        }
         Request::Svd { .. } => manifest.pick_bucket(
             ArtifactKind::Rsvd,
             &cfg.impl_name,
@@ -199,6 +205,36 @@ mod tests {
             seed: 0,
         };
         // Auto and Device both land on the operator-backed sketch pipeline
+        for m in [Method::Auto, Method::Device] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, Method::NativeRsvd),
+                other => panic!("{other:?}"),
+            }
+        }
+        // explicit host methods are honored (exec densifies where needed)
+        for m in [Method::Gesvd, Method::Lanczos, Method::NativeRsvd] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, m),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_routes_to_host_never_device() {
+        use crate::linalg::{Matrix, TiledMatrix};
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        let a = TiledMatrix::from_dense(&Matrix::gaussian(200, 100, 1), 64);
+        let req = |method| Request::SvdTiled {
+            a: a.clone(),
+            k: 8,
+            method,
+            want_vectors: false,
+            seed: 0,
+        };
+        // Auto and Device land on the streaming sketch pipeline even when
+        // a device bucket would fit the shape
         for m in [Method::Auto, Method::Device] {
             match route(&req(m), &man, &cfg) {
                 Route::Host { method } => assert_eq!(method, Method::NativeRsvd),

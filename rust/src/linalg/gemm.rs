@@ -200,12 +200,25 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// sweeps all of A/B, so the i-reduction order per element matches the
 /// serial schedule exactly for any thread count.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_acc(a, b, &mut c);
+    c
+}
+
+/// C += Aᵀ·B — the accumulating form of [`matmul_tn`] (which is exactly
+/// `zeros` + this). Because the kernel adds term i into the running C
+/// element in ascending-i order, a caller sweeping disjoint row blocks of
+/// (A, B) in ascending order accumulates every C element in the *same*
+/// global term order as one flat `matmul_tn` over the stacked rows — the
+/// bitwise seam the out-of-core tiled backend ([`super::tiled`]) streams
+/// panels through.
+pub fn matmul_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, ka) = a.shape();
     let (mb, n) = b.shape();
     assert_eq!(m, mb, "matmul_tn row dims");
-    let mut c = Matrix::zeros(ka, n);
+    assert_eq!(c.shape(), (ka, n), "matmul_tn output shape");
     if m == 0 || ka == 0 || n == 0 {
-        return c;
+        return;
     }
     let flops = 2.0 * m as f64 * ka as f64 * n as f64;
     let team = Parallelism::current().team_for_flops(flops);
@@ -228,10 +241,9 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 
     if chunks.len() <= 1 {
         tn_rows(0, ka, c.as_mut_slice());
-        return c;
+        return;
     }
     scoped_bands(c.as_mut_slice(), &chunks, n, tn_rows);
-    c
 }
 
 /// C = A·Bᵀ. Inner products of rows — unit stride on both operands; the
@@ -428,6 +440,30 @@ mod tests {
         let a = Matrix::zeros(2, 0);
         let b = Matrix::zeros(0, 2);
         assert_eq!(matmul(&a, &b).as_slice(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn tn_acc_panel_sweep_is_bitwise_flat() {
+        // the tiled backend's seam: accumulating disjoint ascending row
+        // blocks through matmul_tn_acc must reproduce the flat kernel's
+        // bits for any block height (sized to engage the parallel path)
+        let a = Matrix::gaussian(301, 40, 13);
+        let b = Matrix::gaussian(301, 24, 14);
+        let flat = matmul_tn(&a, &b);
+        for tile in [1usize, 37, 128, 301] {
+            let mut acc = Matrix::zeros(40, 24);
+            let mut r0 = 0;
+            while r0 < 301 {
+                let r1 = (r0 + tile).min(301);
+                matmul_tn_acc(
+                    &a.submatrix(r0, r1, 0, 40),
+                    &b.submatrix(r0, r1, 0, 24),
+                    &mut acc,
+                );
+                r0 = r1;
+            }
+            assert_eq!(acc.as_slice(), flat.as_slice(), "tile {tile}");
+        }
     }
 
     #[test]

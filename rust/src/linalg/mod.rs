@@ -32,6 +32,7 @@ pub mod sparse;
 pub mod svd_gesvd;
 pub mod svd_jacobi;
 pub mod threading;
+pub mod tiled;
 pub mod tridiag;
 
 pub use cholesky::LinalgError;
@@ -39,4 +40,5 @@ pub use matrix::Matrix;
 pub use op::LinOp;
 pub use sparse::Csr;
 pub use svd_gesvd::Svd;
+pub use tiled::TiledMatrix;
 pub use threading::{with_threads, with_threads_opt, Parallelism};

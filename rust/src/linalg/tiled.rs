@@ -1,0 +1,644 @@
+//! Out-of-core tiled matrices: the row-panel [`LinOp`] backend.
+//!
+//! The paper's BLAS-3 reformulation assumes A sits in memory; Lu et al.
+//! ("High-Performance Out-of-core Block Randomized SVD on GPU",
+//! arXiv:1706.07191) show the same sketch algebra survives streaming A in
+//! row panels — every A-touching product is a sum of per-panel products,
+//! so each range-finder step needs exactly **one pass** over A no matter
+//! where the panels live. [`TiledMatrix`] stores A as row panels behind a
+//! pluggable [`PanelStore`] (in-memory panels, or spilled to a scratch
+//! file for matrices that don't fit) and implements [`LinOp`] by streaming
+//! panels through the existing packed GEMM.
+//!
+//! **Bitwise contract.** The blocked products are *bitwise identical* to
+//! the dense path for any tile height:
+//!
+//! * `apply` (Y = A·X): each panel's C rows come from the same packed
+//!   schedule as the full GEMM — the k-reduction order per element (KC
+//!   blocks ascending, k ascending within) never depends on which rows the
+//!   operand holds, so panel rows equal the dense result's rows bit for
+//!   bit.
+//! * `apply_t` / `project` (Aᵀ·X, Qᵀ·A): the reduction runs over A's
+//!   *rows*, i.e. across panels. Sweeping panels in ascending order
+//!   through [`super::gemm::matmul_tn_acc`] accumulates every output
+//!   element in the exact global ascending-i term order of one flat
+//!   `matmul_tn`, because that kernel adds each term into the running C
+//!   element (no per-panel partial is ever formed and re-added).
+//!
+//! Combined with the thread-count invariance of the underlying kernels
+//! (DESIGN.md §GEMM), `rsvd` over a `TiledMatrix` reproduces the dense
+//! pipeline's bits for any (tile height, thread count) — pinned in
+//! `tests/tiled_rsvd.rs`.
+//!
+//! [`rsvd_once`] adds the single-pass variant for q = 0 jobs: the range
+//! sketch Y = A·Ω and the co-sketch W = Ψᵀ·A are accumulated in the *same*
+//! panel sweep (Lu et al.'s co-visit trick), so the whole factorization
+//! reads A exactly once — the two-pass pipeline reads it 2 + 2q times.
+
+use super::gemm::{matmul, matmul_tn, matmul_tn_acc};
+use super::matrix::FnvStream;
+use super::op::LinOp;
+use super::qr::orthonormalize;
+use super::rsvd::RsvdOpts;
+use super::svd_gesvd::{svd, Svd};
+use super::threading::with_threads_opt;
+use super::Matrix;
+use std::fmt;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Operator-kind salt for [`TiledMatrix::fingerprint`] — a tiled operator
+/// must never share a batcher key with its dense or CSR twin (distinct
+/// product kernels), mirroring the CSR salt in `sparse.rs`.
+const TILED_SALT: u64 = 0x71_1ED;
+
+/// Where a [`TiledMatrix`] keeps its panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Spill {
+    /// Panels held in memory (the fast path; still streams panel-at-a-time
+    /// through the kernels, so it shares every code path with `Disk`).
+    Memory,
+    /// Panels spilled to one scratch file in the OS temp directory,
+    /// re-read per access — the out-of-core path. The file is deleted when
+    /// the last clone of the matrix drops.
+    Disk,
+}
+
+/// Storage backend for the row panels of a [`TiledMatrix`]. Panel `i`
+/// holds rows `[i·tile_rows, min((i+1)·tile_rows, rows))`, full width.
+///
+/// `load` returns the panel as a dense matrix; implementations may panic
+/// on I/O failure (the coordinator's per-job panic isolation turns that
+/// into a failed job, not a dead worker).
+pub trait PanelStore: Send + Sync {
+    fn panel_count(&self) -> usize;
+    fn load(&self, idx: usize) -> Matrix;
+    /// Short backend tag for Debug/metrics ("mem" | "disk").
+    fn kind(&self) -> &'static str;
+}
+
+/// In-memory panel store: a plain vector of row-panel matrices.
+struct MemStore {
+    panels: Vec<Matrix>,
+}
+
+impl PanelStore for MemStore {
+    fn panel_count(&self) -> usize {
+        self.panels.len()
+    }
+
+    fn load(&self, idx: usize) -> Matrix {
+        self.panels[idx].clone()
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+}
+
+/// Spill-to-disk panel store: all panels live in one scratch file as raw
+/// little-endian `f64` bytes (exact bit round-trip); `load` seeks and
+/// reads one panel through a single long-lived handle (a panel sweep is
+/// one `load` per panel × (2 + 2q) sweeps per solve — re-opening the file
+/// each time would put an `open`/`close` syscall pair on exactly the hot
+/// path this store exists for). The file is removed on drop.
+struct DiskStore {
+    path: PathBuf,
+    /// The open scratch file; a mutex serializes the seek+read pairs so
+    /// the store stays `Sync` without platform-specific positional reads.
+    file: Mutex<File>,
+    /// (byte offset, rows, cols) per panel.
+    panels: Vec<(u64, usize, usize)>,
+}
+
+impl DiskStore {
+    fn scratch_path() -> PathBuf {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("rsvd_tiled_{}_{n}.bin", std::process::id()))
+    }
+}
+
+impl PanelStore for DiskStore {
+    fn panel_count(&self) -> usize {
+        self.panels.len()
+    }
+
+    fn load(&self, idx: usize) -> Matrix {
+        let (off, rows, cols) = self.panels[idx];
+        let mut buf = vec![0u8; rows * cols * 8];
+        {
+            let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
+            f.seek(SeekFrom::Start(off))
+                .unwrap_or_else(|e| panic!("tiled panel seek: {e}"));
+            f.read_exact(&mut buf)
+                .unwrap_or_else(|e| panic!("tiled panel read: {e}"));
+        }
+        let data = buf
+            .chunks_exact(8)
+            .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn kind(&self) -> &'static str {
+        "disk"
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// An m×n matrix stored as row panels behind a [`PanelStore`], serving the
+/// sketch pipeline through [`LinOp`] with results bitwise identical to the
+/// dense path for any tile height (module docs). Clones share the store.
+#[derive(Clone)]
+pub struct TiledMatrix {
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    store: Arc<dyn PanelStore>,
+    /// Content fingerprint, computed once while the panels stream through
+    /// construction (a disk-backed matrix is never re-read to hash it).
+    fp: u64,
+}
+
+impl TiledMatrix {
+    /// Build from a panel producer: `fill(r0, r1)` must return the
+    /// `(r1-r0)×cols` panel holding rows `[r0, r1)`. Panels are requested
+    /// in ascending order and handed straight to the store, so only one
+    /// panel is ever resident during construction — the genuinely
+    /// out-of-core entry point (the dense convenience constructors wrap
+    /// it).
+    pub fn build(
+        rows: usize,
+        cols: usize,
+        tile_rows: usize,
+        spill: Spill,
+        mut fill: impl FnMut(usize, usize) -> Matrix,
+    ) -> Result<TiledMatrix, String> {
+        assert!(tile_rows > 0, "tile height must be positive");
+        let tile_rows = tile_rows.min(rows.max(1));
+        let count = rows.div_ceil(tile_rows);
+        // fingerprint = salted stream over shape + row-major element bits;
+        // panels are row blocks, so hashing them in order IS row-major —
+        // the key is invariant in the tile height (legal precisely because
+        // results are too) and in the store backend
+        let mut h = FnvStream::new();
+        h.word(TILED_SALT);
+        h.word(rows as u64);
+        h.word(cols as u64);
+        let mut take_panel = |i: usize| -> Matrix {
+            let r0 = i * tile_rows;
+            let r1 = (r0 + tile_rows).min(rows);
+            let p = fill(r0, r1);
+            assert_eq!(p.shape(), (r1 - r0, cols), "panel {i} shape");
+            for v in p.as_slice() {
+                h.word(v.to_bits());
+            }
+            p
+        };
+        let store: Arc<dyn PanelStore> = match spill {
+            Spill::Memory => {
+                let panels = (0..count).map(&mut take_panel).collect();
+                Arc::new(MemStore { panels })
+            }
+            Spill::Disk => {
+                let path = DiskStore::scratch_path();
+                let mut f = File::create(&path)
+                    .map_err(|e| format!("tiled spill {}: {e}", path.display()))?;
+                let mut panels = Vec::with_capacity(count);
+                let mut off = 0u64;
+                for i in 0..count {
+                    let p = take_panel(i);
+                    let mut buf = Vec::with_capacity(p.as_slice().len() * 8);
+                    for v in p.as_slice() {
+                        buf.extend_from_slice(&v.to_le_bytes());
+                    }
+                    f.write_all(&buf).map_err(|e| {
+                        let _ = std::fs::remove_file(&path);
+                        format!("tiled spill write: {e}")
+                    })?;
+                    panels.push((off, p.rows(), p.cols()));
+                    off += buf.len() as u64;
+                }
+                // close the write handle, reopen read-only for the store's
+                // long-lived reader
+                drop(f);
+                let reader = File::open(&path).map_err(|e| {
+                    let _ = std::fs::remove_file(&path);
+                    format!("tiled spill reopen {}: {e}", path.display())
+                })?;
+                Arc::new(DiskStore { path, file: Mutex::new(reader), panels })
+            }
+        };
+        Ok(TiledMatrix { rows, cols, tile_rows, store, fp: h.finish() })
+    }
+
+    /// Tile an in-memory dense matrix (in-memory panels).
+    pub fn from_dense(a: &Matrix, tile_rows: usize) -> TiledMatrix {
+        Self::build(a.rows(), a.cols(), tile_rows, Spill::Memory, |r0, r1| {
+            a.submatrix(r0, r1, 0, a.cols())
+        })
+        .expect("in-memory tiling cannot fail")
+    }
+
+    /// Tile an in-memory dense matrix and spill the panels to disk — the
+    /// test/bench entry point for the out-of-core store (real out-of-core
+    /// construction goes through [`TiledMatrix::build`], which never holds
+    /// more than one panel).
+    pub fn from_dense_spilled(a: &Matrix, tile_rows: usize) -> Result<TiledMatrix, String> {
+        Self::build(a.rows(), a.cols(), tile_rows, Spill::Disk, |r0, r1| {
+            a.submatrix(r0, r1, 0, a.cols())
+        })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Configured panel height (the last panel may be shorter).
+    #[inline]
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    #[inline]
+    pub fn panel_count(&self) -> usize {
+        self.store.panel_count()
+    }
+
+    /// Row range `[r0, r1)` of panel `i`.
+    #[inline]
+    pub fn panel_range(&self, i: usize) -> (usize, usize) {
+        let r0 = i * self.tile_rows;
+        (r0, (r0 + self.tile_rows).min(self.rows))
+    }
+
+    /// Store backend tag ("mem" | "disk").
+    pub fn store_kind(&self) -> &'static str {
+        self.store.kind()
+    }
+
+    /// Dense equivalent — tests and the exact-solver fallback only; the
+    /// sketch pipeline itself streams panels.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.panel_count() {
+            let (r0, _) = self.panel_range(i);
+            let p = self.store.load(i);
+            for r in 0..p.rows() {
+                m.row_mut(r0 + r).copy_from_slice(p.row(r));
+            }
+        }
+        m
+    }
+
+    /// Content fingerprint (cached at construction): [`Matrix::fingerprint`]
+    /// semantics over the row-major element bits, salted with the tiled
+    /// operator kind. Invariant in tile height and store backend — two
+    /// tilings of the same data *may* share a fused batch, because their
+    /// products are bitwise interchangeable (module docs).
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
+/// Content equality (shape + elements), regardless of tile height or store
+/// backend — the executor's fused-batch re-check compares payloads with
+/// this. Streams one panel of each side at a time; never densifies.
+impl PartialEq for TiledMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        if Arc::ptr_eq(&self.store, &other.store) {
+            return true;
+        }
+        let mut oi = usize::MAX;
+        let mut op = Matrix::zeros(0, 0);
+        for i in 0..self.panel_count() {
+            let (r0, _) = self.panel_range(i);
+            let p = self.store.load(i);
+            for lr in 0..p.rows() {
+                let r = r0 + lr;
+                let want = r / other.tile_rows;
+                if want != oi {
+                    oi = want;
+                    op = other.store.load(oi);
+                }
+                if p.row(lr) != op.row(r - oi * other.tile_rows) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl fmt::Debug for TiledMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "TiledMatrix {}x{} ({} panels x {} rows, {} store, fp {:016x})",
+            self.rows,
+            self.cols,
+            self.panel_count(),
+            self.tile_rows,
+            self.store.kind(),
+            self.fp
+        )
+    }
+}
+
+impl LinOp for TiledMatrix {
+    fn shape(&self) -> (usize, usize) {
+        TiledMatrix::shape(self)
+    }
+
+    /// Y = A·X, one pass over the panels: panel i's GEMM produces Y's rows
+    /// [r0, r1) with the exact bits of the dense call (the packed
+    /// schedule's k-reduction order is row-set-independent).
+    fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows(), "tiled apply inner dims {} vs {}", self.cols, x.rows());
+        let mut y = Matrix::zeros(self.rows, x.cols());
+        for i in 0..self.panel_count() {
+            let (r0, _) = self.panel_range(i);
+            let p = self.store.load(i);
+            let yp = matmul(&p, x);
+            for r in 0..yp.rows() {
+                y.row_mut(r0 + r).copy_from_slice(yp.row(r));
+            }
+        }
+        y
+    }
+
+    /// Z = Aᵀ·X, one pass: panels accumulate through `matmul_tn_acc` in
+    /// ascending order, reproducing the flat kernel's global ascending-i
+    /// term order per element (module docs).
+    fn apply_t(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.rows, x.rows(), "tiled apply_t row dims {} vs {}", self.rows, x.rows());
+        let mut z = Matrix::zeros(self.cols, x.cols());
+        for i in 0..self.panel_count() {
+            let (r0, r1) = self.panel_range(i);
+            let p = self.store.load(i);
+            let xp = x.submatrix(r0, r1, 0, x.cols());
+            matmul_tn_acc(&p, &xp, &mut z);
+        }
+        z
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    /// B = Qᵀ·A, one pass — same accumulation argument as `apply_t`, and
+    /// bitwise identical to the dense override `matmul_tn(q, a)` (which is
+    /// the frozen historical kernel), so tiled rsvd reproduces dense rsvd
+    /// exactly.
+    fn project(&self, q: &Matrix) -> Matrix {
+        assert_eq!(self.rows, q.rows(), "tiled project row dims {} vs {}", self.rows, q.rows());
+        let mut b = Matrix::zeros(q.cols(), self.cols);
+        for i in 0..self.panel_count() {
+            let (r0, r1) = self.panel_range(i);
+            let p = self.store.load(i);
+            let qp = q.submatrix(r0, r1, 0, q.cols());
+            matmul_tn_acc(&qp, &p, &mut b);
+        }
+        b
+    }
+}
+
+/// Single-pass randomized k-SVD over a tiled operator — Lu et al.'s
+/// co-visit scheme for q = 0 jobs (`opts.power_iters` is ignored: power
+/// iterations are what a second pass *is*; jobs wanting q > 0 use the
+/// generic [`super::rsvd::rsvd`], which makes 2 + 2q passes).
+///
+/// One sweep over the panels accumulates both sketches at once:
+/// the range sketch `Y = A·Ω` (n×s Gaussian Ω) and the co-sketch
+/// `W = Ψᵀ·A` (m×s_l Gaussian Ψ, s_l = s + oversample for a
+/// well-conditioned solve). A is never touched again: `Q = orth(Y)`, then
+/// B solves the small least-squares system `(ΨᵀQ)·B ≈ W` via the
+/// pseudo-inverse (Halko et al. §5.5 / Lu et al. Alg. 3), and the k
+/// triplets come from the small SVD of B exactly as in the two-pass
+/// finish. Accuracy matches two-pass q = 0 up to the co-sketch solve
+/// (`tests/tiled_rsvd.rs` checks the same tail bound on datagen spectra).
+pub fn rsvd_once(a: &TiledMatrix, k: usize, opts: &RsvdOpts) -> Svd {
+    with_threads_opt(opts.threads, || {
+        let (m, n) = a.shape();
+        let r = m.min(n);
+        let k = k.min(r);
+        let s = (k + opts.oversample).min(r);
+        let sl = (s + opts.oversample).min(m);
+        let omega = Matrix::gaussian(n, s, opts.seed);
+        // independent co-sketch stream: salt the seed like the op wrappers
+        let psi = Matrix::gaussian(m, sl, opts.seed ^ 0x0E0C_5EED);
+
+        let mut y = Matrix::zeros(m, s);
+        let mut w = Matrix::zeros(sl, n);
+        for i in 0..a.panel_count() {
+            // the single pass: each panel is loaded once and feeds both
+            // sketches before the next is touched
+            let (r0, r1) = a.panel_range(i);
+            let p = a.store.load(i);
+            let yp = matmul(&p, &omega);
+            for rr in 0..yp.rows() {
+                y.row_mut(r0 + rr).copy_from_slice(yp.row(rr));
+            }
+            let pp = psi.submatrix(r0, r1, 0, sl);
+            matmul_tn_acc(&pp, &p, &mut w);
+        }
+
+        let q = orthonormalize(&y);
+        let mq = matmul_tn(&psi, &q); // s_l × s, tall — well-posed lstsq
+        let b = lstsq_pinv(&mq, &w); // s × n
+        let sb = svd(&b);
+        let kk = k.min(sb.s.len());
+        let ub = sb.u.submatrix(0, sb.u.rows(), 0, kk);
+        Svd {
+            u: matmul(&q, &ub),
+            s: sb.s[..kk].to_vec(),
+            v: sb.v.submatrix(0, sb.v.rows(), 0, kk),
+        }
+    })
+}
+
+/// Minimum-norm least-squares solve `argmin_B ‖M·B − W‖` via the SVD
+/// pseudo-inverse of the small M (s_l × s): B = V·Σ⁺·Uᵀ·W. Singular values
+/// below a relative floor are dropped, not inverted.
+fn lstsq_pinv(m: &Matrix, w: &Matrix) -> Matrix {
+    let f = svd(m);
+    let tol = f.s.first().copied().unwrap_or(0.0) * 1e-12 * m.rows().max(m.cols()) as f64;
+    let mut x = matmul_tn(&f.u, w); // Σ-space rows
+    for i in 0..x.rows() {
+        let inv = if f.s[i] > tol { 1.0 / f.s[i] } else { 0.0 };
+        for v in x.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    matmul(&f.v, &x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rsvd::{rsvd, rsvd_values};
+
+    fn test_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+        crate::datagen_test_matrix(m, n, |i| 1.0 / ((i + 1) as f64).powf(1.5), seed)
+    }
+
+    #[test]
+    fn tiling_roundtrip_and_ranges() {
+        let a = Matrix::gaussian(23, 9, 1);
+        for tile in [1usize, 4, 7, 23, 40] {
+            let t = TiledMatrix::from_dense(&a, tile);
+            assert_eq!(t.shape(), (23, 9));
+            assert_eq!(t.to_dense(), a, "tile {tile}");
+            assert_eq!(t.panel_count(), 23usize.div_ceil(tile.min(23)));
+            let (last0, last1) = t.panel_range(t.panel_count() - 1);
+            assert_eq!(last1, 23);
+            assert!(last0 < last1);
+        }
+        // zero-row matrix is legal and empty
+        let z = TiledMatrix::from_dense(&Matrix::zeros(0, 5), 4);
+        assert_eq!(z.panel_count(), 0);
+        assert_eq!(z.to_dense(), Matrix::zeros(0, 5));
+    }
+
+    #[test]
+    fn products_bitwise_match_dense_across_tile_heights() {
+        let a = Matrix::gaussian(37, 21, 2);
+        let x = Matrix::gaussian(21, 5, 3);
+        let y = Matrix::gaussian(37, 5, 4);
+        let dense_apply = matmul(&a, &x);
+        let dense_apply_t = matmul_tn(&a, &y);
+        let dense_project = matmul_tn(&y, &a);
+        for tile in [1usize, 5, 8, 37] {
+            let t = TiledMatrix::from_dense(&a, tile);
+            assert_eq!(t.apply(&x), dense_apply, "apply tile {tile}");
+            assert_eq!(t.apply_t(&y), dense_apply_t, "apply_t tile {tile}");
+            assert_eq!(LinOp::project(&t, &y), dense_project, "project tile {tile}");
+        }
+    }
+
+    #[test]
+    fn disk_store_matches_memory_and_cleans_up() {
+        let a = Matrix::gaussian(19, 11, 5);
+        let mem = TiledMatrix::from_dense(&a, 6);
+        let disk = TiledMatrix::from_dense_spilled(&a, 6).unwrap();
+        assert_eq!(disk.store_kind(), "disk");
+        assert_eq!(disk.to_dense(), a, "exact bit round-trip through the file");
+        let x = Matrix::gaussian(11, 3, 6);
+        assert_eq!(disk.apply(&x), mem.apply(&x));
+        assert_eq!(disk.fingerprint(), mem.fingerprint(), "fingerprint is store-invariant");
+        assert!(disk == mem, "content equality is store-invariant");
+        // the scratch file disappears when the last clone drops
+        let before = scratch_files();
+        assert!(before >= 1, "spilled store keeps a scratch file while alive");
+        let clone = disk.clone();
+        drop(disk);
+        assert_eq!(scratch_files(), before, "clones share the file");
+        drop(clone);
+        assert!(scratch_files() < before, "scratch file removed on last drop");
+    }
+
+    fn scratch_files() -> usize {
+        let pid = std::process::id().to_string();
+        std::fs::read_dir(std::env::temp_dir())
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        let n = e.file_name().to_string_lossy().into_owned();
+                        n.starts_with("rsvd_tiled_") && n.contains(&pid)
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn fingerprint_semantics() {
+        let a = Matrix::gaussian(12, 8, 7);
+        let t1 = TiledMatrix::from_dense(&a, 3);
+        let t2 = TiledMatrix::from_dense(&a, 5);
+        assert_eq!(t1.fingerprint(), t2.fingerprint(), "tile-height invariant");
+        assert_ne!(t1.fingerprint(), a.fingerprint(), "salted away from dense");
+        let mut b = a.clone();
+        b[(0, 0)] += 1.0;
+        assert_ne!(t1.fingerprint(), TiledMatrix::from_dense(&b, 3).fingerprint());
+        // equality follows content, not tiling
+        assert!(t1 == t2);
+        assert!(t1 != TiledMatrix::from_dense(&b, 3));
+        assert!(t1 != TiledMatrix::from_dense(&Matrix::zeros(8, 12), 3), "shape mismatch");
+    }
+
+    #[test]
+    fn rsvd_over_tiled_is_bitwise_dense() {
+        let a = test_matrix(40, 28, 11);
+        let opts = RsvdOpts { seed: 3, ..Default::default() };
+        let dense = rsvd(&a, 5, &opts);
+        for tile in [1usize, 9, 16, 40] {
+            let t = TiledMatrix::from_dense(&a, tile);
+            let got = rsvd(&t, 5, &opts);
+            assert_eq!(got.s, dense.s, "tile {tile}");
+            assert_eq!(got.u, dense.u, "tile {tile}");
+            assert_eq!(got.v, dense.v, "tile {tile}");
+            assert_eq!(rsvd_values(&t, 5, &opts), dense.s, "values tile {tile}");
+        }
+    }
+
+    #[test]
+    fn rsvd_once_recovers_decaying_spectrum() {
+        // fast decay: the single-pass factorization should be ~exact
+        let a = crate::datagen_test_matrix(50, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 13);
+        let t = TiledMatrix::from_dense(&a, 13);
+        let k = 5;
+        let got = rsvd_once(&t, k, &RsvdOpts { seed: 9, ..Default::default() });
+        let exact = svd(&a);
+        assert_eq!(got.s.len(), k);
+        for i in 0..k {
+            assert!(
+                (got.s[i] - exact.s[i]).abs() < 1e-6 * exact.s[0],
+                "σ{i}: {} vs {}",
+                got.s[i],
+                exact.s[i]
+            );
+        }
+        // orthonormal left factor, consistent shapes
+        let utu = matmul_tn(&got.u, &got.u);
+        assert!(utu.max_diff(&Matrix::eye(k)) < 1e-8);
+        assert_eq!(got.v.shape(), (30, k));
+    }
+
+    #[test]
+    fn rsvd_once_single_panel_equals_multi_panel() {
+        // tile height changes the panel walk, not the accumulated sketches
+        let a = test_matrix(34, 22, 17);
+        let opts = RsvdOpts { seed: 21, ..Default::default() };
+        let whole = rsvd_once(&TiledMatrix::from_dense(&a, 34), 4, &opts);
+        for tile in [1usize, 7, 16] {
+            let got = rsvd_once(&TiledMatrix::from_dense(&a, tile), 4, &opts);
+            assert_eq!(got.s, whole.s, "tile {tile}");
+            assert_eq!(got.u, whole.u, "tile {tile}");
+            assert_eq!(got.v, whole.v, "tile {tile}");
+        }
+    }
+}

@@ -1,5 +1,5 @@
-//! Mini property-testing framework (proptest substitute — no external
-//! crates are available offline, so we built the substrate).
+//! Mini property-testing framework with shrinking (proptest substitute —
+//! no external crates are available offline, so we built the substrate).
 //!
 //! Usage:
 //! ```no_run
@@ -10,46 +10,99 @@
 //!     Ok(())
 //! });
 //! ```
-//! On failure the failing seed is printed; re-run a single case with
-//! `check_seed(seed, f)` to debug deterministically.
+//!
+//! Every draw records its raw *choice* (an offset into the drawn range).
+//! When a case fails, `check` re-runs it with systematically smaller
+//! choices — repeated halving toward the range start, then unit steps —
+//! keeping each reduction that still fails, and reports both the original
+//! and the **minimal trace**. Re-run a single case with `check_seed(seed,
+//! f)` (original RNG) or `check_replay(&choices, f)` (a shrunk choice
+//! list, printed on failure) to debug deterministically.
+//!
+//! Environment knobs (the CI property-tests job sets both):
+//! * `TESTKIT_CASES` — overrides the case count of every `check` call
+//!   (high-iteration scheduled runs vs the cheap PR gate).
+//! * `TESTKIT_FAILURE_DIR` — when set, each failure writes a replayable
+//!   artifact file (seed, traces, choice list) there before panicking.
 
 use crate::rng::{RngCore, SplitMix64};
 use std::ops::Range;
 
-/// Deterministic case generator.
+/// Deterministic case generator. Draws come from the seeded RNG in normal
+/// mode, or from a recorded choice list in replay mode (shrinking); both
+/// record the choices actually used.
 pub struct Gen {
     rng: SplitMix64,
+    /// when Some, draws replay this list (0 past the end) instead of the rng
+    replay: Option<Vec<u64>>,
+    /// raw choices consumed so far (the shrink substrate)
+    choices: Vec<u64>,
     /// human-readable trace of drawn values (shown on failure)
     trace: Vec<String>,
 }
 
 impl Gen {
     pub fn new(seed: u64) -> Self {
-        Self { rng: SplitMix64::new(seed), trace: Vec::new() }
+        Self { rng: SplitMix64::new(seed), replay: None, choices: Vec::new(), trace: Vec::new() }
+    }
+
+    /// Generator replaying a recorded choice list (exhausted → 0, i.e. the
+    /// start of whatever range is asked for).
+    pub fn replay(choices: &[u64]) -> Self {
+        Self {
+            rng: SplitMix64::new(0),
+            replay: Some(choices.to_vec()),
+            choices: Vec::new(),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Raw unbounded choice word.
+    fn raw(&mut self) -> u64 {
+        let v = match &self.replay {
+            Some(r) => r.get(self.choices.len()).copied().unwrap_or(0),
+            None => self.rng.next_u64(),
+        };
+        self.choices.push(v);
+        v
+    }
+
+    /// Raw choice in [0, span) — replayed values are clamped into range so
+    /// a shrunk list stays valid when earlier shrinks change later spans.
+    fn raw_below(&mut self, span: u64) -> u64 {
+        debug_assert!(span > 0);
+        let v = match &self.replay {
+            Some(r) => r.get(self.choices.len()).copied().unwrap_or(0).min(span - 1),
+            None => self.rng.next_below(span),
+        };
+        self.choices.push(v);
+        v
     }
 
     pub fn usize(&mut self, r: Range<usize>) -> usize {
         assert!(r.end > r.start, "empty range");
-        let v = r.start + self.rng.next_below((r.end - r.start) as u64) as usize;
+        let v = r.start + self.raw_below((r.end - r.start) as u64) as usize;
         self.trace.push(format!("usize({r:?})={v}"));
         v
     }
 
     pub fn u64(&mut self) -> u64 {
-        let v = self.rng.next_u64();
+        let v = self.raw();
         self.trace.push(format!("u64=0x{v:x}"));
         v
     }
 
-    /// Uniform f64 in the range.
+    /// Uniform f64 in the range (the choice is the 53-bit fraction, so
+    /// shrinking walks the value toward the range start).
     pub fn f64(&mut self, r: Range<f64>) -> f64 {
-        let v = r.start + (r.end - r.start) * self.rng.next_f64();
+        let frac = (self.raw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let v = r.start + (r.end - r.start) * frac;
         self.trace.push(format!("f64({r:?})={v:.6}"));
         v
     }
 
     pub fn bool(&mut self) -> bool {
-        let v = self.rng.next_u32() & 1 == 1;
+        let v = self.raw_below(2) == 1;
         self.trace.push(format!("bool={v}"));
         v
     }
@@ -88,18 +141,156 @@ pub fn assert_close(a: f64, b: f64, rtol: f64, what: &str) -> Result<(), String>
     }
 }
 
-/// Run `cases` random cases; panic with the seed and the generator trace of
-/// the first failure.
+/// Effective case count: `TESTKIT_CASES` env override when set to a
+/// positive integer, else the caller's default.
+fn effective_cases(default_cases: u64) -> u64 {
+    std::env::var("TESTKIT_CASES")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default_cases)
+}
+
+/// Best-effort message extraction from a caught panic payload.
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "panicked".into())
+}
+
+/// Run `f` on `g`, treating a panic inside the property as a failure
+/// (message extracted from the panic payload).
+fn run_case(
+    g: &mut Gen,
+    f: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(g))) {
+        Ok(r) => r,
+        Err(p) => Err(panic_text(p)),
+    }
+}
+
+/// One replay execution: `Some((message, trace, consumed choices))` when
+/// the property fails (an `Err` return or a panic inside `f`), `None` when
+/// it passes. The returned choice list is exactly what the run consumed —
+/// clamped into range and trimmed of any unused tail.
+fn failure_of(
+    choices: &[u64],
+    f: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> Option<(String, Vec<String>, Vec<u64>)> {
+    let mut g = Gen::replay(choices);
+    match run_case(&mut g, f) {
+        Ok(()) => None,
+        Err(msg) => Some((msg, g.trace, g.choices)),
+    }
+}
+
+/// Greedy shrink: for every choice position, repeatedly try halving the
+/// value (then unit decrements once halving overshoots), keeping each
+/// candidate that still fails. Control-flow changes are handled by replay
+/// clamping + zero-fill; the run budget bounds pathological cases.
+fn shrink(
+    start: Vec<u64>,
+    f: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> Option<(String, Vec<String>, Vec<u64>)> {
+    // the recorded choices must fail under replay too (they do unless the
+    // property reads ambient state); otherwise report the original only
+    let (mut msg, mut trace, mut best) = failure_of(&start, f)?;
+    let mut budget = 600usize;
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+        // index loop, not a range over a snapshot: a successful shrink can
+        // shorten `best` (fewer draws consumed on the new control path)
+        let mut i = 0;
+        while i < best.len() {
+            while i < best.len() && best[i] > 0 && budget > 0 {
+                budget -= 1;
+                let mut cand = best.clone();
+                // halve toward the range start; below 2 a halving step IS
+                // the unit step. If halving overshoots (passes), retry
+                // with a unit decrement before giving up on this slot.
+                cand[i] = best[i] / 2;
+                match failure_of(&cand, f) {
+                    Some((m, t, used)) => {
+                        msg = m;
+                        trace = t;
+                        best = used;
+                        improved = true;
+                        continue;
+                    }
+                    None => {
+                        if best[i] < 2 {
+                            break;
+                        }
+                    }
+                }
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                let mut cand = best.clone();
+                cand[i] = best[i] - 1;
+                match failure_of(&cand, f) {
+                    Some((m, t, used)) => {
+                        msg = m;
+                        trace = t;
+                        best = used;
+                        improved = true;
+                    }
+                    None => break,
+                }
+            }
+            i += 1;
+        }
+    }
+    Some((msg, trace, best))
+}
+
+/// When `TESTKIT_FAILURE_DIR` is set, persist a replayable failure record
+/// (CI uploads the directory as an artifact on failure). Best-effort: a
+/// write error never masks the property failure itself.
+fn write_failure_artifact(seed: u64, case: u64, body: &str) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let Ok(dir) = std::env::var("TESTKIT_FAILURE_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let _ = std::fs::create_dir_all(&dir);
+    // seeds depend only on the case index, so two properties failing at
+    // the same case would collide on a seed-only name — a process-wide
+    // counter keeps every record
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+    let path = std::path::Path::new(&dir).join(format!("case-{seed:016x}-{uniq}.txt"));
+    let _ = std::fs::write(path, format!("case {case}\nseed 0x{seed:x}\n{body}\n"));
+}
+
+/// Run `cases` random cases (or `TESTKIT_CASES`); on the first failure,
+/// shrink it and panic with the seed, the original trace, and the minimal
+/// trace plus its replayable choice list.
 pub fn check(cases: u64, f: impl Fn(&mut Gen) -> Result<(), String>) {
+    let cases = effective_cases(cases);
     // fixed base seed for reproducible CI; vary per-case
     for case in 0..cases {
         let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case + 1) ^ 0xD1F1;
         let mut g = Gen::new(seed);
-        if let Err(msg) = f(&mut g) {
-            panic!(
-                "property failed (case {case}, seed 0x{seed:x}): {msg}\n  trace: {}",
-                g.trace.join(", ")
+        // a panic inside the property counts as a failure too, so it gets
+        // the same seed report, shrinking, and artifact as an Err return
+        if let Err(msg) = run_case(&mut g, &f) {
+            let original = g.trace.join(", ");
+            let (min_msg, min_trace, min_choices) = match shrink(g.choices, &f) {
+                Some(x) => x,
+                None => (msg.clone(), g.trace.clone(), Vec::new()),
+            };
+            let minimal = min_trace.join(", ");
+            let body = format!(
+                "failed: {msg}\n  trace: {original}\nshrunk: {min_msg}\n  minimal trace: \
+                 {minimal}\n  replay choices: {min_choices:?}",
             );
+            write_failure_artifact(seed, case, &body);
+            panic!("property failed (case {case}, seed 0x{seed:x}): {body}");
         }
     }
 }
@@ -109,6 +300,15 @@ pub fn check_seed(seed: u64, f: impl Fn(&mut Gen) -> Result<(), String>) {
     let mut g = Gen::new(seed);
     if let Err(msg) = f(&mut g) {
         panic!("property failed (seed 0x{seed:x}): {msg}\n  trace: {}", g.trace.join(", "));
+    }
+}
+
+/// Re-run one case from a shrunk choice list (the `replay choices: [...]`
+/// printed on failure) — the minimal-counterexample debugging helper.
+pub fn check_replay(choices: &[u64], f: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen::replay(choices);
+    if let Err(msg) = f(&mut g) {
+        panic!("property failed (replay): {msg}\n  trace: {}", g.trace.join(", "));
     }
 }
 
@@ -142,5 +342,114 @@ mod tests {
     fn assert_close_tolerances() {
         assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
         assert!(assert_close(1.0, 1.1, 1e-9, "x").is_err());
+    }
+
+    #[test]
+    fn replay_reproduces_and_clamps() {
+        // a replayed generator re-draws the recorded values…
+        let mut g = Gen::new(42);
+        let a = g.usize(10..90);
+        let b = g.bool();
+        let x = g.f64(0.0..1.0);
+        let rec = g.choices.clone();
+        let mut r = Gen::replay(&rec);
+        assert_eq!(r.usize(10..90), a);
+        assert_eq!(r.bool(), b);
+        assert_eq!(r.f64(0.0..1.0), x);
+        // …clamps out-of-range choices instead of panicking…
+        let mut r = Gen::replay(&[1_000_000, 7]);
+        assert_eq!(r.usize(0..10), 9, "clamped to span");
+        // …and zero-fills past the end (range start)
+        assert_eq!(r.usize(3..8), 7, "second recorded choice, clamped to span 5");
+        assert_eq!(r.usize(5..9), 5, "exhausted replay draws the start");
+    }
+
+    #[test]
+    fn shrink_finds_the_boundary() {
+        // fails iff n ≥ 10: the minimal counterexample is exactly 10, and
+        // greedy halving + unit steps must land on it
+        let f = |g: &mut Gen| {
+            let n = g.usize(0..1000);
+            assert_that(n < 10, "n must stay small")
+        };
+        let mut g = Gen::new(3);
+        let mut n = g.usize(0..1000);
+        let mut tries = 3u64;
+        while n < 10 {
+            g = Gen::new(tries);
+            n = g.usize(0..1000);
+            tries += 1;
+        }
+        let (_msg, trace, choices) = shrink(g.choices.clone(), &f).expect("still fails on replay");
+        assert_eq!(choices, vec![10], "minimal failing choice");
+        assert_eq!(trace, vec!["usize(0..1000)=10".to_string()]);
+    }
+
+    #[test]
+    fn shrink_handles_control_flow_changes() {
+        // the second draw only happens on one branch; shrinking the first
+        // choice changes how many draws the property consumes
+        let f = |g: &mut Gen| {
+            let n = g.usize(0..100);
+            if n >= 5 {
+                let m = g.usize(0..100);
+                assert_that(n + m < 5, "big branch fails")?;
+            }
+            Ok(())
+        };
+        let mut g = Gen::new(1);
+        let mut failed = f(&mut g).is_err();
+        let mut seed = 1u64;
+        while !failed {
+            seed += 1;
+            g = Gen::new(seed);
+            failed = f(&mut g).is_err();
+        }
+        let (_msg, _trace, choices) = shrink(g.choices.clone(), &f).expect("replayable");
+        // minimal: n = 5 takes the failing branch with m shrunk to 0
+        assert_eq!(choices, vec![5, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal trace")]
+    fn check_reports_minimal_trace() {
+        check(10, |g| {
+            let n = g.usize(0..1 << 20);
+            assert_that(n < 17, "needs shrinking")
+        });
+    }
+
+    #[test]
+    fn check_replay_runs_clean_cases() {
+        check_replay(&[4], |g| {
+            let n = g.usize(0..10);
+            assert_that(n == 4, "replayed value")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "kaboom")]
+    fn check_reports_panicking_properties_with_seed_and_shrink() {
+        // a panic inside the property must flow through the same seed
+        // report + shrink pipeline as an Err return (the panic text lands
+        // in the "property failed" message)
+        check(3, |g| {
+            let _n = g.usize(0..100);
+            panic!("kaboom");
+        });
+    }
+
+    #[test]
+    fn shrink_captures_panics_as_failures() {
+        let f = |g: &mut Gen| {
+            let n = g.usize(0..50);
+            if n >= 3 {
+                panic!("boom at {n}");
+            }
+            Ok(())
+        };
+        let (msg, _trace, choices) = shrink(vec![40], &f).expect("panic counts as failure");
+        assert_eq!(choices, vec![3]);
+        assert!(msg.contains("boom at 3"), "{msg}");
     }
 }

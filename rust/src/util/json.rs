@@ -1,9 +1,16 @@
 //! Minimal JSON parser and writer — enough for `artifacts/manifest.json`,
-//! `configs/experiments.json`, the CI bench artifacts, and the CSR
-//! request payload codec (objects, arrays, strings, numbers, bools, null;
-//! UTF-8 passthrough, \u escapes decoded to chars).
+//! `configs/experiments.json`, the CI bench artifacts, and the request
+//! payload codecs (CSR sparse and dense matrices; objects, arrays,
+//! strings, numbers, bools, null; UTF-8 passthrough, \u escapes decoded
+//! to chars).
+//!
+//! Payload decoding is hostile-input safe: every structural invariant is
+//! re-checked and non-finite values are rejected (JSON itself cannot
+//! carry NaN/Inf, but a decoder fed a hand-built [`Json`] tree must error
+//! rather than construct a poisoned operator) — `tests/json_fuzz.rs`
+//! fuzzes both codecs round-trip and under mutation.
 
-use crate::linalg::Csr;
+use crate::linalg::{Csr, Matrix};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -137,21 +144,68 @@ pub fn csr_from_json(j: &Json) -> Result<Csr, String> {
             return Err(format!("unsupported sparse format {fmt_tag}"));
         }
     }
-    // strict integer dimensions (the lax `usize_field` would truncate
-    // 2.7 → 2 and saturate negatives — silently altered shapes)
-    let dim = |key: &str| -> Result<usize, String> {
-        j.get(key)
-            .and_then(|v| v.as_f64())
-            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
-            .map(|x| x as usize)
-            .ok_or_else(|| format!("missing/invalid non-negative integer field '{key}'"))
-    };
-    let rows = dim("rows")?;
-    let cols = dim("cols")?;
+    let rows = strict_dim(j, "rows")?;
+    let cols = strict_dim(j, "cols")?;
     let indptr = j.usize_arr_field("indptr")?;
     let indices = j.usize_arr_field("indices")?;
     let data = j.f64_arr_field("data")?;
+    // NaN/Inf payloads error instead of constructing a poisoned operator
+    // (a NaN would spread through every product of the sketch pipeline)
+    if let Some(bad) = data.iter().find(|x| !x.is_finite()) {
+        return Err(format!("non-finite value {bad} in 'data'"));
+    }
     Csr::new(rows, cols, indptr, indices, data)
+}
+
+/// Strict non-negative-integer object field shared by the payload
+/// decoders (the lax `usize_field` would truncate 2.7 → 2 and saturate
+/// negatives — silently altered shapes).
+fn strict_dim(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= u32::MAX as f64)
+        .map(|x| x as usize)
+        .ok_or_else(|| format!("missing/invalid non-negative integer field '{key}'"))
+}
+
+/// Encode a dense matrix as the wire object
+/// `{"format":"dense","rows":…,"cols":…,"data":[row-major…]}` — the dense
+/// request payload twin of [`csr_to_json`]. Shortest-roundtrip float
+/// formatting makes [`matrix_from_json`] ∘ [`matrix_to_json`] exact.
+pub fn matrix_to_json(m: &Matrix) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("format".to_string(), Json::Str("dense".into()));
+    obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
+    obj.insert(
+        "data".to_string(),
+        Json::Arr(m.as_slice().iter().map(|&x| Json::Num(x)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Decode a [`matrix_to_json`] object back into a dense matrix — integer
+/// dimensions, exact `rows·cols` length agreement, and finite values are
+/// all enforced (error, never panic, on hostile payloads).
+pub fn matrix_from_json(j: &Json) -> Result<Matrix, String> {
+    if let Some(fmt_tag) = j.get("format") {
+        if fmt_tag.as_str() != Some("dense") {
+            return Err(format!("unsupported dense format {fmt_tag}"));
+        }
+    }
+    let rows = strict_dim(j, "rows")?;
+    let cols = strict_dim(j, "cols")?;
+    let data = j.f64_arr_field("data")?;
+    let want = rows
+        .checked_mul(cols)
+        .ok_or_else(|| format!("shape {rows}x{cols} overflows"))?;
+    if data.len() != want {
+        return Err(format!("data length {} != rows*cols {}", data.len(), want));
+    }
+    if let Some(bad) = data.iter().find(|x| !x.is_finite()) {
+        return Err(format!("non-finite value {bad} in 'data'"));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
 }
 
 impl fmt::Display for Json {
@@ -475,6 +529,85 @@ mod tests {
             r#"{"rows":-1,"cols":1,"indptr":[0],"indices":[],"data":[]}"#,
         ] {
             assert!(csr_from_json(&Json::parse(s).unwrap()).is_err(), "{s}");
+        }
+        // a hand-built NaN payload errors instead of poisoning the operator
+        let mut bad = match csr_to_json(&Csr::from_coo(1, 1, &[(0, 0, 1.0)]).unwrap()) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad.insert("data".into(), Json::Arr(vec![Json::Num(f64::NAN)]));
+        let err = csr_from_json(&Json::Obj(bad)).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn dense_matrix_roundtrip_is_exact() {
+        let m = Matrix::gaussian(5, 7, 3);
+        let j = matrix_to_json(&m);
+        let back = matrix_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, m, "payload roundtrip must be exact");
+        assert_eq!(back.fingerprint(), m.fingerprint());
+        // empty shapes are legal
+        let z = Matrix::zeros(0, 4);
+        assert_eq!(matrix_from_json(&matrix_to_json(&z)).unwrap().shape(), (0, 4));
+    }
+
+    #[test]
+    fn dense_matrix_decode_rejects_malformed() {
+        let good = matrix_to_json(&Matrix::gaussian(2, 3, 1));
+        let mutate = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
+            let mut m = match good.clone() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            f(&mut m);
+            matrix_from_json(&Json::Obj(m))
+        };
+        // wrong format tag
+        assert!(mutate(&|m| {
+            m.insert("format".into(), Json::Str("csr".into()));
+        })
+        .is_err());
+        // length disagreement
+        assert!(mutate(&|m| {
+            m.insert("data".into(), Json::Arr(vec![Json::Num(1.0)]));
+        })
+        .is_err());
+        // fractional / negative / absurd dimensions
+        assert!(mutate(&|m| {
+            m.insert("rows".into(), Json::Num(2.5));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("cols".into(), Json::Num(-3.0));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("rows".into(), Json::Num(1e18));
+        })
+        .is_err());
+        // missing field
+        assert!(mutate(&|m| {
+            m.remove("data");
+        })
+        .is_err());
+        // non-finite values
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = mutate(&|m| {
+                m.insert(
+                    "data".into(),
+                    Json::Arr(vec![
+                        Json::Num(bad),
+                        Json::Num(0.0),
+                        Json::Num(0.0),
+                        Json::Num(0.0),
+                        Json::Num(0.0),
+                        Json::Num(0.0),
+                    ]),
+                );
+            })
+            .unwrap_err();
+            assert!(err.contains("non-finite"), "{err}");
         }
     }
 }

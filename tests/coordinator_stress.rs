@@ -1,0 +1,131 @@
+//! Coordinator stress: N client threads submitting a mixed
+//! dense/sparse/tiled workload against a 2-worker pool — no deadlock,
+//! every job answered, and every job's (possibly fused) result is
+//! bitwise-equal to resubmitting it solo on a fresh coordinator.
+
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::datagen::sparse::banded;
+use rsvd::linalg::{Matrix, TiledMatrix};
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLIENTS: usize = 6;
+const JOBS_PER_CLIENT: usize = 8;
+
+/// Deterministic mixed request stream: a small pool of shared payloads
+/// (so fusion actually engages) across all three payload kinds, plus a
+/// sprinkle of exact-method jobs to keep the routes heterogeneous.
+fn request(
+    id: usize,
+    dense: &[Matrix],
+    sparse: &rsvd::linalg::Csr,
+    tiled: &[TiledMatrix],
+) -> Request {
+    let k = 2 + id % 3;
+    let seed = (id % 5) as u64;
+    let want_vectors = id % 4 == 0;
+    match id % 7 {
+        0 | 1 => Request::Svd {
+            a: dense[id % dense.len()].clone(),
+            k,
+            method: Method::NativeRsvd,
+            want_vectors,
+            seed,
+        },
+        2 => Request::SvdSparse {
+            a: sparse.clone(),
+            k,
+            method: Method::NativeRsvd,
+            want_vectors,
+            seed,
+        },
+        3 | 4 => Request::SvdTiled {
+            a: tiled[id % tiled.len()].clone(),
+            k,
+            method: Method::NativeRsvd,
+            want_vectors,
+            seed,
+        },
+        5 => Request::Svd {
+            a: dense[0].clone(),
+            k,
+            method: Method::Lanczos,
+            want_vectors: false,
+            seed,
+        },
+        _ => Request::Pca {
+            x: dense[id % dense.len()].clone(),
+            k,
+            method: Method::NativeRsvd,
+            seed,
+        },
+    }
+}
+
+#[test]
+fn stress_mixed_burst_no_deadlock_all_answered_fusion_invisible() {
+    let dense = vec![
+        rsvd::datagen_test_matrix(48, 36, |i| 1.0 / (i + 1) as f64, 5),
+        rsvd::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 6),
+    ];
+    let sparse = banded(48, 36, 3, 7);
+    // two tilings of the SAME content — their jobs share a fuse key and
+    // must still answer bitwise like solo runs
+    let tiled = vec![
+        TiledMatrix::from_dense(&dense[0], 11),
+        TiledMatrix::from_dense(&dense[0], 48),
+    ];
+
+    let coord = Arc::new(Coordinator::start_host_only(CoordinatorCfg {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_millis(3),
+        ..Default::default()
+    }));
+
+    // concurrent burst from CLIENT threads; collect (id, outcome)
+    let mut results: Vec<(usize, rsvd::coordinator::Decomposition)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let dense = &dense;
+            let sparse = &sparse;
+            let tiled = &tiled;
+            handles.push(scope.spawn(move || {
+                let submitted: Vec<_> = (0..JOBS_PER_CLIENT)
+                    .map(|i| {
+                        let id = c * JOBS_PER_CLIENT + i;
+                        (id, coord.submit(request(id, dense, sparse, tiled)))
+                    })
+                    .collect();
+                submitted
+                    .into_iter()
+                    .map(|(id, h)| {
+                        let r = h.wait();
+                        (id, r.outcome.unwrap_or_else(|e| panic!("job {id} failed: {e}")))
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().expect("client thread"));
+        }
+    });
+    assert_eq!(results.len(), CLIENTS * JOBS_PER_CLIENT, "every job answered");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, (CLIENTS * JOBS_PER_CLIENT) as u64);
+    assert_eq!(snap.jobs_failed, 0);
+
+    // solo resubmission on a fresh single-worker coordinator: fused and
+    // pooled execution must be invisible in every result, bitwise
+    let solo = Coordinator::start_host_only(CoordinatorCfg::default());
+    for (id, got) in &results {
+        let r = solo.run(request(*id, &dense, &sparse, &tiled));
+        let want = r.outcome.expect("solo run ok");
+        assert_eq!(got.values, want.values, "job {id} values");
+        assert_eq!(got.u, want.u, "job {id} u");
+        assert_eq!(got.v, want.v, "job {id} v");
+        assert_eq!(got.method_used, want.method_used, "job {id} method");
+    }
+}

@@ -1,0 +1,161 @@
+//! Round-trip fuzz for the JSON payload codecs over `testkit`-generated
+//! inputs: `csr_to_json`/`csr_from_json` and the dense matrix codec must
+//! round-trip *exactly* (values, structure, fingerprints), and every
+//! mutated/malformed payload — corrupted `indptr`, NaN data, truncated
+//! wire bytes — must produce an error, never a panic.
+
+use rsvd::linalg::Csr;
+use rsvd::testkit::{self, Gen};
+use rsvd::util::json::{csr_from_json, csr_to_json, matrix_from_json, matrix_to_json, Json};
+use std::collections::BTreeMap;
+
+/// Random CSR via COO triplets (possibly empty, duplicate coordinates
+/// legal — `from_coo` sums them).
+fn gen_csr(g: &mut Gen) -> Csr {
+    let rows = g.usize(1..16);
+    let cols = g.usize(1..16);
+    let nnz = g.usize(0..40);
+    let trips: Vec<(usize, usize, f64)> = (0..nnz)
+        .map(|_| (g.usize(0..rows), g.usize(0..cols), g.f64(-8.0..8.0)))
+        .collect();
+    Csr::from_coo(rows, cols, &trips).expect("in-range triplets always build")
+}
+
+#[test]
+fn prop_csr_roundtrip_exact() {
+    testkit::check(150, |g: &mut Gen| {
+        let c = gen_csr(g);
+        let j = csr_to_json(&c);
+        // through the wire: serialize, reparse, decode
+        let wire = j.to_string();
+        let back = csr_from_json(
+            &Json::parse(&wire).map_err(|e| format!("reparse failed: {e}"))?,
+        )
+        .map_err(|e| format!("decode failed: {e}"))?;
+        testkit::assert_that(back == c, "CSR payload roundtrip must be exact")?;
+        testkit::assert_that(back.fingerprint() == c.fingerprint(), "fingerprint stable")
+    });
+}
+
+#[test]
+fn prop_dense_roundtrip_exact() {
+    testkit::check(150, |g: &mut Gen| {
+        let m = g.matrix(1..12, 1..12);
+        let wire = matrix_to_json(&m).to_string();
+        let back = matrix_from_json(
+            &Json::parse(&wire).map_err(|e| format!("reparse failed: {e}"))?,
+        )
+        .map_err(|e| format!("decode failed: {e}"))?;
+        testkit::assert_that(back == m, "dense payload roundtrip must be exact")?;
+        testkit::assert_that(back.fingerprint() == m.fingerprint(), "fingerprint stable")
+    });
+}
+
+/// Apply one random structural mutation to a payload object. Returns a
+/// human tag for the failure trace. Except for dropping the optional
+/// "format" tag, every mutation here produces an *invalid* payload, so
+/// decode must Err.
+fn corrupt(g: &mut Gen, obj: &mut BTreeMap<String, Json>, sparse: bool) -> String {
+    let keys: Vec<String> = obj.keys().cloned().collect();
+    match g.usize(0..6) {
+        0 => {
+            // the tag names the dropped key: only a missing "format" may
+            // decode — a tolerated missing "rows"/"data"/… must fail
+            let k = g.choose(&keys).clone();
+            obj.remove(&k);
+            return format!("drop field {k}");
+        }
+        1 => {
+            obj.insert("rows".into(), Json::Num(2.7));
+            "fractional rows".into()
+        }
+        2 => {
+            obj.insert("rows".into(), Json::Num(-1.0));
+            "negative rows".into()
+        }
+        3 => {
+            // poison one numeric array with a NaN (length mismatches are
+            // caught first when they apply — either way: Err, no panic)
+            let target = if sparse && g.bool() { "indptr" } else { "data" };
+            obj.insert(target.into(), Json::Arr(vec![Json::Num(f64::NAN)]));
+            "NaN payload".into()
+        }
+        4 => {
+            if sparse {
+                // early rows point past the stored entries — the hostile
+                // indptr Csr::new must reject without slicing
+                obj.insert(
+                    "indptr".into(),
+                    Json::Arr(vec![Json::Num(0.0), Json::Num(1e9)]),
+                );
+                "indptr pointing past nnz".into()
+            } else {
+                obj.insert("data".into(), Json::Arr(Vec::new()));
+                "dense data length mismatch".into()
+            }
+        }
+        _ => {
+            obj.insert("data".into(), Json::Str("zeros".into()));
+            "wrong type for data".into()
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_payloads_error_never_panic() {
+    testkit::check(200, |g: &mut Gen| {
+        let (mut obj, sparse) = if g.bool() {
+            match csr_to_json(&gen_csr(g)) {
+                Json::Obj(m) => (m, true),
+                _ => unreachable!(),
+            }
+        } else {
+            match matrix_to_json(&g.matrix(1..10, 1..10)) {
+                Json::Obj(m) => (m, false),
+                _ => unreachable!(),
+            }
+        };
+        let tag = corrupt(g, &mut obj, sparse);
+        let j = Json::Obj(obj);
+        // decoding runs under catch_unwind inside testkit's replay during
+        // shrinking, but here the contract itself is "Err, not panic" —
+        // assert it directly
+        let outcome = std::panic::catch_unwind(|| {
+            if sparse {
+                csr_from_json(&j).map(|_| ())
+            } else {
+                matrix_from_json(&j).map(|_| ())
+            }
+        });
+        match outcome {
+            Err(_) => Err(format!("decoder panicked on: {tag}")),
+            Ok(Ok(())) => {
+                // exactly one corruption is legal to accept: dropping the
+                // *optional* "format" tag. A tolerated missing required
+                // field ("rows", "data", "indptr", …) must fail here.
+                testkit::assert_that(tag == "drop field format", &format!("accepted: {tag}"))
+            }
+            Ok(Err(_)) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_truncated_wire_never_panics() {
+    testkit::check(150, |g: &mut Gen| {
+        let wire = if g.bool() {
+            csr_to_json(&gen_csr(g)).to_string()
+        } else {
+            matrix_to_json(&g.matrix(1..8, 1..8)).to_string()
+        };
+        // cut at a random byte (ASCII-only wire, so slicing is safe)
+        let cut = g.usize(0..wire.len());
+        let outcome = std::panic::catch_unwind(|| Json::parse(&wire[..cut]).map(|_| ()));
+        match outcome {
+            Err(_) => Err(format!("parser panicked at cut {cut}")),
+            // a strict prefix of a balanced object is never valid JSON
+            Ok(Ok(())) => Err(format!("truncated wire parsed as valid JSON at cut {cut}")),
+            Ok(Err(_)) => Ok(()),
+        }
+    });
+}

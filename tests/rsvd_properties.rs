@@ -1,0 +1,163 @@
+//! Property suite over the randomized-SVD pipeline: singular-value
+//! estimates vs *closed-form* spectra (`datagen::sparse::tridiag_toeplitz`
+//! and `datagen::spectrum`) must satisfy a Halko-style sandwich over
+//! randomized shapes / k / oversampling / power iterations drawn by
+//! `testkit::Gen` — 100 cases each under the fixed CI seed matrix (the
+//! scheduled property-tests job raises the count via `TESTKIT_CASES`).
+//!
+//! The sandwich (Weyl + the structural Rayleigh–Ritz inequality):
+//!   σ̂_i ≤ σ_i + ε           (projection can only shrink singular values)
+//!   σ_i − σ̂_i ≤ c_q · tail   (tail = ‖(σ_j)_{j ≥ s}‖₂, the energy the
+//!                             sketch was allowed to miss; c_q shrinks
+//!                             with power iterations)
+
+use rsvd::datagen::sparse::{tridiag_toeplitz, tridiag_toeplitz_spectrum};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::linalg::TiledMatrix;
+use rsvd::testkit::{self, Gen};
+
+/// ℓ₂ tail energy of a descending spectrum from index `s` on.
+fn tail_energy(sigma: &[f64], s: usize) -> f64 {
+    sigma[s.min(sigma.len())..].iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// The shared sandwich check for k estimated values against a closed-form
+/// spectrum, with a tail floor at sketch width s and a q-dependent factor.
+fn check_sandwich(
+    got: &[f64],
+    exact: &[f64],
+    k: usize,
+    s: usize,
+    q: usize,
+) -> Result<(), String> {
+    testkit::assert_that(got.len() == k, "k values returned")?;
+    let top = exact[0].max(1e-300);
+    for w in got.windows(2) {
+        testkit::assert_that(w[0] >= w[1] - 1e-12 * top, "descending order")?;
+    }
+    let c_q = if q == 0 { 20.0 } else { 8.0 };
+    let tail = tail_energy(exact, s);
+    for i in 0..k {
+        testkit::assert_that(
+            got[i] <= exact[i] + 1e-7 * top,
+            &format!("upper: σ̂{i}={} > σ{i}={}", got[i], exact[i]),
+        )?;
+        testkit::assert_that(
+            exact[i] - got[i] <= c_q * tail + 1e-7 * top,
+            &format!(
+                "tail bound: σ{i}={} − σ̂{i}={} exceeds {c_q}·{tail}",
+                exact[i], got[i]
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_tridiag_toeplitz_spectrum_sandwich() {
+    testkit::check(100, |g: &mut Gen| {
+        let n = g.usize(10..40);
+        let diag = g.f64(0.5..3.0);
+        let off = g.f64(-1.5..1.5);
+        let k = g.usize(1..6);
+        let p = g.usize(4..12);
+        let q = g.usize(0..3);
+        let a = tridiag_toeplitz(n, diag, off);
+        let exact = tridiag_toeplitz_spectrum(n, diag, off);
+        let opts =
+            RsvdOpts { oversample: p, power_iters: q, seed: g.u64(), ..Default::default() };
+        let got = rsvd_values(&a, k, &opts);
+        let s = (k + p).min(n);
+        check_sandwich(&got, &exact, k, s, q)?;
+        // when the sketch spans the whole space (s = n) the range finder
+        // is exact, not just bounded: every estimate hits the closed form
+        if k + p >= n {
+            for i in 0..k {
+                testkit::assert_close(got[i], exact[i], 1e-7, &format!("full-width σ{i}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decay_spectrum_sandwich() {
+    testkit::check(100, |g: &mut Gen| {
+        let n = g.usize(15..31);
+        let m = n + g.usize(0..40);
+        let decay = match g.usize(0..3) {
+            0 => Decay::Fast,
+            1 => Decay::Sharp { beta: g.f64(5.0..15.0) },
+            _ => Decay::Slow,
+        };
+        let k = g.usize(2..8);
+        let p = g.usize(5..12);
+        let q = g.usize(0..3);
+        let a = spectrum_matrix(m, n, decay, g.u64());
+        let exact: Vec<f64> = (0..n).map(|i| decay.sigma(i)).collect();
+        let opts =
+            RsvdOpts { oversample: p, power_iters: q, seed: g.u64(), ..Default::default() };
+        let got = rsvd_values(&a, k, &opts);
+        check_sandwich(&got, &exact, k, (k + p).min(n), q)
+    });
+}
+
+#[test]
+fn prop_tiled_backend_is_bitwise_dense() {
+    // the tentpole contract as a property: any data, any tile height, any
+    // (k, seed) — the tiled pipeline reproduces the dense pipeline's bits
+    testkit::check(60, |g: &mut Gen| {
+        let a = g.matrix(1..40, 1..40);
+        let tile = g.usize(1..a.rows() + 1);
+        let k = g.usize(1..6);
+        let opts = RsvdOpts { seed: g.u64(), ..Default::default() };
+        let dense = rsvd_values(&a, k, &opts);
+        let tiled = rsvd_values(&TiledMatrix::from_dense(&a, tile), k, &opts);
+        testkit::assert_that(
+            dense == tiled,
+            &format!("tiled (tile={tile}) diverged: {tiled:?} vs {dense:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_tiled_fingerprint_and_equality_are_tiling_invariant() {
+    testkit::check(60, |g: &mut Gen| {
+        let a = g.matrix(1..30, 1..30);
+        let t1 = g.usize(1..a.rows() + 1);
+        let t2 = g.usize(1..a.rows() + 1);
+        let x = TiledMatrix::from_dense(&a, t1);
+        let y = TiledMatrix::from_dense(&a, t2);
+        testkit::assert_that(x.fingerprint() == y.fingerprint(), "fingerprint invariant")?;
+        testkit::assert_that(x == y, "content equality invariant")?;
+        testkit::assert_that(x.fingerprint() != a.fingerprint(), "salted vs dense")?;
+        // any single-bit content change breaks both
+        let mut b = a.clone();
+        let i = g.usize(0..b.rows());
+        let j = g.usize(0..b.cols());
+        b[(i, j)] = -(b[(i, j)] + 1.0);
+        let z = TiledMatrix::from_dense(&b, t1);
+        testkit::assert_that(z.fingerprint() != x.fingerprint(), "content change → new fp")?;
+        testkit::assert_that(z != x, "content change → unequal")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shrunk_failure_is_replayable() {
+    // meta-property: a failing case's shrunk choice list reproduces the
+    // failure through check_replay — the debugging loop the shrinker
+    // promises. (Uses the Matrix generator so the property consumes the
+    // same draw kinds the real suites do.)
+    let prop = |g: &mut Gen| {
+        let a = g.matrix(1..10, 1..10);
+        testkit::assert_that(a.rows() + a.cols() < 16, "big matrices fail")
+    };
+    // find the minimal failure by hand: rows + cols >= 16 ⇒ rows=9, cols=7
+    // is one failing assignment; replaying it must still fail
+    let err = std::panic::catch_unwind(|| {
+        testkit::check_replay(&[8, 6, 0], prop) // usize(1..10)=9, usize(1..10)=7
+    });
+    assert!(err.is_err(), "replayed counterexample must still fail");
+}
