@@ -1,0 +1,135 @@
+//! Adaptive-rank rSVD bench: tolerance-driven rank discovery
+//! (`linalg::adaptive`) vs the fixed-rank pipeline *given* the discovered
+//! rank — the price of not knowing k in advance — plus the fused
+//! mixed-tolerance batch vs sequential solo solves (the growth sweep the
+//! coordinator shares across same-matrix adaptive jobs).
+//!
+//! ```sh
+//! cargo bench --bench adaptive -- [--repeats 3]
+//! cargo bench --bench adaptive -- --smoke   # fast CI mode → BENCH_adaptive.json
+//! ```
+//!
+//! `--smoke` writes `BENCH_adaptive.json` (jobs/s per tolerance + the
+//! fused-batch throughput), uploaded by CI in the shared `bench-json`
+//! artifact and guarded by the bench-guard job. Cargo runs bench binaries
+//! with CWD = the package root, so the file lands at
+//! `rust/BENCH_adaptive.json`.
+
+use rsvd::bench_harness::{fmt_secs, save_json, time_n, Table};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::adaptive::{rsvd_adaptive, rsvd_adaptive_batch, AdaptiveJob, AdaptiveOpts};
+use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let repeats = args.get_usize("repeats", if smoke { 2 } else { 3 });
+    bench_adaptive(smoke, repeats);
+}
+
+/// One workload row: adaptive solve at `tol`, the fixed-rank pipeline at
+/// the rank it discovered, and a fused 4-job mixed-tolerance batch, as a
+/// JSON object for the CI artifact.
+fn run_case(table: &mut Table, m: usize, n: usize, tol: f64, repeats: usize, seed: u64) -> Json {
+    let a = spectrum_matrix(m, n, Decay::Fast, seed);
+    let opts = AdaptiveOpts { seed: seed.wrapping_add(1), ..Default::default() };
+    let probe = rsvd_adaptive(&a, tol, &opts);
+    let rank = probe.rank();
+
+    let t_ad = time_n(repeats, || {
+        let _ = rsvd_adaptive(&a, tol, &opts);
+    });
+    // the fixed-rank comparator gets the answer for free: same rank, no
+    // discovery, q = 0 (the adaptive finder draws no power iterations)
+    let fopts = RsvdOpts { seed: seed.wrapping_add(1), power_iters: 0, ..Default::default() };
+    let t_fix = time_n(repeats, || {
+        let _ = rsvd_values(&a, rank.max(1), &fopts);
+    });
+    // fused mixed-tolerance batch (4 jobs sharing the growth sweep) vs the
+    // same four solved one by one
+    let jobs: Vec<AdaptiveJob> = (0..4)
+        .map(|i| AdaptiveJob {
+            tol: tol * (1 + i) as f64,
+            block: opts.block,
+            max_rank: 0,
+            seed: seed.wrapping_add(2 + i),
+        })
+        .collect();
+    let t_fused = time_n(repeats, || {
+        let _ = rsvd_adaptive_batch(&a, &jobs, true, None);
+    });
+    let t_solo = time_n(repeats, || {
+        for j in &jobs {
+            let o =
+                AdaptiveOpts { block: j.block, max_rank: j.max_rank, seed: j.seed, threads: None };
+            let _ = rsvd_adaptive(&a, j.tol, &o);
+        }
+    });
+
+    table.row(vec![
+        format!("{m}x{n}"),
+        format!("{tol:.0e}"),
+        format!("{rank}"),
+        format!("{} / {}", fmt_secs(t_ad.mean_s), fmt_secs(t_fix.mean_s)),
+        format!("{:.2}x", t_ad.mean_s / t_fix.mean_s),
+        format!("{} / {}", fmt_secs(t_fused.mean_s), fmt_secs(t_solo.mean_s)),
+        format!("{:.2}x", t_solo.mean_s / t_fused.mean_s),
+    ]);
+
+    let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
+    let mut row = BTreeMap::new();
+    row.insert("m".to_string(), Json::Num(m as f64));
+    row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("tol".to_string(), Json::Num(tol));
+    row.insert("discovered_rank".to_string(), Json::Num(rank as f64));
+    row.insert("adaptive_jobs_per_s".to_string(), Json::Num(per_s(t_ad.mean_s)));
+    row.insert("fixed_rank_jobs_per_s".to_string(), Json::Num(per_s(t_fix.mean_s)));
+    row.insert("fused_adaptive_batches_per_s".to_string(), Json::Num(per_s(t_fused.mean_s)));
+    row.insert("solo_adaptive_batches_per_s".to_string(), Json::Num(per_s(t_solo.mean_s)));
+    row.insert(
+        "fused_vs_solo_speedup".to_string(),
+        Json::Num(t_solo.mean_s / t_fused.mean_s),
+    );
+    Json::Obj(row)
+}
+
+fn bench_adaptive(smoke: bool, repeats: usize) {
+    let mut table = Table::new(
+        "tolerance-driven adaptive-rank rSVD",
+        &[
+            "shape",
+            "tol",
+            "rank",
+            "adaptive / fixed-k",
+            "overhead",
+            "fused / solo x4",
+            "fuse speedup",
+        ],
+    );
+    let cases: &[(usize, usize, f64)] = if smoke {
+        &[(800, 500, 0.05), (1600, 600, 0.02)]
+    } else {
+        &[(800, 500, 0.05), (1600, 600, 0.02), (3200, 1200, 0.02), (3200, 1200, 0.005)]
+    };
+    let mut rows = Vec::new();
+    for (i, &(m, n, tol)) in cases.iter().enumerate() {
+        rows.push(run_case(&mut table, m, n, tol, repeats, 53 + i as u64));
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("adaptive");
+        return;
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("adaptive".into()));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert(
+        "threads".to_string(),
+        Json::Num(rsvd::linalg::threading::available_threads() as f64),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    save_json("BENCH_adaptive.json", &Json::Obj(doc));
+}

@@ -8,7 +8,7 @@
 //! make artifacts && cargo run --release --example serve -- [--jobs 48] [--clients 4]
 //! ```
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Operand, Request};
 use rsvd::datagen::{spectrum_matrix, synthetic_faces, Decay};
 use rsvd::experiments;
 use rsvd::linalg::svd_gesvd::svd;
@@ -55,6 +55,33 @@ fn main() {
                 payloads[c].push((
                     None,
                     Request::Pca { x, k: 8, method: Method::Auto, seed: id as u64 },
+                ));
+            } else if id % 9 == 2 {
+                // adaptive leg of the mix: tolerance-driven rank discovery
+                // over fast-decay payloads, alternating dense and tiled
+                // operands through the same queue. The returned rank is
+                // data-dependent. These jobs are reported, not gated at
+                // 1e-6: the finder draws no power iterations, so
+                // mid-spectrum values are accurate to the *tolerance*
+                // contract (pinned in tests/adaptive_rsvd.rs), not to the
+                // fixed-rank pipeline's q = 2 precision.
+                let a = spectrum_matrix(m, n, Decay::Fast, id as u64);
+                let operand = if id % 2 == 0 {
+                    Operand::Dense(a)
+                } else {
+                    Operand::Tiled(rsvd::linalg::TiledMatrix::from_dense(&a, 96))
+                };
+                payloads[c].push((
+                    None,
+                    Request::SvdAdaptive {
+                        a: operand,
+                        tol: 0.05,
+                        block: 8,
+                        max_rank: 48,
+                        method: Method::Auto,
+                        want_vectors: false,
+                        seed: id as u64,
+                    },
                 ));
             } else if id % 7 == 3 {
                 // sparse leg of the mix: power-law-degree CSR payloads

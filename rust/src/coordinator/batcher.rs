@@ -31,17 +31,20 @@ pub fn route_key(route: &Route) -> String {
 }
 
 /// Whether a routed job is a candidate for fused batch execution (a host
-/// native-rsvd SVD — dense, sparse, or tiled). The dispatcher uses this to
-/// skip fingerprint hashing entirely in drain cycles with fewer than two
-/// candidates — a lone job can never fuse, so it should not pay the
-/// O(payload) content hash (tiled payloads cache their fingerprint at
-/// construction, but the rule stays uniform).
+/// native-rsvd SVD — dense, sparse, tiled, or adaptive). The dispatcher
+/// uses this to skip fingerprint hashing entirely in drain cycles with
+/// fewer than two candidates — a lone job can never fuse, so it should not
+/// pay the O(payload) content hash (tiled payloads cache their fingerprint
+/// at construction, but the rule stays uniform).
 pub fn is_fusable(req: &Request, route: &Route) -> bool {
     matches!(
         (route, req),
         (
             Route::Host { method: Method::NativeRsvd },
-            Request::Svd { .. } | Request::SvdSparse { .. } | Request::SvdTiled { .. }
+            Request::Svd { .. }
+                | Request::SvdSparse { .. }
+                | Request::SvdTiled { .. }
+                | Request::SvdAdaptive { .. }
         )
     )
 }
@@ -87,6 +90,30 @@ pub fn fuse_key(req: &Request, route: &Route) -> String {
                     a.fingerprint()
                 );
             }
+            // Adaptive jobs key on (payload kind, fingerprint, shape,
+            // flavor) but NOT on tolerance/block/cap/seed: same-operator
+            // adaptive jobs with mixed tolerances legally share one growth
+            // sweep (each job's columns stop at its own tolerance — the
+            // sweep survives to the widest living one), and no power-iter
+            // component exists because the finder draws fresh probes
+            // instead of powering. The `ad…` prefixes keep adaptive jobs
+            // structurally apart from fixed-rank jobs over the same data —
+            // the pipelines differ, so the fused executor must never see a
+            // mix.
+            Request::SvdAdaptive { a, want_vectors, .. } => {
+                use crate::coordinator::job::Operand;
+                let (m, n) = a.shape();
+                let flavor = if *want_vectors { "uv" } else { "vals" };
+                let kind = match a {
+                    Operand::Dense(_) => "adfp",
+                    Operand::Sparse(_) => "adspfp",
+                    Operand::Tiled(_) => "adtlfp",
+                };
+                return format!(
+                    "host:native_rsvd:{kind}{:016x}:{m}x{n}:{flavor}",
+                    a.fingerprint()
+                );
+            }
             Request::Pca { .. } => {}
         }
     }
@@ -100,6 +127,9 @@ pub fn is_fused_key(key: &str) -> bool {
     key.starts_with("host:native_rsvd:fp")
         || key.starts_with("host:native_rsvd:spfp")
         || key.starts_with("host:native_rsvd:tlfp")
+        || key.starts_with("host:native_rsvd:adfp")
+        || key.starts_with("host:native_rsvd:adspfp")
+        || key.starts_with("host:native_rsvd:adtlfp")
 }
 
 /// Group `keys[i]` (the route key of job i) into batches of ≤ `max_batch`,
@@ -263,6 +293,63 @@ mod tests {
         let dense_key = fuse_key(&dense, &route);
         assert!(dense_key.starts_with("host:native_rsvd:fp"), "{dense_key}");
         assert_ne!(dense_key, base);
+    }
+
+    #[test]
+    fn adaptive_fuse_key_shares_sweeps_but_never_mixes_pipelines() {
+        use crate::coordinator::job::Operand;
+        use crate::linalg::{Matrix, TiledMatrix};
+        let route = Route::Host { method: Method::NativeRsvd };
+        let d = Matrix::gaussian(8, 6, 1);
+        let req = |a: Operand, tol: f64, vecs: bool| Request::SvdAdaptive {
+            a,
+            tol,
+            block: 4,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: vecs,
+            seed: 1,
+        };
+        let base = fuse_key(&req(Operand::Dense(d.clone()), 0.1, false), &route);
+        assert!(base.starts_with("host:native_rsvd:adfp"), "{base}");
+        assert!(is_fused_key(&base));
+        // mixed tolerances / blocks / seeds share the growth sweep
+        let mut other = req(Operand::Dense(d.clone()), 0.001, false);
+        if let Request::SvdAdaptive { block, seed, max_rank, .. } = &mut other {
+            *block = 9;
+            *seed = 42;
+            *max_rank = 5;
+        }
+        assert_eq!(fuse_key(&other, &route), base);
+        // flavor and content changes split the key
+        assert_ne!(fuse_key(&req(Operand::Dense(d.clone()), 0.1, true), &route), base);
+        let d2 = Matrix::gaussian(8, 6, 2);
+        assert_ne!(fuse_key(&req(Operand::Dense(d2), 0.1, false), &route), base);
+        // an adaptive job never keys with the fixed-rank job over the same
+        // matrix — different pipelines
+        let fixed = Request::Svd {
+            a: d.clone(),
+            k: 3,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        assert_ne!(fuse_key(&fixed, &route), base);
+        // per-backend prefixes, all fused keys
+        let t = Operand::Tiled(TiledMatrix::from_dense(&d, 3));
+        let tk = fuse_key(&req(t, 0.1, false), &route);
+        assert!(tk.starts_with("host:native_rsvd:adtlfp"), "{tk}");
+        assert!(is_fused_key(&tk));
+        use crate::linalg::Csr;
+        let sp = Operand::Sparse(Csr::from_coo(8, 6, &[(0, 0, 1.0)]).unwrap());
+        let sk = fuse_key(&req(sp, 0.1, false), &route);
+        assert!(sk.starts_with("host:native_rsvd:adspfp"), "{sk}");
+        assert!(is_fused_key(&sk));
+        assert_ne!(tk, base);
+        assert_ne!(sk, base);
+        // non-fusable routes keep the coarse key
+        let gesvd = Route::Host { method: Method::Gesvd };
+        assert_eq!(fuse_key(&req(Operand::Dense(d), 0.1, false), &gesvd), "host:gesvd");
     }
 
     /// Property: planning over fusion-aware keys never groups jobs with

@@ -1,8 +1,9 @@
 //! Job execution: run a routed request on the device engine or a host
 //! solver and produce a `Decomposition`.
 
-use super::job::{Decomposition, Method, Request};
+use super::job::{Decomposition, Method, Operand, Request};
 use super::router::Route;
+use crate::linalg::adaptive::{self, AdaptiveJob};
 use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
 use crate::linalg::{
     eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, Matrix, TiledMatrix,
@@ -44,6 +45,12 @@ pub fn try_execute_fused(
 ) -> Option<Vec<Result<Decomposition, String>>> {
     if reqs.len() < 2 || !matches!(route, Route::Host { method: Method::NativeRsvd }) {
         return None;
+    }
+    // Adaptive jobs run a different pipeline (incremental growth sweep,
+    // not the fixed-width sketch) — they fuse with each other, never with
+    // fixed-rank jobs, even over the same payload.
+    if reqs.iter().any(|r| matches!(r, Request::SvdAdaptive { .. })) {
+        return try_execute_fused_adaptive(reqs);
     }
     enum Payload<'a> {
         Dense(&'a Matrix),
@@ -97,6 +104,55 @@ pub fn try_execute_fused(
     })
 }
 
+/// Fused execution of an all-adaptive batch over one shared payload: the
+/// per-round probe blocks of every job stack into one wide `apply`, jobs
+/// drop out of the sweep as their tolerances are met, and each result is
+/// bitwise identical to its solo [`execute`] (see
+/// [`adaptive::rsvd_adaptive_batch`]). Returns `None` when the batch does
+/// not qualify — mixed payloads, mixed flavors, or a stray non-adaptive
+/// request (the batcher's `ad…` fuse keys make that structurally
+/// impossible, but the re-check stays cheap insurance).
+fn try_execute_fused_adaptive(reqs: &[&Request]) -> Option<Vec<Result<Decomposition, String>>> {
+    let mut jobs = Vec::with_capacity(reqs.len());
+    let mut shared: Option<(&Operand, bool)> = None;
+    for r in reqs {
+        let Request::SvdAdaptive { a, tol, block, max_rank, want_vectors, seed, .. } = r else {
+            return None;
+        };
+        // an invalid tolerance must not panic the shared sweep and fail
+        // every healthy neighbor — fall back to per-job execution, where
+        // the solo path turns it into a clean per-job error
+        if !tol.is_finite() || *tol < 0.0 {
+            return None;
+        }
+        match &shared {
+            None => shared = Some((a, *want_vectors)),
+            Some((first, fv)) => {
+                if *fv != *want_vectors || *first != a {
+                    return None;
+                }
+            }
+        }
+        jobs.push(AdaptiveJob { tol: *tol, block: *block, max_rank: *max_rank, seed: *seed });
+    }
+    let (a, want_vectors) = shared?;
+    // threads stay ambient, exactly like the fixed-rank fused path
+    let results = adaptive::rsvd_adaptive_batch(a.as_linop(), &jobs, want_vectors, None);
+    Some(results.into_iter().map(|r| Ok(decomp_from_adaptive(r, want_vectors))).collect())
+}
+
+/// Shape an adaptive result into the reply envelope — the reported value
+/// count *is* the discovered rank.
+fn decomp_from_adaptive(r: adaptive::AdaptiveSvd, want_vectors: bool) -> Decomposition {
+    Decomposition {
+        values: r.svd.s,
+        u: want_vectors.then_some(r.svd.u),
+        v: want_vectors.then_some(r.svd.v),
+        method_used: "native_rsvd",
+        bucket: None,
+    }
+}
+
 /// The shared fused finish over any operator backend: one wide-sketch
 /// batch solve, one `Decomposition` per job.
 fn run_fused<A: crate::linalg::LinOp + ?Sized>(
@@ -145,10 +201,12 @@ fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decompos
         .ok_or_else(|| format!("artifact {artifact} not in manifest"))?
         .clone();
     match req {
-        // the router never sends sparse/tiled payloads to a device artifact
-        // (buckets take dense literals) — fail loudly if one slips through
+        // the router never sends sparse/tiled/adaptive payloads to a device
+        // artifact (buckets take dense literals at a fixed sketch width) —
+        // fail loudly if one slips through
         Request::SvdSparse { .. } => Err("sparse requests have no device artifacts".into()),
         Request::SvdTiled { .. } => Err("tiled requests have no device artifacts".into()),
+        Request::SvdAdaptive { .. } => Err("adaptive requests have no device artifacts".into()),
         Request::Svd { a, k, want_vectors, seed, .. } => {
             let out = engine
                 .run_rsvd(&spec, a, split_seed(*seed))
@@ -202,8 +260,61 @@ fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
         Request::SvdTiled { a, k, want_vectors, seed, .. } => {
             host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
         }
+        Request::SvdAdaptive { a, tol, block, max_rank, want_vectors, seed, .. } => {
+            host_adaptive_svd(a, *tol, *block, *max_rank, method, *want_vectors, *seed)
+        }
         Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
     }
+}
+
+/// Tolerance-driven SVD on the host. The sketch-pipeline methods run the
+/// blocked adaptive range finder over the payload's operator (any backend,
+/// never densified); an explicitly requested exact solver goes through the
+/// shared [`host_operator_svd`] densify fallback at the rank cap, then the
+/// full spectrum is trimmed with the same σ > tol/2 rule the adaptive
+/// finish applies — so the reported rank is tolerance-driven either way.
+fn host_adaptive_svd(
+    a: &Operand,
+    tol: f64,
+    block: usize,
+    max_rank: usize,
+    method: Method,
+    want_vectors: bool,
+    seed: u64,
+) -> Result<Decomposition, String> {
+    if !tol.is_finite() || tol < 0.0 {
+        return Err(format!("adaptive tol must be finite and >= 0, got {tol}"));
+    }
+    match method {
+        Method::NativeRsvd | Method::Auto | Method::Device => {
+            // batch-of-one with the flavor threaded through, so a
+            // values-only job never assembles the U/V factors
+            let job = AdaptiveJob { tol, block, max_rank, seed };
+            let r = adaptive::rsvd_adaptive_batch(a.as_linop(), &[job], want_vectors, None)
+                .pop()
+                .expect("one job in, one out");
+            Ok(decomp_from_adaptive(r, want_vectors))
+        }
+        exact => {
+            let (m, n) = a.shape();
+            let cap = if max_rank == 0 { m.min(n) } else { max_rank.min(m.min(n)) };
+            let d =
+                host_operator_svd(a.as_linop(), || a.to_dense(), cap, exact, want_vectors, seed)?;
+            Ok(trim_by_tol(d, tol))
+        }
+    }
+}
+
+/// Truncate a decomposition at the adaptive trim rule (σ > tol/2): the
+/// spectral error the dropped tail introduces is ≤ tol/2 ≤ tol, so an
+/// exact solver's answer meets the same contract the adaptive finder
+/// promises.
+fn trim_by_tol(mut d: Decomposition, tol: f64) -> Decomposition {
+    let k = d.values.iter().take_while(|&&x| x > tol * 0.5).count();
+    d.values.truncate(k);
+    d.u = d.u.map(|u| u.submatrix(0, u.rows(), 0, k.min(u.cols())));
+    d.v = d.v.map(|v| v.submatrix(0, v.rows(), 0, k.min(v.cols())));
+    d
 }
 
 /// Operator-backed SVD on the host — the shared body behind the sparse
@@ -665,6 +776,161 @@ mod tests {
         };
         assert!(try_execute_fused(&[&rt, &ro], &route).is_none());
         assert!(try_execute_fused(&[&rt, &rt], &route).is_some());
+    }
+
+    #[test]
+    fn adaptive_host_path_over_every_backend_is_bitwise_one_solve() {
+        // the adaptive pipeline only touches A through LinOp, so all three
+        // backends of the same data return the same bits (CSR products are
+        // 0-ULP against the densified twin, tiled is bitwise by contract)
+        let d = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 29);
+        let mut trips = Vec::new();
+        for i in 0..40 {
+            for j in 0..30 {
+                trips.push((i, j, d[(i, j)]));
+            }
+        }
+        let sp = Csr::from_coo(40, 30, &trips).unwrap();
+        let t = TiledMatrix::from_dense(&d, 7);
+        let req = |a: Operand| Request::SvdAdaptive {
+            a,
+            tol: 1e-2,
+            block: 8,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: true,
+            seed: 5,
+        };
+        let dense = run_host(&req(Operand::Dense(d.clone())), Method::NativeRsvd).unwrap();
+        assert_eq!(dense.method_used, "native_rsvd");
+        assert!(!dense.values.is_empty() && dense.values.len() < 30, "rank is discovered");
+        for a in [Operand::Sparse(sp), Operand::Tiled(t)] {
+            let got = run_host(&req(a), Method::NativeRsvd).unwrap();
+            assert_eq!(got.values, dense.values);
+            assert_eq!(got.u, dense.u);
+            assert_eq!(got.v, dense.v);
+        }
+    }
+
+    #[test]
+    fn adaptive_exact_fallback_densifies_and_trims() {
+        let d = crate::datagen_test_matrix(30, 20, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 31);
+        let tol = 1e-2;
+        let req = Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol,
+            block: 4,
+            max_rank: 0,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 3,
+        };
+        let got = run_host(&req, Method::Gesvd).unwrap();
+        assert_eq!(got.method_used, "gesvd");
+        let exact = svd_gesvd::svd(&d);
+        // trimmed exactly at σ > tol/2, values match the exact solver
+        let want = exact.s.iter().take_while(|&&x| x > tol * 0.5).count();
+        assert_eq!(got.values.len(), want);
+        assert!(want < 20, "trim must bite on this spectrum");
+        for i in 0..want {
+            assert!((got.values[i] - exact.s[i]).abs() < 1e-9 * exact.s[0]);
+        }
+        // rejects a non-finite tolerance instead of solving garbage
+        let bad = Request::SvdAdaptive {
+            a: Operand::Dense(d),
+            tol: f64::NAN,
+            block: 4,
+            max_rank: 0,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 3,
+        };
+        assert!(run_host(&bad, Method::Gesvd).is_err());
+    }
+
+    #[test]
+    fn fused_adaptive_batch_matches_per_job_execute() {
+        let d = crate::datagen_test_matrix(40, 30, |i| 1.0 / (i + 1) as f64, 37);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let tols = [0.5, 0.05, 0.5, 0.2];
+        for vecs in [false, true] {
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request::SvdAdaptive {
+                    a: Operand::Dense(d.clone()),
+                    tol: tols[i],
+                    block: 3 + i,
+                    max_rank: if i == 3 { 6 } else { 0 },
+                    method: Method::NativeRsvd,
+                    want_vectors: vecs,
+                    seed: i as u64,
+                })
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "vecs={vecs}");
+                assert_eq!(f.u, s.u, "vecs={vecs}");
+                assert_eq!(f.v, s.v, "vecs={vecs}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_adaptive_batch_with_invalid_tol_falls_back_per_job() {
+        // one NaN-tolerance job must not panic the shared sweep and take
+        // its healthy neighbor down: the fused path declines the batch,
+        // and per-job execution gives the bad job a clean error while the
+        // healthy one succeeds
+        let d = crate::datagen_test_matrix(20, 15, |i| 1.0 / (i + 1) as f64, 47);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let mk = |tol: f64| Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol,
+            block: 4,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let bad = mk(f64::NAN);
+        let good = mk(0.1);
+        assert!(try_execute_fused(&[&bad, &good], &route).is_none(), "declines the batch");
+        assert!(execute(&bad, &route, None).is_err(), "bad job errors cleanly");
+        assert!(execute(&good, &route, None).is_ok(), "healthy job unaffected");
+        let neg = mk(-1.0);
+        assert!(try_execute_fused(&[&good, &neg], &route).is_none());
+        assert!(execute(&neg, &route, None).is_err());
+    }
+
+    #[test]
+    fn fused_adaptive_batch_rejects_mixed_batches() {
+        let d = Matrix::gaussian(10, 8, 41);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let ad = |a: Operand, vecs: bool| Request::SvdAdaptive {
+            a,
+            tol: 0.1,
+            block: 2,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: vecs,
+            seed: 1,
+        };
+        let r1 = ad(Operand::Dense(d.clone()), false);
+        // adaptive + fixed-rank over the same payload never fuse
+        let fixed = req(d.clone(), 2, Method::NativeRsvd, false);
+        assert!(try_execute_fused(&[&r1, &fixed], &route).is_none());
+        assert!(try_execute_fused(&[&fixed, &r1], &route).is_none());
+        // mixed payload content or kind → no fusion
+        let r2 = ad(Operand::Dense(Matrix::gaussian(10, 8, 42)), false);
+        assert!(try_execute_fused(&[&r1, &r2], &route).is_none());
+        let rt = ad(Operand::Tiled(TiledMatrix::from_dense(&d, 3)), false);
+        assert!(try_execute_fused(&[&r1, &rt], &route).is_none());
+        // mixed flavor → no fusion; same payload+flavor → fuses
+        let r3 = ad(Operand::Dense(d), true);
+        assert!(try_execute_fused(&[&r1, &r3], &route).is_none());
+        assert!(try_execute_fused(&[&r1, &r1], &route).is_some());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Job model: decomposition requests, results, and solver selection.
 
-use crate::linalg::{Csr, Matrix, TiledMatrix};
+use crate::linalg::{Csr, LinOp, Matrix, TiledMatrix};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -51,6 +53,98 @@ impl Method {
     }
 }
 
+/// A decomposition payload in whichever backend the caller holds it. The
+/// adaptive pipeline only touches A through [`LinOp`], so one request
+/// variant serves all three backends instead of tripling the enum.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    Dense(Matrix),
+    Sparse(Csr),
+    Tiled(TiledMatrix),
+}
+
+impl Operand {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Operand::Dense(a) => a.shape(),
+            Operand::Sparse(a) => a.shape(),
+            Operand::Tiled(a) => a.shape(),
+        }
+    }
+
+    /// Content fingerprint of the payload — the backend-specific salts
+    /// (CSR, tiled) ride along, so twins across backends never collide.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            Operand::Dense(a) => a.fingerprint(),
+            Operand::Sparse(a) => a.fingerprint(),
+            Operand::Tiled(a) => a.fingerprint(),
+        }
+    }
+
+    /// The payload as an operator — the sketch pipeline's only access path.
+    pub fn as_linop(&self) -> &dyn LinOp {
+        match self {
+            Operand::Dense(a) => a,
+            Operand::Sparse(a) => a,
+            Operand::Tiled(a) => a,
+        }
+    }
+
+    /// Densified twin — the exact-solver fallback only; the sketch
+    /// pipeline never calls this.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            Operand::Dense(a) => a.clone(),
+            Operand::Sparse(a) => a.to_dense(),
+            Operand::Tiled(a) => a.to_dense(),
+        }
+    }
+
+    /// Backend tag ("dense" | "sparse" | "tiled").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Operand::Dense(_) => "dense",
+            Operand::Sparse(_) => "sparse",
+            Operand::Tiled(_) => "tiled",
+        }
+    }
+
+    /// Wire encoding: the payload codec of the backend (`util::json`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Operand::Dense(a) => json::matrix_to_json(a),
+            Operand::Sparse(a) => json::csr_to_json(a),
+            Operand::Tiled(a) => json::tiled_to_json(a),
+        }
+    }
+
+    /// Wire decoding, dispatched on the payload's `format` tag (a missing
+    /// tag means dense, the historical default).
+    pub fn from_json(j: &Json) -> Result<Operand, String> {
+        match j.get("format").and_then(|f| f.as_str()) {
+            Some("dense") | None => json::matrix_from_json(j).map(Operand::Dense),
+            Some("csr") => json::csr_from_json(j).map(Operand::Sparse),
+            Some("tiled") => json::tiled_from_json(j).map(Operand::Tiled),
+            Some(other) => Err(format!("unsupported operand format '{other}'")),
+        }
+    }
+}
+
+/// Content equality within a backend kind; payloads of different kinds
+/// never compare equal even when their numeric contents agree (their
+/// product kernels differ — same policy as the fused-batch re-check).
+impl PartialEq for Operand {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Operand::Dense(a), Operand::Dense(b)) => a == b,
+            (Operand::Sparse(a), Operand::Sparse(b)) => a == b,
+            (Operand::Tiled(a), Operand::Tiled(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
 /// A decomposition request.
 #[derive(Clone, Debug)]
 pub enum Request {
@@ -83,6 +177,22 @@ pub enum Request {
         want_vectors: bool,
         seed: u64,
     },
+    /// Tolerance-driven adaptive-rank SVD of `a` (any payload backend):
+    /// the rank is *discovered* by the blocked incremental range finder
+    /// ([`crate::linalg::adaptive`]), growing `block` columns per step
+    /// until the Halko posterior bound certifies the requested spectral
+    /// tolerance, capped at `max_rank` (0 = min(m, n)). An explicitly
+    /// requested exact host method densifies, solves at the cap, and
+    /// trims the spectrum at the same tolerance rule.
+    SvdAdaptive {
+        a: Operand,
+        tol: f64,
+        block: usize,
+        max_rank: usize,
+        method: Method,
+        want_vectors: bool,
+        seed: u64,
+    },
     /// k principal components of row-sample matrix `x` (centered by the
     /// solver). Returns eigenvalues of the covariance and components in `v`.
     Pca {
@@ -94,12 +204,22 @@ pub enum Request {
 }
 
 impl Request {
+    /// Requested rank — for the adaptive variant this is the *effective
+    /// rank cap* (the tolerance decides the actual rank at solve time).
     pub fn k(&self) -> usize {
         match self {
             Request::Svd { k, .. }
             | Request::SvdSparse { k, .. }
             | Request::SvdTiled { k, .. }
             | Request::Pca { k, .. } => *k,
+            Request::SvdAdaptive { a, max_rank, .. } => {
+                let (m, n) = a.shape();
+                if *max_rank == 0 {
+                    m.min(n)
+                } else {
+                    (*max_rank).min(m.min(n))
+                }
+            }
         }
     }
 
@@ -108,6 +228,7 @@ impl Request {
             Request::Svd { method, .. }
             | Request::SvdSparse { method, .. }
             | Request::SvdTiled { method, .. }
+            | Request::SvdAdaptive { method, .. }
             | Request::Pca { method, .. } => *method,
         }
     }
@@ -117,6 +238,7 @@ impl Request {
             Request::Svd { a, .. } => a.shape(),
             Request::SvdSparse { a, .. } => a.shape(),
             Request::SvdTiled { a, .. } => a.shape(),
+            Request::SvdAdaptive { a, .. } => a.shape(),
             Request::Pca { x, .. } => x.shape(),
         }
     }
@@ -131,8 +253,61 @@ impl Request {
             Request::Svd { a, .. } => a.fingerprint(),
             Request::SvdSparse { a, .. } => a.fingerprint(),
             Request::SvdTiled { a, .. } => a.fingerprint(),
+            Request::SvdAdaptive { a, .. } => a.fingerprint(),
             Request::Pca { x, .. } => x.fingerprint(),
         }
+    }
+
+    /// Wire encoding of an adaptive request:
+    /// `{"type":"svd_adaptive","a":{payload},"tol":…,"block":…,
+    /// "max_rank":…,"method":…,"want_vectors":…,"seed":"…"}` (the seed
+    /// travels as a decimal string so all 64 bits survive the f64 wire).
+    /// Returns `None` for non-adaptive variants.
+    pub fn adaptive_to_json(&self) -> Option<Json> {
+        let Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } = self
+        else {
+            return None;
+        };
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str("svd_adaptive".into()));
+        obj.insert("a".to_string(), a.to_json());
+        obj.insert("tol".to_string(), Json::Num(*tol));
+        obj.insert("block".to_string(), Json::Num(*block as f64));
+        obj.insert("max_rank".to_string(), Json::Num(*max_rank as f64));
+        obj.insert("method".to_string(), Json::Str(method.name().into()));
+        obj.insert("want_vectors".to_string(), Json::Bool(*want_vectors));
+        obj.insert("seed".to_string(), Json::Str(seed.to_string()));
+        Some(Json::Obj(obj))
+    }
+
+    /// Decode the [`Request::adaptive_to_json`] wire object. Every field
+    /// is validated — finite non-negative tolerance, positive block,
+    /// integer knobs, known method, payload by its `format` tag — so a
+    /// hostile wire errors instead of constructing a poisoned request.
+    pub fn adaptive_from_json(j: &Json) -> Result<Request, String> {
+        if let Some(t) = j.get("type") {
+            if t.as_str() != Some("svd_adaptive") {
+                return Err(format!("unsupported request type {t}"));
+            }
+        }
+        let a = Operand::from_json(j.get("a").ok_or("missing operand field 'a'")?)?;
+        let tol = j.f64_field("tol")?;
+        if tol < 0.0 {
+            return Err(format!("tol must be >= 0, got {tol}"));
+        }
+        let block = j.u64_field("block")? as usize;
+        if block == 0 {
+            return Err("block must be positive".into());
+        }
+        let max_rank = j.u64_field("max_rank")? as usize;
+        let mname = j.str_field("method")?;
+        let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
+        let want_vectors = j.bool_field("want_vectors")?;
+        let seed = j
+            .str_field("seed")?
+            .parse::<u64>()
+            .map_err(|e| format!("invalid seed: {e}"))?;
+        Ok(Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed })
     }
 }
 
@@ -245,6 +420,142 @@ mod tests {
         assert_eq!(r.fingerprint(), fp);
         // the sparse salt keeps dense and sparse twins apart in the batcher
         assert_ne!(r.fingerprint(), dense_fp);
+    }
+
+    #[test]
+    fn adaptive_request_accessors_and_operand_equality() {
+        let d = Matrix::gaussian(6, 4, 2);
+        let r = Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol: 0.1,
+            block: 4,
+            max_rank: 0,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 9,
+        };
+        assert_eq!(r.shape(), (6, 4));
+        assert_eq!(r.k(), 4, "cap 0 means min(m, n)");
+        assert_eq!(r.method(), Method::Auto);
+        assert_eq!(r.fingerprint(), d.fingerprint());
+        let capped = Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol: 0.1,
+            block: 4,
+            max_rank: 3,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 9,
+        };
+        assert_eq!(capped.k(), 3);
+        // operands compare by content within a kind, never across kinds
+        let sp = Csr::from_coo(6, 4, &[(0, 0, 1.0)]).unwrap();
+        assert_eq!(Operand::Dense(d.clone()), Operand::Dense(d.clone()));
+        assert_ne!(Operand::Dense(sp.to_dense()), Operand::Sparse(sp.clone()));
+        let t = TiledMatrix::from_dense(&d, 2);
+        let t2 = TiledMatrix::from_dense(&d, 3);
+        assert_eq!(Operand::Tiled(t.clone()), Operand::Tiled(t2), "tilings share content");
+        assert_ne!(Operand::Dense(d.clone()), Operand::Tiled(t.clone()));
+        assert_eq!(Operand::Dense(d).kind(), "dense");
+        assert_eq!(Operand::Sparse(sp).kind(), "sparse");
+        assert_eq!(Operand::Tiled(t).kind(), "tiled");
+    }
+
+    #[test]
+    fn adaptive_wire_codec_roundtrips_every_backend() {
+        let d = Matrix::gaussian(5, 3, 4);
+        let sp = Csr::from_coo(5, 3, &[(0, 2, 1.5), (4, 0, -2.0)]).unwrap();
+        let t = TiledMatrix::from_dense(&d, 2);
+        for a in [Operand::Dense(d), Operand::Sparse(sp), Operand::Tiled(t)] {
+            let req = Request::SvdAdaptive {
+                a,
+                tol: 1e-3,
+                block: 6,
+                max_rank: 12,
+                method: Method::NativeRsvd,
+                want_vectors: true,
+                seed: u64::MAX - 7, // all 64 bits must survive the wire
+            };
+            let wire = req.adaptive_to_json().expect("adaptive encodes").to_string();
+            let back =
+                Request::adaptive_from_json(&crate::util::json::Json::parse(&wire).unwrap())
+                    .unwrap();
+            let Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } =
+                &back
+            else {
+                panic!("wrong variant");
+            };
+            assert_eq!(*tol, 1e-3);
+            assert_eq!(*block, 6);
+            assert_eq!(*max_rank, 12);
+            assert_eq!(*method, Method::NativeRsvd);
+            assert!(*want_vectors);
+            assert_eq!(*seed, u64::MAX - 7);
+            assert_eq!(back.fingerprint(), req.fingerprint(), "content-exact roundtrip");
+            let Request::SvdAdaptive { a: orig, .. } = &req else { unreachable!() };
+            assert_eq!(a.kind(), orig.kind());
+            assert!(a == orig);
+        }
+    }
+
+    #[test]
+    fn adaptive_wire_codec_rejects_malformed() {
+        let good = Request::SvdAdaptive {
+            a: Operand::Dense(Matrix::gaussian(3, 3, 1)),
+            tol: 0.5,
+            block: 2,
+            max_rank: 0,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+        }
+        .adaptive_to_json()
+        .unwrap();
+        let mutate = |f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let mut m = match good.clone() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            f(&mut m);
+            Request::adaptive_from_json(&Json::Obj(m))
+        };
+        assert!(mutate(&|m| {
+            m.insert("type".into(), Json::Str("svd".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("tol".into(), Json::Num(-1.0));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("block".into(), Json::Num(0.0));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("method".into(), Json::Str("nope".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("seed".into(), Json::Str("not-a-number".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("a");
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("want_vectors");
+        })
+        .is_err());
+        // non-adaptive variants have no adaptive wire form
+        let fixed = Request::Svd {
+            a: Matrix::zeros(2, 2),
+            k: 1,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 0,
+        };
+        assert!(fixed.adaptive_to_json().is_none());
     }
 
     #[test]

@@ -162,6 +162,16 @@ impl Metrics {
         Default::default()
     }
 
+    /// Lock the state, recovering from poisoning instead of propagating
+    /// it: a panic that unwinds through a metrics call poisons the mutex,
+    /// and the state behind it is plain counters and histograms — always
+    /// consistent, always safe to keep. Propagating the poison would turn
+    /// *every* later metrics call into a panic and take the whole executor
+    /// pool down with the one job that died.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn record_job(&self, backend: &str, queued: Duration, exec: Duration, ok: bool) {
         self.record_job_impl(backend, queued, exec, ok, true);
     }
@@ -182,7 +192,7 @@ impl Metrics {
         ok: bool,
         count_call: bool,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if ok {
             g.completed += 1;
         } else {
@@ -196,7 +206,7 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, backend: &str, size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.batches += 1;
         g.batched_jobs += size as u64;
         let w = g.batch_widths.entry(backend.to_string()).or_default();
@@ -209,18 +219,18 @@ impl Metrics {
     /// `size` fused jobs, but exactly *one* solver call for the backend
     /// (per-job completion/latency comes from [`Metrics::record_fused_job`]).
     pub fn record_fused(&self, backend: &str, size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.fused_jobs += size as u64;
         *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
     }
 
     /// Total solver calls across backends (Table 1 accounting).
     pub fn total_solver_calls(&self) -> u64 {
-        self.inner.lock().unwrap().solver_calls.values().sum()
+        self.lock().solver_calls.values().sum()
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let empty = Histogram::new();
         let queue = g.queue.as_ref().unwrap_or(&empty);
         let exec = g.exec.as_ref().unwrap_or(&empty);
@@ -261,6 +271,111 @@ mod tests {
         assert!(h.mean() >= Duration::from_micros(400));
         assert!(h.mean() <= Duration::from_micros(700));
         assert_eq!(h.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        // empty: every statistic is zero, no division panics
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), Duration::ZERO);
+        }
+
+        // single sample: mean is the sample, every quantile clamps to it
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(7));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), Duration::from_micros(7));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(7));
+        assert_eq!(h.quantile(0.99), Duration::from_micros(7));
+
+        // sub-microsecond durations clamp up to 1µs instead of
+        // underflowing the log-bucket index
+        let mut h = Histogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), Duration::from_micros(1));
+        assert_eq!(h.max(), Duration::from_micros(1));
+
+        // the saturating top bucket: a duration far past the ~1h design
+        // range lands in bucket NBUCKETS-1 (the `.min(NBUCKETS - 1)`
+        // clamp) without panicking, and mean/max/quantile still report
+        // the true value — including the u128 → u64 cast in mean()
+        let mut h = Histogram::new();
+        let huge = Duration::from_secs(1 << 32); // ≈ 136 years
+        h.record(huge);
+        h.record(huge);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), huge);
+        assert_eq!(h.mean(), huge);
+        // the saturated bucket's upper bound (2^42 µs) is what quantile
+        // reports — far below the true sample, the price of saturation,
+        // but well-defined and panic-free
+        assert_eq!(h.quantile(0.5), Duration::from_micros(1u64 << 42));
+
+        // integer-µs mean truncates, never rounds up past a real sample
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(4));
+        assert_eq!(h.mean(), Duration::from_micros(3));
+    }
+
+    #[test]
+    fn prop_histogram_over_random_duration_batches() {
+        use crate::testkit::{self, Gen};
+        testkit::check(80, |g: &mut Gen| {
+            let n = g.usize(1..40);
+            let ds: Vec<Duration> =
+                (0..n).map(|_| Duration::from_micros(g.u64() % 1_000_000_000)).collect();
+            let mut h = Histogram::new();
+            for d in &ds {
+                h.record(*d);
+            }
+            testkit::assert_that(h.count() == n as u64, "count mismatch")?;
+            // record clamps 0 to 1µs, so the observed max does too
+            let max = ds.iter().copied().max().unwrap().max(Duration::from_micros(1));
+            testkit::assert_that(h.max() == max, "max mismatch")?;
+            testkit::assert_that(h.mean() <= h.max(), "mean above max")?;
+            testkit::assert_that(h.mean() >= Duration::from_micros(1), "mean below clamp")?;
+            // quantiles are monotone in q and never exceed the max
+            let mut prev = Duration::ZERO;
+            for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let v = h.quantile(q);
+                testkit::assert_that(v >= prev, "quantile not monotone")?;
+                testkit::assert_that(v <= h.max(), "quantile above max")?;
+                prev = v;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn poisoned_metrics_mutex_recovers_instead_of_cascading() {
+        // poison the lock the way a panicking job would: unwind while
+        // holding the guard. Every later call must keep working on the
+        // (still consistent) counters instead of re-panicking.
+        let m = Metrics::new();
+        m.record_job("gesvd", Duration::from_micros(1), Duration::from_micros(2), true);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.inner.lock().unwrap();
+            panic!("job died while holding the metrics lock");
+        }));
+        assert!(poison.is_err(), "the closure must have panicked");
+        assert!(m.inner.is_poisoned(), "the mutex really is poisoned");
+        // all entry points recover via into_inner
+        m.record_job("gesvd", Duration::from_micros(3), Duration::from_micros(4), false);
+        m.record_batch("gesvd", 2);
+        m.record_fused("native_rsvd", 2);
+        m.record_fused_job("native_rsvd", Duration::from_micros(1), Duration::from_micros(1), true);
+        assert_eq!(m.total_solver_calls(), 3);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.fused_jobs, 2);
+        assert_eq!(s.batches, 1);
     }
 
     #[test]

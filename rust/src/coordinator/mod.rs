@@ -22,7 +22,7 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Request};
+pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Operand, Request};
 pub use metrics::{BatchWidth, Metrics, Snapshot};
 pub use router::{Route, RouterCfg};
 pub use server::{Coordinator, CoordinatorCfg};

@@ -57,7 +57,14 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     // panels, and the operator path is the whole point of the tiling (an
     // explicitly requested exact method densifies in exec — correctness
     // over memory for the long tail).
-    if matches!(req, Request::SvdSparse { .. } | Request::SvdTiled { .. }) {
+    // Adaptive requests join them: the AOT buckets bake a fixed sketch
+    // width into the graph, which is exactly what a tolerance-driven rank
+    // cannot promise — the blocked adaptive finder is host-only by
+    // construction (an explicit exact method densifies and trims in exec).
+    if matches!(
+        req,
+        Request::SvdSparse { .. } | Request::SvdTiled { .. } | Request::SvdAdaptive { .. }
+    ) {
         return match method {
             Method::Auto | Method::Device => Route::Host { method: Method::NativeRsvd },
             other => Route::Host { method: other },
@@ -77,8 +84,8 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
 
     let s = (k + cfg.oversample).min(r);
     let bucket = match req {
-        Request::SvdSparse { .. } | Request::SvdTiled { .. } => {
-            unreachable!("sparse/tiled requests routed above")
+        Request::SvdSparse { .. } | Request::SvdTiled { .. } | Request::SvdAdaptive { .. } => {
+            unreachable!("sparse/tiled/adaptive requests routed above")
         }
         Request::Svd { .. } => manifest.pick_bucket(
             ArtifactKind::Rsvd,
@@ -242,6 +249,37 @@ mod tests {
             }
         }
         // explicit host methods are honored (exec densifies where needed)
+        for m in [Method::Gesvd, Method::Lanczos, Method::NativeRsvd] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, m),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_routes_to_host_never_device() {
+        use crate::coordinator::job::Operand;
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        let req = |method| Request::SvdAdaptive {
+            a: Operand::Dense(Matrix::zeros(200, 100)),
+            tol: 1e-3,
+            block: 8,
+            max_rank: 0,
+            method,
+            want_vectors: false,
+            seed: 0,
+        };
+        // Auto and Device land on the adaptive host pipeline even though a
+        // device bucket fits the shape — buckets bake a fixed sketch width
+        for m in [Method::Auto, Method::Device] {
+            match route(&req(m), &man, &cfg) {
+                Route::Host { method } => assert_eq!(method, Method::NativeRsvd),
+                other => panic!("{other:?}"),
+            }
+        }
+        // explicit host methods are honored (exec densifies and trims)
         for m in [Method::Gesvd, Method::Lanczos, Method::NativeRsvd] {
             match route(&req(m), &man, &cfg) {
                 Route::Host { method } => assert_eq!(method, m),

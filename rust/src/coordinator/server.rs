@@ -70,6 +70,20 @@ impl Default for CoordinatorCfg {
     }
 }
 
+impl CoordinatorCfg {
+    /// Clamp the batching knobs to their floors, once, at startup.
+    /// `max_batch == 0` (or an explicit `drain_cap` of 0) would make
+    /// `jobs.len() < drain_cap` never admit a job — the dispatcher drains
+    /// nothing and spins forever while every caller blocks (and
+    /// `plan_batches` asserts a positive width besides). Normalizing here
+    /// means no dispatch-loop site ever has to re-derive the invariant.
+    fn normalized(mut self) -> CoordinatorCfg {
+        self.max_batch = self.max_batch.max(1);
+        self.drain_cap = self.drain_cap.map(|c| c.max(1));
+        self
+    }
+}
+
 /// Handle to a running coordinator.
 ///
 /// The PJRT engine is **owned by the dispatcher thread** (the xla crate's
@@ -102,6 +116,7 @@ impl Coordinator {
         artifact_dir: Option<PathBuf>,
         cfg: CoordinatorCfg,
     ) -> Result<Coordinator, String> {
+        let cfg = cfg.normalized();
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
@@ -224,7 +239,16 @@ fn dispatch_loop(
                     // batch, the rest queue on the mutex — the guard (a
                     // statement temporary) is dropped before execution. A
                     // recv error means the dispatcher closed the channel.
-                    let Ok(pb) = brx.lock().unwrap().recv() else { return };
+                    // Poisoning is recovered, not propagated: if any panic
+                    // ever unwinds while a sibling holds this lock, the
+                    // receiver itself is still consistent (it hands out
+                    // whole batches), and turning the poison into a panic
+                    // here would kill every remaining worker — the
+                    // death-spiral failure mode, one panicking job ending
+                    // the whole pool.
+                    let Ok(pb) = brx.lock().unwrap_or_else(|e| e.into_inner()).recv() else {
+                        return;
+                    };
                     run_batch(pb, None, per_worker, &metrics);
                 })
                 .expect("spawn executor worker")
@@ -548,6 +572,101 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 18);
         assert_eq!(snap.jobs_failed, 0);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        // a NaN payload sent to the exact solver panics inside the solver
+        // (non-converging QR / NaN sort); the pool must answer it as a
+        // failed job, keep serving, and keep recording metrics — the
+        // regression for the poisoned-lock death spiral
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            workers: 2,
+            ..Default::default()
+        });
+        let poison = Request::Svd {
+            a: Matrix::from_fn(12, 8, |_, _| f64::NAN),
+            k: 2,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 1,
+        };
+        let r = coord.run(poison);
+        let err = r.outcome.expect_err("NaN through gesvd must fail the job");
+        assert!(err.contains("panic"), "{err}");
+        // the pool survives: healthy jobs on both a same-method and a
+        // different-method route still get answered
+        for m in [Method::Gesvd, Method::NativeRsvd] {
+            let healthy = coord.run(svd_req(25, 15, 3, m));
+            let d = healthy.outcome.expect("healthy job after a panic");
+            assert_eq!(d.values.len(), 3);
+        }
+        // and metrics still record — the mutex was never left poisoned
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 2);
+        assert_eq!(snap.jobs_failed, 1);
+        assert!(snap.exec_max > Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_batching_knobs_are_clamped_not_livelocked() {
+        // max_batch == 0 / drain_cap == Some(0) used to make the drain
+        // condition `jobs.len() < drain_cap` unsatisfiable: the dispatcher
+        // spins forever and no job is ever served. Normalization clamps
+        // both to ≥ 1, so this completes instead of hanging.
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            max_batch: 0,
+            drain_cap: Some(0),
+            batch_window: Duration::from_millis(2),
+            ..Default::default()
+        });
+        let handles: Vec<_> =
+            (0..3).map(|_| coord.submit(svd_req(15, 10, 2, Method::Gesvd))).collect();
+        for h in handles {
+            assert!(h.wait().outcome.is_ok());
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 3);
+    }
+
+    #[test]
+    fn adaptive_burst_fuses_and_matches_solo_solves() {
+        use crate::coordinator::job::Operand;
+        use crate::linalg::adaptive::{rsvd_adaptive, AdaptiveOpts};
+        let a = crate::datagen_test_matrix(80, 60, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 43);
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            max_batch: 6,
+            drain_cap: Some(6),
+            batch_window: Duration::from_millis(200),
+            ..Default::default()
+        });
+        let tols = [0.5, 0.05, 0.01, 0.5, 0.1, 0.02];
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                coord.submit(Request::SvdAdaptive {
+                    a: Operand::Dense(a.clone()),
+                    tol: tols[i],
+                    block: 4,
+                    max_rank: 0,
+                    method: Method::Auto,
+                    want_vectors: false,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        let served: Vec<Vec<f64>> =
+            handles.into_iter().map(|h| h.wait().outcome.expect("ok").values).collect();
+        for (i, got) in served.iter().enumerate() {
+            let opts = AdaptiveOpts { block: 4, seed: i as u64, ..Default::default() };
+            let solo = rsvd_adaptive(&a, tols[i], &opts);
+            assert_eq!(got, &solo.svd.s, "adaptive job {i} must be bitwise its solo solve");
+            assert_eq!(got.len(), solo.rank());
+        }
+        // tighter tolerances really did discover more rank in one sweep
+        assert!(served[2].len() > served[0].len(), "0.01 needs more rank than 0.5");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 6);
+        assert!(snap.fused_jobs >= 2, "adaptive fusion engaged ({})", snap.fused_jobs);
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! Tolerance-driven adaptive-rank randomized SVD — the blocked incremental
+//! range finder of Halko, Martinsson & Tropp (Algorithm 4.2) in the same
+//! BLAS-3 clothing as the fixed-rank pipeline.
+//!
+//! Every fixed-rank entry point demands a k up front, but the workloads
+//! the paper serves (PCA, compression, SuMC) really specify an *accuracy*
+//! and want the rank discovered. Tomás et al. (*Fast Truncated SVD of
+//! Sparse and Dense Matrices on Graphics Processors*) and Heavner et al.
+//! (*Efficient algorithms for computing rank-revealing factorizations on a
+//! GPU*) both land on the same production formulation: grow the sketch a
+//! block of b columns at a time — each growth step is one wide block
+//! product `A·Ω_t` plus a re-orthogonalization against the accumulated
+//! basis — and stop when a cheap posterior bound certifies the residual.
+//!
+//! **Stopping rule.** Each step draws a *fresh* Gaussian block Ω_t and
+//! computes `E = (I − QQᵀ)·A·Ω_t`. The Halko posterior bound (their eq.
+//! 4.3) says that with b probes,
+//!
+//! ```text
+//! ‖A − QQᵀA‖₂ ≤ 10·√(2/π) · max_j ‖E·e_j‖     w.p. ≥ 1 − 10⁻ᵇ
+//! ```
+//!
+//! so `est = POSTERIOR_FACTOR · max_j ‖E_j‖` is a high-probability upper
+//! bound on the spectral residual of the *current* basis. The finder stops
+//! as soon as `est ≤ tol/2`; otherwise the (already projected) block is
+//! orthonormalized and appended, and the loop continues until the rank cap.
+//! The finish projects `B = QᵀA`, takes the small SVD, and trims trailing
+//! singular values `≤ tol/2`, so the returned factorization satisfies
+//! `‖A − U·Σ·Vᵀ‖₂ ≤ est + σ_{k+1}(B) ≤ tol` (w.h.p.) with a genuinely
+//! data-dependent rank.
+//!
+//! **Determinism contract.** Identical to [`super::rsvd`]: every kernel
+//! touched (the operator's `apply`/`project`, GEMM, CholeskyQR2) is
+//! bitwise thread-count-invariant, probe blocks are Philox streams keyed
+//! by (seed, step), and the per-output-element reduction order of the wide
+//! products is independent of operand width — so a fused batch, a solo
+//! run, and any thread count produce the same bits, over any
+//! [`LinOp`] backend holding the same data (dense, CSR, tiled).
+//!
+//! **Fused batches.** [`rsvd_adaptive_batch`] grows every job's basis in
+//! lockstep rounds: the per-job fresh blocks of one round stack into a
+//! single wide `apply`, jobs that met their tolerance drop out of later
+//! rounds (the sweep survives to the widest living tolerance), and the
+//! final projection runs as one wide `QᵀA` over the stacked bases.
+
+use super::gemm::{matmul, matmul_tn};
+use super::op::LinOp;
+use super::qr::orthonormalize;
+use super::svd_gesvd::{svd, Svd};
+use super::threading::with_threads_opt;
+use super::Matrix;
+
+/// `10·√(2/π)` — the probe-to-spectral-norm factor of the Halko posterior
+/// bound (module docs). A unit test pins it against the formula.
+pub const POSTERIOR_FACTOR: f64 = 7.978845608028654;
+
+/// Salt for the per-step probe-block seeds (Philox stream keying).
+const BLOCK_SEED_SALT: u64 = 0xADA_B10C;
+
+/// Batch-independent knobs of one adaptive solve (the tolerance itself is
+/// an argument of [`rsvd_adaptive`] — it is the request, not a knob).
+#[derive(Clone, Debug)]
+pub struct AdaptiveOpts {
+    /// Growth block width b: columns added per step (also the probe count
+    /// of the posterior bound, so the stopping rule holds w.p. 1 − 10⁻ᵇ).
+    pub block: usize,
+    /// Hard rank cap; `0` means min(m, n). If the cap is hit before the
+    /// tolerance, the result reports the (unmet) residual estimate.
+    pub max_rank: usize,
+    /// Seed for the probe-block Gaussian streams.
+    pub seed: u64,
+    /// BLAS-3 thread-team size, like [`super::rsvd::RsvdOpts::threads`] —
+    /// results are bitwise identical for any value.
+    pub threads: Option<usize>,
+}
+
+impl Default for AdaptiveOpts {
+    fn default() -> Self {
+        Self { block: 8, max_rank: 0, seed: 0x5EED, threads: None }
+    }
+}
+
+/// One job of a fused adaptive batch: its own tolerance, growth block,
+/// rank cap, and probe seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveJob {
+    /// Absolute spectral-norm tolerance: the job wants
+    /// `‖A − U·Σ·Vᵀ‖₂ ≤ tol`. Must be finite and ≥ 0; `0` runs the
+    /// finder to its rank cap.
+    pub tol: f64,
+    /// Growth block width b.
+    pub block: usize,
+    /// Hard rank cap; `0` means min(m, n).
+    pub max_rank: usize,
+    /// Seed for the probe-block streams.
+    pub seed: u64,
+}
+
+impl AdaptiveJob {
+    /// Per-job knobs lifted out of an [`AdaptiveOpts`].
+    pub fn from_opts(tol: f64, opts: &AdaptiveOpts) -> AdaptiveJob {
+        AdaptiveJob { tol, block: opts.block, max_rank: opts.max_rank, seed: opts.seed }
+    }
+}
+
+/// Result of the incremental range finder: the orthonormal basis, the last
+/// posterior residual estimate, and how many growth steps ran.
+pub struct AdaptiveRange {
+    /// Orthonormal basis Q (m × r, r data-dependent).
+    pub q: Matrix,
+    /// Last posterior estimate of ‖A − QQᵀA‖₂ (≤ tol/2 when the finder
+    /// stopped on tolerance; above it when the rank cap cut growth short).
+    pub est: f64,
+    /// Growth steps taken (= fresh probe blocks drawn).
+    pub steps: usize,
+}
+
+/// An adaptive-rank factorization: the truncated SVD plus the stopping
+/// diagnostics. The reported rank is `svd.s.len()` — data-dependent.
+pub struct AdaptiveSvd {
+    /// The truncated factorization, rank chosen by the tolerance.
+    pub svd: Svd,
+    /// Last posterior estimate of the basis residual (see
+    /// [`AdaptiveRange::est`]).
+    pub est: f64,
+    /// Growth steps taken.
+    pub steps: usize,
+}
+
+impl AdaptiveSvd {
+    /// The discovered rank.
+    pub fn rank(&self) -> usize {
+        self.svd.s.len()
+    }
+}
+
+/// Blocked incremental range finder (module docs): grow an orthonormal
+/// basis of range(A) `block` columns at a time until the Halko posterior
+/// bound certifies `‖A − QQᵀA‖₂ ≤ tol/2`, capped at `max_rank` (`0` =
+/// min(m, n)). A is touched only through [`LinOp::apply`].
+pub fn adaptive_range<A: LinOp + ?Sized>(
+    a: &A,
+    tol: f64,
+    block: usize,
+    max_rank: usize,
+    seed: u64,
+) -> AdaptiveRange {
+    let job = AdaptiveJob { tol, block, max_rank, seed };
+    let g = grow_all(a, std::slice::from_ref(&job)).pop().expect("one job in, one out");
+    AdaptiveRange { q: g.q, est: g.est, steps: g.steps }
+}
+
+/// Tolerance-driven adaptive-rank randomized SVD: discover the rank that
+/// meets `‖A − U·Σ·Vᵀ‖₂ ≤ tol` (module docs for the guarantee), then
+/// finish with the same small-B SVD as the fixed-rank pipeline.
+/// Implemented as a single-job [`rsvd_adaptive_batch`], for the same
+/// structural-identity reason as [`super::rsvd::rsvd`].
+pub fn rsvd_adaptive<A: LinOp + ?Sized>(a: &A, tol: f64, opts: &AdaptiveOpts) -> AdaptiveSvd {
+    rsvd_adaptive_batch(a, &[AdaptiveJob::from_opts(tol, opts)], true, opts.threads)
+        .pop()
+        .expect("one job in, one out")
+}
+
+/// Fused adaptive solve of one operator for many jobs: per-round probe
+/// blocks stack into one wide `apply`, per-job math stays per-panel, and
+/// every job's result is **bitwise identical** to a standalone
+/// [`rsvd_adaptive`] with the same (tol, block, max_rank, seed).
+///
+/// With `want_vectors` false the `u`/`v` factors come back empty (m×0 /
+/// n×0) and only the singular values are assembled — the m×r×k BLAS-3
+/// `Q·U_B` product is skipped entirely. The values themselves are bitwise
+/// identical either way (same small-B SVD).
+pub fn rsvd_adaptive_batch<A: LinOp + ?Sized>(
+    a: &A,
+    jobs: &[AdaptiveJob],
+    want_vectors: bool,
+    threads: Option<usize>,
+) -> Vec<AdaptiveSvd> {
+    assert!(!jobs.is_empty(), "empty adaptive batch");
+    with_threads_opt(threads, || {
+        let states = grow_all(a, jobs);
+        let (m, n) = a.shape();
+        // one wide projection over the stacked bases: rows of B belong to
+        // columns of Q, and the per-element reduction order of the QᵀA
+        // kernels is width-independent, so the slice each job gets back is
+        // bitwise its solo projection
+        let parts: Vec<Matrix> = states.iter().map(|s| s.q.clone()).collect();
+        let qstack = Matrix::hstack(&parts);
+        let b_all = if qstack.cols() == 0 { Matrix::zeros(0, n) } else { a.project(&qstack) };
+        let mut r0 = 0usize;
+        states
+            .iter()
+            .zip(jobs)
+            .map(|(st, job)| {
+                let r1 = r0 + st.q.cols();
+                let b = b_all.submatrix(r0, r1, 0, n);
+                r0 = r1;
+                finish_one(st, job, &b, m, n, want_vectors)
+            })
+            .collect()
+    })
+}
+
+/// Per-job growth state of the shared sweep.
+struct Grow {
+    q: Matrix,
+    est: f64,
+    steps: usize,
+    done: bool,
+    max_rank: usize,
+    tol_half: f64,
+    block: usize,
+    seed: u64,
+}
+
+/// The shared lockstep growth sweep (module docs). Jobs that met their
+/// tolerance (or rank cap) drop out of later rounds; the wide `apply` per
+/// round covers exactly the survivors.
+fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
+    let (m, n) = a.shape();
+    let r = m.min(n);
+    let mut states: Vec<Grow> = jobs
+        .iter()
+        .map(|j| {
+            assert!(
+                j.tol.is_finite() && j.tol >= 0.0,
+                "adaptive tol must be finite and >= 0, got {}",
+                j.tol
+            );
+            Grow {
+                q: Matrix::zeros(m, 0),
+                est: 0.0,
+                steps: 0,
+                done: r == 0,
+                max_rank: if j.max_rank == 0 { r } else { j.max_rank.min(r) },
+                tol_half: j.tol * 0.5,
+                // clamp to the operator's rank: r probes already span
+                // everything, and an unclamped width would let one hostile
+                // wire request allocate an n×block probe of arbitrary size
+                block: j.block.max(1).min(r.max(1)),
+                seed: j.seed,
+            }
+        })
+        .collect();
+    loop {
+        let active: Vec<usize> = (0..states.len()).filter(|&i| !states[i].done).collect();
+        if active.is_empty() {
+            break;
+        }
+        // fresh per-job probe blocks, stacked for one wide apply
+        let blocks: Vec<Matrix> = active
+            .iter()
+            .map(|&i| {
+                let st = &states[i];
+                Matrix::gaussian(n, st.block, block_seed(st.seed, st.steps))
+            })
+            .collect();
+        let y = a.apply(&Matrix::hstack(&blocks));
+        let mut c0 = 0usize;
+        for (&i, blk) in active.iter().zip(&blocks) {
+            let st = &mut states[i];
+            let c1 = c0 + blk.cols();
+            let yi = y.submatrix(0, m, c0, c1);
+            c0 = c1;
+            // E = (I − QQᵀ)·A·Ω_t, projected twice ("twice is enough") —
+            // both the posterior probe and, if growth continues, the raw
+            // material of the next panel
+            let e = project_out(&st.q, &yi);
+            st.est = POSTERIOR_FACTOR * max_col_norm(&e);
+            st.steps += 1;
+            if st.est <= st.tol_half {
+                st.done = true; // the current basis already meets tol/2
+            } else if st.q.cols() >= st.max_rank {
+                st.done = true; // rank cap: est records the miss honestly
+            } else {
+                let take = st.block.min(st.max_rank - st.q.cols());
+                let panel = orthonormalize(&e.submatrix(0, m, 0, take));
+                st.q = Matrix::hstack(&[st.q.clone(), panel]);
+            }
+        }
+    }
+    states
+}
+
+/// The per-step probe seed: a keyed hash of (job seed, step), so streams
+/// never depend on block width, thread count, or batch composition.
+fn block_seed(seed: u64, step: usize) -> u64 {
+    super::op::mix(BLOCK_SEED_SALT, &[seed, step as u64])
+}
+
+/// `Y − Q·(QᵀY)` applied twice — classical blocked Gram–Schmidt with
+/// re-orthogonalization, all BLAS-3.
+fn project_out(q: &Matrix, y: &Matrix) -> Matrix {
+    if q.cols() == 0 {
+        return y.clone();
+    }
+    let e = y.add_scaled(-1.0, &matmul(q, &matmul_tn(q, y)));
+    e.add_scaled(-1.0, &matmul(q, &matmul_tn(q, &e)))
+}
+
+/// Largest Euclidean column norm of `e` (the `max_j ‖E_j‖` of the
+/// posterior bound).
+fn max_col_norm(e: &Matrix) -> f64 {
+    let mut best = 0.0f64;
+    for j in 0..e.cols() {
+        let mut s = 0.0;
+        for i in 0..e.rows() {
+            let x = e[(i, j)];
+            s += x * x;
+        }
+        best = best.max(s.sqrt());
+    }
+    best
+}
+
+/// The small-B finish: SVD of the job's projection slice, trimmed at
+/// σ > tol/2 so the truncation cannot spend more than the half of the
+/// budget the stopping rule left it. Values-only jobs skip the m×r×k
+/// left-factor assembly (the values are the same bits either way).
+fn finish_one(
+    st: &Grow,
+    job: &AdaptiveJob,
+    b: &Matrix,
+    m: usize,
+    n: usize,
+    want_vectors: bool,
+) -> AdaptiveSvd {
+    if st.q.cols() == 0 {
+        let empty = Svd { u: Matrix::zeros(m, 0), s: Vec::new(), v: Matrix::zeros(n, 0) };
+        return AdaptiveSvd { svd: empty, est: st.est, steps: st.steps };
+    }
+    let sb = svd(b);
+    let k = sb.s.iter().take_while(|&&x| x > job.tol * 0.5).count();
+    let s = sb.s[..k].to_vec();
+    let out = if want_vectors {
+        let ub = sb.u.submatrix(0, sb.u.rows(), 0, k);
+        Svd { u: matmul(&st.q, &ub), s, v: sb.v.submatrix(0, sb.v.rows(), 0, k) }
+    } else {
+        Svd { u: Matrix::zeros(m, 0), s, v: Matrix::zeros(n, 0) }
+    };
+    AdaptiveSvd { svd: out, est: st.est, steps: st.steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_gesvd::svd as full_svd;
+
+    #[test]
+    fn posterior_factor_matches_formula() {
+        let want = 10.0 * (2.0 / std::f64::consts::PI).sqrt();
+        assert!((POSTERIOR_FACTOR - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discovers_rank_on_fast_decay_and_meets_tol() {
+        let a = crate::datagen_test_matrix(50, 35, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 3);
+        let tol = 1e-2;
+        let r = rsvd_adaptive(&a, tol, &AdaptiveOpts::default());
+        assert!(r.rank() > 0, "fast decay has structure above 1e-2");
+        assert!(r.rank() < 35, "rank must be discovered, not maxed");
+        // the guarantee: true spectral error of the returned factorization
+        let rec = {
+            let mut us = r.svd.u.clone();
+            for j in 0..r.rank() {
+                for i in 0..us.rows() {
+                    us[(i, j)] *= r.svd.s[j];
+                }
+            }
+            crate::linalg::gemm::matmul_nt(&us, &r.svd.v)
+        };
+        let diff = a.add_scaled(-1.0, &rec);
+        let err = full_svd(&diff).s[0];
+        assert!(err <= tol, "spectral err {err} vs tol {tol}");
+        // and the rank is honest: the true tail past the reported rank
+        // fits the tolerance too
+        let exact = full_svd(&a);
+        assert!(exact.s[r.rank()] <= tol, "true tail {} vs {tol}", exact.s[r.rank()]);
+    }
+
+    #[test]
+    fn zero_tol_runs_to_the_rank_cap() {
+        let a = Matrix::gaussian(20, 12, 5);
+        let opts = AdaptiveOpts { max_rank: 6, ..Default::default() };
+        let r = rsvd_adaptive(&a, 0.0, &opts);
+        assert_eq!(r.rank(), 6, "tol 0 grows to the cap on a full-rank A");
+        assert!(r.est > 0.0, "a Gaussian A has residual past rank 6");
+    }
+
+    #[test]
+    fn zero_matrix_reports_rank_zero() {
+        let a = Matrix::zeros(15, 9);
+        let r = rsvd_adaptive(&a, 1e-6, &AdaptiveOpts::default());
+        assert_eq!(r.rank(), 0);
+        assert_eq!(r.est, 0.0);
+        assert_eq!(r.steps, 1, "one probe round certifies the zero residual");
+        assert_eq!(r.svd.u.shape(), (15, 0));
+        assert_eq!(r.svd.v.shape(), (9, 0));
+    }
+
+    #[test]
+    fn empty_operator_is_legal() {
+        let a = Matrix::zeros(0, 7);
+        let r = rsvd_adaptive(&a, 1e-3, &AdaptiveOpts::default());
+        assert_eq!(r.rank(), 0);
+        assert_eq!(r.steps, 0);
+    }
+
+    #[test]
+    fn batch_is_bitwise_solo() {
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / (i + 1) as f64, 7);
+        let jobs = [
+            AdaptiveJob { tol: 0.5, block: 4, max_rank: 0, seed: 1 },
+            AdaptiveJob { tol: 0.05, block: 8, max_rank: 0, seed: 2 },
+            AdaptiveJob { tol: 0.5, block: 4, max_rank: 0, seed: 1 },
+            AdaptiveJob { tol: 0.2, block: 3, max_rank: 10, seed: 9 },
+        ];
+        let fused = rsvd_adaptive_batch(&a, &jobs, true, None);
+        for (j, f) in jobs.iter().zip(&fused) {
+            let opts = AdaptiveOpts {
+                block: j.block,
+                max_rank: j.max_rank,
+                seed: j.seed,
+                threads: None,
+            };
+            let solo = rsvd_adaptive(&a, j.tol, &opts);
+            assert_eq!(f.svd.s, solo.svd.s, "job {j:?}");
+            assert_eq!(f.svd.u, solo.svd.u, "job {j:?}");
+            assert_eq!(f.svd.v, solo.svd.v, "job {j:?}");
+            assert_eq!(f.est, solo.est, "job {j:?}");
+            assert_eq!(f.steps, solo.steps, "job {j:?}");
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let a = crate::datagen_test_matrix(120, 80, |i| 1.0 / ((i + 1) as f64).powf(1.2), 11);
+        let run = |threads: Option<usize>| {
+            let opts = AdaptiveOpts { threads, ..Default::default() };
+            rsvd_adaptive(&a, 1e-3, &opts)
+        };
+        let one = run(Some(1));
+        for other in [run(Some(2)), run(None)] {
+            assert_eq!(one.svd.s, other.svd.s);
+            assert_eq!(one.svd.u, other.svd.u);
+            assert_eq!(one.svd.v, other.svd.v);
+        }
+    }
+
+    #[test]
+    fn tighter_tolerance_never_shrinks_rank() {
+        let a = crate::datagen_test_matrix(45, 30, |i| 1.0 / (i + 1) as f64, 13);
+        let loose = rsvd_adaptive(&a, 0.5, &AdaptiveOpts::default());
+        let tight = rsvd_adaptive(&a, 0.01, &AdaptiveOpts::default());
+        assert!(tight.rank() >= loose.rank(), "{} < {}", tight.rank(), loose.rank());
+        assert!(tight.steps >= loose.steps);
+    }
+
+    #[test]
+    #[should_panic(expected = "adaptive tol must be finite")]
+    fn nan_tol_is_rejected() {
+        let a = Matrix::gaussian(8, 6, 1);
+        let _ = rsvd_adaptive(&a, f64::NAN, &AdaptiveOpts::default());
+    }
+
+    #[test]
+    fn oversized_block_clamps_to_the_rank() {
+        // a probe block wider than min(m, n) buys nothing (r probes span
+        // everything) and must not allocate an arbitrary-width sketch —
+        // it behaves bitwise like block = min(m, n)
+        let a = crate::datagen_test_matrix(20, 12, |i| 1.0 / (i + 1) as f64, 19);
+        let big = AdaptiveOpts { block: 1_000_000, ..Default::default() };
+        let clamped = AdaptiveOpts { block: 12, ..Default::default() };
+        let rb = rsvd_adaptive(&a, 0.05, &big);
+        let rc = rsvd_adaptive(&a, 0.05, &clamped);
+        assert_eq!(rb.svd.s, rc.svd.s);
+        assert_eq!(rb.svd.u, rc.svd.u);
+        assert_eq!(rb.est, rc.est);
+        assert_eq!(rb.steps, rc.steps);
+    }
+
+    #[test]
+    fn values_only_batch_skips_vectors_but_keeps_the_same_values() {
+        let a = crate::datagen_test_matrix(30, 20, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 23);
+        let job = AdaptiveJob { tol: 0.05, block: 4, max_rank: 0, seed: 2 };
+        let with_vecs = rsvd_adaptive_batch(&a, &[job], true, None).pop().unwrap();
+        let vals_only = rsvd_adaptive_batch(&a, &[job], false, None).pop().unwrap();
+        assert_eq!(vals_only.svd.s, with_vecs.svd.s, "values are the same bits");
+        assert_eq!(vals_only.svd.u.shape(), (30, 0), "left factor skipped");
+        assert_eq!(vals_only.svd.v.shape(), (20, 0), "right factor skipped");
+        assert_eq!(vals_only.est, with_vecs.est);
+        assert_eq!(vals_only.steps, with_vecs.steps);
+        assert!(with_vecs.svd.u.shape() == (30, with_vecs.rank()));
+    }
+
+    #[test]
+    fn adaptive_range_agrees_with_full_solve() {
+        let a = crate::datagen_test_matrix(30, 20, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 17);
+        let opts = AdaptiveOpts::default();
+        let rng = adaptive_range(&a, 1e-3, opts.block, opts.max_rank, opts.seed);
+        let svd = rsvd_adaptive(&a, 1e-3, &opts);
+        assert_eq!(rng.est, svd.est);
+        assert_eq!(rng.steps, svd.steps);
+        assert!(rng.q.cols() >= svd.rank(), "finish only ever trims");
+        // the basis is orthonormal
+        let qtq = matmul_tn(&rng.q, &rng.q);
+        assert!(qtq.max_diff(&Matrix::eye(rng.q.cols())) < 1e-9);
+    }
+}

@@ -17,6 +17,7 @@
 //! overrides, serial fallback for small work); results are bitwise
 //! independent of the team size — see DESIGN.md §GEMM.
 
+pub mod adaptive;
 pub mod blas;
 pub mod bidiag;
 pub mod cholesky;

@@ -155,6 +155,28 @@ impl Drop for DiskStore {
     }
 }
 
+/// Removes the scratch file on drop unless disarmed — armed for the whole
+/// streaming build so that *any* exit (error return, or a panic unwinding
+/// out of the caller's panel source) cleans up the half-written file in
+/// the OS temp dir. On success the path transfers into the [`DiskStore`],
+/// whose own `Drop` takes over for the store's lifetime.
+struct ScratchGuard(Option<PathBuf>);
+
+impl ScratchGuard {
+    /// Hand the path over to its long-term owner; the guard stands down.
+    fn disarm(mut self) -> PathBuf {
+        self.0.take().expect("scratch guard disarmed once")
+    }
+}
+
+impl Drop for ScratchGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.0 {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
 /// An m×n matrix stored as row panels behind a [`PanelStore`], serving the
 /// sketch pipeline through [`LinOp`] with results bitwise identical to the
 /// dense path for any tile height (module docs). Clones share the store.
@@ -211,6 +233,10 @@ impl TiledMatrix {
             }
             Spill::Disk => {
                 let path = DiskStore::scratch_path();
+                // armed for the whole streaming build: `fill` is caller
+                // code and may panic mid-stream — the unwind must not leak
+                // the scratch file (error returns ride the same guard)
+                let guard = ScratchGuard(Some(path.clone()));
                 let mut f = File::create(&path)
                     .map_err(|e| format!("tiled spill {}: {e}", path.display()))?;
                 let mut panels = Vec::with_capacity(count);
@@ -221,21 +247,16 @@ impl TiledMatrix {
                     for v in p.as_slice() {
                         buf.extend_from_slice(&v.to_le_bytes());
                     }
-                    f.write_all(&buf).map_err(|e| {
-                        let _ = std::fs::remove_file(&path);
-                        format!("tiled spill write: {e}")
-                    })?;
+                    f.write_all(&buf).map_err(|e| format!("tiled spill write: {e}"))?;
                     panels.push((off, p.rows(), p.cols()));
                     off += buf.len() as u64;
                 }
                 // close the write handle, reopen read-only for the store's
                 // long-lived reader
                 drop(f);
-                let reader = File::open(&path).map_err(|e| {
-                    let _ = std::fs::remove_file(&path);
-                    format!("tiled spill reopen {}: {e}", path.display())
-                })?;
-                Arc::new(DiskStore { path, file: Mutex::new(reader), panels })
+                let reader = File::open(&path)
+                    .map_err(|e| format!("tiled spill reopen {}: {e}", path.display()))?;
+                Arc::new(DiskStore { path: guard.disarm(), file: Mutex::new(reader), panels })
             }
         };
         Ok(TiledMatrix { rows, cols, tile_rows, store, fp: h.finish() })
@@ -572,6 +593,43 @@ mod tests {
                     .count()
             })
             .unwrap_or(0)
+    }
+
+    #[test]
+    fn panicking_panel_source_does_not_leak_scratch_file() {
+        // a panel source that dies mid-stream unwinds out of `build`; the
+        // drop guard must remove the half-written scratch file (before the
+        // guard, only error *returns* and the final store drop cleaned up)
+        // other tests in this binary legitimately create (and then remove)
+        // scratch files concurrently, so poll until the count settles back
+        // to the baseline — a genuine leak never settles and still fails
+        let settles_to = |want: usize| {
+            for _ in 0..50 {
+                if scratch_files() <= want {
+                    return true;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            false
+        };
+        let before = scratch_files();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = TiledMatrix::build(10, 4, 3, Spill::Disk, |r0, r1| {
+                if r0 >= 6 {
+                    panic!("panel source died mid-stream");
+                }
+                Matrix::zeros(r1 - r0, 4)
+            });
+        }));
+        assert!(r.is_err(), "the panel source must have panicked");
+        assert!(settles_to(before), "unwind must remove the scratch file");
+        // a different unwind site — build's own panel-shape assert, after
+        // the file already exists — rides the same guard
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = TiledMatrix::build(10, 4, 3, Spill::Disk, |_r0, _r1| Matrix::zeros(1, 1));
+        }));
+        assert!(r.is_err());
+        assert!(settles_to(before), "shape-assert unwind cleans up");
     }
 
     #[test]

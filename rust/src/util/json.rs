@@ -10,7 +10,7 @@
 //! rather than construct a poisoned operator) — `tests/json_fuzz.rs`
 //! fuzzes both codecs round-trip and under mutation.
 
-use crate::linalg::{Csr, Matrix};
+use crate::linalg::{Csr, Matrix, TiledMatrix};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -96,6 +96,34 @@ impl Json {
                     .ok_or_else(|| format!("non-integer element in '{key}'"))
             })
             .collect()
+    }
+
+    /// Object field that is a finite number — the strict scalar twin of
+    /// [`Json::f64_arr_field`] (a JSON wire cannot carry NaN/Inf, but a
+    /// hand-built tree must error rather than smuggle one into a request).
+    pub fn f64_field(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| format!("missing/invalid finite number field '{key}'"))
+    }
+
+    /// Object field that is a non-negative integer representable in the
+    /// f64 the parser produced (seeds and counters on the wire).
+    pub fn u64_field(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= 2f64.powi(53))
+            .map(|x| x as u64)
+            .ok_or_else(|| format!("missing/invalid non-negative integer field '{key}'"))
+    }
+
+    /// Object field that is a bool.
+    pub fn bool_field(&self, key: &str) -> Result<bool, String> {
+        match self.get(key) {
+            Some(Json::Bool(b)) => Ok(*b),
+            _ => Err(format!("missing/invalid bool field '{key}'")),
+        }
     }
 
     /// Object field that is an array of numbers.
@@ -206,6 +234,56 @@ pub fn matrix_from_json(j: &Json) -> Result<Matrix, String> {
         return Err(format!("non-finite value {bad} in 'data'"));
     }
     Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Encode a tiled matrix as the wire object
+/// `{"format":"tiled","tile_rows":…,"rows":…,"cols":…,"data":[row-major…]}`
+/// — the panels densify onto the wire (row-major is exactly the ascending
+/// panel order), and the tile height rides along so the receiver rebuilds
+/// the same panel layout. Shortest-roundtrip float formatting makes
+/// [`tiled_from_json`] ∘ [`tiled_to_json`] content-exact (same
+/// fingerprint; the store backend is a host-local concern and is not
+/// serialized).
+pub fn tiled_to_json(t: &TiledMatrix) -> Json {
+    let d = t.to_dense();
+    let mut obj = BTreeMap::new();
+    obj.insert("format".to_string(), Json::Str("tiled".into()));
+    obj.insert("tile_rows".to_string(), Json::Num(t.tile_rows() as f64));
+    obj.insert("rows".to_string(), Json::Num(t.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(t.cols() as f64));
+    obj.insert(
+        "data".to_string(),
+        Json::Arr(d.as_slice().iter().map(|&x| Json::Num(x)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Decode a [`tiled_to_json`] object back into an (in-memory) tiled
+/// matrix — dimensions, length agreement, finite values, and a positive
+/// tile height are all enforced (error, never panic, on hostile payloads).
+pub fn tiled_from_json(j: &Json) -> Result<TiledMatrix, String> {
+    if let Some(fmt_tag) = j.get("format") {
+        if fmt_tag.as_str() != Some("tiled") {
+            return Err(format!("unsupported tiled format {fmt_tag}"));
+        }
+    }
+    let rows = strict_dim(j, "rows")?;
+    let cols = strict_dim(j, "cols")?;
+    let tile_rows = strict_dim(j, "tile_rows")?;
+    if tile_rows == 0 {
+        return Err("tile_rows must be positive".into());
+    }
+    let data = j.f64_arr_field("data")?;
+    let want = rows
+        .checked_mul(cols)
+        .ok_or_else(|| format!("shape {rows}x{cols} overflows"))?;
+    if data.len() != want {
+        return Err(format!("data length {} != rows*cols {}", data.len(), want));
+    }
+    if let Some(bad) = data.iter().find(|x| !x.is_finite()) {
+        return Err(format!("non-finite value {bad} in 'data'"));
+    }
+    Ok(TiledMatrix::from_dense(&Matrix::from_vec(rows, cols, data), tile_rows))
 }
 
 impl fmt::Display for Json {
@@ -538,6 +616,78 @@ mod tests {
         bad.insert("data".into(), Json::Arr(vec![Json::Num(f64::NAN)]));
         let err = csr_from_json(&Json::Obj(bad)).unwrap_err();
         assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn tiled_roundtrip_is_content_exact() {
+        let d = Matrix::gaussian(7, 5, 11);
+        let t = TiledMatrix::from_dense(&d, 3);
+        let j = tiled_to_json(&t);
+        let back = tiled_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.tile_rows(), 3);
+        assert_eq!(back.to_dense(), d, "payload roundtrip must be exact");
+        assert_eq!(back.fingerprint(), t.fingerprint());
+        assert!(back == t);
+    }
+
+    #[test]
+    fn tiled_decode_rejects_malformed() {
+        let good = tiled_to_json(&TiledMatrix::from_dense(&Matrix::gaussian(2, 3, 1), 2));
+        let mutate = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
+            let mut m = match good.clone() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            f(&mut m);
+            tiled_from_json(&Json::Obj(m))
+        };
+        assert!(mutate(&|m| {
+            m.insert("format".into(), Json::Str("dense".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("tile_rows".into(), Json::Num(0.0));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("tile_rows".into(), Json::Num(1.5));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("data".into(), Json::Arr(vec![Json::Num(1.0)]));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("rows");
+        })
+        .is_err());
+        let err = mutate(&|m| {
+            m.insert(
+                "data".into(),
+                Json::Arr(vec![Json::Num(f64::INFINITY); 6]),
+            );
+        })
+        .unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn scalar_field_helpers_are_strict() {
+        let j = Json::parse(r#"{"tol":0.25,"seed":7,"neg":-1,"frac":2.5,"flag":true,"s":"x"}"#)
+            .unwrap();
+        assert_eq!(j.f64_field("tol").unwrap(), 0.25);
+        assert_eq!(j.u64_field("seed").unwrap(), 7);
+        assert!(j.bool_field("flag").unwrap());
+        assert!(j.f64_field("missing").is_err());
+        assert!(j.f64_field("s").is_err());
+        assert!(j.u64_field("neg").is_err());
+        assert!(j.u64_field("frac").is_err());
+        assert!(j.u64_field("tol").is_err());
+        assert!(j.bool_field("tol").is_err());
+        // a hand-built non-finite scalar errors instead of passing through
+        let mut m = BTreeMap::new();
+        m.insert("tol".to_string(), Json::Num(f64::NAN));
+        assert!(Json::Obj(m).f64_field("tol").is_err());
     }
 
     #[test]

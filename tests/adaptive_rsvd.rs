@@ -1,0 +1,193 @@
+//! Tolerance-driven adaptive-rank rSVD: accuracy against *closed-form*
+//! spectra (the requested tolerance must actually be met, verified with
+//! the true tail), bitwise determinism across thread counts and operator
+//! backends, and the coordinator round trip including the wire codec.
+
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Operand, Request};
+use rsvd::datagen::sparse::{tridiag_toeplitz, tridiag_toeplitz_spectrum};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::adaptive::{rsvd_adaptive, AdaptiveOpts};
+use rsvd::linalg::gemm::matmul_nt;
+use rsvd::linalg::svd_gesvd::svd;
+use rsvd::linalg::{Matrix, TiledMatrix};
+
+/// Spectral norm of `A − U·diag(s)·Vᵀ` — the quantity the tolerance
+/// contract bounds (exact solve of the small residual, fine at test sizes).
+fn reconstruction_error(a: &Matrix, r: &rsvd::linalg::adaptive::AdaptiveSvd) -> f64 {
+    let mut us = r.svd.u.clone();
+    for j in 0..r.rank() {
+        for i in 0..us.rows() {
+            us[(i, j)] *= r.svd.s[j];
+        }
+    }
+    let rec = matmul_nt(&us, &r.svd.v);
+    let diff = a.add_scaled(-1.0, &rec);
+    if diff.rows() == 0 || diff.cols() == 0 {
+        return 0.0;
+    }
+    svd(&diff).s[0]
+}
+
+#[test]
+fn meets_tolerance_on_tridiag_toeplitz_closed_form() {
+    // the sparse matrix with an *exactly* known spectrum: every claim is
+    // checked against the closed form, not another numeric solver
+    let n = 40;
+    let a = tridiag_toeplitz(n, 2.0, -1.0);
+    let exact = tridiag_toeplitz_spectrum(n, 2.0, -1.0);
+    let dense = a.to_dense();
+    for tol in [2.0, 1.0, 0.25] {
+        let r = rsvd_adaptive(&a, tol, &AdaptiveOpts::default());
+        let rank = r.rank();
+        assert!(rank > 0, "tol {tol} keeps some spectrum (σ1 ≈ {})", exact[0]);
+        // true tail: the first singular value *past* the reported rank
+        // must fit the tolerance — otherwise the rank lied
+        if rank < n {
+            assert!(
+                exact[rank] <= tol,
+                "tol {tol}: true tail σ_{} = {} exceeds it",
+                rank + 1,
+                exact[rank]
+            );
+        }
+        // the factorization really is that close (spectral norm)
+        let err = reconstruction_error(&dense, &r);
+        assert!(err <= tol, "tol {tol}: reconstruction err {err}");
+        // the values it did return match the closed form tightly
+        for (i, got) in r.svd.s.iter().enumerate() {
+            assert!(
+                (got - exact[i]).abs() < 1e-6 * exact[0],
+                "tol {tol} σ{i}: {got} vs {}",
+                exact[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn meets_tolerance_on_decay_spectra() {
+    // spectrum_matrix builds A = U·Σ·Vᵀ with known σᵢ = decay.sigma(i)
+    for (decay, tols) in [
+        (Decay::Fast, [0.05, 0.01]),
+        (Decay::Sharp { beta: 10.0 }, [0.5, 0.05]),
+    ] {
+        let (m, n) = (60, 40);
+        let a = spectrum_matrix(m, n, decay, 7);
+        for tol in tols {
+            let r = rsvd_adaptive(&a, tol, &AdaptiveOpts::default());
+            let rank = r.rank();
+            assert!(rank > 0 && rank <= n, "{decay:?} tol {tol}: rank {rank}");
+            if rank < n {
+                assert!(
+                    decay.sigma(rank) <= tol,
+                    "{decay:?} tol {tol}: true tail {} exceeds it",
+                    decay.sigma(rank)
+                );
+            }
+            let err = reconstruction_error(&a, &r);
+            assert!(err <= tol, "{decay:?} tol {tol}: reconstruction err {err}");
+        }
+    }
+}
+
+#[test]
+fn bitwise_across_thread_counts() {
+    // large enough that the BLAS-3 team genuinely fans out (above the
+    // serial-fallback flop threshold) — a small matrix would pass
+    // vacuously
+    let a = spectrum_matrix(600, 400, Decay::Fast, 11);
+    let run = |threads: Option<usize>| {
+        // block 16 puts each growth step's apply past the serial-fallback
+        // flop threshold, so the team genuinely fans out every round
+        let opts = AdaptiveOpts { block: 16, threads, ..Default::default() };
+        rsvd_adaptive(&a, 0.01, &opts)
+    };
+    let one = run(Some(1));
+    assert!(one.rank() > 0);
+    for other in [run(Some(2)), run(None)] {
+        assert_eq!(one.svd.s, other.svd.s, "values must be bitwise thread-invariant");
+        assert_eq!(one.svd.u, other.svd.u);
+        assert_eq!(one.svd.v, other.svd.v);
+        assert_eq!(one.est, other.est);
+        assert_eq!(one.steps, other.steps);
+    }
+}
+
+#[test]
+fn bitwise_across_dense_and_tiled_backends() {
+    let a = spectrum_matrix(70, 50, Decay::Fast, 13);
+    let opts = AdaptiveOpts { seed: 3, ..Default::default() };
+    let dense = rsvd_adaptive(&a, 0.02, &opts);
+    assert!(dense.rank() > 0);
+    for tile in [1usize, 11, 32, 70] {
+        let t = TiledMatrix::from_dense(&a, tile);
+        let got = rsvd_adaptive(&t, 0.02, &opts);
+        assert_eq!(got.svd.s, dense.svd.s, "tile {tile}");
+        assert_eq!(got.svd.u, dense.svd.u, "tile {tile}");
+        assert_eq!(got.svd.v, dense.svd.v, "tile {tile}");
+        assert_eq!(got.est, dense.est, "tile {tile}");
+    }
+    // the disk-spilled store shares every code path but the panel source
+    let spilled = TiledMatrix::from_dense_spilled(&a, 16).expect("scratch spill");
+    let got = rsvd_adaptive(&spilled, 0.02, &opts);
+    assert_eq!(got.svd.s, dense.svd.s, "spilled store");
+    assert_eq!(got.svd.u, dense.svd.u, "spilled store");
+    assert_eq!(got.svd.v, dense.svd.v, "spilled store");
+}
+
+#[test]
+fn coordinator_serves_adaptive_over_the_wire() {
+    // request travels through the JSON codec, then the coordinator; the
+    // answer matches the direct library call bitwise
+    let a = spectrum_matrix(50, 30, Decay::Fast, 17);
+    let req = Request::SvdAdaptive {
+        a: Operand::Dense(a.clone()),
+        tol: 0.05,
+        block: 8,
+        max_rank: 0,
+        method: Method::Auto,
+        want_vectors: true,
+        seed: 21,
+    };
+    let wire = req.adaptive_to_json().expect("adaptive encodes").to_string();
+    let decoded =
+        Request::adaptive_from_json(&rsvd::util::json::Json::parse(&wire).unwrap()).unwrap();
+
+    let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+    let res = coord.run(decoded);
+    let d = res.outcome.expect("adaptive job ok");
+    assert_eq!(d.method_used, "native_rsvd");
+
+    let opts = AdaptiveOpts { seed: 21, ..Default::default() };
+    let direct = rsvd_adaptive(&a, 0.05, &opts);
+    assert_eq!(d.values, direct.svd.s);
+    assert_eq!(d.u.as_ref(), Some(&direct.svd.u));
+    assert_eq!(d.v.as_ref(), Some(&direct.svd.v));
+    assert!(!d.values.is_empty() && d.values.len() < 30, "rank was discovered");
+}
+
+#[test]
+fn coordinator_adaptive_exact_method_honored() {
+    // an explicitly requested exact method densifies and trims at the
+    // tolerance: values match the exact solver, rank is tolerance-driven
+    let a = spectrum_matrix(40, 30, Decay::Fast, 19);
+    let tol = 0.01;
+    let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+    let res = coord.run(Request::SvdAdaptive {
+        a: Operand::Dense(a.clone()),
+        tol,
+        block: 8,
+        max_rank: 0,
+        method: Method::Gesvd,
+        want_vectors: false,
+        seed: 1,
+    });
+    let d = res.outcome.expect("ok");
+    assert_eq!(d.method_used, "gesvd");
+    let exact = svd(&a);
+    let want = exact.s.iter().take_while(|&&x| x > tol * 0.5).count();
+    assert_eq!(d.values.len(), want);
+    for i in 0..want {
+        assert!((d.values[i] - exact.s[i]).abs() < 1e-9 * exact.s[0]);
+    }
+}
