@@ -1,0 +1,171 @@
+//! Serve front-end bench: hot cache-hit socket round trips against the
+//! pure codec floor — the acceptance gate for the result cache is that a
+//! repeat decomposition answers at ~codec cost (no BLAS on the hit path).
+//!
+//! ```sh
+//! cargo bench --bench serve -- [--reps 200]
+//! cargo bench --bench serve -- --smoke   # fast CI mode → BENCH_serve.json
+//! ```
+//!
+//! Three measurements over one dense request (256×256 fast-decay, k=8):
+//!
+//! * **codec floor** — what answering a frame costs with no server at all:
+//!   parse the request line, decode it through [`Request::from_wire_json`],
+//!   encode the canned reply with [`response_json`], parse it back. This is
+//!   the lower bound any NDJSON front end pays per frame.
+//! * **miss** — first submission over a real socket: full solver path.
+//! * **hit** — the same frame resubmitted: dispatcher answers from the
+//!   fingerprint-keyed cache. Best-of-`reps` must land within 2× the codec
+//!   floor (asserted), and the hit spectrum must be bitwise the miss one.
+//!
+//! Writes `BENCH_serve.json` (cargo runs benches with CWD = the package
+//! root, so it lands at `rust/BENCH_serve.json`); CI's bench-guard watches
+//! the `*_round_trips_per_s` metrics.
+
+use rsvd::bench_harness::{fmt_secs, save_json, Table};
+use rsvd::coordinator::net::response_json;
+use rsvd::coordinator::{
+    Coordinator, CoordinatorCfg, Decomposition, JobResult, Method, Request, ServeCfg, Server,
+};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let reps = args.get_usize("reps", if smoke { 40 } else { 200 });
+    let (m, n, k) = (256usize, 256usize, 8usize);
+
+    // one dense request, pre-encoded once — the hot loop replays the same
+    // bytes, exactly what a caching client does
+    let a = spectrum_matrix(m, n, Decay::Fast, 3);
+    let req = Request::Svd { a, k, method: Method::NativeRsvd, want_vectors: false, seed: 7 };
+    let frame = req.to_wire_json().expect("wire form").to_string();
+
+    let coord = Arc::new(Coordinator::start_host_only(CoordinatorCfg {
+        cache: 8,
+        ..Default::default()
+    }));
+    let mut server = Server::start(
+        coord,
+        ServeCfg { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .expect("start serve front end");
+    let addr = server.local_addr();
+
+    let tx = TcpStream::connect(addr).expect("connect");
+    let mut rx = BufReader::new(tx.try_clone().expect("clone socket"));
+    let mut tx = tx;
+    let mut round_trip = |line: &str| -> Json {
+        tx.write_all(line.as_bytes()).expect("send");
+        tx.write_all(b"\n").expect("send");
+        let mut reply = String::new();
+        rx.read_line(&mut reply).expect("recv");
+        Json::parse(reply.trim()).expect("parse reply")
+    };
+
+    // miss: the first submission runs the solver and populates the cache
+    let t0 = Instant::now();
+    let miss = round_trip(&frame);
+    let t_miss = t0.elapsed();
+    assert!(miss.bool_field("ok").unwrap(), "miss failed: {miss}");
+    assert!(!miss.bool_field("cached").unwrap(), "first submission cannot hit");
+    let miss_values = miss.f64_arr_field("values").expect("values");
+
+    // hot hits: best-of-reps socket round trips, every reply cached and
+    // bitwise the miss spectrum
+    let mut best_hit = Duration::MAX;
+    let mut all_bitwise = true;
+    for _ in 0..3 {
+        let r = round_trip(&frame); // warmup (socket buffers, allocator)
+        assert!(r.bool_field("cached").unwrap(), "warmup must hit: {r}");
+    }
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = round_trip(&frame);
+        best_hit = best_hit.min(t0.elapsed());
+        assert!(r.bool_field("cached").unwrap(), "hot loop must hit: {r}");
+        all_bitwise &= r.f64_arr_field("values").unwrap() == miss_values;
+    }
+
+    // codec floor: decode the same request line + encode/parse the same
+    // reply, no server — the per-frame cost any NDJSON front end pays
+    let canned = JobResult {
+        id: 0,
+        outcome: Ok(Decomposition {
+            values: miss_values.clone(),
+            u: None,
+            v: None,
+            method_used: "native_rsvd",
+            bucket: None,
+        }),
+        queued: Duration::ZERO,
+        exec: Duration::ZERO,
+        cached: true,
+    };
+    let mut best_codec = Duration::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let j = Json::parse(&frame).expect("parse request");
+        let decoded = Request::from_wire_json(&j).expect("decode request");
+        std::hint::black_box(&decoded);
+        let reply = response_json(None, &canned).to_string();
+        let parsed = Json::parse(&reply).expect("parse reply");
+        std::hint::black_box(parsed.f64_arr_field("values").expect("values"));
+        best_codec = best_codec.min(t0.elapsed());
+    }
+
+    let ratio = best_hit.as_secs_f64() / best_codec.as_secs_f64();
+    let within_2x = ratio <= 2.0;
+    let codec_rps = 1.0 / best_codec.as_secs_f64();
+    let hit_rps = 1.0 / best_hit.as_secs_f64();
+
+    let mut table = Table::new(
+        &format!("serve cache-hit latency vs codec floor ({m}x{n}, k={k}, best of {reps})"),
+        &["leg", "time", "round trips/s"],
+    );
+    table.row(vec!["miss (solver)".into(), fmt_secs(t_miss.as_secs_f64()), "-".into()]);
+    table.row(vec![
+        "hit (socket)".into(),
+        fmt_secs(best_hit.as_secs_f64()),
+        format!("{hit_rps:.1}"),
+    ]);
+    table.row(vec![
+        "codec floor".into(),
+        fmt_secs(best_codec.as_secs_f64()),
+        format!("{codec_rps:.1}"),
+    ]);
+    table.print();
+    println!("hit/codec ratio: {ratio:.2}x (gate: ≤ 2.0x), bitwise: {all_bitwise}");
+
+    assert!(all_bitwise, "cached spectra must be bitwise the solved one");
+    assert!(
+        within_2x,
+        "cache-hit round trip ({}) must be within 2x the codec floor ({})",
+        fmt_secs(best_hit.as_secs_f64()),
+        fmt_secs(best_codec.as_secs_f64())
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("serve".into()));
+    doc.insert("shape".to_string(), Json::Str(format!("{m}x{n}")));
+    doc.insert("k".to_string(), Json::Num(k as f64));
+    doc.insert("reps".to_string(), Json::Num(reps as f64));
+    doc.insert("miss_s".to_string(), Json::Num(t_miss.as_secs_f64()));
+    doc.insert("hit_s".to_string(), Json::Num(best_hit.as_secs_f64()));
+    doc.insert("codec_s".to_string(), Json::Num(best_codec.as_secs_f64()));
+    doc.insert("hit_round_trips_per_s".to_string(), Json::Num(hit_rps));
+    doc.insert("codec_round_trips_per_s".to_string(), Json::Num(codec_rps));
+    doc.insert("hit_over_codec_ratio".to_string(), Json::Num(ratio));
+    doc.insert("within_2x".to_string(), Json::Bool(within_2x));
+    doc.insert("bitwise_identical".to_string(), Json::Bool(all_bitwise));
+    save_json("BENCH_serve.json", &Json::Obj(doc));
+
+    server.shutdown();
+}

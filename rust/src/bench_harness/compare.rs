@@ -18,7 +18,9 @@ use crate::util::json::Json;
 pub struct Metric {
     /// JSON path, e.g. `results[1].parallel_gflops`.
     pub path: String,
+    /// Value in the baseline artifact.
     pub baseline: f64,
+    /// Value in the current artifact.
     pub current: f64,
 }
 

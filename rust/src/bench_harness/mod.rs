@@ -17,12 +17,16 @@ use std::time::{Duration, Instant};
 /// Timing statistics over N runs.
 #[derive(Clone, Debug)]
 pub struct Timing {
+    /// Mean seconds per run.
     pub mean_s: f64,
+    /// Population standard deviation, seconds.
     pub std_s: f64,
+    /// Number of timed runs.
     pub runs: usize,
 }
 
 impl Timing {
+    /// Mean/std over measured durations.
     pub fn from_durations(ds: &[Duration]) -> Timing {
         let n = ds.len().max(1) as f64;
         let xs: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
@@ -57,12 +61,16 @@ pub fn speedup(other: &Timing, ours: &Timing) -> (f64, f64, f64) {
 
 /// Simple aligned-column table with markdown and CSV emitters.
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows, one cell per header.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given caption and headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -71,11 +79,13 @@ impl Table {
         }
     }
 
+    /// Append a row; panics on a column-count mismatch.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count");
         self.rows.push(cells);
     }
 
+    /// Print as a markdown table.
     pub fn print(&self) {
         println!("\n### {}\n", self.title);
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -102,6 +112,7 @@ impl Table {
         }
     }
 
+    /// Render as CSV, headers first.
     pub fn to_csv(&self) -> String {
         let mut out = self.headers.join(",") + "\n";
         for r in &self.rows {

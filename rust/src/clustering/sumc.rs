@@ -28,6 +28,7 @@ pub trait SubspaceSolver {
     fn subspace(&mut self, xc: &Matrix, dmax: usize) -> Result<(Vec<f64>, Matrix), String>;
     /// Number of solver invocations so far.
     fn calls(&self) -> u64;
+    /// Short backend tag for reporting.
     fn name(&self) -> &'static str;
 }
 
@@ -59,13 +60,17 @@ impl SubspaceSolver for CpuSolver {
 /// Coordinator-backed backend: routes each eigenproblem through the
 /// service (device pipeline when a bucket fits — the paper's GPU path).
 pub struct ServiceSolver<'a> {
+    /// The coordinator answering the eigenproblems.
     pub coord: &'a Coordinator,
+    /// Backend requested for every solve.
     pub method: Method,
+    /// Base seed; each call perturbs it so repeated sketches differ.
     pub seed: u64,
     calls: u64,
 }
 
 impl<'a> ServiceSolver<'a> {
+    /// Backend over an existing coordinator.
     pub fn new(coord: &'a Coordinator, method: Method, seed: u64) -> Self {
         Self { coord, method, seed, calls: 0 }
     }
@@ -102,25 +107,32 @@ impl SubspaceSolver for ServiceSolver<'_> {
 /// SuMC configuration.
 #[derive(Clone, Debug)]
 pub struct SumcCfg {
+    /// Number of clusters.
     pub n_clusters: usize,
     /// global dimension budget Σ dⱼ (the "compression rate" knob; for the
     /// planted datasets, the sum of true dims).
     pub dim_budget: usize,
     /// per-cluster cap on candidate dimensions (bounds solver cost).
     pub max_dim: usize,
+    /// Iteration cap for the reassignment loop.
     pub max_iters: usize,
+    /// RNG seed (solver sketches).
     pub seed: u64,
 }
 
 /// Clustering outcome + accounting.
 pub struct SumcResult {
+    /// Cluster assignment per point.
     pub labels: Vec<usize>,
     /// allocated subspace dimension per cluster
     pub dims: Vec<usize>,
+    /// Reassignment iterations executed.
     pub iterations: usize,
+    /// Total eigensolver invocations.
     pub solver_calls: u64,
     /// final total compression cost Σ residuals
     pub cost: f64,
+    /// Whether the loop reached a fixed point before `max_iters`.
     pub converged: bool,
 }
 

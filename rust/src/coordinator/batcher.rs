@@ -18,8 +18,26 @@ use std::collections::BTreeMap;
 /// Batch of job indices sharing a route key.
 #[derive(Debug, PartialEq)]
 pub struct Batch {
+    /// The route key every job in this batch shares.
     pub key: String,
+    /// Indices into the planned job slice, in submission order.
     pub jobs: Vec<usize>,
+}
+
+/// Round-robin successor: the client id served after `last`, over the
+/// sorted live-client set `ids`. Picks the smallest id strictly greater
+/// than `last`, wrapping to the smallest id overall — so every client with
+/// queued work is visited once per sweep regardless of how unevenly the
+/// queues are filled (one chatty pipelining client cannot starve a
+/// one-shot neighbor). `None` only when no clients are live. `last` may
+/// have disconnected since its turn; the strict `>` scan handles a
+/// vanished id naturally.
+pub fn rr_next(ids: &[u64], last: Option<u64>) -> Option<u64> {
+    let first = *ids.first()?;
+    match last {
+        None => Some(first),
+        Some(l) => Some(ids.iter().copied().find(|&id| id > l).unwrap_or(first)),
+    }
 }
 
 /// Coarse batch key: route target only (the pre-fusion grouping).
@@ -184,6 +202,34 @@ mod tests {
         let b = plan_batches(&keys(&["z", "a", "z"]), 10);
         assert_eq!(b[0].key, "z"); // z arrived first
         assert_eq!(b[1].key, "a");
+    }
+
+    #[test]
+    fn rr_next_visits_every_client_and_survives_departures() {
+        // empty set: nothing to serve
+        assert_eq!(rr_next(&[], None), None);
+        assert_eq!(rr_next(&[], Some(3)), None);
+        // fresh sweep starts at the smallest id
+        assert_eq!(rr_next(&[2, 5, 9], None), Some(2));
+        // strict successor, wrapping at the end
+        assert_eq!(rr_next(&[2, 5, 9], Some(2)), Some(5));
+        assert_eq!(rr_next(&[2, 5, 9], Some(5)), Some(9));
+        assert_eq!(rr_next(&[2, 5, 9], Some(9)), Some(2));
+        // the last-served client disconnected: the scan continues from
+        // where its id would have been
+        assert_eq!(rr_next(&[2, 9], Some(5)), Some(9));
+        assert_eq!(rr_next(&[2, 5], Some(9)), Some(2));
+        // a full sweep over any sorted set visits each id exactly once
+        let ids = [1u64, 4, 7, 8, 20];
+        let mut seen = Vec::new();
+        let mut last = None;
+        for _ in 0..ids.len() {
+            let next = rr_next(&ids, last).unwrap();
+            seen.push(next);
+            last = Some(next);
+        }
+        assert_eq!(seen, ids);
+        assert_eq!(rr_next(&ids, last), Some(1), "sweep wraps");
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Fingerprint-keyed LRU result cache: repeated decompositions of a hot
+//! matrix return at ~codec cost without touching BLAS.
+//!
+//! Keyed by (content fingerprint, request params, seed) — everything that
+//! determines the result. The fingerprint is a hash, so a hit is only
+//! served after a payload-equality re-check against the stored request
+//! (the same collision policy as the fused wide-sketch executor,
+//! [`super::exec::try_execute_fused`]): a colliding key *misses* and falls
+//! through to the solver instead of serving another matrix's spectrum.
+//! Because every solver path is deterministic in (payload, params, seed),
+//! a cached result is bitwise identical to a fresh solve.
+//!
+//! [`Request::Pca`] is never cached — it has no wire form and rides the
+//! queue only in-process (see docs/PROTOCOL.md).
+
+use super::job::{Decomposition, Request};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// The cache key: payload content fingerprint plus a canonical params
+/// string covering every result-determining knob (variant, payload kind,
+/// shape, k / tol / block / cap, method, output flavor, seed).
+pub type CacheKey = (u64, String);
+
+/// Canonical cache key of a request, or `None` for the uncacheable
+/// [`Request::Pca`]. The fingerprint is one streaming pass over the
+/// payload (the same hash the batcher fuses on); the params string pins
+/// everything else that feeds the solver.
+pub fn key_of(req: &Request) -> Option<CacheKey> {
+    let flavor = |v: bool| if v { "uv" } else { "vals" };
+    let params = match req {
+        Request::Svd { a, k, method, want_vectors, seed } => {
+            let (m, n) = a.shape();
+            format!("svd:dense:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+        }
+        Request::SvdSparse { a, k, method, want_vectors, seed } => {
+            let (m, n) = a.shape();
+            format!("svd:sparse:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+        }
+        Request::SvdTiled { a, k, method, want_vectors, seed } => {
+            // tile height is deliberately absent: tilings of the same data
+            // share a fingerprint, compare equal, and solve bitwise
+            // identically, so they legally share a cache entry
+            let (m, n) = a.shape();
+            format!("svd:tiled:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+        }
+        Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } => {
+            let (m, n) = a.shape();
+            format!(
+                "adaptive:{}:{m}x{n}:tol{tol:e}:b{block}:cap{max_rank}:{}:{}:s{seed}",
+                a.kind(),
+                method.name(),
+                flavor(*want_vectors)
+            )
+        }
+        Request::Pca { .. } => return None,
+    };
+    Some((req.fingerprint(), params))
+}
+
+/// Payload-equality re-check between a cached request and a candidate
+/// sharing its key — the collision guard. Same policy as the fused
+/// executor's pre-stack re-check: contents must be equal *within the same
+/// payload kind* (a dense twin of a sparse matrix is a different operator).
+fn payload_eq(cached: &Request, req: &Request) -> bool {
+    match (cached, req) {
+        (Request::Svd { a: x, .. }, Request::Svd { a: y, .. }) => x == y,
+        (Request::SvdSparse { a: x, .. }, Request::SvdSparse { a: y, .. }) => x == y,
+        (Request::SvdTiled { a: x, .. }, Request::SvdTiled { a: y, .. }) => x == y,
+        (Request::SvdAdaptive { a: x, .. }, Request::SvdAdaptive { a: y, .. }) => x == y,
+        _ => false,
+    }
+}
+
+struct Entry {
+    /// The request that produced the result — kept whole so a hit can
+    /// re-check payload equality (the fingerprint alone is a hash, not a
+    /// proof).
+    request: Request,
+    result: Decomposition,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    tick: u64,
+    map: BTreeMap<CacheKey, Entry>,
+}
+
+/// Shared LRU result cache in front of the solvers. Capacity 0 disables
+/// it entirely (every call is a no-op — the embedded default, so
+/// coordinator metrics and batch accounting stay exactly as without a
+/// cache); the serve front end enables it per [`super::CoordinatorCfg`].
+pub struct ResultCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ResultCache {
+    /// A cache holding at most `cap` results (0 = disabled).
+    pub fn new(cap: usize) -> Self {
+        Self { cap, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Configured capacity (0 = disabled).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Whether the cache is enabled (capacity > 0). The dispatcher skips
+    /// lookups — and their O(payload) fingerprint hash — entirely when
+    /// disabled.
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Poison-recovering lock, same policy as [`super::Metrics`]: the state
+    /// is counters and owned clones — always consistent — and propagating
+    /// a poison would turn one panicked job into a dead cache for the rest
+    /// of the process.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Look up a request: `Some(result)` only when the key matches **and**
+    /// the stored payload equals the request's payload (collision-safe). A
+    /// hit refreshes the entry's LRU position. Uncacheable requests and a
+    /// disabled cache always miss.
+    pub fn lookup(&self, req: &Request) -> Option<Decomposition> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = key_of(req)?;
+        self.lookup_keyed(&key, req)
+    }
+
+    /// Keyed lookup — split out (crate-visible) so tests can force a key
+    /// collision without needing two payloads that really collide in the
+    /// 64-bit fingerprint space.
+    pub(crate) fn lookup_keyed(&self, key: &CacheKey, req: &Request) -> Option<Decomposition> {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        let entry = g.map.get_mut(key)?;
+        if !payload_eq(&entry.request, req) {
+            // fingerprint collision: miss, fall through to the solver
+            return None;
+        }
+        entry.last_used = tick;
+        Some(entry.result.clone())
+    }
+
+    /// Insert a solved result, evicting the least-recently-used entries
+    /// once past capacity. Re-inserting an existing key overwrites it
+    /// (after a collision miss the newest payload wins — a true 64-bit
+    /// collision can thrash an entry, never corrupt a result). No-op for
+    /// uncacheable requests or a disabled cache.
+    pub fn insert(&self, req: &Request, result: &Decomposition) {
+        if !self.enabled() {
+            return;
+        }
+        let Some(key) = key_of(req) else {
+            return;
+        };
+        self.insert_keyed(key, req.clone(), result.clone());
+    }
+
+    pub(crate) fn insert_keyed(&self, key: CacheKey, request: Request, result: Decomposition) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.insert(key, Entry { request, result, last_used: tick });
+        while g.map.len() > self.cap {
+            let lru = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty over-capacity map");
+            g.map.remove(&lru);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{Method, Operand};
+    use crate::linalg::{Csr, Matrix, TiledMatrix};
+
+    fn svd_req(a: Matrix, seed: u64) -> Request {
+        Request::Svd { a, k: 2, method: Method::Gesvd, want_vectors: false, seed }
+    }
+
+    fn result(tag: f64) -> Decomposition {
+        Decomposition {
+            values: vec![tag, tag / 2.0],
+            u: None,
+            v: None,
+            method_used: "gesvd",
+            bucket: None,
+        }
+    }
+
+    #[test]
+    fn hit_returns_stored_result_and_miss_on_params() {
+        let cache = ResultCache::new(4);
+        let a = Matrix::gaussian(6, 4, 1);
+        let req = svd_req(a.clone(), 7);
+        assert!(cache.lookup(&req).is_none(), "cold cache misses");
+        cache.insert(&req, &result(3.0));
+        let hit = cache.lookup(&req).expect("hit");
+        assert_eq!(hit.values, vec![3.0, 1.5]);
+        // any params change is a different key: seed, k, method, flavor
+        assert!(cache.lookup(&svd_req(a.clone(), 8)).is_none());
+        let mut other = svd_req(a.clone(), 7);
+        if let Request::Svd { k, .. } = &mut other {
+            *k = 3;
+        }
+        assert!(cache.lookup(&other).is_none());
+        // different content misses too (different fingerprint)
+        assert!(cache.lookup(&svd_req(Matrix::gaussian(6, 4, 2), 7)).is_none());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let cache = ResultCache::new(2);
+        let reqs: Vec<Request> =
+            (0..3).map(|i| svd_req(Matrix::gaussian(5, 3, 10 + i), i)).collect();
+        cache.insert(&reqs[0], &result(0.0));
+        cache.insert(&reqs[1], &result(1.0));
+        // touch 0 so 1 becomes the least-recently-used
+        assert!(cache.lookup(&reqs[0]).is_some());
+        cache.insert(&reqs[2], &result(2.0));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&reqs[1]).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(&reqs[0]).is_some(), "recently-touched entry survives");
+        assert!(cache.lookup(&reqs[2]).is_some(), "newest entry survives");
+    }
+
+    #[test]
+    fn fingerprint_collision_recheck_misses() {
+        // two different matrices forced onto one key — exactly what a
+        // 64-bit fingerprint collision would produce. The equality
+        // re-check must miss rather than serve the wrong spectrum.
+        let cache = ResultCache::new(4);
+        let req_a = svd_req(Matrix::gaussian(5, 3, 1), 7);
+        let req_b = svd_req(Matrix::gaussian(5, 3, 2), 7);
+        let forced_key = (0xdead_beef_u64, "svd:dense:5x3:k2:gesvd:vals:s7".to_string());
+        cache.insert_keyed(forced_key.clone(), req_a.clone(), result(1.0));
+        assert!(
+            cache.lookup_keyed(&forced_key, &req_b).is_none(),
+            "colliding payload must fall through to the solver"
+        );
+        assert!(cache.lookup_keyed(&forced_key, &req_a).is_some(), "true owner still hits");
+    }
+
+    #[test]
+    fn disabled_cache_is_a_no_op() {
+        let cache = ResultCache::new(0);
+        assert!(!cache.enabled());
+        let req = svd_req(Matrix::gaussian(4, 3, 1), 1);
+        cache.insert(&req, &result(1.0));
+        assert!(cache.lookup(&req).is_none());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn tilings_share_an_entry_but_kinds_never_do() {
+        let cache = ResultCache::new(4);
+        let d = Matrix::gaussian(6, 4, 3);
+        let tiled = |tile: usize| Request::SvdTiled {
+            a: TiledMatrix::from_dense(&d, tile),
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 5,
+        };
+        cache.insert(&tiled(2), &result(9.0));
+        assert!(
+            cache.lookup(&tiled(3)).is_some(),
+            "tilings share fingerprint, equality, and bitwise results"
+        );
+        // the dense twin of the same numbers is a different operator
+        let dense = Request::Svd {
+            a: d,
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 5,
+        };
+        assert!(cache.lookup(&dense).is_none());
+    }
+
+    #[test]
+    fn adaptive_and_sparse_keys_cover_their_knobs() {
+        let sp = Csr::from_coo(5, 4, &[(0, 0, 1.0), (4, 3, 2.0)]).unwrap();
+        let adaptive = |tol: f64| Request::SvdAdaptive {
+            a: Operand::Sparse(sp.clone()),
+            tol,
+            block: 4,
+            max_rank: 0,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+        };
+        let cache = ResultCache::new(4);
+        cache.insert(&adaptive(0.1), &result(4.0));
+        assert!(cache.lookup(&adaptive(0.1)).is_some());
+        assert!(cache.lookup(&adaptive(0.01)).is_none(), "tolerance is result-determining");
+        // PCA is uncacheable by design
+        let pca =
+            Request::Pca { x: Matrix::gaussian(4, 3, 1), k: 1, method: Method::Auto, seed: 0 };
+        assert!(key_of(&pca).is_none());
+        cache.insert(&pca, &result(1.0));
+        assert!(cache.lookup(&pca).is_none());
+    }
+}

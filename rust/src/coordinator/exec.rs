@@ -35,7 +35,7 @@ pub fn execute(
 /// product kernels differ. Two *tilings* of the same content do qualify —
 /// the blocked products are bitwise interchangeable). Per-job
 /// sketches stack column-wise and the range-finder flops run as single
-/// wide block products ([`native_rsvd::rsvd_batch`] — GEMM dense, SpMM
+/// wide block products ([`crate::linalg::rsvd::rsvd_batch`] — GEMM dense, SpMM
 /// sparse); results are bitwise identical to per-job [`execute`]. Returns
 /// `None` when the batch does not qualify — callers then fall back to the
 /// sequential per-job path.

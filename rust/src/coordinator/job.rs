@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 /// when k is a large fraction of the spectrum).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
+    /// The router's choice (see the enum docs) — the wire default.
     Auto,
     /// AOT pipeline via PJRT ("ours" / the paper's GPU path).
     Device,
@@ -27,6 +28,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Canonical wire name (the inverse of [`Method::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             Method::Auto => "auto",
@@ -39,6 +41,7 @@ impl Method {
         }
     }
 
+    /// Parse a wire name, aliases included (`rsvd`, `svds`, `dsyevr`).
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s {
             "auto" => Method::Auto,
@@ -58,12 +61,16 @@ impl Method {
 /// variant serves all three backends instead of tripling the enum.
 #[derive(Clone, Debug)]
 pub enum Operand {
+    /// Dense row-major matrix.
     Dense(Matrix),
+    /// CSR sparse matrix — never densified by any backend.
     Sparse(Csr),
+    /// Out-of-core row-panel matrix.
     Tiled(TiledMatrix),
 }
 
 impl Operand {
+    /// (rows, cols) of the payload.
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Operand::Dense(a) => a.shape(),
@@ -223,6 +230,7 @@ impl Request {
         }
     }
 
+    /// The requested solver backend.
     pub fn method(&self) -> Method {
         match self {
             Request::Svd { method, .. }
@@ -233,6 +241,7 @@ impl Request {
         }
     }
 
+    /// (rows, cols) of the operand.
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Request::Svd { a, .. } => a.shape(),
@@ -256,6 +265,77 @@ impl Request {
             Request::SvdAdaptive { a, .. } => a.fingerprint(),
             Request::Pca { x, .. } => x.fingerprint(),
         }
+    }
+
+    /// Wire encoding of the request — the newline-delimited frame body the
+    /// serve front end ([`crate::coordinator::net`]) speaks, one object per
+    /// variant: `{"type":"svd"|"svd_sparse"|"svd_tiled"|"svd_adaptive",
+    /// "a":{payload},…}`. The seed travels as a decimal string so all 64
+    /// bits survive the f64 wire. Returns `None` for [`Request::Pca`],
+    /// which has no wire form (PCA is an in-process composition over the
+    /// SVD primitives — see docs/PROTOCOL.md).
+    pub fn to_wire_json(&self) -> Option<Json> {
+        let (ty, a, k, method, want_vectors, seed) = match self {
+            Request::Svd { a, k, method, want_vectors, seed } => {
+                ("svd", json::matrix_to_json(a), *k, *method, *want_vectors, *seed)
+            }
+            Request::SvdSparse { a, k, method, want_vectors, seed } => {
+                ("svd_sparse", json::csr_to_json(a), *k, *method, *want_vectors, *seed)
+            }
+            Request::SvdTiled { a, k, method, want_vectors, seed } => {
+                ("svd_tiled", json::tiled_to_json(a), *k, *method, *want_vectors, *seed)
+            }
+            Request::SvdAdaptive { .. } => return self.adaptive_to_json(),
+            Request::Pca { .. } => return None,
+        };
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str(ty.into()));
+        obj.insert("a".to_string(), a);
+        obj.insert("k".to_string(), Json::Num(k as f64));
+        obj.insert("method".to_string(), Json::Str(method.name().into()));
+        obj.insert("want_vectors".to_string(), Json::Bool(want_vectors));
+        obj.insert("seed".to_string(), Json::Str(seed.to_string()));
+        Some(Json::Obj(obj))
+    }
+
+    /// Decode a [`Request::to_wire_json`] object, dispatching on the
+    /// required `type` field. Every field is validated the same way the
+    /// adaptive codec validates ([`Request::adaptive_from_json`]): integer
+    /// knobs, known method, decimal-string seed, payload by its `format`
+    /// tag with non-finite values rejected — and the payload kind must
+    /// match the request type (a `"svd"` frame carrying a CSR payload is a
+    /// protocol error, not a silent densification).
+    pub fn from_wire_json(j: &Json) -> Result<Request, String> {
+        let ty = j.str_field("type")?;
+        if ty == "svd_adaptive" {
+            return Self::adaptive_from_json(j);
+        }
+        let want_kind = match ty {
+            "svd" => "dense",
+            "svd_sparse" => "sparse",
+            "svd_tiled" => "tiled",
+            other => return Err(format!("unsupported request type '{other}'")),
+        };
+        let a = Operand::from_json(j.get("a").ok_or("missing operand field 'a'")?)?;
+        if a.kind() != want_kind {
+            return Err(format!(
+                "request type '{ty}' requires a {want_kind} payload, got '{}'",
+                a.kind()
+            ));
+        }
+        let k = j.u64_field("k")? as usize;
+        let mname = j.str_field("method")?;
+        let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
+        let want_vectors = j.bool_field("want_vectors")?;
+        let seed = j
+            .str_field("seed")?
+            .parse::<u64>()
+            .map_err(|e| format!("invalid seed: {e}"))?;
+        Ok(match a {
+            Operand::Dense(a) => Request::Svd { a, k, method, want_vectors, seed },
+            Operand::Sparse(a) => Request::SvdSparse { a, k, method, want_vectors, seed },
+            Operand::Tiled(a) => Request::SvdTiled { a, k, method, want_vectors, seed },
+        })
     }
 
     /// Wire encoding of an adaptive request:
@@ -329,24 +409,35 @@ pub struct Decomposition {
 /// Completed job envelope.
 #[derive(Debug)]
 pub struct JobResult {
+    /// Coordinator-assigned job id (submission order).
     pub id: u64,
+    /// The decomposition, or why the job failed.
     pub outcome: Result<Decomposition, String>,
     /// queue wait (submit → dispatch)
     pub queued: Duration,
     /// solver execution
     pub exec: Duration,
+    /// Served from the fingerprint-keyed result cache — no solver ran
+    /// (the payload-equality re-check passed; see
+    /// [`crate::coordinator::cache`]).
+    pub cached: bool,
 }
 
 /// Internal job representation flowing through the queue.
 pub struct Job {
+    /// Coordinator-assigned sequence number.
     pub id: u64,
+    /// What to solve.
     pub request: Request,
+    /// Submission instant (queue-wait accounting).
     pub submitted: Instant,
+    /// Where the executor sends the result.
     pub reply: mpsc::Sender<JobResult>,
 }
 
 /// Caller-side handle to an in-flight job.
 pub struct JobHandle {
+    /// The job's coordinator-assigned id.
     pub id: u64,
     pub(crate) rx: mpsc::Receiver<JobResult>,
 }
@@ -359,6 +450,7 @@ impl JobHandle {
             outcome: Err("coordinator dropped the job".into()),
             queued: Duration::ZERO,
             exec: Duration::ZERO,
+            cached: false,
         })
     }
 
@@ -556,6 +648,134 @@ mod tests {
             seed: 0,
         };
         assert!(fixed.adaptive_to_json().is_none());
+    }
+
+    #[test]
+    fn wire_codec_roundtrips_every_request_type() {
+        let d = Matrix::gaussian(5, 3, 4);
+        let sp = Csr::from_coo(5, 3, &[(0, 2, 1.5), (4, 0, -2.0)]).unwrap();
+        let t = TiledMatrix::from_dense(&d, 2);
+        let reqs = [
+            Request::Svd {
+                a: d.clone(),
+                k: 2,
+                method: Method::Gesvd,
+                want_vectors: true,
+                seed: u64::MAX - 3, // all 64 bits must survive the wire
+            },
+            Request::SvdSparse {
+                a: sp,
+                k: 3,
+                method: Method::NativeRsvd,
+                want_vectors: false,
+                seed: 7,
+            },
+            Request::SvdTiled {
+                a: t,
+                k: 1,
+                method: Method::Auto,
+                want_vectors: false,
+                seed: 0,
+            },
+            Request::SvdAdaptive {
+                a: Operand::Dense(d),
+                tol: 0.25,
+                block: 4,
+                max_rank: 8,
+                method: Method::Auto,
+                want_vectors: false,
+                seed: 11,
+            },
+        ];
+        for req in reqs {
+            let wire = req.to_wire_json().expect("wire form").to_string();
+            let back =
+                Request::from_wire_json(&crate::util::json::Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back.fingerprint(), req.fingerprint(), "content-exact roundtrip");
+            assert_eq!(back.shape(), req.shape());
+            assert_eq!(back.method(), req.method());
+            assert_eq!(back.k(), req.k());
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&req),
+                "variant preserved"
+            );
+            // seeds survive bit-exactly through the decimal-string rule
+            let seed_of = |r: &Request| match r {
+                Request::Svd { seed, .. }
+                | Request::SvdSparse { seed, .. }
+                | Request::SvdTiled { seed, .. }
+                | Request::SvdAdaptive { seed, .. }
+                | Request::Pca { seed, .. } => *seed,
+            };
+            assert_eq!(seed_of(&back), seed_of(&req));
+        }
+        // PCA has no wire form
+        let pca = Request::Pca {
+            x: Matrix::zeros(2, 2),
+            k: 1,
+            method: Method::Auto,
+            seed: 0,
+        };
+        assert!(pca.to_wire_json().is_none());
+    }
+
+    #[test]
+    fn wire_codec_rejects_malformed_and_mismatched() {
+        let good = Request::Svd {
+            a: Matrix::gaussian(3, 2, 1),
+            k: 1,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 5,
+        }
+        .to_wire_json()
+        .unwrap();
+        let mutate = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
+            let mut m = match good.clone() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            f(&mut m);
+            Request::from_wire_json(&Json::Obj(m))
+        };
+        // unknown / missing type
+        assert!(mutate(&|m| {
+            m.insert("type".into(), Json::Str("pca".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("type");
+        })
+        .is_err());
+        // payload kind must match the request type
+        let sp = Csr::from_coo(3, 2, &[(0, 0, 1.0)]).unwrap();
+        let err = mutate(&|m| {
+            m.insert("a".into(), json::csr_to_json(&sp));
+        })
+        .unwrap_err();
+        assert!(err.contains("dense payload"), "{err}");
+        // field validation mirrors the adaptive codec
+        assert!(mutate(&|m| {
+            m.insert("k".into(), Json::Num(1.5));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("method".into(), Json::Str("nope".into()));
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.insert("seed".into(), Json::Num(5.0)); // must be a decimal string
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("a");
+        })
+        .is_err());
+        assert!(mutate(&|m| {
+            m.remove("want_vectors");
+        })
+        .is_err());
     }
 
     #[test]

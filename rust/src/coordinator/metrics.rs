@@ -18,10 +18,12 @@ pub struct Histogram {
 const NBUCKETS: usize = 42;
 
 impl Histogram {
+    /// Empty histogram with all buckets at zero.
     pub fn new() -> Self {
         Self { counts: vec![0; NBUCKETS], sum_us: 0, max_us: 0 }
     }
 
+    /// Record one duration (sub-µs samples clamp up to 1µs).
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().max(1);
         let b = (127 - (us as u128).leading_zeros() as usize).min(NBUCKETS - 1);
@@ -30,10 +32,12 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.counts.iter().sum()
     }
 
+    /// Mean of all recorded samples (zero when empty; truncates to µs).
     pub fn mean(&self) -> Duration {
         let n = self.count();
         if n == 0 {
@@ -42,6 +46,7 @@ impl Histogram {
         Duration::from_micros((self.sum_us / n as u128) as u64)
     }
 
+    /// Longest sample observed (zero when empty).
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us as u64)
     }
@@ -71,8 +76,11 @@ impl Histogram {
 /// backend actually are (the fused path's win scales with width).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BatchWidth {
+    /// Batches handed to this backend.
     pub batches: u64,
+    /// Jobs carried by those batches.
     pub jobs: u64,
+    /// Widest single batch observed.
     pub max_width: u64,
 }
 
@@ -90,25 +98,48 @@ impl BatchWidth {
 /// Point-in-time snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
+    /// Jobs answered successfully (including cache-served jobs).
     pub jobs_completed: u64,
+    /// Jobs answered with an error outcome.
     pub jobs_failed: u64,
+    /// Solver invocations per backend (a fused batch counts once).
     pub solver_calls: BTreeMap<String, u64>,
+    /// Planned batches handed to executors.
     pub batches: u64,
+    /// Jobs that flowed through those batches.
     pub batched_jobs: u64,
     /// Jobs served by the fused wide-sketch batch path.
     pub fused_jobs: u64,
     /// Batch-width stats keyed by backend ("device", "native_rsvd", …).
     pub batch_widths: BTreeMap<String, BatchWidth>,
+    /// Jobs served straight from the result cache (no solver call).
+    pub cache_hits: u64,
+    /// Cacheable jobs that had to run a solver (cold key, evicted entry,
+    /// or a fingerprint collision caught by the payload re-check).
+    pub cache_misses: u64,
+    /// Network connections admitted by the serve front end.
+    pub conns_accepted: u64,
+    /// Network connections refused (capacity admission control or drain).
+    pub conns_rejected: u64,
+    /// Mean queue wait (submit → dispatch).
     pub queue_mean: Duration,
+    /// 95th-percentile queue wait.
     pub queue_p95: Duration,
+    /// Mean solver execution time.
     pub exec_mean: Duration,
+    /// Median solver execution time.
     pub exec_p50: Duration,
+    /// 95th-percentile solver execution time.
     pub exec_p95: Duration,
+    /// 99th-percentile solver execution time.
     pub exec_p99: Duration,
+    /// Longest solver execution observed.
     pub exec_max: Duration,
 }
 
 impl Snapshot {
+    /// Print the snapshot as the human-readable block the serve example
+    /// and the `serve` subcommand report on shutdown.
     pub fn print(&self) {
         println!("── coordinator metrics ──");
         println!("jobs: {} ok, {} failed", self.jobs_completed, self.jobs_failed);
@@ -127,6 +158,8 @@ impl Snapshot {
                 w.max_width
             );
         }
+        println!("cache: {} hits, {} misses", self.cache_hits, self.cache_misses);
+        println!("conns: {} accepted, {} rejected", self.conns_accepted, self.conns_rejected);
         println!("queue: mean {:?}, p95 {:?}", self.queue_mean, self.queue_p95);
         println!(
             "exec: mean {:?}, p50 {:?}, p95 {:?}, p99 {:?}, max {:?}",
@@ -135,6 +168,41 @@ impl Snapshot {
         for (backend, calls) in &self.solver_calls {
             println!("solver calls [{backend}]: {calls}");
         }
+    }
+
+    /// Wire encoding of the snapshot — the payload of the serve front
+    /// end's `{"type":"metrics"}` admin frame (durations in microseconds;
+    /// see docs/PROTOCOL.md).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let us = |d: Duration| Json::Num(d.as_micros() as f64);
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("jobs_completed".to_string(), Json::Num(self.jobs_completed as f64));
+        obj.insert("jobs_failed".to_string(), Json::Num(self.jobs_failed as f64));
+        obj.insert(
+            "solver_calls".to_string(),
+            Json::Obj(
+                self.solver_calls
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        );
+        obj.insert("batches".to_string(), Json::Num(self.batches as f64));
+        obj.insert("batched_jobs".to_string(), Json::Num(self.batched_jobs as f64));
+        obj.insert("fused_jobs".to_string(), Json::Num(self.fused_jobs as f64));
+        obj.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
+        obj.insert("cache_misses".to_string(), Json::Num(self.cache_misses as f64));
+        obj.insert("conns_accepted".to_string(), Json::Num(self.conns_accepted as f64));
+        obj.insert("conns_rejected".to_string(), Json::Num(self.conns_rejected as f64));
+        obj.insert("queue_mean_us".to_string(), us(self.queue_mean));
+        obj.insert("queue_p95_us".to_string(), us(self.queue_p95));
+        obj.insert("exec_mean_us".to_string(), us(self.exec_mean));
+        obj.insert("exec_p50_us".to_string(), us(self.exec_p50));
+        obj.insert("exec_p95_us".to_string(), us(self.exec_p95));
+        obj.insert("exec_p99_us".to_string(), us(self.exec_p99));
+        obj.insert("exec_max_us".to_string(), us(self.exec_max));
+        Json::Obj(obj)
     }
 }
 
@@ -153,11 +221,16 @@ struct Inner {
     batched_jobs: u64,
     fused_jobs: u64,
     batch_widths: BTreeMap<String, BatchWidth>,
+    cache_hits: u64,
+    cache_misses: u64,
+    conns_accepted: u64,
+    conns_rejected: u64,
     queue: Option<Histogram>,
     exec: Option<Histogram>,
 }
 
 impl Metrics {
+    /// Fresh sink with every counter at zero.
     pub fn new() -> Self {
         Default::default()
     }
@@ -172,6 +245,8 @@ impl Metrics {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    /// Account one solo job: completion/failure, a solver call for
+    /// `backend`, and its queue/exec latencies.
     pub fn record_job(&self, backend: &str, queued: Duration, exec: Duration, ok: bool) {
         self.record_job_impl(backend, queued, exec, ok, true);
     }
@@ -205,6 +280,7 @@ impl Metrics {
         g.exec.get_or_insert_with(Histogram::new).record(exec);
     }
 
+    /// Account one planned batch of `size` jobs handed to `backend`.
     pub fn record_batch(&self, backend: &str, size: usize) {
         let mut g = self.lock();
         g.batches += 1;
@@ -224,11 +300,43 @@ impl Metrics {
         *g.solver_calls.entry(backend.to_string()).or_insert(0) += 1;
     }
 
+    /// Account a job served straight from the result cache: a completion
+    /// with its queue wait, but **no** solver call and no batch — the whole
+    /// point of the cache is that the "solver calls" column stays flat
+    /// while hit counts climb. Exec time is recorded as the (sub-µs,
+    /// clamped) lookup cost so latency percentiles stay honest.
+    pub fn record_cache_hit(&self, queued: Duration, exec: Duration) {
+        let mut g = self.lock();
+        g.completed += 1;
+        g.cache_hits += 1;
+        g.queue.get_or_insert_with(Histogram::new).record(queued);
+        g.exec.get_or_insert_with(Histogram::new).record(exec);
+    }
+
+    /// Account a cacheable job that missed (cold key, evicted entry, or a
+    /// collision caught by the payload re-check) and therefore runs a
+    /// solver; the solve itself is recorded by the usual batch/job paths.
+    pub fn record_cache_miss(&self) {
+        self.lock().cache_misses += 1;
+    }
+
+    /// Account a serve-front-end connection: admitted (`accepted = true`)
+    /// or refused by admission control / drain.
+    pub fn record_conn(&self, accepted: bool) {
+        let mut g = self.lock();
+        if accepted {
+            g.conns_accepted += 1;
+        } else {
+            g.conns_rejected += 1;
+        }
+    }
+
     /// Total solver calls across backends (Table 1 accounting).
     pub fn total_solver_calls(&self) -> u64 {
         self.lock().solver_calls.values().sum()
     }
 
+    /// Consistent point-in-time copy of every counter and latency stat.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.lock();
         let empty = Histogram::new();
@@ -242,6 +350,10 @@ impl Metrics {
             batched_jobs: g.batched_jobs,
             fused_jobs: g.fused_jobs,
             batch_widths: g.batch_widths.clone(),
+            cache_hits: g.cache_hits,
+            cache_misses: g.cache_misses,
+            conns_accepted: g.conns_accepted,
+            conns_rejected: g.conns_rejected,
             queue_mean: queue.mean(),
             queue_p95: queue.quantile(0.95),
             exec_mean: exec.mean(),
@@ -370,12 +482,20 @@ mod tests {
         m.record_batch("gesvd", 2);
         m.record_fused("native_rsvd", 2);
         m.record_fused_job("native_rsvd", Duration::from_micros(1), Duration::from_micros(1), true);
+        m.record_cache_hit(Duration::from_micros(2), Duration::from_micros(1));
+        m.record_cache_miss();
+        m.record_conn(true);
+        m.record_conn(false);
         assert_eq!(m.total_solver_calls(), 3);
         let s = m.snapshot();
-        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_completed, 3);
         assert_eq!(s.jobs_failed, 1);
         assert_eq!(s.fused_jobs, 2);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.conns_accepted, 1);
+        assert_eq!(s.conns_rejected, 1);
     }
 
     #[test]
@@ -409,5 +529,56 @@ mod tests {
         assert_eq!(w.max_width, 5);
         assert!((w.mean_width() - 4.0).abs() < 1e-12);
         assert_eq!(s.batch_widths["device"].max_width, 2);
+    }
+
+    #[test]
+    fn cache_and_conn_accounting() {
+        let m = Metrics::new();
+        // a hit is a completion with NO solver call and no batch
+        m.record_cache_hit(Duration::from_micros(10), Duration::from_micros(1));
+        m.record_cache_hit(Duration::from_micros(20), Duration::from_micros(1));
+        m.record_cache_miss();
+        m.record_conn(true);
+        m.record_conn(true);
+        m.record_conn(false);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_failed, 0);
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.conns_accepted, 2);
+        assert_eq!(s.conns_rejected, 1);
+        assert_eq!(m.total_solver_calls(), 0, "cache hits must not count as solver calls");
+        assert_eq!(s.batches, 0);
+        // hits still feed the latency histograms
+        assert!(s.queue_mean >= Duration::from_micros(10));
+        assert!(s.exec_mean >= Duration::from_micros(1));
+    }
+
+    #[test]
+    fn snapshot_to_json_round_trips_counters() {
+        use crate::util::json::Json;
+        let m = Metrics::new();
+        m.record_job("gesvd", Duration::from_micros(5), Duration::from_millis(2), true);
+        m.record_cache_hit(Duration::from_micros(3), Duration::from_micros(1));
+        m.record_cache_miss();
+        m.record_conn(true);
+        let j = m.snapshot().to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("snapshot JSON must re-parse");
+        assert_eq!(back.u64_field("jobs_completed").unwrap(), 2);
+        assert_eq!(back.u64_field("cache_hits").unwrap(), 1);
+        assert_eq!(back.u64_field("cache_misses").unwrap(), 1);
+        assert_eq!(back.u64_field("conns_accepted").unwrap(), 1);
+        assert_eq!(back.u64_field("conns_rejected").unwrap(), 0);
+        match &back {
+            Json::Obj(o) => {
+                let calls = o.get("solver_calls").expect("solver_calls present");
+                assert_eq!(calls.u64_field("gesvd").unwrap(), 1);
+                assert!(o.contains_key("exec_p95_us"));
+                assert!(o.contains_key("queue_mean_us"));
+            }
+            _ => panic!("snapshot JSON must be an object"),
+        }
     }
 }

@@ -1,28 +1,39 @@
 //! L3 coordinator: the serving layer around the decomposition solvers.
 //!
 //! ```text
-//! submit(Request) ─▶ queue ─▶ [batch window] ─▶ router ─▶ worker pool ─▶ reply
-//!                                │                │
-//!                                │                ├─ Device: PJRT artifact
-//!                                └─ batcher       ├─ Host: rust baselines
-//!                                   (fuse keys)   └─ fused wide-sketch batch
+//!           TCP (NDJSON frames)
+//! serve ─▶ net (accept / fairness / backpressure)
+//!                │
+//! submit(Request) ─▶ [result cache] ─▶ queue ─▶ [batch window] ─▶ router ─▶ worker pool ─▶ reply
+//!                        │ hit: no solver         │                │
+//!                        └───────▶ reply          └─ batcher       ├─ Device: PJRT artifact
+//!                                                    (fuse keys)   ├─ Host: rust baselines
+//!                                                                  └─ fused wide-sketch batch
 //! ```
 //!
 //! The paper's contribution is the solver pipeline itself; this layer is
 //! what makes it a *system*: shape-bucketed artifact routing with zero-pad
 //! invariance, fingerprint-keyed dynamic batching with a fused same-matrix
 //! wide-sketch path (bitwise identical to per-job execution), an executor
-//! worker pool, backend fallback, and the metrics that Table 1 ("solver
-//! calls") and the serve example report.
+//! worker pool, backend fallback, a fingerprint-keyed LRU result cache
+//! (repeat decompositions answer at ~codec cost, collision-safe), a TCP
+//! serve front end with admission control, per-client round-robin
+//! fairness, and graceful drain (`docs/PROTOCOL.md`, `docs/OPERATIONS.md`),
+//! and the metrics that Table 1 ("solver calls") and the serve example
+//! report.
 
 pub mod batcher;
+pub mod cache;
 pub mod exec;
 pub mod job;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 
+pub use cache::ResultCache;
 pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Operand, Request};
 pub use metrics::{BatchWidth, Metrics, Snapshot};
+pub use net::{ServeCfg, Server};
 pub use router::{Route, RouterCfg};
 pub use server::{Coordinator, CoordinatorCfg};

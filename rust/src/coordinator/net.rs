@@ -1,0 +1,647 @@
+//! Network serve front end: a TCP accept loop speaking newline-delimited
+//! JSON frames (the [`super::job::Request::to_wire_json`] codec) into the
+//! [`super::Coordinator`] dispatcher.
+//!
+//! Thread model — `std::net` blocking I/O, no async runtime (the backing
+//! work is CPU-bound solver calls; a handful of OS threads is the right
+//! tool):
+//!
+//! ```text
+//!  accept loop ──► per-connection reader ──► intake (round-robin) ──► coordinator
+//!       │                   │ frames               │ submits              │
+//!       │                   ▼                      ▼                      ▼
+//!       └─ refusals    writer queue ◄──────── JobHandle oneshot ◄──── JobResult
+//!                           │
+//!                           ▼ one reply line per frame, request order
+//! ```
+//!
+//! * **Backpressure**: each connection owns a bounded writer queue (the
+//!   in-flight window, default = the coordinator's `drain_cap`). The reader
+//!   enqueues a reply slot *before* pushing the request to intake, so a
+//!   client with `window` unanswered frames blocks at the TCP layer rather
+//!   than ballooning the queue.
+//! * **Admission control**: past `max_conns` live connections, new sockets
+//!   get one `{"ok":false,…}` envelope and are dropped (counted in
+//!   [`super::Metrics`] as rejected).
+//! * **Fairness**: a single intake thread round-robins across connections
+//!   ([`super::batcher::rr_next`]) when handing frames to the coordinator,
+//!   so one pipelining client cannot starve a one-shot neighbor.
+//! * **Drain**: [`Server::begin_drain`] atomically stops admitting
+//!   connections and frames; in-flight jobs complete and their replies are
+//!   written before connections close. [`Server::join`] then reaps every
+//!   thread. SIGINT wiring lives in the `serve` subcommand (`main.rs`).
+//!
+//! Wire protocol details and examples: `docs/PROTOCOL.md` (kept honest by
+//! `tests/protocol_doc.rs`).
+
+use super::batcher::rr_next;
+use super::job::{JobHandle, JobResult, Request};
+use super::server::Coordinator;
+use crate::util::json::{error_envelope, Json};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Serve front-end configuration.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Listen address, `host:port` (port 0 picks an ephemeral port —
+    /// [`Server::local_addr`] reports the bound one).
+    pub addr: String,
+    /// Max live connections; further sockets are refused with an error
+    /// envelope (admission control).
+    pub max_conns: usize,
+    /// Per-connection in-flight window: unanswered frames a client may
+    /// pipeline before the reader stops pulling from its socket. `None`
+    /// inherits the coordinator's drain cap (`drain_cap`, default
+    /// `max_batch * 4`) so one client can fill — but not flood — a
+    /// dispatch cycle.
+    pub window: Option<usize>,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7878".into(), max_conns: 64, window: None }
+    }
+}
+
+/// One reply slot in a connection's writer queue. Slots are enqueued in
+/// frame order and served in frame order, so replies are totally ordered
+/// per connection even though jobs complete out of order in the pool.
+enum Reply {
+    /// An already-encoded reply line (errors, pong, metrics).
+    Immediate(String),
+    /// A job reply: the handle arrives from intake once the round-robin
+    /// submits the request; the writer then blocks on the result.
+    Pending { handle_rx: mpsc::Receiver<JobHandle>, echo: Option<Json> },
+}
+
+/// A frame waiting in a connection's intake queue.
+struct PendingJob {
+    req: Request,
+    handle_tx: mpsc::Sender<JobHandle>,
+}
+
+/// Per-connection intake queue. `closed` marks a disconnected reader; the
+/// intake thread prunes the entry once the queue empties.
+struct ClientQueue {
+    queue: VecDeque<PendingJob>,
+    closed: bool,
+}
+
+/// Intake state shared between readers (producers) and the intake thread
+/// (consumer) under one mutex + condvar.
+struct IntakeState {
+    clients: BTreeMap<u64, ClientQueue>,
+    last_served: Option<u64>,
+    shutdown: bool,
+}
+
+type Intake = Arc<(Mutex<IntakeState>, Condvar)>;
+
+fn lock_intake(intake: &Intake) -> MutexGuard<'_, IntakeState> {
+    intake.0.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A running serve front end. Dropping the server drains and joins it
+/// (call [`Server::begin_drain`] + [`Server::join`] yourself for explicit
+/// shutdown reporting).
+pub struct Server {
+    addr: SocketAddr,
+    draining: Arc<AtomicBool>,
+    stop_accept: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    intake_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    intake: Intake,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving `coord`. Fails only on bind
+    /// errors (address in use, bad host).
+    pub fn start(coord: Arc<Coordinator>, cfg: ServeCfg) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener.set_nonblocking(true).map_err(|e| format!("set_nonblocking: {e}"))?;
+        let window = cfg.window.unwrap_or_else(|| {
+            let c = coord.cfg();
+            c.drain_cap.unwrap_or(c.max_batch * 4)
+        });
+        let window = window.max(1);
+
+        let draining = Arc::new(AtomicBool::new(false));
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let intake: Intake = Arc::new((
+            Mutex::new(IntakeState {
+                clients: BTreeMap::new(),
+                last_served: None,
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+
+        let intake_thread = {
+            let intake = intake.clone();
+            let coord = coord.clone();
+            std::thread::Builder::new()
+                .name("rsvd-serve-intake".into())
+                .spawn(move || intake_loop(&intake, &coord))
+                .map_err(|e| format!("spawn intake: {e}"))?
+        };
+
+        let accept = {
+            let draining = draining.clone();
+            let stop = stop_accept.clone();
+            let conns = conns.clone();
+            let intake = intake.clone();
+            let coord = coord.clone();
+            std::thread::Builder::new()
+                .name("rsvd-serve-accept".into())
+                .spawn(move || {
+                    accept_loop(&listener, &coord, &intake, &conns, &draining, &stop, cfg.max_conns, window)
+                })
+                .map_err(|e| format!("spawn accept: {e}"))?
+        };
+
+        Ok(Server {
+            addr,
+            draining,
+            stop_accept,
+            accept: Some(accept),
+            intake_thread: Some(intake_thread),
+            conns,
+            intake,
+        })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether the server is draining (no new connections or frames).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Enter drain mode **synchronously**: the flag is set before this
+    /// returns, so a connection attempted afterwards is deterministically
+    /// refused with a draining envelope, and every reader stops pulling
+    /// frames at its next poll (≤ ~50ms). Jobs already accepted keep
+    /// flowing: intake submits them, the pool solves them, and writers
+    /// deliver the replies before their connections close. Idempotent.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        // wake the intake thread in case it was idle so shutdown later
+        // observes a quiet queue promptly
+        self.intake.1.notify_all();
+    }
+
+    /// Wait for the drain to finish: accept loop down, every connection's
+    /// reader and writer joined (all accepted frames answered), intake
+    /// thread retired. Call [`Server::begin_drain`] first (or let this do
+    /// it); new connections are refused the whole time.
+    pub fn join(&mut self) {
+        self.begin_drain();
+        // readers exit within one poll interval; once they have, writers
+        // drain their reply queues and exit. Stop admitting sockets at the
+        // TCP level only after the refusal window: the accept loop keeps
+        // answering with draining envelopes while live connections finish.
+        loop {
+            let done = {
+                let mut g = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+                match g.pop() {
+                    Some(h) => {
+                        drop(g);
+                        let _ = h.join();
+                        false
+                    }
+                    None => true,
+                }
+            };
+            if done {
+                break;
+            }
+        }
+        self.stop_accept.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        {
+            let mut g = lock_intake(&self.intake);
+            g.shutdown = true;
+        }
+        self.intake.1.notify_all();
+        if let Some(h) = self.intake_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Convenience: drain and join in one call.
+    pub fn shutdown(&mut self) {
+        self.begin_drain();
+        self.join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() || self.intake_thread.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+/// Encode a completed job as its reply frame: `{"ok":true,"values":[…],
+/// "method":…,"cached":…,"queued_us":…,"exec_us":…}` plus `u`/`v` payloads
+/// when the job computed vectors, or `{"ok":false,"error":…}` on failure —
+/// either way echoing the client's `id` field verbatim when one was sent.
+pub fn response_json(echo: Option<&Json>, r: &JobResult) -> Json {
+    let mut obj = BTreeMap::new();
+    match &r.outcome {
+        Ok(d) => {
+            obj.insert("ok".to_string(), Json::Bool(true));
+            obj.insert(
+                "values".to_string(),
+                Json::Arr(d.values.iter().map(|&x| Json::Num(x)).collect()),
+            );
+            if let Some(u) = &d.u {
+                obj.insert("u".to_string(), crate::util::json::matrix_to_json(u));
+            }
+            if let Some(v) = &d.v {
+                obj.insert("v".to_string(), crate::util::json::matrix_to_json(v));
+            }
+            obj.insert("method".to_string(), Json::Str(d.method_used.to_string()));
+            if let Some(b) = &d.bucket {
+                obj.insert("bucket".to_string(), Json::Str(b.clone()));
+            }
+        }
+        Err(e) => {
+            obj.insert("ok".to_string(), Json::Bool(false));
+            obj.insert("error".to_string(), Json::Str(e.clone()));
+        }
+    }
+    obj.insert("cached".to_string(), Json::Bool(r.cached));
+    obj.insert("queued_us".to_string(), Json::Num(r.queued.as_micros() as f64));
+    obj.insert("exec_us".to_string(), Json::Num(r.exec.as_micros() as f64));
+    if let Some(id) = echo {
+        obj.insert("id".to_string(), id.clone());
+    }
+    Json::Obj(obj)
+}
+
+/// Attach the client's `id` echo to a non-job envelope.
+fn with_echo(mut j: Json, echo: Option<&Json>) -> Json {
+    if let (Json::Obj(m), Some(id)) = (&mut j, echo) {
+        m.insert("id".to_string(), id.clone());
+    }
+    j
+}
+
+fn write_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: &TcpListener,
+    coord: &Arc<Coordinator>,
+    intake: &Intake,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    draining: &Arc<AtomicBool>,
+    stop: &Arc<AtomicBool>,
+    max_conns: usize,
+    window: usize,
+) {
+    // live connections = writers not yet finished; admission control
+    // compares against this, not the historical accept count
+    let live = Arc::new(AtomicUsize::new(0));
+    let next_client = AtomicU64::new(1);
+    while !stop.load(Ordering::SeqCst) {
+        let (mut stream, _) = match listener.accept() {
+            Ok(s) => s,
+            // WouldBlock is the idle poll; any other accept error is
+            // transient (EMFILE, aborted handshake) — back off and retry
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+        };
+        if draining.load(Ordering::SeqCst) {
+            coord.metrics.record_conn(false);
+            let _ = write_line(
+                &mut stream,
+                &error_envelope("server is draining; not accepting new connections").to_string(),
+            );
+            continue;
+        }
+        if live.load(Ordering::SeqCst) >= max_conns {
+            coord.metrics.record_conn(false);
+            let _ = write_line(
+                &mut stream,
+                &error_envelope("server at connection capacity").to_string(),
+            );
+            continue;
+        }
+        coord.metrics.record_conn(true);
+        live.fetch_add(1, Ordering::SeqCst);
+        let client = next_client.fetch_add(1, Ordering::Relaxed);
+        match spawn_connection(stream, client, coord, intake, draining, &live, window) {
+            Ok((reader, writer)) => {
+                let mut g = conns.lock().unwrap_or_else(|e| e.into_inner());
+                g.push(reader);
+                g.push(writer);
+            }
+            Err(_) => {
+                live.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Spawn the reader + writer pair for one accepted connection.
+fn spawn_connection(
+    stream: TcpStream,
+    client: u64,
+    coord: &Arc<Coordinator>,
+    intake: &Intake,
+    draining: &Arc<AtomicBool>,
+    live: &Arc<AtomicUsize>,
+    window: usize,
+) -> std::io::Result<(JoinHandle<()>, JoinHandle<()>)> {
+    let write_half = stream.try_clone()?;
+    // the window bound: a client with `window` unanswered frames blocks
+    // here (and therefore at its socket) until the writer catches up
+    let (wtx, wrx) = mpsc::sync_channel::<Reply>(window);
+    {
+        let mut g = lock_intake(intake);
+        g.clients.insert(client, ClientQueue { queue: VecDeque::new(), closed: false });
+    }
+    let reader = {
+        let intake = intake.clone();
+        let coord = coord.clone();
+        let draining = draining.clone();
+        std::thread::Builder::new()
+            .name(format!("rsvd-serve-read-{client}"))
+            .spawn(move || {
+                reader_loop(stream, client, &coord, &intake, &draining, &wtx);
+                // mark the queue closed so intake prunes it once drained;
+                // dropping wtx lets the writer finish after the last reply
+                let mut g = lock_intake(&intake);
+                if let Some(c) = g.clients.get_mut(&client) {
+                    c.closed = true;
+                }
+                drop(g);
+                intake.1.notify_all();
+            })?
+    };
+    let writer = {
+        let live = live.clone();
+        std::thread::Builder::new()
+            .name(format!("rsvd-serve-write-{client}"))
+            .spawn(move || {
+                writer_loop(write_half, wrx);
+                live.fetch_sub(1, Ordering::SeqCst);
+            })?
+    };
+    Ok((reader, writer))
+}
+
+/// Read newline-delimited frames until EOF, error, or drain. A read
+/// timeout (50ms) bounds how long a drain waits on an idle socket;
+/// partial lines accumulate across timeouts in `buf` and are never lost.
+fn reader_loop(
+    stream: TcpStream,
+    client: u64,
+    coord: &Arc<Coordinator>,
+    intake: &Intake,
+    draining: &Arc<AtomicBool>,
+    wtx: &mpsc::SyncSender<Reply>,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if draining.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                // a frame ends at '\n'; an unterminated tail means EOF
+                // landed mid-line — serve what arrived, the next read
+                // reports Ok(0)
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                buf.clear();
+                if line.is_empty() {
+                    continue;
+                }
+                if handle_frame(&line, client, coord, intake, wtx).is_err() {
+                    return; // writer gone — connection is dead
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // timeout poll; partial bytes stay in buf
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one frame: admin (`ping` / `metrics`), a decomposition request
+/// (queued through intake), or an error envelope for anything malformed.
+/// Errs only when the writer queue is disconnected (dead connection).
+fn handle_frame(
+    line: &str,
+    client: u64,
+    coord: &Arc<Coordinator>,
+    intake: &Intake,
+    wtx: &mpsc::SyncSender<Reply>,
+) -> Result<(), mpsc::SendError<Reply>> {
+    let parsed = Json::parse(line);
+    let j = match parsed {
+        Ok(j) => j,
+        Err(e) => {
+            let env = error_envelope(&format!("malformed frame: {e}"));
+            return wtx.send(Reply::Immediate(env.to_string()));
+        }
+    };
+    let echo = j.get("id").cloned();
+    match j.get("type").and_then(|t| t.as_str()) {
+        Some("ping") => {
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("type".to_string(), Json::Str("pong".into()));
+            wtx.send(Reply::Immediate(with_echo(Json::Obj(m), echo.as_ref()).to_string()))
+        }
+        Some("metrics") => {
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("type".to_string(), Json::Str("metrics".into()));
+            m.insert("metrics".to_string(), coord.metrics.snapshot().to_json());
+            wtx.send(Reply::Immediate(with_echo(Json::Obj(m), echo.as_ref()).to_string()))
+        }
+        _ => match Request::from_wire_json(&j) {
+            Ok(req) => {
+                // reply slot FIRST (this is the backpressure point), then
+                // the request — so the writer sees slots in frame order
+                // and the window bound is exact
+                let (handle_tx, handle_rx) = mpsc::channel::<JobHandle>();
+                wtx.send(Reply::Pending { handle_rx, echo })?;
+                let mut g = lock_intake(intake);
+                if let Some(c) = g.clients.get_mut(&client) {
+                    c.queue.push_back(PendingJob { req, handle_tx });
+                }
+                drop(g);
+                intake.1.notify_all();
+                Ok(())
+            }
+            Err(e) => wtx.send(Reply::Immediate(
+                with_echo(error_envelope(&e), echo.as_ref()).to_string(),
+            )),
+        },
+    }
+}
+
+/// Serve reply slots in order until the reader hangs up and the queue
+/// drains. After a write error the loop keeps *consuming* (without
+/// writing) so pending jobs never deadlock the intake pipeline behind a
+/// dead socket.
+fn writer_loop(mut stream: TcpStream, wrx: mpsc::Receiver<Reply>) {
+    let mut dead = false;
+    while let Ok(reply) = wrx.recv() {
+        let line = match reply {
+            Reply::Immediate(s) => s,
+            Reply::Pending { handle_rx, echo } => match handle_rx.recv() {
+                Ok(h) => {
+                    let r = h.wait();
+                    response_json(echo.as_ref(), &r).to_string()
+                }
+                Err(_) => with_echo(
+                    error_envelope("server shut down before the job was submitted"),
+                    echo.as_ref(),
+                )
+                .to_string(),
+            },
+        };
+        if !dead && write_line(&mut stream, &line).is_err() {
+            dead = true;
+        }
+    }
+}
+
+/// The round-robin intake: pick the next client with queued work
+/// ([`rr_next`]), submit one frame to the coordinator, hand the handle to
+/// that connection's writer. Exits when shutdown is flagged **and** every
+/// queue is empty — accepted frames always reach the coordinator.
+fn intake_loop(intake: &Intake, coord: &Arc<Coordinator>) {
+    loop {
+        let pending = {
+            let mut g = lock_intake(intake);
+            loop {
+                g.clients.retain(|_, c| !(c.closed && c.queue.is_empty()));
+                let ids: Vec<u64> = g
+                    .clients
+                    .iter()
+                    .filter(|(_, c)| !c.queue.is_empty())
+                    .map(|(&id, _)| id)
+                    .collect();
+                if let Some(id) = rr_next(&ids, g.last_served) {
+                    g.last_served = Some(id);
+                    let c = g.clients.get_mut(&id).expect("rr picked a live client");
+                    break Some(c.queue.pop_front().expect("rr picked a non-empty queue"));
+                }
+                if g.shutdown {
+                    break None;
+                }
+                g = intake.1.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(p) = pending else { return };
+        let handle = coord.submit(p.req);
+        // a dropped receiver (dead writer) is fine: the job still runs,
+        // its result is simply unobserved
+        let _ = p.handle_tx.send(handle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Decomposition;
+    use crate::linalg::Matrix;
+
+    fn ok_result(cached: bool) -> JobResult {
+        JobResult {
+            id: 3,
+            outcome: Ok(Decomposition {
+                values: vec![2.0, 1.0],
+                u: None,
+                v: Some(Matrix::zeros(2, 2)),
+                method_used: "native_rsvd",
+                bucket: None,
+            }),
+            queued: Duration::from_micros(5),
+            exec: Duration::from_micros(40),
+            cached,
+        }
+    }
+
+    #[test]
+    fn response_json_success_shape_and_echo() {
+        let echo = Json::Str("req-1".into());
+        let j = response_json(Some(&echo), &ok_result(true));
+        let s = j.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert!(back.bool_field("ok").unwrap());
+        assert!(back.bool_field("cached").unwrap());
+        assert_eq!(back.str_field("id").unwrap(), "req-1");
+        assert_eq!(back.str_field("method").unwrap(), "native_rsvd");
+        assert_eq!(back.f64_arr_field("values").unwrap(), vec![2.0, 1.0]);
+        assert_eq!(back.u64_field("queued_us").unwrap(), 5);
+        assert_eq!(back.u64_field("exec_us").unwrap(), 40);
+        assert!(back.get("v").is_some(), "requested vectors ride along");
+        assert!(back.get("u").is_none());
+        // no echo → no id key
+        let bare = response_json(None, &ok_result(false));
+        assert!(bare.get("id").is_none());
+        assert!(!bare.bool_field("cached").unwrap());
+    }
+
+    #[test]
+    fn response_json_failure_is_the_error_envelope() {
+        let r = JobResult {
+            id: 9,
+            outcome: Err("solver panic: boom".into()),
+            queued: Duration::ZERO,
+            exec: Duration::ZERO,
+            cached: false,
+        };
+        let echo = Json::Num(7.0);
+        let j = response_json(Some(&echo), &r);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert!(!back.bool_field("ok").unwrap());
+        assert_eq!(back.str_field("error").unwrap(), "solver panic: boom");
+        assert_eq!(back.u64_field("id").unwrap(), 7);
+        assert!(back.get("values").is_none());
+    }
+
+    #[test]
+    fn serve_cfg_defaults() {
+        let cfg = ServeCfg::default();
+        assert_eq!(cfg.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.max_conns, 64);
+        assert!(cfg.window.is_none());
+    }
+}

@@ -12,6 +12,7 @@
 //! engine is pinned to that thread.
 
 use super::batcher::{fuse_key, is_fusable, is_fused_key, plan_batches, route_key};
+use super::cache::ResultCache;
 use super::job::{Job, JobHandle, JobResult, Request};
 use super::metrics::Metrics;
 use super::router::{route, Route, RouterCfg};
@@ -25,6 +26,7 @@ use std::time::{Duration, Instant};
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorCfg {
+    /// routing policy (oversampling, device impl, full-spectrum cutoff)
     pub router: RouterCfg,
     /// max jobs fused into one batch
     pub max_batch: usize,
@@ -53,6 +55,13 @@ pub struct CoordinatorCfg {
     /// historical `max_batch * 4` (previously hardwired), for every
     /// `max_batch`.
     pub drain_cap: Option<usize>,
+    /// Result-cache capacity in entries; `0` (the default) disables the
+    /// cache entirely. When on, the dispatcher answers repeat requests —
+    /// same content fingerprint, same parameters, same seed — straight
+    /// from the LRU cache ([`super::cache::ResultCache`]) without a
+    /// solver call, after a payload-equality re-check that makes hash
+    /// collisions fall through to a real solve.
+    pub cache: usize,
 }
 
 impl Default for CoordinatorCfg {
@@ -66,6 +75,7 @@ impl Default for CoordinatorCfg {
             workers: 1,
             fuse: true,
             drain_cap: None,
+            cache: 0,
         }
     }
 }
@@ -93,8 +103,10 @@ pub struct Coordinator {
     tx: Option<mpsc::Sender<Job>>,
     dispatcher: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Shared metrics sink (live counters; snapshot any time).
     pub metrics: Arc<Metrics>,
     has_engine: bool,
+    cfg: CoordinatorCfg,
 }
 
 impl Coordinator {
@@ -117,6 +129,7 @@ impl Coordinator {
         cfg: CoordinatorCfg,
     ) -> Result<Coordinator, String> {
         let cfg = cfg.normalized();
+        let cfg_kept = cfg.clone();
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
@@ -162,12 +175,18 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             metrics,
             has_engine,
+            cfg: cfg_kept,
         })
     }
 
     /// Whether a device engine is attached.
     pub fn has_engine(&self) -> bool {
         self.has_engine
+    }
+
+    /// The (normalized) configuration this coordinator was started with.
+    pub fn cfg(&self) -> &CoordinatorCfg {
+        &self.cfg
     }
 
     /// Submit a request; returns a handle to await the result. If the
@@ -188,6 +207,7 @@ impl Coordinator {
                 outcome: Err("coordinator dispatcher is not running".into()),
                 queued: Duration::ZERO,
                 exec: Duration::ZERO,
+                cached: false,
             });
         }
         JobHandle { id, rx }
@@ -223,6 +243,9 @@ fn dispatch_loop(
     cfg: CoordinatorCfg,
     metrics: Arc<Metrics>,
 ) {
+    // fingerprint-keyed result cache shared by the dispatcher (lookups)
+    // and every executor (inserts); cap 0 makes it a no-op
+    let cache = Arc::new(ResultCache::new(cfg.cache));
     // executor worker pool: host batches flow through this channel; the
     // shared receiver hands each batch to exactly one idle worker
     let (btx, brx) = mpsc::channel::<PlannedBatch>();
@@ -231,6 +254,7 @@ fn dispatch_loop(
         .map(|w| {
             let brx = brx.clone();
             let metrics = metrics.clone();
+            let cache = cache.clone();
             let per_worker = worker_threads(&cfg, w);
             std::thread::Builder::new()
                 .name(format!("rsvd-exec-{w}"))
@@ -249,7 +273,7 @@ fn dispatch_loop(
                     let Ok(pb) = brx.lock().unwrap_or_else(|e| e.into_inner()).recv() else {
                         return;
                     };
-                    run_batch(pb, None, per_worker, &metrics);
+                    run_batch(pb, None, per_worker, &metrics, &cache);
                 })
                 .expect("spawn executor worker")
         })
@@ -289,6 +313,41 @@ fn dispatch_loop(
             }
         }
 
+        // answer repeats straight from the result cache before any routing
+        // or fingerprint-for-fusion work: a hit is a completion with no
+        // solver call (the whole point), a miss on a cacheable request is
+        // counted so hit rates are observable. Pca has no cache key and
+        // passes through untouched.
+        if cache.enabled() {
+            jobs.retain(|job| {
+                let t0 = Instant::now();
+                match cache.lookup(&job.request) {
+                    Some(d) => {
+                        let queued = job.submitted.elapsed();
+                        let exec = t0.elapsed();
+                        metrics.record_cache_hit(queued, exec);
+                        let _ = job.reply.send(JobResult {
+                            id: job.id,
+                            outcome: Ok(d),
+                            queued,
+                            exec,
+                            cached: true,
+                        });
+                        false
+                    }
+                    None => {
+                        if super::cache::key_of(&job.request).is_some() {
+                            metrics.record_cache_miss();
+                        }
+                        true
+                    }
+                }
+            });
+            if jobs.is_empty() {
+                continue;
+            }
+        }
+
         // route every job, batch by (fusion-aware) route key. Fingerprint
         // hashing is O(m·n) per job, so only pay it when this cycle holds
         // at least two fusion candidates — a lone candidate cannot fuse.
@@ -318,7 +377,7 @@ fn dispatch_loop(
             if matches!(pb.route, Route::Device { .. }) {
                 // the engine is pinned to this thread — device batches
                 // execute inline
-                run_batch(pb, engine.as_ref(), cfg.solver_threads, &metrics);
+                run_batch(pb, engine.as_ref(), cfg.solver_threads, &metrics, &cache);
             } else {
                 let _ = btx.send(pb);
             }
@@ -351,7 +410,13 @@ fn worker_threads(cfg: &CoordinatorCfg, worker: usize) -> Option<usize> {
 /// through the fused wide-sketch executor as a single solver call (a panic
 /// there fails the whole batch — isolation stays per batch); everything
 /// else keeps the per-job execute + per-job panic isolation.
-fn run_batch(pb: PlannedBatch, engine: Option<&Engine>, threads: Option<usize>, metrics: &Metrics) {
+fn run_batch(
+    pb: PlannedBatch,
+    engine: Option<&Engine>,
+    threads: Option<usize>,
+    metrics: &Metrics,
+    cache: &ResultCache,
+) {
     let backend = match &pb.route {
         Route::Device { .. } => "device",
         Route::Host { method } => method.name(),
@@ -377,7 +442,16 @@ fn run_batch(pb: PlannedBatch, engine: Option<&Engine>, threads: Option<usize>, 
             metrics.record_fused(backend, pb.jobs.len());
             for ((job, outcome), queued) in pb.jobs.iter().zip(outcomes).zip(queued) {
                 metrics.record_fused_job(backend, queued, exec, outcome.is_ok());
-                let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+                if let Ok(d) = &outcome {
+                    cache.insert(&job.request, d);
+                }
+                let _ = job.reply.send(JobResult {
+                    id: job.id,
+                    outcome,
+                    queued,
+                    exec,
+                    cached: false,
+                });
             }
             return;
         }
@@ -397,7 +471,10 @@ fn run_batch(pb: PlannedBatch, engine: Option<&Engine>, threads: Option<usize>, 
         .unwrap_or_else(|p| Err(format!("solver panic: {}", panic_msg(p))));
         let exec = t0.elapsed();
         metrics.record_job(backend, queued, exec, outcome.is_ok());
-        let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec });
+        if let Ok(d) = &outcome {
+            cache.insert(&job.request, d);
+        }
+        let _ = job.reply.send(JobResult { id: job.id, outcome, queued, exec, cached: false });
     }
 }
 
@@ -752,6 +829,96 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 6);
         assert!(snap.fused_jobs >= 2, "sparse fusion engaged ({})", snap.fused_jobs);
+    }
+
+    #[test]
+    fn cache_hits_skip_the_solver_and_match_solo() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            cache: 8,
+            ..Default::default()
+        });
+        assert_eq!(coord.cfg().cache, 8);
+        let req = svd_req(30, 20, 3, Method::NativeRsvd);
+        let first = coord.run(req.clone());
+        assert!(!first.cached, "cold cache: a real solve");
+        let second = coord.run(req.clone());
+        assert!(second.cached, "repeat must be served from the cache");
+        let (a, b) = (first.outcome.unwrap(), second.outcome.unwrap());
+        assert_eq!(a.values, b.values, "cached result is bitwise the solve");
+        assert_eq!(a.method_used, b.method_used);
+        // and it matches a fresh coordinator's solve of the same request
+        let fresh = Coordinator::start_host_only(CoordinatorCfg::default());
+        assert_eq!(fresh.run(req).outcome.unwrap().values, a.values);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        assert_eq!(snap.jobs_completed, 2);
+        assert_eq!(coord.metrics.total_solver_calls(), 1, "the hit ran no solver");
+        assert_eq!(snap.batches, 1, "the hit never reached the batcher");
+    }
+
+    #[test]
+    fn cache_capacity_one_evicts_in_lru_order() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            cache: 1,
+            ..Default::default()
+        });
+        let req_a = svd_req(20, 12, 2, Method::Gesvd);
+        let req_b = svd_req(22, 14, 2, Method::Gesvd);
+        assert!(!coord.run(req_a.clone()).cached); // miss, fills the slot
+        assert!(!coord.run(req_b.clone()).cached); // miss, evicts A
+        assert!(!coord.run(req_a.clone()).cached, "A was evicted → real solve");
+        assert!(coord.run(req_a.clone()).cached, "A is resident again");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 3);
+        assert_eq!(coord.metrics.total_solver_calls(), 3);
+    }
+
+    #[test]
+    fn pca_requests_bypass_the_cache() {
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            cache: 8,
+            ..Default::default()
+        });
+        let x = Matrix::gaussian(40, 10, 3);
+        let req = Request::Pca { x, k: 2, method: Method::Gesvd, seed: 1 };
+        let first = coord.run(req.clone());
+        let second = coord.run(req);
+        assert!(!first.cached && !second.cached, "PCA is uncacheable");
+        assert_eq!(first.outcome.unwrap().values, second.outcome.unwrap().values);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.cache_misses, 0, "uncacheable jobs are not counted as misses");
+        assert_eq!(coord.metrics.total_solver_calls(), 2);
+    }
+
+    #[test]
+    fn cached_adaptive_results_are_bitwise_the_solo_solve() {
+        use crate::coordinator::job::Operand;
+        use crate::linalg::adaptive::{rsvd_adaptive, AdaptiveOpts};
+        let a = crate::datagen_test_matrix(60, 40, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 19);
+        let coord = Coordinator::start_host_only(CoordinatorCfg {
+            cache: 4,
+            ..Default::default()
+        });
+        let req = Request::SvdAdaptive {
+            a: Operand::Dense(a.clone()),
+            tol: 0.05,
+            block: 4,
+            max_rank: 0,
+            method: Method::Auto,
+            want_vectors: true,
+            seed: 3,
+        };
+        let first = coord.run(req.clone());
+        let second = coord.run(req);
+        assert!(second.cached);
+        let (x, y) = (first.outcome.unwrap(), second.outcome.unwrap());
+        assert_eq!(x.values, y.values);
+        let opts = AdaptiveOpts { block: 4, seed: 3, ..Default::default() };
+        let solo = rsvd_adaptive(&a, 0.05, &opts);
+        assert_eq!(y.values, solo.svd.s, "cached adaptive result is bitwise its solo solve");
     }
 
     #[test]

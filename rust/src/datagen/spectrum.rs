@@ -27,6 +27,7 @@ impl Decay {
         }
     }
 
+    /// Short tag for filenames and table rows.
     pub fn name(self) -> &'static str {
         match self {
             Decay::Fast => "fast",

@@ -15,7 +15,12 @@ use crate::coordinator::{Coordinator, CoordinatorCfg};
 /// Boot a coordinator over `artifacts/` if present; host-only otherwise
 /// (benches stay runnable without `make artifacts`, with a loud notice).
 pub fn boot_coordinator() -> Coordinator {
-    let cfg = CoordinatorCfg::default();
+    boot_coordinator_with(CoordinatorCfg::default())
+}
+
+/// [`boot_coordinator`] with an explicit config — the `serve` subcommand
+/// uses this to enable the result cache and size the pool from CLI flags.
+pub fn boot_coordinator_with(cfg: CoordinatorCfg) -> Coordinator {
     let dir = artifact_dir();
     if dir.join("manifest.json").exists() {
         match Coordinator::start(&dir, cfg.clone()) {

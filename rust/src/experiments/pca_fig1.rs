@@ -9,12 +9,17 @@ use crate::datagen::synthetic_faces;
 /// Options for the PCA figure.
 #[derive(Clone, Debug)]
 pub struct PcaOpts {
+    /// Number of synthetic face samples N.
     pub n_samples: usize,
+    /// Image heights h (= widths); d = 3·h·w.
     pub image_sizes: Vec<usize>,
+    /// Component counts as fractions of d.
     pub k_pcts: Vec<f64>,
+    /// Timed repeats per cell.
     pub repeats: usize,
     /// full-spectrum baselines only below this d (they are O(N·d²)).
     pub full_methods_max_d: usize,
+    /// Dataset + sketch seed.
     pub seed: u64,
 }
 

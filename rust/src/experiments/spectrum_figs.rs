@@ -13,14 +13,19 @@ use crate::datagen::{spectrum_matrix, Decay};
 /// Options for a spectrum figure run.
 #[derive(Clone, Debug)]
 pub struct SpectrumOpts {
+    /// Row count of every test matrix.
     pub m: usize,
+    /// Column counts to sweep.
     pub n_grid: Vec<usize>,
+    /// Ranks as fractions of n.
     pub k_pcts: Vec<f64>,
+    /// Timed repeats per cell.
     pub repeats: usize,
     /// full-spectrum baselines (gesvd, jacobi) only run for n ≤ this —
     /// they are O(mn²) sequential and dominate wall time (which is the
     /// paper's point; the cutoff keeps default runs minutes, not hours).
     pub full_methods_max_n: usize,
+    /// Dataset + sketch seed.
     pub seed: u64,
 }
 

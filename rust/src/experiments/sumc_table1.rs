@@ -9,8 +9,11 @@ use std::time::Instant;
 
 /// One dataset spec: (name, dim, [(subspace_dim, n_points)]).
 pub struct SumcDataset {
+    /// Dataset label in the table.
     pub name: &'static str,
+    /// Ambient dimension D.
     pub dim: usize,
+    /// (subspace_dim, n_points) per planted cluster.
     pub spec: Vec<(usize, usize)>,
 }
 

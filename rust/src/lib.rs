@@ -17,6 +17,9 @@
 // algorithms where indexed loops and explicit panel geometry are the idiom.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
+// Every public item carries docs; CI's docs job builds rustdoc with
+// `-D warnings` so a gap (or a broken intra-doc link) fails the gate.
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod clustering;

@@ -40,6 +40,7 @@ pub fn svds_values(a: &Matrix, k: usize) -> Vec<f64> {
     svds_opts(a, k, &LanczosOpts::default()).s
 }
 
+/// [`svds`] with explicit [`LanczosOpts`].
 pub fn svds_opts(a: &Matrix, k: usize, opts: &LanczosOpts) -> Svd {
     let (m, n) = a.shape();
     let r = m.min(n);

@@ -62,30 +62,36 @@ impl Matrix {
     }
 
     #[inline]
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// (rows, cols).
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
     #[inline]
+    /// The row-major backing slice.
     pub fn as_slice(&self) -> &[f64] {
         &self.data
     }
 
     #[inline]
+    /// The row-major backing slice, mutably.
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
+    /// Consume into the row-major backing vector.
     pub fn into_vec(self) -> Vec<f64> {
         self.data
     }
@@ -98,6 +104,7 @@ impl Matrix {
     }
 
     #[inline]
+    /// Mutably borrow row i as a slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
@@ -113,6 +120,7 @@ impl Matrix {
         self.data[j..].iter().step_by(self.cols).copied().collect()
     }
 
+    /// Overwrite column j from a slice of length `rows`.
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
         assert_eq!(v.len(), self.rows);
         debug_assert!(j < self.cols || self.rows == 0);

@@ -55,11 +55,13 @@ pub trait LinOp {
     }
 
     #[inline]
+    /// Convenience: `shape().0`.
     fn rows(&self) -> usize {
         self.shape().0
     }
 
     #[inline]
+    /// Convenience: `shape().1`.
     fn cols(&self) -> usize {
         self.shape().1
     }
@@ -94,11 +96,14 @@ impl LinOp for Matrix {
 /// α·A as an operator — no scaled copy of A is ever materialized. Scaling
 /// is applied to the (much smaller) product block.
 pub struct Scaled<'a, A: LinOp + ?Sized> {
+    /// The scale factor.
     pub alpha: f64,
+    /// The unscaled operator.
     pub inner: &'a A,
 }
 
 impl<'a, A: LinOp + ?Sized> Scaled<'a, A> {
+    /// α·A without copying A.
     pub fn new(alpha: f64, inner: &'a A) -> Self {
         Scaled { alpha, inner }
     }
@@ -131,11 +136,14 @@ impl<A: LinOp + ?Sized> LinOp for Scaled<'_, A> {
 /// normalized or preconditioned input (D·A, A·E, …) rides the same range
 /// finder without a dense intermediate.
 pub struct Composed<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> {
+    /// A in A·B.
     pub left: &'a A,
+    /// B in A·B.
     pub right: &'a B,
 }
 
 impl<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> Composed<'a, A, B> {
+    /// A·B; panics if the inner dimensions disagree.
     pub fn new(left: &'a A, right: &'a B) -> Self {
         assert_eq!(
             left.cols(),

@@ -129,16 +129,19 @@ impl Csr {
     }
 
     #[inline]
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// (rows, cols).
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }

@@ -74,7 +74,9 @@ pub enum Spill {
 /// on I/O failure (the coordinator's per-job panic isolation turns that
 /// into a failed job, not a dead worker).
 pub trait PanelStore: Send + Sync {
+    /// Number of row panels.
     fn panel_count(&self) -> usize;
+    /// Materialize panel `idx` as a dense matrix.
     fn load(&self, idx: usize) -> Matrix;
     /// Short backend tag for Debug/metrics ("mem" | "disk").
     fn kind(&self) -> &'static str;
@@ -281,16 +283,19 @@ impl TiledMatrix {
     }
 
     #[inline]
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// (rows, cols).
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -302,6 +307,7 @@ impl TiledMatrix {
     }
 
     #[inline]
+    /// Number of row panels.
     pub fn panel_count(&self) -> usize {
         self.store.panel_count()
     }

@@ -5,6 +5,10 @@
 //! rsvd info                         list artifact inventory
 //! rsvd svd   [--m 2000 --n 512 --k 10 --decay fast --method auto]
 //! rsvd pca   [--n-samples 2048 --hw 12 --k 10 --method auto]
+//! rsvd serve [--addr 127.0.0.1:7878 --cache 64 --workers 1 --max-batch 8
+//!             --drain-cap N --max-conns 64 --window N --no-fuse]
+//!                                   TCP front end (NDJSON frames; ctrl-c
+//!                                   drains in-flight jobs, then exits)
 //! rsvd fig1|fig2|fig3|fig4|table1   regenerate a paper figure/table
 //! rsvd bench-compare [--baseline bench-baseline --current bench-current
 //!                     --tolerance 0.25]      CI bench-regression guard
@@ -22,6 +26,7 @@ fn main() {
         "info" => info(),
         "svd" => svd_cmd(&args),
         "pca" => pca_cmd(&args),
+        "serve" => serve_cmd(&args),
         "bench-compare" => bench_compare_cmd(&args),
         "fig1" => {
             let coord = experiments::boot_coordinator();
@@ -60,6 +65,75 @@ fn main() {
         }
     }
 }
+
+/// `rsvd serve`: the coordinator behind the TCP front end
+/// ([`rsvd::coordinator::net`]), with the result cache on by default
+/// (`--cache 64`; 0 disables). Runs until SIGINT/ctrl-c, then drains —
+/// new connections are refused while in-flight jobs complete — and prints
+/// the metrics snapshot (cache hits, connection accept/reject counts,
+/// latency percentiles).
+fn serve_cmd(args: &Args) {
+    use rsvd::coordinator::{CoordinatorCfg, ServeCfg, Server};
+    let cfg = CoordinatorCfg {
+        max_batch: args.get_usize("max-batch", 8),
+        workers: args.get_usize("workers", 1),
+        drain_cap: args.get("drain-cap").and_then(|s| s.parse().ok()),
+        cache: args.get_usize("cache", 64),
+        fuse: !args.has("no-fuse"),
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(experiments::boot_coordinator_with(cfg));
+    let serve_cfg = ServeCfg {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        max_conns: args.get_usize("max-conns", 64),
+        window: args.get("window").and_then(|s| s.parse().ok()),
+    };
+    let mut server = match Server::start(coord.clone(), serve_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("serving on {} (ctrl-c to drain and exit)", server.local_addr());
+    install_sigint_handler();
+    while !sigint_received() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("\ndraining: refusing new connections, completing in-flight jobs…");
+    server.begin_drain();
+    server.join();
+    coord.metrics.snapshot().print();
+}
+
+static SIGINT_FLAG: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+fn sigint_received() -> bool {
+    SIGINT_FLAG.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Register a SIGINT handler that only flips [`SIGINT_FLAG`] (the one
+/// async-signal-safe thing a handler may do); the serve loop polls the
+/// flag and performs the actual drain on a normal thread. Raw libc
+/// `signal(2)` via FFI — std already links libc on unix, so this costs no
+/// dependency.
+#[cfg(unix)]
+fn install_sigint_handler() {
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT_FLAG.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    const SIGINT_NO: i32 = 2;
+    unsafe {
+        let _ = signal(SIGINT_NO, on_sigint);
+    }
+}
+
+/// Non-unix fallback: no handler — stopping the process skips the drain.
+#[cfg(not(unix))]
+fn install_sigint_handler() {}
 
 /// CI bench-guard: compare every `BENCH_*.json` in `--current` against the
 /// same-named file in `--baseline`; exit 1 if any throughput metric fell

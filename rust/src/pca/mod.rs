@@ -76,6 +76,7 @@ pub fn inverse_transform(p: &Pca, scores: &Matrix) -> Matrix {
     x
 }
 
+/// Per-column mean of X — the PCA centering vector.
 pub fn column_means(x: &Matrix) -> Vec<f64> {
     let (n, d) = x.shape();
     let mut mu = vec![0.0; d];

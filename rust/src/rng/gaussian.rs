@@ -12,11 +12,13 @@ pub struct GaussianStream<R: RngCore> {
 }
 
 impl<R: RngCore> GaussianStream<R> {
+    /// Wrap a uniform source.
     pub fn new(rng: R) -> Self {
         Self { rng, spare: None }
     }
 
     #[inline]
+    /// Next standard-normal double.
     pub fn next(&mut self) -> f64 {
         if let Some(s) = self.spare.take() {
             return s;
@@ -36,6 +38,7 @@ impl<R: RngCore> GaussianStream<R> {
         mean + std * self.next()
     }
 
+    /// Recover the underlying uniform source.
     pub fn into_inner(self) -> R {
         self.rng
     }

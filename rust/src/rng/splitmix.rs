@@ -4,6 +4,7 @@
 use super::RngCore;
 
 #[derive(Clone, Debug)]
+/// SplitMix64 generator state.
 pub struct SplitMix64 {
     state: u64,
     /// pending high half of the last u64 (we hand out u32s)
@@ -11,11 +12,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator seeded with the raw state value.
     pub fn new(seed: u64) -> Self {
         Self { state: seed, pending: None }
     }
 
     #[inline]
+    /// Next 64-bit output (the canonical mixer).
     pub fn next(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;

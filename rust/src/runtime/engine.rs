@@ -59,14 +59,17 @@ mod pjrt {
             })
         }
 
+        /// The loaded artifact inventory.
         pub fn manifest(&self) -> &Manifest {
             &self.manifest
         }
 
+        /// PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Cumulative artifact compile time so far.
         pub fn total_compile_time(&self) -> std::time::Duration {
             *self.compile_time.lock().unwrap()
         }
@@ -273,22 +276,27 @@ mod pjrt {
                 .to_string())
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn manifest(&self) -> &Manifest {
             match self.void {}
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn platform(&self) -> String {
             match self.void {}
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn total_compile_time(&self) -> std::time::Duration {
             match self.void {}
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn warmup(&self, _kinds: &[ArtifactKind], _impl_name: &str) -> Result<usize, String> {
             match self.void {}
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn run_rsvd(
             &self,
             _spec: &ArtifactSpec,
@@ -298,6 +306,7 @@ mod pjrt {
             match self.void {}
         }
 
+        /// Uninhabited (a stub [`Engine`] value cannot exist).
         pub fn run_gemm(
             &self,
             _spec: &ArtifactSpec,

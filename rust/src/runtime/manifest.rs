@@ -17,6 +17,7 @@ pub enum ArtifactKind {
 }
 
 impl ArtifactKind {
+    /// Parse the manifest's `kind` string.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "rsvd" => Some(Self::Rsvd),
@@ -31,8 +32,11 @@ impl ArtifactKind {
 /// One exported artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (the compile-cache key).
     pub name: String,
+    /// What the artifact computes.
     pub kind: ArtifactKind,
+    /// Path to the exported HLO text.
     pub file: PathBuf,
     /// rows of the input matrix (m for rsvd, n_samples for pca).
     pub m: usize,
@@ -49,7 +53,9 @@ pub struct ArtifactSpec {
 /// Parsed manifest with the artifact inventory.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every exported artifact, in manifest order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 

@@ -42,6 +42,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Fresh generator in normal (seeded-RNG) mode.
     pub fn new(seed: u64) -> Self {
         Self { rng: SplitMix64::new(seed), replay: None, choices: Vec::new(), trace: Vec::new() }
     }
@@ -79,6 +80,7 @@ impl Gen {
         v
     }
 
+    /// Uniform `usize` in the range.
     pub fn usize(&mut self, r: Range<usize>) -> usize {
         assert!(r.end > r.start, "empty range");
         let v = r.start + self.raw_below((r.end - r.start) as u64) as usize;
@@ -86,6 +88,7 @@ impl Gen {
         v
     }
 
+    /// Raw 64-bit choice word.
     pub fn u64(&mut self) -> u64 {
         let v = self.raw();
         self.trace.push(format!("u64=0x{v:x}"));
@@ -101,6 +104,7 @@ impl Gen {
         v
     }
 
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         let v = self.raw_below(2) == 1;
         self.trace.push(format!("bool={v}"));

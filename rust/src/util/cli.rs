@@ -5,7 +5,9 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Non-flag arguments in order (subcommand, file names, …).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to `"true"`.
     pub flags: BTreeMap<String, String>,
 }
 
@@ -31,22 +33,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping the program name).
     pub fn from_env() -> Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw string value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` parsed as usize, or `default` when absent/unparseable.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default` when absent/unparseable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

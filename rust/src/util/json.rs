@@ -17,15 +17,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number — every JSON number is an f64, as on the wire.
     Num(f64),
+    /// String (escapes already decoded).
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object; `BTreeMap` keeps serialization deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse one complete JSON document (trailing bytes are an error).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -37,6 +44,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field by key; `None` for missing keys and non-objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -51,6 +60,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -58,10 +68,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -76,6 +88,7 @@ impl Json {
             .ok_or_else(|| format!("missing/invalid string field '{key}'"))
     }
 
+    /// Convenience: object field as `usize`, with error context.
     pub fn usize_field(&self, key: &str) -> Result<usize, String> {
         self.get(key)
             .and_then(|v| v.as_usize())
@@ -136,6 +149,18 @@ impl Json {
             .map(|v| v.as_f64().ok_or_else(|| format!("non-number element in '{key}'")))
             .collect()
     }
+}
+
+/// The serve front end's error envelope: `{"ok":false,"error":"…"}` — the
+/// one reply shape every client can rely on when a frame is malformed
+/// (unparseable JSON, unknown request type, payload validation failure) or
+/// refused (admission control, drain). Success envelopes add `"ok":true`
+/// plus the result fields; see docs/PROTOCOL.md.
+pub fn error_envelope(msg: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("ok".to_string(), Json::Bool(false));
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj)
 }
 
 /// Encode a CSR matrix as the wire object

@@ -1,0 +1,95 @@
+//! Keeps `docs/PROTOCOL.md` honest: every fenced JSON example in the spec
+//! is extracted here and fed through the real wire codec. Blocks are
+//! tagged by their fence info string — ```` ```json request ```` must
+//! decode and round-trip, ```` ```json rejected ```` must error, and
+//! ```` ```json response ```` must at least parse with an `ok` field.
+
+use rsvd::coordinator::Request;
+use rsvd::util::json::Json;
+
+const DOC: &str = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md"));
+
+/// Fenced code blocks whose info string is exactly `json <tag>`.
+fn blocks(tag: &str) -> Vec<String> {
+    let open = format!("```json {tag}");
+    let mut out = Vec::new();
+    let mut cur: Option<String> = None;
+    for line in DOC.lines() {
+        let t = line.trim();
+        match &mut cur {
+            None => {
+                if t == open {
+                    cur = Some(String::new());
+                }
+            }
+            Some(buf) => {
+                if t == "```" {
+                    out.push(cur.take().unwrap());
+                } else {
+                    buf.push_str(line);
+                    buf.push('\n');
+                }
+            }
+        }
+    }
+    assert!(cur.is_none(), "unterminated ```json {tag} fence in PROTOCOL.md");
+    out
+}
+
+#[test]
+fn request_examples_round_trip_the_codec_and_cover_every_type() {
+    let examples = blocks("request");
+    assert!(!examples.is_empty(), "PROTOCOL.md lost its request examples");
+    let mut types_seen = Vec::new();
+    for (i, text) in examples.iter().enumerate() {
+        let j = Json::parse(text).unwrap_or_else(|e| panic!("request example {i}: {e}\n{text}"));
+        let ty = j.str_field("type").expect("request examples carry a type").to_string();
+        let req = Request::from_wire_json(&j)
+            .unwrap_or_else(|e| panic!("request example {i} ({ty}) must decode: {e}"));
+        // re-encode and decode again: the documented frame describes the
+        // same request the codec itself produces
+        let wire = req.to_wire_json().expect("decoded requests are wire-expressible");
+        let back = Request::from_wire_json(&wire).expect("codec output must decode");
+        assert_eq!(back.fingerprint(), req.fingerprint(), "example {i} content round-trip");
+        assert_eq!(back.k(), req.k());
+        assert_eq!(back.method(), req.method());
+        assert_eq!(
+            std::mem::discriminant(&back),
+            std::mem::discriminant(&req),
+            "example {i} variant round-trip"
+        );
+        types_seen.push(ty);
+    }
+    for want in ["svd", "svd_sparse", "svd_tiled", "svd_adaptive"] {
+        assert!(
+            types_seen.iter().any(|t| t == want),
+            "PROTOCOL.md must show a '{want}' request example (saw {types_seen:?})"
+        );
+    }
+}
+
+#[test]
+fn rejected_examples_are_refused_by_the_decoder() {
+    let examples = blocks("rejected");
+    assert!(examples.len() >= 4, "PROTOCOL.md lost its rejected examples");
+    for (i, text) in examples.iter().enumerate() {
+        // rejected frames are still well-formed JSON (the parser accepts
+        // them; the *request decoder* refuses) — 1e999 parses to +Inf
+        let j = Json::parse(text).unwrap_or_else(|e| panic!("rejected example {i}: {e}\n{text}"));
+        let err = Request::from_wire_json(&j);
+        assert!(err.is_err(), "rejected example {i} unexpectedly decoded:\n{text}");
+    }
+}
+
+#[test]
+fn response_examples_parse_with_an_ok_field() {
+    let examples = blocks("response");
+    assert!(examples.len() >= 2, "PROTOCOL.md lost its response examples");
+    for (i, text) in examples.iter().enumerate() {
+        let j = Json::parse(text).unwrap_or_else(|e| panic!("response example {i}: {e}\n{text}"));
+        let ok = j.bool_field("ok").unwrap_or_else(|e| panic!("response example {i}: {e}"));
+        if !ok {
+            assert!(j.str_field("error").is_ok(), "failure responses carry an error: {text}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! End-to-end tests for the TCP serve front end (`coordinator::net`) over
+//! real sockets: request/reply framing, cache hits over the wire, error
+//! envelopes, admission control, and graceful drain.
+
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request, ServeCfg, Server};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One NDJSON client connection.
+struct Client {
+    tx: TcpStream,
+    rx: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let tx = TcpStream::connect(addr).expect("connect");
+        let rx = BufReader::new(tx.try_clone().expect("clone socket"));
+        Client { tx, rx }
+    }
+
+    fn send_line(&mut self, line: &str) {
+        self.tx.write_all(line.as_bytes()).expect("send");
+        self.tx.write_all(b"\n").expect("send");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.rx.read_line(&mut line).expect("recv");
+        assert!(!line.is_empty(), "connection closed instead of replying");
+        Json::parse(line.trim()).expect("parse reply")
+    }
+
+    fn round_trip(&mut self, frame: &Json) -> Json {
+        self.send_line(&frame.to_string());
+        self.recv()
+    }
+}
+
+fn start(cfg: CoordinatorCfg, serve: ServeCfg) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start_host_only(cfg));
+    let server = Server::start(coord.clone(), serve).expect("start server");
+    (coord, server)
+}
+
+fn ephemeral() -> ServeCfg {
+    ServeCfg { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+fn dense_req(seed: u64) -> Request {
+    Request::Svd {
+        a: spectrum_matrix(60, 40, Decay::Fast, seed),
+        k: 5,
+        method: Method::NativeRsvd,
+        want_vectors: false,
+        seed,
+    }
+}
+
+#[test]
+fn dense_job_over_socket_is_bitwise_the_direct_solve_and_caches() {
+    let (_coord, mut server) = start(
+        CoordinatorCfg { cache: 8, ..Default::default() },
+        ephemeral(),
+    );
+    let mut c = Client::connect(server.local_addr());
+
+    let req = dense_req(11);
+    let frame = req.to_wire_json().expect("wire form");
+    let first = c.round_trip(&frame);
+    assert!(first.bool_field("ok").unwrap(), "{first}");
+    assert!(!first.bool_field("cached").unwrap(), "cold cache: a real solve");
+    let values = first.f64_arr_field("values").unwrap();
+    assert_eq!(values.len(), 5);
+
+    // the wire answer is bitwise what an in-process coordinator computes
+    // for the same request (the JSON codec round-trips f64 exactly)
+    let direct = Coordinator::start_host_only(CoordinatorCfg::default())
+        .run(req)
+        .outcome
+        .expect("direct solve");
+    assert_eq!(values, direct.values, "socket answer must match the direct solve bitwise");
+
+    // resubmitting the identical frame hits the cache with the same bits
+    let second = c.round_trip(&frame);
+    assert!(second.bool_field("cached").unwrap(), "repeat must hit: {second}");
+    assert_eq!(second.f64_arr_field("values").unwrap(), values);
+
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_error_envelopes_and_the_connection_survives() {
+    let (_coord, mut server) = start(CoordinatorCfg::default(), ephemeral());
+    let mut c = Client::connect(server.local_addr());
+
+    // not JSON at all
+    c.send_line("this is not json");
+    let r = c.recv();
+    assert!(!r.bool_field("ok").unwrap(), "{r}");
+    assert!(r.str_field("error").unwrap().contains("malformed"), "{r}");
+
+    // well-formed JSON, invalid request — the id still echoes back
+    c.send_line(r#"{"type":"svd_nope","id":42}"#);
+    let r = c.recv();
+    assert!(!r.bool_field("ok").unwrap(), "{r}");
+    assert_eq!(r.u64_field("id").unwrap(), 42);
+
+    // the connection is still serviceable afterwards
+    let pong = c.round_trip(&Json::parse(r#"{"type":"ping","id":"still-here"}"#).unwrap());
+    assert!(pong.bool_field("ok").unwrap());
+    assert_eq!(pong.str_field("type").unwrap(), "pong");
+    assert_eq!(pong.str_field("id").unwrap(), "still-here");
+
+    // and a real job still solves
+    let reply = c.round_trip(&dense_req(3).to_wire_json().unwrap());
+    assert!(reply.bool_field("ok").unwrap(), "{reply}");
+
+    server.shutdown();
+}
+
+#[test]
+fn admission_control_rejects_past_max_conns_and_recovers() {
+    let (_coord, mut server) = start(
+        CoordinatorCfg::default(),
+        ServeCfg { addr: "127.0.0.1:0".into(), max_conns: 1, window: None },
+    );
+    let addr = server.local_addr();
+
+    // c1 occupies the only slot (the pong proves its accept completed)
+    let mut c1 = Client::connect(addr);
+    let pong = c1.round_trip(&Json::parse(r#"{"type":"ping"}"#).unwrap());
+    assert!(pong.bool_field("ok").unwrap());
+
+    // c2 is refused with one capacity envelope
+    let mut c2 = Client::connect(addr);
+    let refusal = c2.recv();
+    assert!(!refusal.bool_field("ok").unwrap(), "{refusal}");
+    assert!(refusal.str_field("error").unwrap().contains("capacity"), "{refusal}");
+
+    // once c1 hangs up, the slot frees and a new client gets in (the
+    // writer decrements the live count when its queue drains)
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut c3 = loop {
+        let mut c = Client::connect(addr);
+        let r = c.round_trip(&Json::parse(r#"{"type":"ping"}"#).unwrap());
+        if r.bool_field("ok").unwrap() {
+            break c;
+        }
+        assert!(Instant::now() < deadline, "slot never freed after c1 closed");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    // the server's own accounting saw the refusals
+    let m = c3.round_trip(&Json::parse(r#"{"type":"metrics"}"#).unwrap());
+    let snap = m.get("metrics").expect("metrics payload");
+    assert!(snap.u64_field("conns_accepted").unwrap() >= 2, "{m}");
+    assert!(snap.u64_field("conns_rejected").unwrap() >= 1, "{m}");
+
+    server.shutdown();
+}
+
+#[test]
+fn drain_completes_in_flight_jobs_and_refuses_new_connections() {
+    let (coord, mut server) = start(
+        CoordinatorCfg { cache: 4, ..Default::default() },
+        ephemeral(),
+    );
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr);
+
+    // a job heavy enough to still be in flight when the drain begins
+    let req = Request::Svd {
+        a: spectrum_matrix(220, 180, Decay::Fast, 7),
+        k: 6,
+        method: Method::Gesvd,
+        want_vectors: true,
+        seed: 7,
+    };
+    c.send_line(&req.to_wire_json().unwrap().to_string());
+
+    // wait until the dispatcher has drained the frame (the cache records a
+    // miss for every cacheable request the moment it is dispatched), so
+    // the job is deterministically in flight — not still in a socket
+    // buffer — when the drain flag goes up
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.metrics.snapshot().cache_misses == 0 {
+        assert!(Instant::now() < deadline, "job never reached the dispatcher");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    server.begin_drain();
+    assert!(server.is_draining());
+
+    // new connections are refused with a draining envelope
+    let mut late = Client::connect(addr);
+    let refusal = late.recv();
+    assert!(!refusal.bool_field("ok").unwrap(), "{refusal}");
+    assert!(refusal.str_field("error").unwrap().contains("draining"), "{refusal}");
+
+    // the in-flight job still completes and its reply arrives
+    let reply = c.recv();
+    assert!(reply.bool_field("ok").unwrap(), "in-flight job must complete: {reply}");
+    assert_eq!(reply.f64_arr_field("values").unwrap().len(), 6);
+    assert!(reply.get("u").is_some() && reply.get("v").is_some());
+
+    // and join returns with every thread reaped
+    server.join();
+    assert_eq!(coord.metrics.snapshot().jobs_failed, 0);
+}
+
+#[test]
+fn ping_and_metrics_admin_frames_echo_ids() {
+    let (_coord, mut server) = start(
+        CoordinatorCfg { cache: 8, ..Default::default() },
+        ephemeral(),
+    );
+    let mut c = Client::connect(server.local_addr());
+
+    let pong = c.round_trip(&Json::parse(r#"{"type":"ping","id":7}"#).unwrap());
+    assert!(pong.bool_field("ok").unwrap());
+    assert_eq!(pong.str_field("type").unwrap(), "pong");
+    assert_eq!(pong.u64_field("id").unwrap(), 7);
+
+    // run a job twice so the metrics frame has something to report
+    let frame = dense_req(5).to_wire_json().unwrap();
+    assert!(c.round_trip(&frame).bool_field("ok").unwrap());
+    assert!(c.round_trip(&frame).bool_field("cached").unwrap());
+
+    let m = c.round_trip(&Json::parse(r#"{"type":"metrics","id":"snap"}"#).unwrap());
+    assert!(m.bool_field("ok").unwrap());
+    assert_eq!(m.str_field("type").unwrap(), "metrics");
+    assert_eq!(m.str_field("id").unwrap(), "snap");
+    let snap = m.get("metrics").expect("metrics payload");
+    assert_eq!(snap.u64_field("jobs_completed").unwrap(), 2);
+    assert_eq!(snap.u64_field("jobs_failed").unwrap(), 0);
+    assert_eq!(snap.u64_field("cache_hits").unwrap(), 1);
+    assert_eq!(snap.u64_field("cache_misses").unwrap(), 1);
+    assert!(snap.u64_field("conns_accepted").unwrap() >= 1);
+
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_frames_reply_in_order_with_id_echo() {
+    let (_coord, mut server) = start(
+        CoordinatorCfg { max_batch: 4, ..Default::default() },
+        ephemeral(),
+    );
+    let mut c = Client::connect(server.local_addr());
+
+    // burst 6 distinct jobs without reading; replies must come back in
+    // frame order (the reply-slot queue), ids echoed
+    let n = 6u64;
+    for id in 0..n {
+        let mut frame = dense_req(id).to_wire_json().unwrap();
+        if let Json::Obj(m) = &mut frame {
+            m.insert("id".to_string(), Json::Num(id as f64));
+        }
+        c.send_line(&frame.to_string());
+    }
+    for id in 0..n {
+        let r = c.recv();
+        assert!(r.bool_field("ok").unwrap(), "{r}");
+        assert_eq!(r.u64_field("id").unwrap(), id, "replies must be in frame order");
+    }
+
+    server.shutdown();
+}
