@@ -125,6 +125,7 @@ fn bench_adaptive(smoke: bool, repeats: usize) {
     }
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("adaptive".into()));
+    doc.insert("kernel".to_string(), Json::Str(rsvd::linalg::kernel::selected_name().into()));
     doc.insert("repeats".to_string(), Json::Num(repeats as f64));
     doc.insert(
         "threads".to_string(),

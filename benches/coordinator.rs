@@ -109,6 +109,7 @@ fn bench_fused_vs_sequential(jobs: usize, k: usize, repeats: usize) {
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("coordinator".into()));
+    doc.insert("kernel".to_string(), Json::Str(rsvd::linalg::kernel::selected_name().into()));
     doc.insert("shape".to_string(), Json::Str(format!("{m}x{n}")));
     doc.insert("jobs".to_string(), Json::Num(jobs as f64));
     doc.insert("k".to_string(), Json::Num(k as f64));

@@ -1,0 +1,85 @@
+//! GEMM bench: the dispatched micro-kernel vs the scalar fallback, serial
+//! vs full team — the artifact CI's perf trajectory and bench-guard run on.
+//!
+//! ```sh
+//! cargo bench --bench gemm -- --smoke          # fast CI mode → BENCH_gemm.json
+//! cargo bench --bench gemm -- [--repeats 5]    # fuller sweep, table only
+//! ```
+//!
+//! `--smoke` times serial vs full-team GEMM at 256/512/1024 under the
+//! *dispatched* kernel (`RSVD_KERNEL` / auto-detection), plus a serial
+//! scalar-kernel reference at each size, and writes `BENCH_gemm.json`
+//! with a top-level `kernel` field so the bench-guard never compares
+//! scalar numbers against avx2 ones. `kernel_vs_scalar` is the serial
+//! dispatched-over-scalar GFLOP/s ratio — the acceptance metric for the
+//! SIMD micro-kernels (≥ 1.5× on an AVX2 host). Cargo runs bench binaries
+//! with CWD = the package root, so the file lands at `rust/BENCH_gemm.json`.
+
+use rsvd::bench_harness::{gflops, save_json, time_n, Table};
+use rsvd::linalg::kernel::{selected_name, with_kernel, Kernel};
+use rsvd::linalg::threading::{available_threads, with_threads};
+use rsvd::linalg::{gemm, Matrix};
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if args.has("smoke") {
+        bench_smoke(args.get_usize("repeats", 2), &[256, 512, 1024]);
+        return;
+    }
+    bench_smoke(args.get_usize("repeats", 5), &[256, 384, 512, 768, 1024, 1536]);
+}
+
+/// Time one square GEMM at `threads` under the ambient kernel; GFLOP/s.
+fn time_gemm(n: usize, repeats: usize, threads: usize) -> f64 {
+    let a = Matrix::gaussian(n, n, 1);
+    let b = Matrix::gaussian(n, n, 2);
+    let mut c = Matrix::zeros(n, n);
+    let flops = 2.0 * (n * n * n) as f64;
+    let t = with_threads(threads, || time_n(repeats, || gemm::gemm(1.0, &a, &b, 0.0, &mut c)));
+    gflops(flops, t.mean_s)
+}
+
+/// Serial + parallel GFLOP/s under the dispatched kernel, serial scalar
+/// reference, and the dispatched/scalar ratio; table + `BENCH_gemm.json`.
+fn bench_smoke(repeats: usize, sizes: &[usize]) {
+    let threads = available_threads();
+    let kernel = selected_name();
+    let mut table = Table::new(
+        &format!("GEMM smoke: {kernel} kernel, serial vs parallel ({threads} threads, f64)"),
+        &["n", "serial GFLOP/s", "parallel GFLOP/s", "speedup", "scalar GFLOP/s", "vs scalar"],
+    );
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let g_ser = time_gemm(n, repeats, 1);
+        let g_par = time_gemm(n, repeats, threads);
+        let g_scalar = with_kernel(Kernel::Scalar, || time_gemm(n, repeats, 1));
+        let vs_scalar = g_ser / g_scalar;
+        table.row(vec![
+            n.to_string(),
+            format!("{g_ser:.2}"),
+            format!("{g_par:.2}"),
+            format!("{:.2}x", g_par / g_ser),
+            format!("{g_scalar:.2}"),
+            format!("{vs_scalar:.2}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("serial_gflops".to_string(), Json::Num(g_ser));
+        row.insert("parallel_gflops".to_string(), Json::Num(g_par));
+        row.insert("speedup".to_string(), Json::Num(g_par / g_ser));
+        row.insert("scalar_serial_gflops".to_string(), Json::Num(g_scalar));
+        row.insert("kernel_vs_scalar".to_string(), Json::Num(vs_scalar));
+        rows.push(Json::Obj(row));
+    }
+    table.print();
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("gemm".into()));
+    doc.insert("kernel".to_string(), Json::Str(kernel.into()));
+    doc.insert("threads".to_string(), Json::Num(threads as f64));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert("results".to_string(), Json::Arr(rows));
+    save_json("BENCH_gemm.json", &Json::Obj(doc));
+}

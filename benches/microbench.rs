@@ -4,30 +4,22 @@
 //!
 //! ```sh
 //! cargo bench --bench microbench -- [--repeats 5] [--only gemm|device|solvers|pipeline]
-//! cargo bench --bench microbench -- --smoke   # fast CI mode → BENCH_gemm.json
 //! ```
 //!
-//! `--smoke` times serial vs full-team GEMM at 256/512/1024 and writes
-//! `BENCH_gemm.json` (GFLOP/s + speedups), which CI uploads as an artifact
-//! to seed the perf trajectory across PRs. Cargo runs bench binaries with
-//! CWD = the package root, so the file lands at `rust/BENCH_gemm.json`.
+//! The CI smoke mode that writes `BENCH_gemm.json` lives in the dedicated
+//! `gemm` bench (`cargo bench --bench gemm -- --smoke`), which also
+//! compares the dispatched micro-kernel against the scalar fallback.
 
-use rsvd::bench_harness::{fmt_secs, gflops, save_json, time_n, Table};
+use rsvd::bench_harness::{fmt_secs, gflops, time_n, Table};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::experiments;
 use rsvd::linalg::threading::{available_threads, with_threads};
 use rsvd::linalg::{bidiag, eigen, gemm, lanczos, qr, svd_gesvd, svd_jacobi, Matrix};
 use rsvd::runtime::{ArtifactKind, Engine};
 use rsvd::util::cli::Args;
-use rsvd::util::json::Json;
-use std::collections::BTreeMap;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    if args.has("smoke") {
-        bench_gemm_smoke(args.get_usize("repeats", 2));
-        return;
-    }
     let repeats = args.get_usize("repeats", 3);
     let only = args.get("only").unwrap_or("all");
 
@@ -43,51 +35,6 @@ fn main() {
     if matches!(only, "all" | "pipeline") {
         bench_pipeline_phases(repeats);
     }
-}
-
-/// Time one square GEMM serially and on the full team; returns
-/// (serial GFLOP/s, parallel GFLOP/s).
-fn time_gemm_pair(n: usize, repeats: usize, threads: usize) -> (f64, f64) {
-    let a = Matrix::gaussian(n, n, 1);
-    let b = Matrix::gaussian(n, n, 2);
-    let mut c = Matrix::zeros(n, n);
-    let flops = 2.0 * (n * n * n) as f64;
-    let t_ser = with_threads(1, || time_n(repeats, || gemm::gemm(1.0, &a, &b, 0.0, &mut c)));
-    let t_par = with_threads(threads, || time_n(repeats, || gemm::gemm(1.0, &a, &b, 0.0, &mut c)));
-    (gflops(flops, t_ser.mean_s), gflops(flops, t_par.mean_s))
-}
-
-/// CI smoke mode: serial vs parallel GFLOP/s at three sizes, emitted both
-/// as a table and as `BENCH_gemm.json`.
-fn bench_gemm_smoke(repeats: usize) {
-    let threads = available_threads();
-    let mut table = Table::new(
-        &format!("GEMM smoke: serial vs parallel ({threads} threads, f64)"),
-        &["n", "serial GFLOP/s", "parallel GFLOP/s", "speedup"],
-    );
-    let mut sizes = Vec::new();
-    for &n in &[256usize, 512, 1024] {
-        let (g_ser, g_par) = time_gemm_pair(n, repeats, threads);
-        table.row(vec![
-            n.to_string(),
-            format!("{g_ser:.2}"),
-            format!("{g_par:.2}"),
-            format!("{:.2}x", g_par / g_ser),
-        ]);
-        let mut row = BTreeMap::new();
-        row.insert("n".to_string(), Json::Num(n as f64));
-        row.insert("serial_gflops".to_string(), Json::Num(g_ser));
-        row.insert("parallel_gflops".to_string(), Json::Num(g_par));
-        row.insert("speedup".to_string(), Json::Num(g_par / g_ser));
-        sizes.push(Json::Obj(row));
-    }
-    table.print();
-    let mut doc = BTreeMap::new();
-    doc.insert("bench".to_string(), Json::Str("gemm".into()));
-    doc.insert("threads".to_string(), Json::Num(threads as f64));
-    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
-    doc.insert("results".to_string(), Json::Arr(sizes));
-    save_json("BENCH_gemm.json", &Json::Obj(doc));
 }
 
 fn bench_gemm(repeats: usize) {

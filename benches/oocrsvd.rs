@@ -141,6 +141,7 @@ fn bench_oocrsvd(smoke: bool, repeats: usize, k: usize) {
     }
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("oocrsvd".into()));
+    doc.insert("kernel".to_string(), Json::Str(rsvd::linalg::kernel::selected_name().into()));
     doc.insert("repeats".to_string(), Json::Num(repeats as f64));
     doc.insert(
         "threads".to_string(),

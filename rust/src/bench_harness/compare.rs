@@ -45,6 +45,15 @@ pub fn is_throughput_field(name: &str) -> bool {
     name.contains("gflops") || name.ends_with("_per_s")
 }
 
+/// The compute kernel a bench artifact was produced under (its top-level
+/// `"kernel"` field), or `"unspecified"` for artifacts that predate the
+/// field. The guard must never compare artifacts across kernels — a scalar
+/// baseline vs an avx2 run (or vice versa) measures the dispatch choice,
+/// not a regression — so callers skip (and reseed) on a mismatch.
+pub fn kernel_of(doc: &Json) -> &str {
+    doc.get("kernel").and_then(|k| k.as_str()).unwrap_or("unspecified")
+}
+
 /// Collect every throughput metric in `doc` as (path, value), in document
 /// order (objects iterate key-sorted — `Json::Obj` is a BTreeMap — so the
 /// listing is deterministic).
@@ -157,6 +166,18 @@ mod tests {
         let edge = doc(r#"{"results":[{"parallel_gflops":7.5},{"parallel_gflops":8.0}]}"#);
         let (_, bad) = compare(&base, &edge, 0.25);
         assert!(bad.is_empty(), "{bad:?}");
+    }
+
+    #[test]
+    fn kernel_of_reads_field_with_default() {
+        assert_eq!(kernel_of(&doc(r#"{"bench":"gemm","kernel":"avx2"}"#)), "avx2");
+        assert_eq!(kernel_of(&doc(r#"{"bench":"gemm","kernel":"scalar"}"#)), "scalar");
+        // pre-kernel-field artifacts and malformed values both read as
+        // "unspecified" — mismatching against any concrete kernel, so the
+        // guard reseeds rather than cross-comparing
+        assert_eq!(kernel_of(&doc(r#"{"bench":"gemm"}"#)), "unspecified");
+        assert_eq!(kernel_of(&doc(r#"{"kernel":7}"#)), "unspecified");
+        assert_ne!(kernel_of(&doc(r#"{"kernel":"avx2"}"#)), kernel_of(&doc(r#"{}"#)));
     }
 
     #[test]

@@ -135,6 +135,10 @@ pub struct Snapshot {
     pub exec_p99: Duration,
     /// Longest solver execution observed.
     pub exec_max: Duration,
+    /// Compute kernel the BLAS-3 layer dispatches to in this process
+    /// ("scalar" or "avx2" — see `linalg::kernel`), so perf numbers in a
+    /// metrics dump are attributable to the kernel that produced them.
+    pub kernel: String,
 }
 
 impl Snapshot {
@@ -142,6 +146,7 @@ impl Snapshot {
     /// and the `serve` subcommand report on shutdown.
     pub fn print(&self) {
         println!("── coordinator metrics ──");
+        println!("kernel: {}", self.kernel);
         println!("jobs: {} ok, {} failed", self.jobs_completed, self.jobs_failed);
         println!(
             "batches: {} ({} jobs batched, {:.2} jobs/batch, {} fused)",
@@ -202,6 +207,7 @@ impl Snapshot {
         obj.insert("exec_p95_us".to_string(), us(self.exec_p95));
         obj.insert("exec_p99_us".to_string(), us(self.exec_p99));
         obj.insert("exec_max_us".to_string(), us(self.exec_max));
+        obj.insert("kernel".to_string(), Json::Str(self.kernel.clone()));
         Json::Obj(obj)
     }
 }
@@ -361,6 +367,7 @@ impl Metrics {
             exec_p95: exec.quantile(0.95),
             exec_p99: exec.quantile(0.99),
             exec_max: exec.max(),
+            kernel: crate::linalg::kernel::selected_name().to_string(),
         }
     }
 }
@@ -567,6 +574,8 @@ mod tests {
         let text = j.to_string();
         let back = Json::parse(&text).expect("snapshot JSON must re-parse");
         assert_eq!(back.u64_field("jobs_completed").unwrap(), 2);
+        let kern = back.str_field("kernel").unwrap();
+        assert!(kern == "scalar" || kern == "avx2", "kernel field: {kern}");
         assert_eq!(back.u64_field("cache_hits").unwrap(), 1);
         assert_eq!(back.u64_field("cache_misses").unwrap(), 1);
         assert_eq!(back.u64_field("conns_accepted").unwrap(), 1);

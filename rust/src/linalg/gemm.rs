@@ -12,32 +12,45 @@
 //! for jc in 0..n step NC          # C/B column panel (fits shared cache)
 //!   for kc in 0..k step KC        # reduction panel
 //!     pack B[kc, jc]  → B̃ (KC×NC, contiguous rows)
-//!     for ic in i0..i1 step MC    # A row block (fits L2); [i0,i1) is
+//!     for ic in i0..i1 step mc    # A row block (fits L2); [i0,i1) is
 //!       pack A[ic, kc] → Ã        #   this thread's row range
 //!       for ir in 0..mc step MR   # MR×NC micro-kernel: C += alpha·Ã·B̃
 //! ```
+//!
+//! The innermost MR×nc micro-kernel is dispatched at runtime via
+//! [`super::kernel`]: the portable scalar loop (MR=4, bit-for-bit the
+//! historical implementation) or the AVX2+FMA register-blocked kernel
+//! (MR=6, NR=8) on x86-64 hosts that support it; `RSVD_KERNEL` and
+//! [`super::kernel::with_kernel`] select between them. MC is rounded down
+//! to a whole number of micro-panels per kernel so ragged panels only ever
+//! appear at the end of a worker's row range.
 //!
 //! The team (size from [`super::threading`]) splits the *rows of C* into
 //! contiguous MR-aligned chunks, one `std::thread::scope` worker per chunk;
 //! each worker runs the full packed schedule over its rows with private
 //! pack buffers. Because every C element is owned by exactly one worker and
 //! the k-reduction order per element (KC blocks ascending, then k ascending
-//! within a block) does not depend on the partition, results are **bitwise
-//! identical for any thread count** — the determinism contract the
-//! coordinator and the tier-1 suite rely on. Calls below the flop threshold
-//! run serially on the calling thread with the same schedule.
+//! within a block) does not depend on the partition — or, for the AVX2
+//! kernel, on the micro-panel height or column-block geometry — results are
+//! **bitwise identical for any thread count** under a fixed kernel — the
+//! determinism contract the coordinator and the tier-1 suite rely on.
+//! Calls below the flop threshold run serially on the calling thread with
+//! the same schedule.
 
+use super::kernel::{self, Kernel};
 use super::threading::{partition, partition_triangular, scoped_bands, Parallelism};
 use super::Matrix;
 
-/// Reduction (k) panel depth: B̃ rows streamed per pack, Ã working set depth.
-const KC: usize = 256;
-/// A-block height per pack: MC×KC panel of A held hot while B̃ streams.
+/// Reduction (k) panel depth: B̃ rows streamed per pack, Ã working set
+/// depth. Public because the sparse SpMM kernels replay the same
+/// k-segmentation to preserve the 0-ULP dense-twin contract
+/// ([`super::sparse`]).
+pub const KC: usize = 256;
+/// A-block height per pack: MC×KC panel of A held hot while B̃ streams
+/// (rounded down per kernel to a multiple of its MR).
 const MC: usize = 128;
 /// C/B column panel width: bounds the B̃ pack buffer at KC·NC doubles (2 MiB).
 const NC: usize = 1024;
-/// Micro-kernel rows: each B̃ row loaded is reused MR times from registers.
-const MR: usize = 4;
 
 /// C ← alpha·A·B + beta·C. Shapes: A(m×k), B(k×n), C(m×n).
 pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
@@ -57,23 +70,28 @@ pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
         return;
     }
 
+    // resolve the micro-kernel once per call, on the calling thread (the
+    // thread-local override must apply to the whole call, and the scoped
+    // workers below never see this thread's locals)
+    let kern = kernel::selected();
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     let team = Parallelism::current().team_for_flops(flops);
-    let chunks = if team > 1 { partition(m, team, MR) } else { Vec::new() };
+    let chunks = if team > 1 { partition(m, team, kern.mr()) } else { Vec::new() };
     let bs = b.as_slice();
 
     if chunks.len() <= 1 {
-        gemm_rows(alpha, a, bs, n, k, 0, m, c.as_mut_slice());
+        gemm_rows(kern, alpha, a, bs, n, k, 0, m, c.as_mut_slice());
         return;
     }
     scoped_bands(c.as_mut_slice(), &chunks, n, |i0, i1, band| {
-        gemm_rows(alpha, a, bs, n, k, i0, i1, band)
+        gemm_rows(kern, alpha, a, bs, n, k, i0, i1, band)
     });
 }
 
 /// One worker's share: the full packed schedule over C rows [i0, i1).
 /// `c_band` holds exactly those rows (row-major, width n).
 fn gemm_rows(
+    kern: Kernel,
     alpha: f64,
     a: &Matrix,
     bs: &[f64],
@@ -83,18 +101,22 @@ fn gemm_rows(
     i1: usize,
     c_band: &mut [f64],
 ) {
+    let mr = kern.mr();
+    // whole micro-panels per A block: 128 for MR=4 (the historical MC),
+    // 126 for MR=6 — a ragged panel can then only be the block's last
+    let mc_max = (MC / mr) * mr;
     let mut bpack = vec![0.0; KC.min(k) * NC.min(n)];
     // Ã holds full MR-high micro-panels, so round the block height up
-    let mut apack = vec![0.0; MC.min(i1 - i0).div_ceil(MR) * MR * KC.min(k)];
+    let mut apack = vec![0.0; mc_max.min(i1 - i0).div_ceil(mr) * mr * KC.min(k)];
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for kk0 in (0..k).step_by(KC) {
             let kc = KC.min(k - kk0);
             pack_b(bs, n, kk0, kc, jc, nc, &mut bpack);
-            for ic in (i0..i1).step_by(MC) {
-                let mc = MC.min(i1 - ic);
-                pack_a(a, ic, mc, kk0, kc, &mut apack);
-                macro_kernel(alpha, &apack, &bpack, mc, nc, kc, c_band, ic - i0, jc, n);
+            for ic in (i0..i1).step_by(mc_max) {
+                let mc = mc_max.min(i1 - ic);
+                pack_a(a, ic, mc, kk0, kc, mr, &mut apack);
+                macro_kernel(kern, alpha, &apack, &bpack, mc, nc, kc, c_band, ic - i0, jc, n);
             }
         }
     }
@@ -109,24 +131,24 @@ fn pack_b(bs: &[f64], n: usize, kk0: usize, kc: usize, jc: usize, nc: usize, bpa
     }
 }
 
-/// Ã ← A[ic..ic+mc, kk0..kk0+kc] in micro-panel order: for each MR-row
-/// panel, the MR entries of one k-column sit contiguously (`[kk·MR + r]`),
+/// Ã ← A[ic..ic+mc, kk0..kk0+kc] in micro-panel order: for each mr-row
+/// panel, the mr entries of one k-column sit contiguously (`[kk·mr + r]`),
 /// so the micro-kernel reads its coefficients with unit stride. Ragged
 /// final panels are zero-padded (the pad slots are never read back into C).
 #[inline]
-fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, apack: &mut [f64]) {
-    for (p, r0) in (0..mc).step_by(MR).enumerate() {
-        let h = MR.min(mc - r0);
-        let base = p * MR * kc;
-        for r in 0..MR {
+fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, mr: usize, apack: &mut [f64]) {
+    for (p, r0) in (0..mc).step_by(mr).enumerate() {
+        let h = mr.min(mc - r0);
+        let base = p * mr * kc;
+        for r in 0..mr {
             if r < h {
                 let arow = &a.row(ic + r0 + r)[kk0..kk0 + kc];
                 for (kk, &v) in arow.iter().enumerate() {
-                    apack[base + kk * MR + r] = v;
+                    apack[base + kk * mr + r] = v;
                 }
             } else {
                 for kk in 0..kc {
-                    apack[base + kk * MR + r] = 0.0;
+                    apack[base + kk * mr + r] = 0.0;
                 }
             }
         }
@@ -134,9 +156,11 @@ fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, apack: &mut [
 }
 
 /// C band rows [ir_base.., cols jc..jc+nc] += alpha · Ã · B̃ for one packed
-/// (mc×kc)·(kc×nc) block, sweeping MR-row micro-panels.
+/// (mc×kc)·(kc×nc) block, sweeping mr-row micro-panels and dispatching
+/// each to the selected micro-kernel.
 #[inline]
 fn macro_kernel(
+    kern: Kernel,
     alpha: f64,
     apack: &[f64],
     bpack: &[f64],
@@ -148,23 +172,38 @@ fn macro_kernel(
     jc: usize,
     n: usize,
 ) {
-    for (p, r0) in (0..mc).step_by(MR).enumerate() {
-        let h = MR.min(mc - r0);
-        let panel = &apack[p * MR * kc..p * MR * kc + MR * kc];
-        micro_kernel(alpha, panel, bpack, h, nc, kc, c_band, ir_base + r0, jc, n);
+    let mr = kern.mr();
+    for (p, r0) in (0..mc).step_by(mr).enumerate() {
+        let h = mr.min(mc - r0);
+        let panel = &apack[p * mr * kc..p * mr * kc + mr * kc];
+        match kern {
+            Kernel::Scalar => {
+                micro_kernel_scalar(alpha, panel, bpack, h, mr, nc, kc, c_band, ir_base + r0, jc, n)
+            }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
+            // with_kernel after a positive AVX2+FMA feature check.
+            Kernel::Avx2 => unsafe {
+                avx2::micro_kernel(alpha, panel, bpack, h, nc, kc, c_band, ir_base + r0, jc, n)
+            },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
+        }
     }
 }
 
-/// MR×nc micro-kernel: for each k, broadcast the (≤MR) A coefficients and
-/// axpy the B̃ row into the C rows — unit stride on B̃ and C, autovectorizes
-/// to FMA. Per C element the k-order is strictly ascending, independent of
-/// panel height or thread partition (the determinism contract).
+/// Portable mr×nc micro-kernel — bit-for-bit the historical scalar loop:
+/// for each k, broadcast the (≤mr) A coefficients and axpy the B̃ row into
+/// the C rows — unit stride on B̃ and C, autovectorizes to FMA. Per C
+/// element the k-order is strictly ascending, independent of panel height
+/// or thread partition (the determinism contract).
 #[inline(always)]
-fn micro_kernel(
+fn micro_kernel_scalar(
     alpha: f64,
     apanel: &[f64],
     bpack: &[f64],
     h: usize,
+    mr: usize,
     nc: usize,
     kc: usize,
     c_band: &mut [f64],
@@ -174,7 +213,7 @@ fn micro_kernel(
 ) {
     for kk in 0..kc {
         let brow = &bpack[kk * nc..kk * nc + nc];
-        let coef = &apanel[kk * MR..kk * MR + MR];
+        let coef = &apanel[kk * mr..kk * mr + mr];
         // no zero-coefficient skip: 0·Inf/0·NaN must still propagate NaN,
         // matching the by-definition product
         for r in 0..h {
@@ -184,6 +223,105 @@ fn micro_kernel(
                 *cv += cf * bv;
             }
         }
+    }
+}
+
+/// Explicit AVX2+FMA micro-kernels (x86-64 only; gated at runtime by
+/// [`super::kernel`]).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256d, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd,
+    };
+
+    /// Register-tile height: 6 C rows per micro-panel.
+    pub const MR: usize = 6;
+    /// Register-tile width: 8 C columns = two 4-lane f64 vectors. With
+    /// 6×2 accumulators + 2 B vectors + 1 broadcast coefficient the tile
+    /// uses 15 of the 16 ymm registers — the classic double-precision
+    /// AVX2 GEMM shape.
+    pub const NR: usize = 8;
+
+    /// AVX2 micro-kernel: C[row0+r, jc..jc+nc] += alpha · Ã panel · B̃ for
+    /// r < h.
+    ///
+    /// Arithmetic contract (per C element, independent of the panel height
+    /// h, the thread partition, and the column-block geometry): the kc
+    /// products are fused-multiply-accumulated in ascending-k order into a
+    /// fresh accumulator, then folded into C once as `c = fma(alpha, acc,
+    /// c)`. Pad rows of a ragged panel (r ≥ h) are computed on the packed
+    /// zero coefficients and never stored, so a row's bits do not depend
+    /// on the height of the panel it landed in. The < NR column tail uses
+    /// scalar `f64::mul_add` — IEEE-identical to one fma lane — so an
+    /// element's bits never depend on which path computed it either.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available, `apanel.len() ≥
+    /// MR·kc`, `bpack.len() ≥ kc·nc`, and the C rows `row0..row0+h` with
+    /// columns `jc..jc+nc` lie inside `c_band` (width n).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn micro_kernel(
+        alpha: f64,
+        apanel: &[f64],
+        bpack: &[f64],
+        h: usize,
+        nc: usize,
+        kc: usize,
+        c_band: &mut [f64],
+        row0: usize,
+        jc: usize,
+        n: usize,
+    ) {
+        debug_assert!((1..=MR).contains(&h));
+        debug_assert!(apanel.len() >= MR * kc);
+        debug_assert!(bpack.len() >= kc * nc);
+        debug_assert!(c_band.len() >= (row0 + h - 1) * n + jc + nc);
+        let ap = apanel.as_ptr();
+        let bp = bpack.as_ptr();
+        let cp = c_band.as_mut_ptr();
+        let mut j = 0;
+        while j + NR <= nc {
+            let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+            for kk in 0..kc {
+                let b0 = _mm256_loadu_pd(bp.add(kk * nc + j));
+                let b1 = _mm256_loadu_pd(bp.add(kk * nc + j + 4));
+                for r in 0..MR {
+                    let av = _mm256_set1_pd(*ap.add(kk * MR + r));
+                    acc[r][0] = _mm256_fmadd_pd(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_pd(av, b1, acc[r][1]);
+                }
+            }
+            let alphav = _mm256_set1_pd(alpha);
+            for (r, a) in acc.iter().take(h).enumerate() {
+                let crow = cp.add((row0 + r) * n + jc + j);
+                store_fma(crow, alphav, a[0]);
+                store_fma(crow.add(4), alphav, a[1]);
+            }
+            j += NR;
+        }
+        // ragged column tail: same per-element op sequence, scalar fma
+        for r in 0..h {
+            for jj in j..nc {
+                let mut acc = 0.0f64;
+                for kk in 0..kc {
+                    acc = apanel[kk * MR + r].mul_add(bpack[kk * nc + jj], acc);
+                }
+                let cv = &mut c_band[(row0 + r) * n + jc + jj];
+                *cv = alpha.mul_add(acc, *cv);
+            }
+        }
+    }
+
+    /// `c[0..4] = fma(alpha, acc, c[0..4])` at `cp`.
+    ///
+    /// # Safety
+    /// AVX2+FMA available; `cp` valid for 4 f64 reads and writes.
+    #[inline(always)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn store_fma(cp: *mut f64, alphav: __m256d, acc: __m256d) {
+        let c = _mm256_loadu_pd(cp);
+        _mm256_storeu_pd(cp, _mm256_fmadd_pd(alphav, acc, c));
     }
 }
 
@@ -211,7 +349,8 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 /// (A, B) in ascending order accumulates every C element in the *same*
 /// global term order as one flat `matmul_tn` over the stacked rows — the
 /// bitwise seam the out-of-core tiled backend ([`super::tiled`]) streams
-/// panels through.
+/// panels through. (Kernel-independent: this entry point always runs the
+/// scalar schedule, so its bits are frozen across `RSVD_KERNEL` settings.)
 pub fn matmul_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, ka) = a.shape();
     let (mb, n) = b.shape();
@@ -361,6 +500,7 @@ pub fn gram_n(a: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::kernel::{avx2_available, with_kernel};
     use crate::linalg::threading::with_threads;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -377,43 +517,68 @@ mod tests {
         c
     }
 
+    /// Every kernel this host can run (scalar always, avx2 when the CPU
+    /// has it) — kernel-sensitive tests sweep this.
+    fn kernels() -> Vec<Kernel> {
+        let mut v = vec![Kernel::Scalar];
+        if avx2_available() {
+            v.push(Kernel::Avx2);
+        }
+        v
+    }
+
     #[test]
     fn gemm_matches_naive() {
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (17, 33, 9), (64, 300, 48)] {
-            let a = Matrix::gaussian(m, k, 1);
-            let b = Matrix::gaussian(k, n, 2);
-            let c = matmul(&a, &b);
-            assert!(c.max_diff(&naive(&a, &b)) < 1e-10, "shape {m}x{k}x{n}");
+        for kern in kernels() {
+            for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (17, 33, 9), (64, 300, 48)] {
+                let a = Matrix::gaussian(m, k, 1);
+                let b = Matrix::gaussian(k, n, 2);
+                let c = with_kernel(kern, || matmul(&a, &b));
+                let d = c.max_diff(&naive(&a, &b));
+                assert!(d < 1e-10, "[{}] shape {m}x{k}x{n}: {d}", kern.name());
+            }
         }
     }
 
     #[test]
     fn gemm_matches_naive_across_blocking_edges() {
-        // shapes straddling the KC/MC/NC panel boundaries and MR raggedness
-        for &(m, k, n) in &[
-            (MR, KC, 8),
-            (MC + 3, KC + 5, 17),
-            (2 * MC + 1, 2 * KC + 1, 33),
-            (130, 511, 70),
-        ] {
-            let a = Matrix::gaussian(m, k, (m + k) as u64);
-            let b = Matrix::gaussian(k, n, (k + n) as u64);
-            let c = matmul(&a, &b);
-            assert!(c.max_diff(&naive(&a, &b)) < 1e-9, "shape {m}x{k}x{n}");
+        // shapes straddling the KC/MC/NC panel boundaries and raggedness
+        // for both micro-panel heights (MR=4 scalar, MR=6/NR=8 avx2)
+        for kern in kernels() {
+            for &(m, k, n) in &[
+                (4, KC, 8),
+                (6, KC, 8),
+                (MC + 3, KC + 5, 17),
+                (MC + 5, KC + 1, NR_EDGE + 3),
+                (2 * MC + 1, 2 * KC + 1, 33),
+                (130, 511, 70),
+            ] {
+                let a = Matrix::gaussian(m, k, (m + k) as u64);
+                let b = Matrix::gaussian(k, n, (k + n) as u64);
+                let c = with_kernel(kern, || matmul(&a, &b));
+                let d = c.max_diff(&naive(&a, &b));
+                assert!(d < 1e-9, "[{}] shape {m}x{k}x{n}: {d}", kern.name());
+            }
         }
     }
 
+    /// The avx2 register-tile width, spelled here so the blocking-edge
+    /// shapes above compile on every arch.
+    const NR_EDGE: usize = 8;
+
     #[test]
     fn gemm_alpha_beta() {
-        let a = Matrix::gaussian(5, 6, 3);
-        let b = Matrix::gaussian(6, 4, 4);
-        let c0 = Matrix::gaussian(5, 4, 5);
-        let mut c = c0.clone();
-        gemm(2.0, &a, &b, -0.5, &mut c);
-        let mut want = naive(&a, &b);
-        want.scale(2.0);
-        let want = want.add_scaled(-0.5, &c0);
-        assert!(c.max_diff(&want) < 1e-12);
+        for kern in kernels() {
+            let a = Matrix::gaussian(5, 6, 3);
+            let b = Matrix::gaussian(6, 4, 4);
+            let c0 = Matrix::gaussian(5, 4, 5);
+            let mut c = c0.clone();
+            with_kernel(kern, || gemm(2.0, &a, &b, -0.5, &mut c));
+            let mut want = naive(&a, &b);
+            want.scale(2.0);
+            let want = want.add_scaled(-0.5, &c0);
+            assert!(c.max_diff(&want) < 1e-12, "[{}]", kern.name());
+        }
     }
 
     #[test]
@@ -468,29 +633,123 @@ mod tests {
 
     #[test]
     fn parallel_bitwise_matches_serial() {
-        // the determinism contract: identical bits for any team size, on
-        // shapes large enough to clear the flop threshold and odd enough to
-        // exercise ragged partitions
-        for &(m, k, n) in &[(257, 193, 129), (260, 128, 200)] {
-            let a = Matrix::gaussian(m, k, 11);
-            let b = Matrix::gaussian(k, n, 12);
-            let serial = with_threads(1, || matmul(&a, &b));
-            for t in [2, 3, crate::linalg::threading::available_threads()] {
-                let par = with_threads(t, || matmul(&a, &b));
-                assert_eq!(serial.as_slice(), par.as_slice(), "gemm t={t} {m}x{k}x{n}");
+        // the determinism contract, per kernel: identical bits for any
+        // team size, on shapes large enough to clear the flop threshold
+        // and odd enough to exercise ragged partitions
+        for kern in kernels() {
+            for &(m, k, n) in &[(257, 193, 129), (260, 128, 200)] {
+                let a = Matrix::gaussian(m, k, 11);
+                let b = Matrix::gaussian(k, n, 12);
+                let serial = with_kernel(kern, || with_threads(1, || matmul(&a, &b)));
+                for t in [2, 3, crate::linalg::threading::available_threads()] {
+                    let par = with_kernel(kern, || with_threads(t, || matmul(&a, &b)));
+                    let nm = kern.name();
+                    assert_eq!(serial.as_slice(), par.as_slice(), "[{nm}] t={t} {m}x{k}x{n}");
+                }
             }
-            let serial = with_threads(1, || matmul_tn(&a, &a));
-            let par = with_threads(4, || matmul_tn(&a, &a));
-            assert_eq!(serial.as_slice(), par.as_slice(), "tn");
-            let serial = with_threads(1, || matmul_nt(&a, &a));
-            let par = with_threads(4, || matmul_nt(&a, &a));
-            assert_eq!(serial.as_slice(), par.as_slice(), "nt");
-            let serial = with_threads(1, || gram_t(&a));
-            let par = with_threads(4, || gram_t(&a));
-            assert_eq!(serial.as_slice(), par.as_slice(), "gram_t");
-            let serial = with_threads(1, || gram_n(&a));
-            let par = with_threads(4, || gram_n(&a));
-            assert_eq!(serial.as_slice(), par.as_slice(), "gram_n");
+        }
+        let a = Matrix::gaussian(257, 193, 11);
+        let serial = with_threads(1, || matmul_tn(&a, &a));
+        let par = with_threads(4, || matmul_tn(&a, &a));
+        assert_eq!(serial.as_slice(), par.as_slice(), "tn");
+        let serial = with_threads(1, || matmul_nt(&a, &a));
+        let par = with_threads(4, || matmul_nt(&a, &a));
+        assert_eq!(serial.as_slice(), par.as_slice(), "nt");
+        let serial = with_threads(1, || gram_t(&a));
+        let par = with_threads(4, || gram_t(&a));
+        assert_eq!(serial.as_slice(), par.as_slice(), "gram_t");
+        let serial = with_threads(1, || gram_n(&a));
+        let par = with_threads(4, || gram_n(&a));
+        assert_eq!(serial.as_slice(), par.as_slice(), "gram_n");
+    }
+
+    #[test]
+    fn avx2_agrees_with_scalar_to_rounding() {
+        if !avx2_available() {
+            eprintln!("avx2_agrees_with_scalar_to_rounding: no AVX2+FMA, skipping");
+            return;
+        }
+        // MR/KC/NC straddles and ragged tails in every dimension
+        for &(m, k, n) in &[
+            (5, 7, 3),
+            (6, KC, 8),
+            (7, KC + 1, 9),
+            (MC + 1, 300, NC / 8 + 5),
+            (130, 511, 70),
+        ] {
+            let a = Matrix::gaussian(m, k, 21);
+            let b = Matrix::gaussian(k, n, 22);
+            let sc = with_kernel(Kernel::Scalar, || matmul(&a, &b));
+            let vx = with_kernel(Kernel::Avx2, || matmul(&a, &b));
+            let scale = (k as f64).sqrt();
+            let d = sc.max_diff(&vx);
+            assert!(d < 1e-13 * scale, "{m}x{k}x{n}: |scalar - avx2| = {d}");
+        }
+    }
+
+    // ---- pure packing-layout tests (no threads, no SIMD): the Miri leg
+    // of CI's sanitizer job runs exactly the `packing_` prefix ----
+
+    #[test]
+    fn packing_pack_a_micro_panel_layout() {
+        // 5×3 A packed with mr=4: panel 0 holds rows 0..4 column-major
+        // within each k-slot, panel 1 holds row 4 + three zero pad rows
+        let a = Matrix::from_fn(5, 3, |i, j| (i * 3 + j + 1) as f64);
+        for mr in [4usize, 6] {
+            let mc = 5;
+            let kc = 3;
+            let mut apack = vec![f64::NAN; mc.div_ceil(mr) * mr * kc];
+            pack_a(&a, 0, mc, 0, kc, mr, &mut apack);
+            for (p, r0) in (0..mc).step_by(mr).enumerate() {
+                let h = mr.min(mc - r0);
+                for kk in 0..kc {
+                    for r in 0..mr {
+                        let got = apack[p * mr * kc + kk * mr + r];
+                        let want = if r < h { a[(r0 + r, kk)] } else { 0.0 };
+                        assert_eq!(got, want, "mr={mr} p={p} kk={kk} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packing_pack_b_rows_contiguous() {
+        let n = 7;
+        let b = Matrix::gaussian(4, n, 33);
+        let (kk0, kc, jc, nc) = (1, 3, 2, 4);
+        let mut bpack = vec![f64::NAN; kc * nc];
+        pack_b(b.as_slice(), n, kk0, kc, jc, nc, &mut bpack);
+        for kk in 0..kc {
+            for j in 0..nc {
+                assert_eq!(bpack[kk * nc + j], b[(kk0 + kk, jc + j)], "kk={kk} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_partition_small_rows_wide_mr() {
+        // the satellite audit: row counts smaller than team×quantum must
+        // never yield an empty chunk under the wider avx2 MR (6) — the
+        // clamp `teams ≤ ceil(n/quantum)` guarantees base ≥ 1 quantum
+        for quantum in [4usize, 6, 8] {
+            for n in 1..=3 * quantum {
+                for teams in 1..=8usize {
+                    let chunks = partition(n, teams, quantum);
+                    assert!(!chunks.is_empty(), "n={n} teams={teams} q={quantum}");
+                    assert_eq!(chunks[0].0, 0);
+                    assert_eq!(chunks.last().unwrap().1, n);
+                    for w in chunks.windows(2) {
+                        assert_eq!(w[0].1, w[1].0, "contiguous");
+                    }
+                    for &(s, e) in &chunks {
+                        assert!(e > s, "empty chunk: n={n} teams={teams} q={quantum}");
+                    }
+                    for &(s, e) in &chunks[..chunks.len() - 1] {
+                        assert_eq!((e - s) % quantum, 0, "aligned: n={n} teams={teams}");
+                    }
+                }
+            }
         }
     }
 }

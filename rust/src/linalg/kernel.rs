@@ -1,0 +1,250 @@
+//! Runtime-dispatched compute microkernels for the BLAS-3 layer.
+//!
+//! The packed GEMM schedule in [`super::gemm`] and the CSR SpMM kernels in
+//! [`super::sparse`] both bottom out in a micro-panel inner loop. This
+//! module is the single knob that decides *which* implementation of that
+//! loop runs:
+//!
+//! * [`Kernel::Scalar`] — the portable loop, bit-for-bit the historical
+//!   implementation on every platform. Always available.
+//! * [`Kernel::Avx2`] — explicit `std::arch` AVX2+FMA microkernels with a
+//!   wider register-blocked shape (MR=6, NR=8 for GEMM). Requires an
+//!   x86-64 CPU with AVX2 and FMA; selected automatically when present.
+//!
+//! Selection mirrors the [`super::threading`] config exactly:
+//!
+//! * `RSVD_KERNEL={auto,scalar,avx2}` (env) pins the process default,
+//!   resolved once on first use. `auto` (or unset) picks AVX2 when the CPU
+//!   supports it (`is_x86_feature_detected!`), else scalar. An invalid
+//!   value or `avx2` on an unsupported host fails fast with a clear
+//!   message (`rsvd` validates at startup; library users panic on first
+//!   BLAS call).
+//! * [`with_kernel`] overrides the selection for the duration of a closure
+//!   on the current thread — tests and benches use it to compare kernels
+//!   in-process. BLAS entry points resolve the kernel once at the top of
+//!   each call and pass it to their workers by value, so the override
+//!   applies to the whole call even though the worker threads never see
+//!   this thread's locals.
+//!
+//! **Determinism contract (per kernel):** for a fixed kernel, every result
+//! is bitwise invariant in the thread count — each kernel keeps the
+//! per-element reduction order independent of the partition, exactly as
+//! before (DESIGN.md §GEMM). *Across* kernels, dense results agree only to
+//! rounding (the AVX2 path accumulates each KC block in registers before
+//! touching C), while the SpMM ↔ dense-GEMM 0-ULP twin contract holds
+//! under both kernels because the sparse kernels replay the dense
+//! k-segmentation (see `linalg/sparse.rs`).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// A *requested* kernel, as spelled in `RSVD_KERNEL`; resolves to a
+/// [`Kernel`] via [`resolve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Pick the fastest kernel the CPU supports (AVX2+FMA if present).
+    Auto,
+    /// Force the portable scalar loop.
+    Scalar,
+    /// Force the AVX2+FMA microkernels; an error if the CPU lacks them.
+    Avx2,
+}
+
+impl KernelKind {
+    /// Parse an `RSVD_KERNEL` value. Unknown values are an error (unlike
+    /// `RSVD_NUM_THREADS`, silently ignoring a typo here would silently
+    /// bench the wrong kernel).
+    pub fn parse(v: &str) -> Result<KernelKind, String> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(KernelKind::Auto),
+            "scalar" => Ok(KernelKind::Scalar),
+            "avx2" => Ok(KernelKind::Avx2),
+            other => Err(format!("unknown kernel {other:?} (expected auto, scalar, or avx2)")),
+        }
+    }
+}
+
+/// A *resolved* compute kernel — what the BLAS-3 inner loops dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar micro-kernel (bit-for-bit the historical loop).
+    Scalar,
+    /// Register-blocked AVX2+FMA micro-kernels (x86-64 only).
+    Avx2,
+}
+
+impl Kernel {
+    /// Stable lowercase name — recorded in bench JSON and the coordinator
+    /// metrics snapshot so perf numbers are attributable to a kernel.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Micro-panel height MR for the packed GEMM schedule: the scalar loop
+    /// keeps its historical MR=4; the AVX2 kernel uses the classic 6×8
+    /// double-precision register tile (12 accumulator vectors).
+    pub fn mr(&self) -> usize {
+        match self {
+            Kernel::Scalar => 4,
+            Kernel::Avx2 => 6,
+        }
+    }
+}
+
+/// Whether this host can run the AVX2 kernel (x86-64 with AVX2 *and* FMA —
+/// the microkernels use fused multiply-add throughout).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve a requested kind against the actual CPU: `Auto` degrades to
+/// scalar silently; an explicit `Avx2` on an unsupported host is an error.
+pub fn resolve(kind: KernelKind) -> Result<Kernel, String> {
+    match kind {
+        KernelKind::Scalar => Ok(Kernel::Scalar),
+        KernelKind::Auto => Ok(if avx2_available() { Kernel::Avx2 } else { Kernel::Scalar }),
+        KernelKind::Avx2 => {
+            if avx2_available() {
+                Ok(Kernel::Avx2)
+            } else {
+                let msg = "avx2 kernel requested but this CPU lacks AVX2+FMA (use auto or scalar)";
+                Err(msg.to_string())
+            }
+        }
+    }
+}
+
+/// Parse-and-resolve an `RSVD_KERNEL` env value (`None` = unset = auto).
+/// This is the pure core behind [`process_default_kernel`] and the CLI's
+/// startup validation — unit-testable without touching the environment.
+pub fn parse_env_kernel(v: Option<&str>) -> Result<Kernel, String> {
+    let kind = KernelKind::parse(v.unwrap_or("")).map_err(|e| format!("RSVD_KERNEL: {e}"))?;
+    resolve(kind).map_err(|e| format!("RSVD_KERNEL: {e}"))
+}
+
+/// Validate `RSVD_KERNEL` from the live environment without caching — the
+/// `rsvd` binary calls this at startup so a typo'd knob errors cleanly
+/// before any work starts, instead of panicking mid-solve.
+pub fn validate_env() -> Result<Kernel, String> {
+    parse_env_kernel(std::env::var("RSVD_KERNEL").ok().as_deref())
+}
+
+/// Process-wide default kernel, resolved once: `RSVD_KERNEL` if set, else
+/// auto-detection. Panics (with the [`validate_env`] message) on an
+/// invalid value — fail fast rather than silently benching the wrong loop.
+pub fn process_default_kernel() -> Kernel {
+    static DEFAULT: OnceLock<Kernel> = OnceLock::new();
+    *DEFAULT.get_or_init(|| match validate_env() {
+        Ok(k) => k,
+        Err(e) => panic!("{e}"),
+    })
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<Kernel>> = const { Cell::new(None) };
+}
+
+/// The kernel the current thread's BLAS-3 calls will dispatch to: the
+/// innermost [`with_kernel`] override, else the process default.
+pub fn selected() -> Kernel {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(process_default_kernel)
+}
+
+/// [`selected`]`().name()` — the one-liner benches and metrics stamp into
+/// their output.
+pub fn selected_name() -> &'static str {
+    selected().name()
+}
+
+/// Run `f` with the compute kernel pinned to `kernel` on this thread
+/// (nests; restores the previous override on exit, including on panic).
+/// Forcing [`Kernel::Avx2`] on a host without AVX2+FMA panics up front —
+/// the alternative is undefined behavior inside the intrinsics.
+pub fn with_kernel<T>(kernel: Kernel, f: impl FnOnce() -> T) -> T {
+    if kernel == Kernel::Avx2 && !avx2_available() {
+        panic!("with_kernel(Avx2) on a CPU without AVX2+FMA");
+    }
+    struct Restore(Option<Kernel>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(kernel)));
+    let _restore = Restore(prev);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_values() {
+        assert_eq!(KernelKind::parse("auto"), Ok(KernelKind::Auto));
+        assert_eq!(KernelKind::parse(""), Ok(KernelKind::Auto));
+        assert_eq!(KernelKind::parse(" Scalar "), Ok(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("AVX2"), Ok(KernelKind::Avx2));
+    }
+
+    #[test]
+    fn parse_rejects_garbage_cleanly() {
+        for bad in ["gpu", "avx512", "1", "scalar,avx2"] {
+            let err = KernelKind::parse(bad).unwrap_err();
+            assert!(err.contains("expected auto, scalar, or avx2"), "{bad}: {err}");
+        }
+        let err = parse_env_kernel(Some("gpu")).unwrap_err();
+        assert!(err.starts_with("RSVD_KERNEL:"), "{err}");
+    }
+
+    #[test]
+    fn scalar_env_forces_fallback() {
+        // the kernel-matrix CI leg's contract: RSVD_KERNEL=scalar means the
+        // portable loop, no matter what the CPU supports
+        assert_eq!(parse_env_kernel(Some("scalar")), Ok(Kernel::Scalar));
+        assert_eq!(parse_env_kernel(Some(" scalar\n")), Ok(Kernel::Scalar));
+    }
+
+    #[test]
+    fn auto_matches_detection() {
+        let want = if avx2_available() { Kernel::Avx2 } else { Kernel::Scalar };
+        assert_eq!(parse_env_kernel(None), Ok(want));
+        assert_eq!(parse_env_kernel(Some("auto")), Ok(want));
+        // explicit avx2 resolves iff the CPU has it
+        assert_eq!(resolve(KernelKind::Avx2).is_ok(), avx2_available());
+    }
+
+    #[test]
+    fn kernel_names_and_geometry() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+        assert_eq!(Kernel::Scalar.mr(), 4);
+        assert_eq!(Kernel::Avx2.mr(), 6);
+    }
+
+    #[test]
+    fn override_scoping_and_restore() {
+        let ambient = selected();
+        let inner = with_kernel(Kernel::Scalar, || {
+            let mid = selected();
+            let nested = with_kernel(Kernel::Scalar, selected);
+            (mid, nested)
+        });
+        assert_eq!(inner, (Kernel::Scalar, Kernel::Scalar));
+        assert_eq!(selected(), ambient, "override restored");
+        let r = std::panic::catch_unwind(|| with_kernel(Kernel::Scalar, || panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(selected(), ambient, "override restored on panic");
+        assert_eq!(selected_name(), ambient.name());
+    }
+}

@@ -15,7 +15,9 @@
 //! The BLAS-3 entry points ([`gemm`], plus the trsm in [`cholesky`]) run on
 //! a thread team configured by [`threading`] (`RSVD_NUM_THREADS`, scoped
 //! overrides, serial fallback for small work); results are bitwise
-//! independent of the team size — see DESIGN.md §GEMM.
+//! independent of the team size — see DESIGN.md §GEMM. Their inner
+//! micro-kernels dispatch at runtime via [`kernel`] (`RSVD_KERNEL`, scoped
+//! overrides, AVX2+FMA auto-detection with a portable scalar fallback).
 
 pub mod adaptive;
 pub mod blas;
@@ -23,6 +25,7 @@ pub mod bidiag;
 pub mod cholesky;
 pub mod eigen;
 pub mod gemm;
+pub mod kernel;
 pub mod lanczos;
 pub mod matrix;
 pub mod op;
@@ -37,6 +40,7 @@ pub mod tiled;
 pub mod tridiag;
 
 pub use cholesky::LinalgError;
+pub use kernel::{with_kernel, Kernel};
 pub use matrix::Matrix;
 pub use op::LinOp;
 pub use sparse::Csr;

@@ -13,10 +13,32 @@
 //! GEMM accumulates the k-reduction in ascending order while a zero term
 //! contributes an exact `+0.0`, SpMM on finite data matches
 //! `matmul(to_dense(), x)` to 0 ULP — `tests/sparse_rsvd.rs` pins this.
+//!
+//! Both products dispatch on [`super::kernel`] like the dense GEMM. The
+//! dense-twin contract holds under *each* kernel because the sparse kernels
+//! replay the dense arithmetic per element: the scalar SpMM is the plain
+//! mul-then-add sweep (identical to the scalar GEMM's term order), and the
+//! AVX2 SpMM segments each row's stored entries at the dense schedule's
+//! [`KC`](super::gemm::KC) boundaries, fma-chains each segment into a fresh
+//! accumulator, and folds segments with `c = fma(1.0, acc, c)` — exactly
+//! the per-element op sequence of the AVX2 GEMM, with the skipped all-zero
+//! terms contributing exact identities (an accumulator seeded `+0.0` can
+//! never become `-0.0` under round-to-nearest, so `acc + ±0.0 == acc`).
+//! SpMMᵀ mirrors [`super::gemm::matmul_tn`], which stays scalar under every
+//! kernel; its AVX2 variant vectorizes the axpy with separate mul and add —
+//! the same two per-element roundings — and is therefore bit-identical to
+//! the scalar path, not just close.
 
+use super::gemm::KC;
+use super::kernel::{self, Kernel};
 use super::op::LinOp;
 use super::threading::{scoped_bands, Parallelism};
 use super::Matrix;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::{
+    _mm256_add_pd, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+    _mm256_setzero_pd, _mm256_storeu_pd,
+};
 
 /// Compressed sparse row matrix of `f64`.
 ///
@@ -196,7 +218,9 @@ impl Csr {
     /// stored-order sum `Σ_p data[p] · X[indices[p], :]` — unit stride on
     /// X rows and C rows. The team splits output rows into nnz-balanced
     /// contiguous bands; per-element term order is the stored (sorted)
-    /// order regardless of the partition.
+    /// order regardless of the partition. The row-band inner loop
+    /// dispatches on [`super::kernel`] (see the module docs for why the
+    /// dense-twin 0-ULP contract survives the dispatch).
     pub fn spmm(&self, x: &Matrix) -> Matrix {
         assert_eq!(self.cols, x.rows(), "spmm inner dims {} vs {}", self.cols, x.rows());
         let p = x.cols();
@@ -204,22 +228,20 @@ impl Csr {
         if self.rows == 0 || p == 0 || self.nnz() == 0 {
             return c;
         }
+        let kern = kernel::selected();
         let flops = 2.0 * self.nnz() as f64 * p as f64;
         let team = Parallelism::current().team_for_flops(flops);
         let chunks =
             if team > 1 { partition_rows_by_nnz(&self.indptr, team) } else { Vec::new() };
 
-        let rows_kernel = |r0: usize, r1: usize, band: &mut [f64]| {
-            for r in r0..r1 {
-                let crow = &mut band[(r - r0) * p..(r - r0) * p + p];
-                for q in self.indptr[r]..self.indptr[r + 1] {
-                    let v = self.data[q];
-                    let xrow = x.row(self.indices[q]);
-                    for (cv, xv) in crow.iter_mut().zip(xrow) {
-                        *cv += v * xv;
-                    }
-                }
-            }
+        let rows_kernel = |r0: usize, r1: usize, band: &mut [f64]| match kern {
+            Kernel::Scalar => self.spmm_rows_scalar(x, p, r0, r1, band),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
+            // with_kernel after a positive AVX2+FMA feature check.
+            Kernel::Avx2 => unsafe { self.spmm_rows_avx2(x, p, r0, r1, band) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
         };
 
         if chunks.len() <= 1 {
@@ -230,6 +252,85 @@ impl Csr {
         c
     }
 
+    /// Portable SpMM row band — bit-for-bit the historical loop: every
+    /// stored entry axpys its X row into the C row with separate mul and
+    /// add, in stored order.
+    fn spmm_rows_scalar(&self, x: &Matrix, p: usize, r0: usize, r1: usize, band: &mut [f64]) {
+        for r in r0..r1 {
+            let crow = &mut band[(r - r0) * p..(r - r0) * p + p];
+            for q in self.indptr[r]..self.indptr[r + 1] {
+                let v = self.data[q];
+                let xrow = x.row(self.indices[q]);
+                for (cv, xv) in crow.iter_mut().zip(xrow) {
+                    *cv += v * xv;
+                }
+            }
+        }
+    }
+
+    /// AVX2 SpMM row band, replaying the AVX2 GEMM's per-element arithmetic
+    /// on the stored pattern: each row's entries are split at the dense
+    /// schedule's [`KC`] k-boundaries; each segment fma-chains into a fresh
+    /// accumulator in stored order; segments fold into C via
+    /// `c = fma(1.0, acc, c)` in ascending-k order. Empty segments are
+    /// skipped — their fold is an exact identity (see module docs). The
+    /// < 8 column tail runs the same sequence with scalar `f64::mul_add`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available. (All loads/stores are
+    /// bounds-derived from the validated CSR invariants and `x`/`band`
+    /// shapes; unaligned access is explicit via `loadu`/`storeu`.)
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn spmm_rows_avx2(&self, x: &Matrix, p: usize, r0: usize, r1: usize, band: &mut [f64]) {
+        let xs = x.as_slice();
+        let xp = xs.as_ptr();
+        let one = _mm256_set1_pd(1.0);
+        for r in r0..r1 {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let mut j = 0;
+            while j + 8 <= p {
+                let mut c0 = _mm256_setzero_pd();
+                let mut c1 = _mm256_setzero_pd();
+                let mut q = lo;
+                while q < hi {
+                    // this stored entry starts a KC segment: chain every
+                    // entry below the segment's k-boundary into acc
+                    let seg_end = (self.indices[q] / KC + 1) * KC;
+                    let mut a0 = _mm256_setzero_pd();
+                    let mut a1 = _mm256_setzero_pd();
+                    while q < hi && self.indices[q] < seg_end {
+                        let v = _mm256_set1_pd(self.data[q]);
+                        let xq = xp.add(self.indices[q] * p + j);
+                        a0 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq), a0);
+                        a1 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq.add(4)), a1);
+                        q += 1;
+                    }
+                    c0 = _mm256_fmadd_pd(one, a0, c0);
+                    c1 = _mm256_fmadd_pd(one, a1, c1);
+                }
+                let cq = band.as_mut_ptr().add((r - r0) * p + j);
+                _mm256_storeu_pd(cq, c0);
+                _mm256_storeu_pd(cq.add(4), c1);
+                j += 8;
+            }
+            for jj in j..p {
+                let mut cv = 0.0f64;
+                let mut q = lo;
+                while q < hi {
+                    let seg_end = (self.indices[q] / KC + 1) * KC;
+                    let mut acc = 0.0f64;
+                    while q < hi && self.indices[q] < seg_end {
+                        acc = self.data[q].mul_add(xs[self.indices[q] * p + jj], acc);
+                        q += 1;
+                    }
+                    cv = 1.0f64.mul_add(acc, cv);
+                }
+                band[(r - r0) * p + jj] = cv;
+            }
+        }
+    }
+
     /// C = Aᵀ·X (SpMMᵀ): dense output cols(A) × p, without materializing
     /// a CSC twin. Mirrors the dense [`super::gemm::matmul_tn`] schedule:
     /// the team splits the *output* rows (= columns of A) into contiguous
@@ -237,7 +338,9 @@ impl Csr {
     /// searches each row's sorted column list for its band's contiguous
     /// subrange (visiting only owned entries — no per-entry filtering), so
     /// the per-element term order (rows ascending, stored order within a
-    /// row) is the serial order for any team size.
+    /// row) is the serial order for any team size. Dispatches on
+    /// [`super::kernel`]; both kernels produce identical bits (the AVX2
+    /// variant keeps the scalar path's separate mul and add).
     pub fn spmm_t(&self, x: &Matrix) -> Matrix {
         assert_eq!(self.rows, x.rows(), "spmm_t row dims {} vs {}", self.rows, x.rows());
         let p = x.cols();
@@ -245,6 +348,7 @@ impl Csr {
         if self.cols == 0 || p == 0 || self.nnz() == 0 {
             return c;
         }
+        let kern = kernel::selected();
         let flops = 2.0 * self.nnz() as f64 * p as f64;
         let team = Parallelism::current().team_for_flops(flops);
         let chunks = if team > 1 {
@@ -253,29 +357,14 @@ impl Csr {
             Vec::new()
         };
 
-        let cols_kernel = |j0: usize, j1: usize, band: &mut [f64]| {
-            for r in 0..self.rows {
-                // in-row columns are strictly increasing, so the band's
-                // entries form the contiguous subrange [lo+a, lo+b) —
-                // binary search instead of filtering all nnz per worker
-                // (same entries, same order: the bitwise contract holds)
-                let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
-                let row_cols = &self.indices[lo..hi];
-                let a = lo + row_cols.partition_point(|&c| c < j0);
-                let b = lo + row_cols.partition_point(|&c| c < j1);
-                if a == b {
-                    continue;
-                }
-                let xrow = x.row(r);
-                for q in a..b {
-                    let j = self.indices[q];
-                    let v = self.data[q];
-                    let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
-                    for (cv, xv) in crow.iter_mut().zip(xrow) {
-                        *cv += v * xv;
-                    }
-                }
-            }
+        let cols_kernel = |j0: usize, j1: usize, band: &mut [f64]| match kern {
+            Kernel::Scalar => self.spmm_t_cols_scalar(x, p, j0, j1, band),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
+            // with_kernel after a positive AVX2+FMA feature check.
+            Kernel::Avx2 => unsafe { self.spmm_t_cols_avx2(x, p, j0, j1, band) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
         };
 
         if chunks.len() <= 1 {
@@ -284,6 +373,84 @@ impl Csr {
         }
         scoped_bands(c.as_mut_slice(), &chunks, p, cols_kernel);
         c
+    }
+
+    /// Portable SpMMᵀ column band — bit-for-bit the historical loop.
+    fn spmm_t_cols_scalar(&self, x: &Matrix, p: usize, j0: usize, j1: usize, band: &mut [f64]) {
+        for r in 0..self.rows {
+            // in-row columns are strictly increasing, so the band's
+            // entries form the contiguous subrange [lo+a, lo+b) —
+            // binary search instead of filtering all nnz per worker
+            // (same entries, same order: the bitwise contract holds)
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let row_cols = &self.indices[lo..hi];
+            let a = lo + row_cols.partition_point(|&c| c < j0);
+            let b = lo + row_cols.partition_point(|&c| c < j1);
+            if a == b {
+                continue;
+            }
+            let xrow = x.row(r);
+            for q in a..b {
+                let j = self.indices[q];
+                let v = self.data[q];
+                let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
+                for (cv, xv) in crow.iter_mut().zip(xrow) {
+                    *cv += v * xv;
+                }
+            }
+        }
+    }
+
+    /// AVX2 SpMMᵀ column band: identical entry walk to the scalar path,
+    /// with the inner axpy vectorized as separate multiply and add (no
+    /// fma — `matmul_tn` stays scalar under every kernel, and two-rounding
+    /// lanes keep this path bit-identical to it and to the scalar kernel,
+    /// so `RSVD_KERNEL` can never change SpMMᵀ bits). Scalar remainder
+    /// lanes use the same two ops.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available. (All loads/stores are
+    /// bounds-derived from the validated CSR invariants and `x`/`band`
+    /// shapes; unaligned access is explicit via `loadu`/`storeu`.)
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn spmm_t_cols_avx2(
+        &self,
+        x: &Matrix,
+        p: usize,
+        j0: usize,
+        j1: usize,
+        band: &mut [f64],
+    ) {
+        for r in 0..self.rows {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let row_cols = &self.indices[lo..hi];
+            let a = lo + row_cols.partition_point(|&c| c < j0);
+            let b = lo + row_cols.partition_point(|&c| c < j1);
+            if a == b {
+                continue;
+            }
+            let xrow = x.row(r);
+            let xp = xrow.as_ptr();
+            for q in a..b {
+                let j = self.indices[q];
+                let v = self.data[q];
+                let vv = _mm256_set1_pd(v);
+                let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
+                let cp = crow.as_mut_ptr();
+                let mut t = 0;
+                while t + 4 <= p {
+                    let cv = _mm256_loadu_pd(cp.add(t));
+                    let xv = _mm256_loadu_pd(xp.add(t));
+                    _mm256_storeu_pd(cp.add(t), _mm256_add_pd(cv, _mm256_mul_pd(vv, xv)));
+                    t += 4;
+                }
+                while t < p {
+                    crow[t] += v * xrow[t];
+                    t += 1;
+                }
+            }
+        }
     }
 }
 
@@ -433,16 +600,88 @@ mod tests {
     #[test]
     fn spmm_parallel_bitwise_matches_serial() {
         // sized so team_for_flops grants ≥ 4 workers: nnz ≈ 0.1·800·600 =
-        // 48k, ×2×p(200) ≈ 19e6 flops ≈ 4.8× PAR_FLOP_THRESHOLD
+        // 48k, ×2×p(200) ≈ 19e6 flops ≈ 4.8× PAR_FLOP_THRESHOLD. Checked
+        // under every kernel this host can run — the thread-invariance
+        // contract is per kernel.
+        use crate::linalg::kernel::{avx2_available, with_kernel, Kernel};
+        let mut kernels = vec![Kernel::Scalar];
+        if avx2_available() {
+            kernels.push(Kernel::Avx2);
+        }
         let a = random_csr(800, 600, 0.1, 9);
         let x = Matrix::gaussian(600, 200, 5);
         let y = Matrix::gaussian(800, 200, 6);
-        let s = with_threads(1, || a.spmm(&x));
-        let st = with_threads(1, || a.spmm_t(&y));
-        for t in [2, 3, available_threads()] {
-            assert_eq!(s, with_threads(t, || a.spmm(&x)), "spmm t={t}");
-            assert_eq!(st, with_threads(t, || a.spmm_t(&y)), "spmm_t t={t}");
+        for kern in kernels {
+            let nm = kern.name();
+            let s = with_kernel(kern, || with_threads(1, || a.spmm(&x)));
+            let st = with_kernel(kern, || with_threads(1, || a.spmm_t(&y)));
+            for t in [2, 3, available_threads()] {
+                let par = with_kernel(kern, || with_threads(t, || a.spmm(&x)));
+                assert_eq!(s, par, "[{nm}] spmm t={t}");
+                let part = with_kernel(kern, || with_threads(t, || a.spmm_t(&y)));
+                assert_eq!(st, part, "[{nm}] spmm_t t={t}");
+            }
         }
+    }
+
+    #[test]
+    fn dense_twin_holds_under_every_kernel() {
+        // the 0-ULP spmm ↔ dense-GEMM contract, forced through each kernel
+        // this host can run (not just the ambient default). Shapes straddle
+        // the KC segmentation and the 8-wide column blocking, and one case
+        // carries explicit stored zeros against sign-mixed X to stress the
+        // ±0.0-identity reasoning in the module docs.
+        use crate::linalg::kernel::{avx2_available, with_kernel, Kernel};
+        let mut kernels = vec![Kernel::Scalar];
+        if avx2_available() {
+            kernels.push(Kernel::Avx2);
+        }
+        for kern in kernels {
+            for &(m, n, p, dens) in &[
+                (7usize, 5usize, 3usize, 0.4),
+                (40, 30, 8, 0.1),
+                (23, 57, 5, 0.05),
+                (10, KC + 9, 11, 0.08),
+                (KC + 3, 2 * KC + 1, 9, 0.02),
+            ] {
+                let a = random_csr(m, n, dens, (m + 31 * n) as u64);
+                let d = a.to_dense();
+                let x = Matrix::gaussian(n, p, 3);
+                let (s, g) = with_kernel(kern, || (a.spmm(&x), matmul(&d, &x)));
+                assert_eq!(s, g, "[{}] spmm {m}x{n}x{p}", kern.name());
+                let y = Matrix::gaussian(m, p, 4);
+                let (st, gt) = with_kernel(kern, || (a.spmm_t(&y), matmul_tn(&d, &y)));
+                assert_eq!(st, gt, "[{}] spmm_t {m}x{n}x{p}", kern.name());
+            }
+            // explicit stored zeros (kept by from_coo) + negative X entries
+            let a = Csr::from_coo(
+                3,
+                KC + 2,
+                &[(0, 0, 0.0), (0, KC, 2.0), (1, 3, -1.5), (2, KC + 1, 0.0), (2, 5, 4.0)],
+            )
+            .unwrap();
+            let d = a.to_dense();
+            let x = Matrix::from_fn(KC + 2, 9, |i, j| if (i + j) % 2 == 0 { -1.25 } else { 0.5 });
+            let (s, g) = with_kernel(kern, || (a.spmm(&x), matmul(&d, &x)));
+            assert_eq!(s, g, "[{}] explicit zeros", kern.name());
+        }
+    }
+
+    #[test]
+    fn spmm_t_bits_are_kernel_independent() {
+        // SpMMᵀ promises identical bits under every kernel (its AVX2 path
+        // keeps the scalar mul-then-add), unlike SpMM which only promises
+        // per-kernel determinism
+        use crate::linalg::kernel::{avx2_available, with_kernel, Kernel};
+        if !avx2_available() {
+            eprintln!("spmm_t_bits_are_kernel_independent: no AVX2+FMA, skipping");
+            return;
+        }
+        let a = random_csr(60, 45, 0.15, 77);
+        let y = Matrix::gaussian(60, 13, 8);
+        let sc = with_kernel(Kernel::Scalar, || a.spmm_t(&y));
+        let vx = with_kernel(Kernel::Avx2, || a.spmm_t(&y));
+        assert_eq!(sc, vx);
     }
 
     #[test]

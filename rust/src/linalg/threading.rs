@@ -14,6 +14,11 @@
 //!   threshold so the small matrices that dominate tests and experiment
 //!   tails never pay thread-spawn latency.
 //!
+//! The sibling knob for *which* inner loop each team member runs —
+//! `RSVD_KERNEL={auto,scalar,avx2}` and [`super::kernel::with_kernel`] —
+//! lives in [`super::kernel`] and follows the same parse/resolve +
+//! thread-local-override shape as this module.
+//!
 //! **Determinism contract:** thread count never changes results. The GEMM
 //! schedules partition *output* elements (rows/columns of C) across the
 //! team and keep the k-reduction order per element identical to the serial
@@ -273,6 +278,30 @@ mod tests {
             }
         }
         assert!(partition(0, 4, 4).is_empty());
+    }
+
+    #[test]
+    fn partition_never_empty_below_team_quantum() {
+        // row counts smaller than teams×quantum must clamp the team, not
+        // emit empty chunks — audited when GEMM's micro-panel quantum
+        // widened from MR=4 to the AVX2 kernel's MR=6 (and NR=8 shapes)
+        assert_eq!(partition(5, 8, 6), vec![(0, 5)]);
+        assert_eq!(partition(13, 16, 6), vec![(0, 6), (6, 12), (12, 13)]);
+        assert_eq!(partition(6, 4, 6), vec![(0, 6)]);
+        assert_eq!(partition(7, 4, 8), vec![(0, 7)]);
+        for quantum in [4usize, 6, 8] {
+            for n in 1..=3 * quantum + 1 {
+                for teams in 1..=2 * quantum {
+                    let chunks = partition(n, teams, quantum);
+                    assert!(!chunks.is_empty(), "({n},{teams},{quantum})");
+                    assert_eq!(chunks[0].0, 0);
+                    assert_eq!(chunks.last().unwrap().1, n);
+                    for &(s, e) in &chunks {
+                        assert!(e > s, "empty chunk ({n},{teams},{quantum})");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -20,6 +20,13 @@ use rsvd::experiments::{self, SpectrumOpts};
 use rsvd::util::cli::Args;
 
 fn main() {
+    // fail fast on a typo'd RSVD_KERNEL (or avx2 forced on a CPU without
+    // it) with a clean message and exit code, before any work starts —
+    // library users would instead panic on the first BLAS-3 call
+    if let Err(e) = rsvd::linalg::kernel::validate_env() {
+        eprintln!("rsvd: {e}");
+        std::process::exit(2);
+    }
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
@@ -139,9 +146,11 @@ fn install_sigint_handler() {}
 /// same-named file in `--baseline`; exit 1 if any throughput metric fell
 /// by more than `--tolerance` (fraction, default 0.25). Files with no
 /// baseline are reported and skipped — the first run on a fresh cache
-/// seeds the baseline instead of failing.
+/// seeds the baseline instead of failing. Files whose `kernel` field
+/// differs from the baseline's are likewise skipped and reseeded: a
+/// scalar baseline must never gate an avx2 run or vice versa.
 fn bench_compare_cmd(args: &Args) {
-    use rsvd::bench_harness::compare::compare;
+    use rsvd::bench_harness::compare::{compare, kernel_of};
     use rsvd::util::json::Json;
 
     let baseline_dir = std::path::Path::new(args.get("baseline").unwrap_or("bench-baseline"));
@@ -209,6 +218,18 @@ fn bench_compare_cmd(args: &Args) {
             dash_row(&mut table, name, "baseline unparseable (reseeding)");
             continue;
         };
+        if kernel_of(&base) != kernel_of(&cur) {
+            // scalar-vs-avx2 (or either vs a pre-kernel-field artifact)
+            // measures the dispatch choice, not a regression: never
+            // compare across kernels, reseed the baseline instead
+            let note = format!(
+                "kernel mismatch: {} vs {} (reseeding)",
+                kernel_of(&base),
+                kernel_of(&cur)
+            );
+            dash_row(&mut table, name, &note);
+            continue;
+        }
         let (all, bad) = compare(&base, &cur, tolerance);
         compared += all.len();
         for m in &all {

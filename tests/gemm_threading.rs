@@ -4,12 +4,15 @@
 //! coordinator's core partitioning change only wall time, never results.
 //! (`RSVD_NUM_THREADS` and the scoped `with_threads` override configure the
 //! same team size; tests pin the team per call so they are independent of
-//! the environment the runner sets.)
+//! the environment the runner sets.) Thread-count invariance must hold
+//! under *every* dispatched micro-kernel, so the sweep below repeats per
+//! kernel when the host supports more than the scalar one.
 
 use rsvd::linalg::gemm::{gemm, gram_n, gram_t, matmul, matmul_nt, matmul_tn};
+use rsvd::linalg::kernel::avx2_available;
 use rsvd::linalg::rsvd::{rsvd, rsvd_values, RsvdOpts};
 use rsvd::linalg::threading::available_threads;
-use rsvd::linalg::{with_threads, Matrix};
+use rsvd::linalg::{with_kernel, with_threads, Kernel, Matrix};
 
 fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows(), b.cols());
@@ -81,6 +84,33 @@ fn gemm_accumulate_form_thread_invariant() {
         match &want {
             None => want = Some(c),
             Some(w) => assert_eq!(c.as_slice(), w.as_slice(), "t={t}"),
+        }
+    }
+}
+
+#[test]
+fn gemm_thread_invariant_under_each_kernel() {
+    // the bitwise thread-count contract is per kernel: pin each kernel the
+    // host supports and re-check serial-vs-team equality (the ambient-kernel
+    // sweeps above only exercise whichever one dispatch picked)
+    let a = Matrix::gaussian(260, 300, 21);
+    let b = Matrix::gaussian(300, 150, 22);
+    let mut kernels = vec![Kernel::Scalar];
+    if avx2_available() {
+        kernels.push(Kernel::Avx2);
+    } else {
+        eprintln!("avx2 kernel not exercised: host lacks AVX2+FMA");
+    }
+    for kern in kernels {
+        let serial = with_kernel(kern, || with_threads(1, || matmul(&a, &b)));
+        for t in teams().into_iter().skip(1) {
+            let par = with_kernel(kern, || with_threads(t, || matmul(&a, &b)));
+            assert_eq!(
+                serial.as_slice(),
+                par.as_slice(),
+                "{} kernel: thread count changed bits at t={t}",
+                kern.name()
+            );
         }
     }
 }

@@ -1,0 +1,182 @@
+//! Integration: runtime micro-kernel dispatch (`RSVD_KERNEL` /
+//! [`rsvd::linalg::kernel`]). Pins the three halves of the contract:
+//!
+//! 1. the scalar kernel is *bit-for-bit* the historical GEMM — checked
+//!    against an independent per-element transcription of the pre-dispatch
+//!    operation order (ascending-k accumulation);
+//! 2. the AVX2 kernel agrees with scalar to rounding on full rSVD outputs,
+//!    and the sparse kernels keep their 0-ULP dense-twin equality under
+//!    *every* kernel (AVX2 checks skip with a notice on hosts without it);
+//! 3. the `rsvd` binary validates `RSVD_KERNEL` at startup: a typo or an
+//!    unsupported forced kernel exits 2 naming the knob, before any work.
+
+use rsvd::datagen::{power_law, spectrum_matrix, Decay};
+use rsvd::linalg::gemm::{gemm, matmul, matmul_nt, matmul_tn, KC};
+use rsvd::linalg::kernel::avx2_available;
+use rsvd::linalg::rsvd::{rsvd, rsvd_values, RsvdOpts};
+use rsvd::linalg::threading::available_threads;
+use rsvd::linalg::{with_kernel, with_threads, Kernel, Matrix, Svd};
+
+/// The pre-dispatch scalar GEMM transcribed per C element: seed with
+/// `beta·c`, then `acc += (alpha·a_ik)·b_kj` with k strictly ascending.
+/// The packed schedule (KC blocks ascending, k ascending within, axpy into
+/// C) performs exactly this operation sequence on every element — packing
+/// and blocking reorder nothing — so equality here must be *bitwise*.
+fn historical_scalar_gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    let (m, kdim) = a.shape();
+    let n = b.cols();
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = if beta == 0.0 { 0.0 } else { c[(i, j)] * beta };
+            for kk in 0..kdim {
+                acc += (alpha * a[(i, kk)]) * b[(kk, j)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+}
+
+/// Every kernel this host can run; prints a visible notice when the AVX2
+/// leg is skipped so a CI log never silently under-tests.
+fn kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    if avx2_available() {
+        ks.push(Kernel::Avx2);
+    } else {
+        eprintln!("avx2 kernel not exercised: host lacks AVX2+FMA");
+    }
+    ks
+}
+
+#[test]
+fn scalar_kernel_reproduces_historical_bits() {
+    // shapes straddle the MR/KC/MC boundaries, include an exact block
+    // multiple, and one size big enough to fan out across threads
+    for &(m, k, n) in &[
+        (7usize, 13usize, 5usize),
+        (129, 65, 33),
+        (256, 256, 256),
+        (260, 517, 131),
+    ] {
+        let a = Matrix::gaussian(m, k, (3 * m + k) as u64);
+        let b = Matrix::gaussian(k, n, (5 * k + n) as u64);
+        let c0 = Matrix::gaussian(m, n, (m + n) as u64);
+        let mut want = c0.clone();
+        historical_scalar_gemm(1.25, &a, &b, -0.5, &mut want);
+        for t in [1, available_threads()] {
+            let mut c = c0.clone();
+            with_kernel(Kernel::Scalar, || with_threads(t, || gemm(1.25, &a, &b, -0.5, &mut c)));
+            assert_eq!(
+                c.as_slice(),
+                want.as_slice(),
+                "{m}x{k}x{n} t={t}: RSVD_KERNEL=scalar drifted from the historical bits"
+            );
+        }
+        let mut want1 = Matrix::zeros(m, n);
+        historical_scalar_gemm(1.0, &a, &b, 0.0, &mut want1);
+        let mm = with_kernel(Kernel::Scalar, || matmul(&a, &b));
+        assert_eq!(mm.as_slice(), want1.as_slice(), "{m}x{k}x{n}: matmul (alpha=1, beta=0)");
+    }
+}
+
+/// U·diag(s)·Vᵀ — the rank-k approximation an rSVD caller consumes.
+fn reconstruct(f: &Svd) -> Matrix {
+    let mut us = f.u.clone();
+    for j in 0..f.s.len() {
+        for i in 0..us.rows() {
+            us[(i, j)] *= f.s[j];
+        }
+    }
+    matmul_nt(&us, &f.v)
+}
+
+#[test]
+fn kernel_choice_shifts_rsvd_outputs_only_within_tolerance() {
+    if !avx2_available() {
+        eprintln!("skipping: host lacks AVX2+FMA");
+        return;
+    }
+    let a = spectrum_matrix(300, 200, Decay::Fast, 3);
+    let k = 8;
+    let opts = RsvdOpts::default();
+
+    let s_scalar = with_kernel(Kernel::Scalar, || rsvd_values(&a, k, &opts));
+    let s_avx2 = with_kernel(Kernel::Avx2, || rsvd_values(&a, k, &opts));
+    for i in 0..k {
+        assert!(
+            (s_scalar[i] - s_avx2[i]).abs() <= 1e-9 * s_scalar[0],
+            "σ{i}: scalar {} vs avx2 {}",
+            s_scalar[i],
+            s_avx2[i]
+        );
+    }
+
+    // full factors: the rank-k reconstructions (the basis-independent
+    // output) must match to rounding even though U/V may differ by signs
+    // amplified from last-bit differences
+    let f_scalar = with_kernel(Kernel::Scalar, || rsvd(&a, k, &opts));
+    let f_avx2 = with_kernel(Kernel::Avx2, || rsvd(&a, k, &opts));
+    let diff = reconstruct(&f_scalar).max_diff(&reconstruct(&f_avx2));
+    assert!(diff <= 1e-9 * s_scalar[0], "rank-k reconstruction drift {diff}");
+}
+
+#[test]
+fn sparse_dense_twin_holds_under_every_kernel() {
+    let a = power_law(400, KC + 37, 24, 0.7, 5);
+    let dense = a.to_dense();
+    let x = Matrix::gaussian(KC + 37, 9, 7);
+    let xt = Matrix::gaussian(400, 9, 8);
+    for kern in kernels() {
+        with_kernel(kern, || {
+            let want = matmul(&dense, &x);
+            assert_eq!(a.spmm(&x), want, "spmm dense twin broke under {}", kern.name());
+            let want_t = matmul_tn(&dense, &xt);
+            assert_eq!(a.spmm_t(&xt), want_t, "spmm_t dense twin broke under {}", kern.name());
+            let serial = with_threads(1, || a.spmm(&x));
+            let par = with_threads(available_threads(), || a.spmm(&x));
+            assert_eq!(serial, par, "spmm thread-invariance broke under {}", kern.name());
+        });
+    }
+}
+
+/// Launch the `rsvd` binary with `RSVD_KERNEL` set and an unknown
+/// subcommand: stderr tells us whether startup validation rejected the
+/// knob (mentions `RSVD_KERNEL`) or passed and command dispatch rejected
+/// the bogus subcommand instead (mentions "unknown command").
+fn rsvd_bin(kernel_env: &str) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_rsvd"))
+        .arg("definitely-not-a-command")
+        .env("RSVD_KERNEL", kernel_env)
+        .output()
+        .expect("spawn rsvd binary")
+}
+
+#[test]
+fn invalid_kernel_env_fails_fast_at_startup() {
+    let out = rsvd_bin("simd-please");
+    assert_eq!(out.status.code(), Some(2), "typo'd RSVD_KERNEL must exit 2");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("RSVD_KERNEL"), "stderr should name the knob: {err}");
+    assert!(!err.contains("unknown command"), "must fail before command dispatch: {err}");
+}
+
+#[test]
+fn valid_kernel_env_reaches_command_dispatch() {
+    // scalar is valid on every host: validation passes and the process
+    // proceeds far enough to reject the unknown subcommand instead
+    let out = rsvd_bin("scalar");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "scalar should validate: {err}");
+    assert!(!err.contains("RSVD_KERNEL"), "scalar should validate: {err}");
+
+    // forced avx2: accepted iff the host supports it, clean error otherwise
+    let out = rsvd_bin("avx2");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    if avx2_available() {
+        assert!(err.contains("unknown command"), "avx2 should validate here: {err}");
+    } else {
+        assert!(err.contains("RSVD_KERNEL"), "forced avx2 without hardware: {err}");
+    }
+}
