@@ -8,7 +8,7 @@
 //!   A6  Philox (host) vs in-graph Threefry sketch generation throughput
 
 use rsvd::bench_harness::{fmt_secs, time_n, Table};
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::experiments;
 use rsvd::linalg::svd_gesvd::svd;
@@ -177,6 +177,7 @@ fn ablate_batching() {
                     method: Method::NativeRsvd,
                     want_vectors: false,
                     seed: i,
+                    precision: Precision::F64,
                 })
             })
             .collect();

@@ -17,7 +17,7 @@
 //! `BENCH_gemm.json`.
 
 use rsvd::bench_harness::{fmt_secs, save_json, Table};
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
 use rsvd::util::cli::Args;
@@ -61,6 +61,7 @@ fn run_round(a: &rsvd::linalg::Matrix, jobs: usize, k: usize) -> (Duration, Dura
                 method: Method::NativeRsvd,
                 want_vectors: false,
                 seed: i as u64,
+                precision: Precision::F64,
             })
         })
         .collect();

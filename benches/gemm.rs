@@ -14,11 +14,17 @@
 //! dispatched-over-scalar GFLOP/s ratio — the acceptance metric for the
 //! SIMD micro-kernels (≥ 1.5× on an AVX2 host). Cargo runs bench binaries
 //! with CWD = the package root, so the file lands at `rust/BENCH_gemm.json`.
+//!
+//! Both dtypes run: every JSON row is stamped `dtype` (`"f64"`/`"f32"`,
+//! f64 rows first so positional baselines from before the stamp keep
+//! pairing), and the f32 rows carry `f32_vs_f64` — the reduced-precision
+//! serial GFLOP/s ratio on the same shape (≥ 1.5× expected on an AVX2
+//! host, where the f32 tile packs twice the lanes; docs/NUMERICS.md).
 
 use rsvd::bench_harness::{gflops, save_json, time_n, Table};
 use rsvd::linalg::kernel::{selected_name, with_kernel, Kernel};
 use rsvd::linalg::threading::{available_threads, with_threads};
-use rsvd::linalg::{gemm, Matrix};
+use rsvd::linalg::{gemm, Mat, Matrix};
 use rsvd::util::cli::Args;
 use rsvd::util::json::Json;
 use std::collections::BTreeMap;
@@ -42,38 +48,87 @@ fn time_gemm(n: usize, repeats: usize, threads: usize) -> f64 {
     gflops(flops, t.mean_s)
 }
 
-/// Serial + parallel GFLOP/s under the dispatched kernel, serial scalar
-/// reference, and the dispatched/scalar ratio; table + `BENCH_gemm.json`.
+/// The f32 twin of [`time_gemm`]: same shapes, same Gaussian seeds
+/// (narrowed), single-precision packed GEMM under the ambient kernel.
+fn time_gemm_f32(n: usize, repeats: usize, threads: usize) -> f64 {
+    let a = Mat::<f32>::gaussian(n, n, 1);
+    let b = Mat::<f32>::gaussian(n, n, 2);
+    let mut c = Mat::<f32>::zeros(n, n);
+    let flops = 2.0 * (n * n * n) as f64;
+    let t = with_threads(threads, || {
+        time_n(repeats, || gemm::gemm(1.0f32, &a, &b, 0.0f32, &mut c))
+    });
+    gflops(flops, t.mean_s)
+}
+
+/// Serial + parallel GFLOP/s under the dispatched kernel at both dtypes,
+/// serial scalar reference, and the dispatched/scalar + f32/f64 ratios;
+/// table + `BENCH_gemm.json` (f64 rows first, then f32 — see module docs).
 fn bench_smoke(repeats: usize, sizes: &[usize]) {
     let threads = available_threads();
     let kernel = selected_name();
     let mut table = Table::new(
-        &format!("GEMM smoke: {kernel} kernel, serial vs parallel ({threads} threads, f64)"),
-        &["n", "serial GFLOP/s", "parallel GFLOP/s", "speedup", "scalar GFLOP/s", "vs scalar"],
+        &format!("GEMM smoke: {kernel} kernel, serial vs parallel ({threads} threads)"),
+        &[
+            "n (dtype)",
+            "serial GFLOP/s",
+            "parallel GFLOP/s",
+            "speedup",
+            "scalar GFLOP/s",
+            "vs scalar",
+            "f32 vs f64",
+        ],
     );
     let mut rows = Vec::new();
+    let mut f32_rows = Vec::new();
     for &n in sizes {
         let g_ser = time_gemm(n, repeats, 1);
         let g_par = time_gemm(n, repeats, threads);
         let g_scalar = with_kernel(Kernel::Scalar, || time_gemm(n, repeats, 1));
         let vs_scalar = g_ser / g_scalar;
         table.row(vec![
-            n.to_string(),
+            format!("{n} (f64)"),
             format!("{g_ser:.2}"),
             format!("{g_par:.2}"),
             format!("{:.2}x", g_par / g_ser),
             format!("{g_scalar:.2}"),
             format!("{vs_scalar:.2}x"),
+            "-".to_string(),
         ]);
         let mut row = BTreeMap::new();
         row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("dtype".to_string(), Json::Str("f64".into()));
         row.insert("serial_gflops".to_string(), Json::Num(g_ser));
         row.insert("parallel_gflops".to_string(), Json::Num(g_par));
         row.insert("speedup".to_string(), Json::Num(g_par / g_ser));
         row.insert("scalar_serial_gflops".to_string(), Json::Num(g_scalar));
         row.insert("kernel_vs_scalar".to_string(), Json::Num(vs_scalar));
         rows.push(Json::Obj(row));
+
+        // the f32 leg: same shapes under the same dispatched kernel; the
+        // ratio vs the f64 serial run is the reduced-precision speedup
+        let g32_ser = time_gemm_f32(n, repeats, 1);
+        let g32_par = time_gemm_f32(n, repeats, threads);
+        let f32_vs_f64 = g32_ser / g_ser;
+        table.row(vec![
+            format!("{n} (f32)"),
+            format!("{g32_ser:.2}"),
+            format!("{g32_par:.2}"),
+            format!("{:.2}x", g32_par / g32_ser),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{f32_vs_f64:.2}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("dtype".to_string(), Json::Str("f32".into()));
+        row.insert("serial_gflops".to_string(), Json::Num(g32_ser));
+        row.insert("parallel_gflops".to_string(), Json::Num(g32_par));
+        row.insert("speedup".to_string(), Json::Num(g32_par / g32_ser));
+        row.insert("f32_vs_f64".to_string(), Json::Num(f32_vs_f64));
+        f32_rows.push(Json::Obj(row));
     }
+    rows.extend(f32_rows);
     table.print();
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("gemm".into()));

@@ -25,7 +25,8 @@
 use rsvd::bench_harness::{fmt_secs, save_json, Table};
 use rsvd::coordinator::net::response_json;
 use rsvd::coordinator::{
-    Coordinator, CoordinatorCfg, Decomposition, JobResult, Method, Request, ServeCfg, Server,
+    Coordinator, CoordinatorCfg, Decomposition, JobResult, Method, Precision, Request, ServeCfg,
+    Server,
 };
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::util::cli::Args;
@@ -45,7 +46,14 @@ fn main() {
     // one dense request, pre-encoded once — the hot loop replays the same
     // bytes, exactly what a caching client does
     let a = spectrum_matrix(m, n, Decay::Fast, 3);
-    let req = Request::Svd { a, k, method: Method::NativeRsvd, want_vectors: false, seed: 7 };
+    let req = Request::Svd {
+        a,
+        k,
+        method: Method::NativeRsvd,
+        want_vectors: false,
+        seed: 7,
+        precision: Precision::F64,
+    };
     let frame = req.to_wire_json().expect("wire form").to_string();
 
     let coord = Arc::new(Coordinator::start_host_only(CoordinatorCfg {

@@ -13,12 +13,17 @@
 //! `BENCH_coordinator.json` and guarded by the bench-guard job. Cargo runs
 //! bench binaries with CWD = the package root, so the file lands at
 //! `rust/BENCH_spmm.json`.
+//!
+//! Both dtypes run: every JSON row is stamped `dtype` (`"f64"`/`"f32"`,
+//! f64 rows first so positional baselines from before the stamp keep
+//! pairing), and the 0-ULP sparse/dense-twin equality is asserted per
+//! scalar type (docs/NUMERICS.md).
 
 use rsvd::bench_harness::{fmt_secs, gflops, save_json, time_n, Table};
 use rsvd::datagen::sparse::power_law;
 use rsvd::linalg::gemm::matmul;
 use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
-use rsvd::linalg::Matrix;
+use rsvd::linalg::{CsrMat, Mat, Matrix};
 use rsvd::util::cli::Args;
 use rsvd::util::json::Json;
 use std::collections::BTreeMap;
@@ -79,7 +84,7 @@ fn run_case(
     let rsvd_speedup = t_rs_dn.mean_s / t_rs_sp.mean_s;
 
     table.row(vec![
-        format!("{m}x{n}"),
+        format!("{m}x{n} (f64)"),
         format!("{nnz} ({:.2}%)", 100.0 * density),
         format!("{} / {}", fmt_secs(t_sp.mean_s), fmt_secs(t_dn.mean_s)),
         format!("{sp_gf:.2}"),
@@ -91,6 +96,83 @@ fn run_case(
     let mut row = BTreeMap::new();
     row.insert("m".to_string(), Json::Num(m as f64));
     row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("dtype".to_string(), Json::Str("f64".into()));
+    row.insert("nnz".to_string(), Json::Num(nnz as f64));
+    row.insert("density".to_string(), Json::Num(density));
+    row.insert("p".to_string(), Json::Num(p as f64));
+    row.insert("k".to_string(), Json::Num(k as f64));
+    row.insert("spmm_effective_gflops".to_string(), Json::Num(sp_gf));
+    row.insert("dense_gemm_gflops".to_string(), Json::Num(dn_gf));
+    row.insert("spmm_vs_dense_speedup".to_string(), Json::Num(spmm_speedup));
+    row.insert("sparse_rsvd_s".to_string(), Json::Num(t_rs_sp.mean_s));
+    row.insert("dense_rsvd_s".to_string(), Json::Num(t_rs_dn.mean_s));
+    row.insert(
+        "sparse_rsvd_jobs_per_s".to_string(),
+        Json::Num(if t_rs_sp.mean_s > 0.0 { 1.0 / t_rs_sp.mean_s } else { f64::INFINITY }),
+    );
+    row.insert("rsvd_sparse_vs_dense_speedup".to_string(), Json::Num(rsvd_speedup));
+    Json::Obj(row)
+}
+
+/// The f32 twin of [`run_case`]: same workload narrowed to single
+/// precision (`map_scalar`), same SpMM-vs-GEMM and sparse-vs-dense rSVD
+/// comparisons, with the per-dtype 0-ULP twin equality asserted.
+#[allow(clippy::too_many_arguments)]
+fn run_case_f32(
+    table: &mut Table,
+    m: usize,
+    n: usize,
+    max_degree: usize,
+    repeats: usize,
+    p: usize,
+    k: usize,
+    seed: u64,
+) -> Json {
+    let a: CsrMat<f32> = power_law(m, n, max_degree, 0.7, seed).map_scalar();
+    let dense = a.to_dense();
+    let nnz = a.nnz();
+    let density = nnz as f64 / (m * n) as f64;
+    let x = Mat::<f32>::gaussian(n, p, seed.wrapping_add(1));
+
+    let t_sp = time_n(repeats, || {
+        let _ = a.spmm(&x);
+    });
+    let t_dn = time_n(repeats, || {
+        let _ = matmul(&dense, &x);
+    });
+    assert_eq!(a.spmm(&x), matmul(&dense, &x), "f32 SpMM must match dense GEMM bitwise");
+    let sp_gf = gflops(2.0 * nnz as f64 * p as f64, t_sp.mean_s);
+    let dn_gf = gflops(2.0 * (m * n * p) as f64, t_dn.mean_s);
+    let spmm_speedup = t_dn.mean_s / t_sp.mean_s;
+
+    let opts = RsvdOpts { seed: seed.wrapping_add(2), ..Default::default() };
+    let t_rs_sp = time_n(repeats, || {
+        let _ = rsvd_values(&a, k, &opts);
+    });
+    let t_rs_dn = time_n(repeats, || {
+        let _ = rsvd_values(&dense, k, &opts);
+    });
+    assert_eq!(
+        rsvd_values(&a, k, &opts),
+        rsvd_values(&dense, k, &opts),
+        "f32 sparse rSVD must match the dense pipeline bitwise"
+    );
+    let rsvd_speedup = t_rs_dn.mean_s / t_rs_sp.mean_s;
+
+    table.row(vec![
+        format!("{m}x{n} (f32)"),
+        format!("{nnz} ({:.2}%)", 100.0 * density),
+        format!("{} / {}", fmt_secs(t_sp.mean_s), fmt_secs(t_dn.mean_s)),
+        format!("{sp_gf:.2}"),
+        format!("{spmm_speedup:.2}x"),
+        format!("{} / {}", fmt_secs(t_rs_sp.mean_s), fmt_secs(t_rs_dn.mean_s)),
+        format!("{rsvd_speedup:.2}x"),
+    ]);
+
+    let mut row = BTreeMap::new();
+    row.insert("m".to_string(), Json::Num(m as f64));
+    row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("dtype".to_string(), Json::Str("f32".into()));
     row.insert("nnz".to_string(), Json::Num(nnz as f64));
     row.insert("density".to_string(), Json::Num(density));
     row.insert("p".to_string(), Json::Num(p as f64));
@@ -129,6 +211,11 @@ fn bench_spmm(smoke: bool, repeats: usize, p: usize, k: usize) {
     let mut rows = Vec::new();
     for (i, &(m, n, d)) in cases.iter().enumerate() {
         rows.push(run_case(&mut table, m, n, d, repeats, p, k, 11 + i as u64));
+    }
+    // f32 rows after every f64 row, so pre-stamp positional baselines
+    // still line up with today's f64 entries (see module docs)
+    for (i, &(m, n, d)) in cases.iter().enumerate() {
+        rows.push(run_case_f32(&mut table, m, n, d, repeats, p, k, 11 + i as u64));
     }
     table.print();
     if !smoke {

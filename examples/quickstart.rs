@@ -5,7 +5,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::linalg::svd_gesvd::svd;
 
@@ -30,6 +30,7 @@ fn main() {
         method: Method::Auto,
         want_vectors: true,
         seed: 7,
+        precision: Precision::F64,
     });
     let d = res.outcome.expect("decomposition");
     println!(

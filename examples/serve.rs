@@ -19,7 +19,7 @@
 //! spectra are reported, and adaptive jobs answer to the *tolerance*
 //! contract (pinned in tests/adaptive_rsvd.rs), not fixed-rank precision.
 
-use rsvd::coordinator::{CoordinatorCfg, Method, Operand, Request, ServeCfg, Server};
+use rsvd::coordinator::{CoordinatorCfg, Method, Operand, Precision, Request, ServeCfg, Server};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::experiments;
 use rsvd::linalg::svd_gesvd::svd;
@@ -124,6 +124,7 @@ fn main() {
                     method: Method::Auto,
                     want_vectors: false,
                     seed: id as u64,
+                    precision: Precision::F64,
                 },
             )
         } else if id % 7 == 3 {
@@ -138,6 +139,7 @@ fn main() {
                     method: Method::Auto,
                     want_vectors: false,
                     seed: id as u64,
+                    precision: Precision::F64,
                 },
             )
         } else if id % 7 == 6 {
@@ -154,6 +156,7 @@ fn main() {
                     method: Method::Auto,
                     want_vectors: false,
                     seed: id as u64,
+                    precision: Precision::F64,
                 },
             )
         } else {
@@ -172,6 +175,7 @@ fn main() {
                     method: Method::Auto,
                     want_vectors: false,
                     seed: id as u64,
+                    precision: Precision::F64,
                 },
             )
         };

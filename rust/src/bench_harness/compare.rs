@@ -10,6 +10,10 @@
 //! `repeats`, `threads`, `speedup`, shapes) are deliberately ignored:
 //! speedup ratios double-count their numerator/denominator and flip sign
 //! depending on which side regressed.
+//!
+//! Pairing is like-dtype only: rows stamped `"dtype"` (`"f32"`/`"f64"`;
+//! missing reads as `"f64"`) only ever pair with rows of the same dtype,
+//! mirroring the caller-side like-kernel rule ([`kernel_of`]).
 
 use crate::util::json::Json;
 
@@ -58,46 +62,58 @@ pub fn kernel_of(doc: &Json) -> &str {
 /// order (objects iterate key-sorted — `Json::Obj` is a BTreeMap — so the
 /// listing is deterministic).
 pub fn throughput_metrics(doc: &Json) -> Vec<(String, f64)> {
+    tagged_metrics(doc).into_iter().map(|(path, _, v)| (path, v)).collect()
+}
+
+/// Like [`throughput_metrics`] but each metric carries the `dtype` of its
+/// nearest enclosing object. Rows that predate the stamp read as `"f64"` —
+/// every pre-stamp bench was double precision, so old baselines keep
+/// pairing with today's f64 rows.
+fn tagged_metrics(doc: &Json) -> Vec<(String, String, f64)> {
     let mut out = Vec::new();
-    walk(doc, "", &mut out);
+    walk(doc, "", "f64", &mut out);
     out
 }
 
-fn walk(j: &Json, path: &str, out: &mut Vec<(String, f64)>) {
+fn walk(j: &Json, path: &str, dtype: &str, out: &mut Vec<(String, String, f64)>) {
     match j {
         Json::Obj(m) => {
+            let dtype = m.get("dtype").and_then(|d| d.as_str()).unwrap_or(dtype);
             for (k, v) in m {
                 let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
                 if let Json::Num(x) = v {
                     if is_throughput_field(k) {
-                        out.push((sub, *x));
+                        out.push((sub, dtype.to_string(), *x));
                     }
                 } else {
-                    walk(v, &sub, out);
+                    walk(v, &sub, dtype, out);
                 }
             }
         }
         Json::Arr(v) => {
             for (i, x) in v.iter().enumerate() {
-                walk(x, &format!("{path}[{i}]"), out);
+                walk(x, &format!("{path}[{i}]"), dtype, out);
             }
         }
         _ => {}
     }
 }
 
-/// Pair up the throughput metrics of two documents by path. Metrics
-/// present on only one side are skipped (a bench that gained or lost a
-/// case should not trip the guard — the tolerance check is for metrics
-/// that exist on both sides).
+/// Pair up the throughput metrics of two documents by path **and dtype**
+/// (the like-dtype analog of the caller-side like-kernel rule — an f32 row
+/// must never be judged against an f64 baseline; the benches keep f64 rows
+/// positionally stable for exactly this pairing). Metrics present on only
+/// one side are skipped (a bench that gained or lost a case should not
+/// trip the guard — the tolerance check is for metrics that exist on both
+/// sides).
 pub fn pair_metrics(baseline: &Json, current: &Json) -> Vec<Metric> {
-    let base = throughput_metrics(baseline);
-    let cur = throughput_metrics(current);
+    let base = tagged_metrics(baseline);
+    let cur = tagged_metrics(current);
     cur.iter()
-        .filter_map(|(path, c)| {
+        .filter_map(|(path, dtype, c)| {
             base.iter()
-                .find(|(bp, _)| bp == path)
-                .map(|(_, b)| Metric { path: path.clone(), baseline: *b, current: *c })
+                .find(|(bp, bdt, _)| bp == path && bdt == dtype)
+                .map(|(_, _, b)| Metric { path: path.clone(), baseline: *b, current: *c })
         })
         .collect()
 }
@@ -178,6 +194,28 @@ mod tests {
         assert_eq!(kernel_of(&doc(r#"{"bench":"gemm"}"#)), "unspecified");
         assert_eq!(kernel_of(&doc(r#"{"kernel":7}"#)), "unspecified");
         assert_ne!(kernel_of(&doc(r#"{"kernel":"avx2"}"#)), kernel_of(&doc(r#"{}"#)));
+    }
+
+    #[test]
+    fn pairing_is_like_dtype_only() {
+        // a dtype-stamped f32 row never pairs against an f64 baseline at
+        // the same path; an unstamped baseline reads as f64 and keeps
+        // pairing with today's stamped f64 rows
+        let base = doc(r#"{"results":[{"serial_gflops":10.0}]}"#);
+        let cur = doc(r#"{"results":[{"dtype":"f32","serial_gflops":30.0}]}"#);
+        let (all, _) = compare(&base, &cur, 0.25);
+        assert!(all.is_empty(), "cross-dtype pair must be skipped: {all:?}");
+        let cur64 = doc(r#"{"results":[{"dtype":"f64","serial_gflops":9.0}]}"#);
+        let (all, bad) = compare(&base, &cur64, 0.25);
+        assert_eq!(all.len(), 1, "pre-stamp baseline pairs with stamped f64");
+        assert!(bad.is_empty(), "{bad:?}");
+        // the dtype tag scopes to its own row only
+        let mixed_base = doc(r#"{"results":[{"dtype":"f32","a_gflops":8.0},{"a_gflops":10.0}]}"#);
+        let mixed_cur = doc(r#"{"results":[{"dtype":"f32","a_gflops":8.5},{"a_gflops":2.0}]}"#);
+        let (all, bad) = compare(&mixed_base, &mixed_cur, 0.25);
+        assert_eq!(all.len(), 2);
+        assert_eq!(bad.len(), 1, "the f64 collapse is flagged, the f32 row is fine");
+        assert_eq!(bad[0].path, "results[1].a_gflops");
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! in steps 2–3 for fixed subspaces).
 
 use super::ari::adjusted_rand_index;
-use crate::coordinator::{Coordinator, Method, Request};
+use crate::coordinator::{Coordinator, Method, Precision, Request};
 use crate::linalg::{blas, Matrix};
 
 /// Pluggable eigensolver backend — the CPU/GPU swap of Table 1.
@@ -88,6 +88,7 @@ impl SubspaceSolver for ServiceSolver<'_> {
                 method: self.method,
                 want_vectors: true,
                 seed: self.seed ^ self.calls,
+                precision: Precision::F64,
             })
             .outcome?;
         let v = res.v.ok_or("solver returned no vectors")?;

@@ -5,8 +5,8 @@
 //! PJRT topology) a single batched dispatch. Host jobs batch by method so a
 //! pool worker keeps its instruction cache warm — and host native-rsvd SVD
 //! jobs additionally key on (matrix fingerprint, shape, power iterations,
-//! want_vectors) so a batch is always safe to hand to the fused wide-sketch
-//! executor ([`crate::linalg::rsvd::rsvd_batch`]). The planning step is
+//! want_vectors, precision) so a batch is always safe to hand to the fused
+//! wide-sketch executor ([`crate::linalg::rsvd::rsvd_batch`]). The planning step is
 //! pure (and property-tested): conservation — every job appears in exactly
 //! one batch, order preserved within a batch, never exceeding `max_batch`.
 
@@ -68,27 +68,31 @@ pub fn is_fusable(req: &Request, route: &Route) -> bool {
 }
 
 /// Fusion-aware batch key. Host native-rsvd SVD jobs carry the payload
-/// content fingerprint, shape, power-iteration count, and output flavor,
-/// so `plan_batches` can only ever group jobs that the fused executor may
-/// legally stack into one wide sketch (same operator, same q, same
-/// finish). Dense payloads key as `fp…`, sparse as `spfp…`, tiled as
-/// `tlfp…` — besides the salted fingerprints, the distinct prefixes make
-/// it structurally impossible for a dense job and its sparse or tiled twin
-/// to share a batch (their product kernels differ; two *tilings* of the
-/// same data do share a key, because their products are bitwise
-/// interchangeable). Everything else falls back to the coarse
+/// content fingerprint, shape, power-iteration count, output flavor, and
+/// numeric precision, so `plan_batches` can only ever group jobs that the
+/// fused executor may legally stack into one wide sketch (same operator,
+/// same q, same finish, same arithmetic). Dense payloads key as `fp…`,
+/// sparse as `spfp…`, tiled as `tlfp…` — besides the salted fingerprints,
+/// the distinct prefixes make it structurally impossible for a dense job
+/// and its sparse or tiled twin to share a batch (their product kernels
+/// differ; two *tilings* of the same data do share a key, because their
+/// products are bitwise interchangeable). The trailing precision token
+/// keeps an f32 or mixed request out of an f64 sketch (and out of each
+/// other's): fusing across precisions would silently run one job at the
+/// other's error model. Everything else falls back to the coarse
 /// [`route_key`]. The power-iter count is the host default
 /// ([`RsvdOpts::default`]) because that is what the host executor runs
 /// with.
 pub fn fuse_key(req: &Request, route: &Route) -> String {
     if let Route::Host { method: Method::NativeRsvd } = route {
         let q = RsvdOpts::default().power_iters;
+        let prec = req.precision().name();
         match req {
             Request::Svd { a, want_vectors, .. } => {
                 let (m, n) = a.shape();
                 let flavor = if *want_vectors { "uv" } else { "vals" };
                 return format!(
-                    "host:native_rsvd:fp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    "host:native_rsvd:fp{:016x}:{m}x{n}:q{q}:{flavor}:{prec}",
                     a.fingerprint()
                 );
             }
@@ -96,7 +100,7 @@ pub fn fuse_key(req: &Request, route: &Route) -> String {
                 let (m, n) = a.shape();
                 let flavor = if *want_vectors { "uv" } else { "vals" };
                 return format!(
-                    "host:native_rsvd:spfp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    "host:native_rsvd:spfp{:016x}:{m}x{n}:q{q}:{flavor}:{prec}",
                     a.fingerprint()
                 );
             }
@@ -104,7 +108,7 @@ pub fn fuse_key(req: &Request, route: &Route) -> String {
                 let (m, n) = a.shape();
                 let flavor = if *want_vectors { "uv" } else { "vals" };
                 return format!(
-                    "host:native_rsvd:tlfp{:016x}:{m}x{n}:q{q}:{flavor}",
+                    "host:native_rsvd:tlfp{:016x}:{m}x{n}:q{q}:{flavor}:{prec}",
                     a.fingerprint()
                 );
             }
@@ -128,7 +132,7 @@ pub fn fuse_key(req: &Request, route: &Route) -> String {
                     Operand::Tiled(_) => "adtlfp",
                 };
                 return format!(
-                    "host:native_rsvd:{kind}{:016x}:{m}x{n}:{flavor}",
+                    "host:native_rsvd:{kind}{:016x}:{m}x{n}:{flavor}:{prec}",
                     a.fingerprint()
                 );
             }
@@ -175,6 +179,7 @@ pub fn plan_batches(keys: &[String], max_batch: usize) -> Vec<Batch> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::Precision;
     use crate::testkit::{self, Gen};
 
     fn keys(v: &[&str]) -> Vec<String> {
@@ -240,6 +245,7 @@ mod tests {
             a,
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: vecs,
             seed: 1,
         };
@@ -276,6 +282,7 @@ mod tests {
             a,
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: vecs,
             seed: 1,
         };
@@ -292,6 +299,7 @@ mod tests {
             a: a.to_dense(),
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         };
@@ -315,6 +323,7 @@ mod tests {
             a,
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: vecs,
             seed: 1,
         };
@@ -333,6 +342,7 @@ mod tests {
             a: d,
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         };
@@ -353,6 +363,7 @@ mod tests {
             block: 4,
             max_rank: 0,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: vecs,
             seed: 1,
         };
@@ -377,6 +388,7 @@ mod tests {
             a: d.clone(),
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         };
@@ -398,6 +410,50 @@ mod tests {
         assert_eq!(fuse_key(&req(Operand::Dense(d), 0.1, false), &gesvd), "host:gesvd");
     }
 
+    #[test]
+    fn precisions_never_share_a_fuse_key() {
+        use crate::linalg::{Csr, Matrix};
+        let route = Route::Host { method: Method::NativeRsvd };
+        let a = Matrix::gaussian(8, 6, 1);
+        let dense = |p: Precision| Request::Svd {
+            a: a.clone(),
+            k: 3,
+            method: Method::NativeRsvd,
+            precision: p,
+            want_vectors: false,
+            seed: 1,
+        };
+        let k64 = fuse_key(&dense(Precision::F64), &route);
+        let k32 = fuse_key(&dense(Precision::F32), &route);
+        let kmx = fuse_key(&dense(Precision::Mixed), &route);
+        // same operator, three disjoint sketch batches
+        assert_ne!(k64, k32);
+        assert_ne!(k64, kmx);
+        assert_ne!(k32, kmx);
+        assert!(k64.ends_with(":f64"), "{k64}");
+        assert!(k32.ends_with(":f32"), "{k32}");
+        assert!(kmx.ends_with(":mixed"), "{kmx}");
+        // all still fused keys, and same-precision twins still fuse
+        for k in [&k64, &k32, &kmx] {
+            assert!(is_fused_key(k), "{k}");
+        }
+        assert_eq!(fuse_key(&dense(Precision::F32), &route), k32);
+        // the sparse path carries the same token
+        let sp = Csr::from_coo(8, 6, &[(0, 0, 1.0)]).unwrap();
+        let sparse = |p: Precision| Request::SvdSparse {
+            a: sp.clone(),
+            k: 3,
+            method: Method::NativeRsvd,
+            precision: p,
+            want_vectors: false,
+            seed: 1,
+        };
+        let s64 = fuse_key(&sparse(Precision::F64), &route);
+        let s32 = fuse_key(&sparse(Precision::F32), &route);
+        assert_ne!(s64, s32);
+        assert!(s32.ends_with(":f32"), "{s32}");
+    }
+
     /// Property: planning over fusion-aware keys never groups jobs with
     /// mismatched fingerprints, shapes, or output flavors into one batch.
     #[test]
@@ -415,6 +471,7 @@ mod tests {
                     a: g.choose(&pool).clone(),
                     k: g.usize(1..4),
                     method: *g.choose(&[Method::NativeRsvd, Method::Gesvd, Method::Lanczos]),
+                    precision: *g.choose(&[Precision::F64, Precision::F32, Precision::Mixed]),
                     want_vectors: g.bool(),
                     seed: g.u64(),
                 })
@@ -435,6 +492,10 @@ mod tests {
                         testkit::assert_that(
                             reqs[i].shape() == reqs[first].shape(),
                             "fused batch mixes shapes",
+                        )?;
+                        testkit::assert_that(
+                            reqs[i].precision() == reqs[first].precision(),
+                            "fused batch mixes precisions",
                         )?;
                     }
                     testkit::assert_that(keys[i] == b.key, "job in wrong batch")?;

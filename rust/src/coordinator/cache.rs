@@ -19,35 +19,51 @@ use std::sync::Mutex;
 
 /// The cache key: payload content fingerprint plus a canonical params
 /// string covering every result-determining knob (variant, payload kind,
-/// shape, k / tol / block / cap, method, output flavor, seed).
+/// shape, k / tol / block / cap, method, precision, output flavor, seed).
 pub type CacheKey = (u64, String);
 
 /// Canonical cache key of a request, or `None` for the uncacheable
 /// [`Request::Pca`]. The fingerprint is one streaming pass over the
 /// payload (the same hash the batcher fuses on); the params string pins
-/// everything else that feeds the solver.
+/// everything else that feeds the solver — including the numeric
+/// precision, so a cached f64 spectrum can never answer an f32 or mixed
+/// request over the same matrix (their error models differ; serving one
+/// for the other would silently change the result's accuracy class).
 pub fn key_of(req: &Request) -> Option<CacheKey> {
     let flavor = |v: bool| if v { "uv" } else { "vals" };
+    let prec = req.precision().name();
     let params = match req {
-        Request::Svd { a, k, method, want_vectors, seed } => {
+        Request::Svd { a, k, method, want_vectors, seed, .. } => {
             let (m, n) = a.shape();
-            format!("svd:dense:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+            format!(
+                "svd:dense:{m}x{n}:k{k}:{}:{prec}:{}:s{seed}",
+                method.name(),
+                flavor(*want_vectors)
+            )
         }
-        Request::SvdSparse { a, k, method, want_vectors, seed } => {
+        Request::SvdSparse { a, k, method, want_vectors, seed, .. } => {
             let (m, n) = a.shape();
-            format!("svd:sparse:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+            format!(
+                "svd:sparse:{m}x{n}:k{k}:{}:{prec}:{}:s{seed}",
+                method.name(),
+                flavor(*want_vectors)
+            )
         }
-        Request::SvdTiled { a, k, method, want_vectors, seed } => {
+        Request::SvdTiled { a, k, method, want_vectors, seed, .. } => {
             // tile height is deliberately absent: tilings of the same data
             // share a fingerprint, compare equal, and solve bitwise
             // identically, so they legally share a cache entry
             let (m, n) = a.shape();
-            format!("svd:tiled:{m}x{n}:k{k}:{}:{}:s{seed}", method.name(), flavor(*want_vectors))
+            format!(
+                "svd:tiled:{m}x{n}:k{k}:{}:{prec}:{}:s{seed}",
+                method.name(),
+                flavor(*want_vectors)
+            )
         }
-        Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } => {
+        Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed, .. } => {
             let (m, n) = a.shape();
             format!(
-                "adaptive:{}:{m}x{n}:tol{tol:e}:b{block}:cap{max_rank}:{}:{}:s{seed}",
+                "adaptive:{}:{m}x{n}:tol{tol:e}:b{block}:cap{max_rank}:{}:{prec}:{}:s{seed}",
                 a.kind(),
                 method.name(),
                 flavor(*want_vectors)
@@ -198,11 +214,18 @@ impl ResultCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{Method, Operand};
+    use crate::coordinator::job::{Method, Operand, Precision};
     use crate::linalg::{Csr, Matrix, TiledMatrix};
 
     fn svd_req(a: Matrix, seed: u64) -> Request {
-        Request::Svd { a, k: 2, method: Method::Gesvd, want_vectors: false, seed }
+        Request::Svd {
+            a,
+            k: 2,
+            method: Method::Gesvd,
+            precision: Precision::F64,
+            want_vectors: false,
+            seed,
+        }
     }
 
     fn result(tag: f64) -> Decomposition {
@@ -260,7 +283,7 @@ mod tests {
         let cache = ResultCache::new(4);
         let req_a = svd_req(Matrix::gaussian(5, 3, 1), 7);
         let req_b = svd_req(Matrix::gaussian(5, 3, 2), 7);
-        let forced_key = (0xdead_beef_u64, "svd:dense:5x3:k2:gesvd:vals:s7".to_string());
+        let forced_key = (0xdead_beef_u64, "svd:dense:5x3:k2:gesvd:f64:vals:s7".to_string());
         cache.insert_keyed(forced_key.clone(), req_a.clone(), result(1.0));
         assert!(
             cache.lookup_keyed(&forced_key, &req_b).is_none(),
@@ -287,6 +310,7 @@ mod tests {
             a: TiledMatrix::from_dense(&d, tile),
             k: 2,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 5,
         };
@@ -300,10 +324,39 @@ mod tests {
             a: d,
             k: 2,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 5,
         };
         assert!(cache.lookup(&dense).is_none());
+    }
+
+    #[test]
+    fn precisions_never_share_a_cache_entry() {
+        let cache = ResultCache::new(8);
+        let a = Matrix::gaussian(6, 4, 3);
+        let req = |p: Precision| Request::Svd {
+            a: a.clone(),
+            k: 2,
+            method: Method::NativeRsvd,
+            precision: p,
+            want_vectors: false,
+            seed: 5,
+        };
+        // a cached f64 result must never answer an f32 or mixed request
+        cache.insert(&req(Precision::F64), &result(7.0));
+        assert!(cache.lookup(&req(Precision::F64)).is_some());
+        assert!(cache.lookup(&req(Precision::F32)).is_none());
+        assert!(cache.lookup(&req(Precision::Mixed)).is_none());
+        // and each reduced precision caches under its own key
+        cache.insert(&req(Precision::F32), &result(6.0));
+        cache.insert(&req(Precision::Mixed), &result(5.0));
+        assert_eq!(cache.lookup(&req(Precision::F32)).unwrap().values, vec![6.0, 3.0]);
+        assert_eq!(cache.lookup(&req(Precision::Mixed)).unwrap().values, vec![5.0, 2.5]);
+        assert_eq!(cache.lookup(&req(Precision::F64)).unwrap().values, vec![7.0, 3.5]);
+        // the key string carries the token explicitly
+        let (_, params) = key_of(&req(Precision::F32)).unwrap();
+        assert!(params.contains(":f32:"), "{params}");
     }
 
     #[test]
@@ -315,6 +368,7 @@ mod tests {
             block: 4,
             max_rank: 0,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         };

@@ -1,12 +1,13 @@
 //! Job execution: run a routed request on the device engine or a host
 //! solver and produce a `Decomposition`.
 
-use super::job::{Decomposition, Method, Operand, Request};
+use super::job::{Decomposition, Method, Operand, Precision, Request};
 use super::router::Route;
 use crate::linalg::adaptive::{self, AdaptiveJob};
 use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
 use crate::linalg::{
-    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, Matrix, TiledMatrix,
+    eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, CsrMat, Mat, Matrix,
+    TiledMatrix,
 };
 use crate::runtime::{finish_rsvd, finish_values, Engine};
 
@@ -58,7 +59,7 @@ pub fn try_execute_fused(
         Tiled(&'a TiledMatrix),
     }
     let mut jobs = Vec::with_capacity(reqs.len());
-    let mut shared: Option<(Payload, bool)> = None;
+    let mut shared: Option<(Payload, bool, Precision)> = None;
     for r in reqs {
         let (payload, k, want_vectors, seed) = match r {
             Request::Svd { a, k, want_vectors, seed, .. } => {
@@ -73,9 +74,12 @@ pub fn try_execute_fused(
             Request::Pca { .. } => return None,
         };
         match &shared {
-            None => shared = Some((payload, want_vectors)),
-            Some((first, fv)) => {
-                if *fv != want_vectors {
+            None => shared = Some((payload, want_vectors, r.precision())),
+            Some((first, fv, fp)) => {
+                // the precision fuse-key token already separates f32 / mixed /
+                // f64 batches — this re-check keeps a collision from silently
+                // running a job at the wrong precision
+                if *fv != want_vectors || *fp != r.precision() {
                     return None;
                 }
                 let same = match (first, &payload) {
@@ -94,13 +98,28 @@ pub fn try_execute_fused(
         }
         jobs.push(SketchJob::from_opts(k, &RsvdOpts { seed, ..Default::default() }));
     }
-    let (payload, want_vectors) = shared?;
+    let (payload, want_vectors, precision) = shared?;
     // threads stay ambient: the caller (executor worker) has already pinned
     // its team via with_threads_opt, exactly as the sequential path does
-    Some(match payload {
-        Payload::Dense(a) => run_fused(a, &jobs, want_vectors),
-        Payload::Sparse(a) => run_fused(a, &jobs, want_vectors),
-        Payload::Tiled(a) => run_fused(a, &jobs, want_vectors),
+    Some(match (payload, precision) {
+        (Payload::Dense(a), Precision::F64) => run_fused(a, &jobs, want_vectors),
+        (Payload::Dense(a), Precision::F32) => {
+            run_fused(&Mat::<f32>::from_wide(a), &jobs, want_vectors)
+        }
+        (Payload::Dense(a), Precision::Mixed) => {
+            run_fused_mixed(a, &Mat::<f32>::from_wide(a), &jobs, want_vectors)
+        }
+        (Payload::Sparse(a), Precision::F64) => run_fused(a, &jobs, want_vectors),
+        (Payload::Sparse(a), Precision::F32) => {
+            run_fused(&a.map_scalar::<f32>(), &jobs, want_vectors)
+        }
+        (Payload::Sparse(a), Precision::Mixed) => {
+            run_fused_mixed(a, &a.map_scalar::<f32>(), &jobs, want_vectors)
+        }
+        (Payload::Tiled(a), Precision::F64) => run_fused(a, &jobs, want_vectors),
+        // the wire codec rejects reduced-precision tiled requests before they
+        // reach the pool — fall back to the solo path for its clean error
+        (Payload::Tiled(_), _) => return None,
     })
 }
 
@@ -153,9 +172,10 @@ fn decomp_from_adaptive(r: adaptive::AdaptiveSvd, want_vectors: bool) -> Decompo
     }
 }
 
-/// The shared fused finish over any operator backend: one wide-sketch
-/// batch solve, one `Decomposition` per job.
-fn run_fused<A: crate::linalg::LinOp + ?Sized>(
+/// The shared fused finish over any operator backend in any working
+/// precision: one wide-sketch batch solve, one `Decomposition` per job
+/// (factors always land in the f64 reply envelope).
+fn run_fused<S: crate::linalg::Scalar, A: crate::linalg::LinOp<S> + ?Sized>(
     a: &A,
     jobs: &[SketchJob],
     want_vectors: bool,
@@ -178,6 +198,51 @@ fn run_fused<A: crate::linalg::LinOp + ?Sized>(
             .collect()
     } else {
         native_rsvd::rsvd_values_batch(a, jobs, &opts)
+            .into_iter()
+            .map(|values| {
+                Ok(Decomposition {
+                    values,
+                    u: None,
+                    v: None,
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            })
+            .collect()
+    }
+}
+
+/// The fused finish for a mixed-precision batch: the wide sketch and power
+/// iterations run on the f32 twin, the re-projection and small SVD run on
+/// the f64 operator ([`crate::linalg::rsvd::rsvd_batch_mixed`]). Both views
+/// must describe the same matrix — the caller builds the f32 twin by
+/// narrowing the f64 payload.
+fn run_fused_mixed<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    jobs: &[SketchJob],
+    want_vectors: bool,
+) -> Vec<Result<Decomposition, String>>
+where
+    A64: crate::linalg::LinOp<f64> + ?Sized,
+    A32: crate::linalg::LinOp<f32> + ?Sized,
+{
+    let opts = BatchOpts::default();
+    if want_vectors {
+        native_rsvd::rsvd_batch_mixed(a64, a32, jobs, &opts)
+            .into_iter()
+            .map(|s| {
+                Ok(Decomposition {
+                    values: s.s,
+                    u: Some(s.u),
+                    v: Some(s.v),
+                    method_used: "native_rsvd",
+                    bucket: None,
+                })
+            })
+            .collect()
+    } else {
+        native_rsvd::rsvd_values_batch_mixed(a64, a32, jobs, &opts)
             .into_iter()
             .map(|values| {
                 Ok(Decomposition {
@@ -250,20 +315,116 @@ fn run_device(req: &Request, artifact: &str, engine: &Engine) -> Result<Decompos
 }
 
 fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
+    let precision = req.precision();
     match req {
-        Request::Svd { a, k, want_vectors, seed, .. } => {
-            host_svd(a, *k, method, *want_vectors, *seed)
-        }
-        Request::SvdSparse { a, k, want_vectors, seed, .. } => {
-            host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
-        }
-        Request::SvdTiled { a, k, want_vectors, seed, .. } => {
-            host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
-        }
+        Request::Svd { a, k, want_vectors, seed, .. } => match precision {
+            Precision::F64 => host_svd(a, *k, method, *want_vectors, *seed),
+            p => {
+                require_randomized(method, p)?;
+                let a32 = Mat::<f32>::from_wide(a);
+                host_reduced_svd(a, &a32, *k, p, *want_vectors, *seed)
+            }
+        },
+        Request::SvdSparse { a, k, want_vectors, seed, .. } => match precision {
+            Precision::F64 => {
+                host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
+            }
+            p => {
+                require_randomized(method, p)?;
+                let a32: CsrMat<f32> = a.map_scalar();
+                host_reduced_svd(a, &a32, *k, p, *want_vectors, *seed)
+            }
+        },
+        Request::SvdTiled { a, k, want_vectors, seed, .. } => match precision {
+            Precision::F64 => {
+                host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
+            }
+            // the wire codec already rejects these — defense in depth for
+            // library callers constructing requests directly
+            p => Err(format!(
+                "precision '{}' is not supported for tiled payloads (the out-of-core panel pipeline is certified f64-only; see docs/NUMERICS.md)",
+                p.name()
+            )),
+        },
         Request::SvdAdaptive { a, tol, block, max_rank, want_vectors, seed, .. } => {
-            host_adaptive_svd(a, *tol, *block, *max_rank, method, *want_vectors, *seed)
+            match precision {
+                Precision::F64 => {
+                    host_adaptive_svd(a, *tol, *block, *max_rank, method, *want_vectors, *seed)
+                }
+                p => Err(format!(
+                    "precision '{}' is not supported for adaptive payloads (the adaptive-rank pipeline is certified f64-only; see docs/NUMERICS.md)",
+                    p.name()
+                )),
+            }
         }
         Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
+    }
+}
+
+/// Reject reduced-precision runs of the exact and iterative solvers: only
+/// the randomized sketch pipeline carries an f32 or mixed certification
+/// (see docs/NUMERICS.md). Mirrors the wire-codec guard so library callers
+/// constructing [`Request`] values directly get the same contract.
+fn require_randomized(method: Method, p: Precision) -> Result<(), String> {
+    match method {
+        Method::NativeRsvd | Method::Auto | Method::Device => Ok(()),
+        exact => Err(format!(
+            "precision '{}' requires the randomized pipeline (method auto, device, or native_rsvd), got '{}'",
+            p.name(),
+            exact.name()
+        )),
+    }
+}
+
+/// Host SVD at a reduced working precision over any operator backend. F32
+/// runs the whole sketch pipeline on the narrowed operator; mixed sketches
+/// and power-iterates in f32 but re-projects and solves the small factor in
+/// f64 against the original operator, recovering f64-grade spectra at f32
+/// sketch cost. The reply envelope is always f64.
+fn host_reduced_svd<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    k: usize,
+    precision: Precision,
+    want_vectors: bool,
+    seed: u64,
+) -> Result<Decomposition, String>
+where
+    A64: crate::linalg::LinOp<f64> + ?Sized,
+    A32: crate::linalg::LinOp<f32> + ?Sized,
+{
+    let k = k.min(a64.rows().min(a64.cols()));
+    let opts = native_rsvd::RsvdOpts { seed, ..Default::default() };
+    let done = |s: crate::linalg::Svd| Decomposition {
+        values: s.s,
+        u: Some(s.u),
+        v: Some(s.v),
+        method_used: "native_rsvd",
+        bucket: None,
+    };
+    let done_values = |values: Vec<f64>| Decomposition {
+        values,
+        u: None,
+        v: None,
+        method_used: "native_rsvd",
+        bucket: None,
+    };
+    match precision {
+        Precision::F32 => {
+            if want_vectors {
+                Ok(done(native_rsvd::rsvd(a32, k, &opts)))
+            } else {
+                Ok(done_values(native_rsvd::rsvd_values(a32, k, &opts)))
+            }
+        }
+        Precision::Mixed => {
+            if want_vectors {
+                Ok(done(native_rsvd::rsvd_mixed(a64, a32, k, &opts)))
+            } else {
+                Ok(done_values(native_rsvd::rsvd_values_mixed(a64, a32, k, &opts)))
+            }
+        }
+        Precision::F64 => unreachable!("run_host dispatches f64 to the standard host paths"),
     }
 }
 
@@ -494,7 +655,7 @@ mod tests {
     use crate::coordinator::job::{Method, Request};
 
     fn req(a: Matrix, k: usize, m: Method, vecs: bool) -> Request {
-        Request::Svd { a, k, method: m, want_vectors: vecs, seed: 3 }
+        Request::Svd { a, k, method: m, want_vectors: vecs, seed: 3, precision: Precision::F64 }
     }
 
     #[test]
@@ -550,6 +711,7 @@ mod tests {
                     method: Method::NativeRsvd,
                     want_vectors: vecs,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
                 .collect();
             let refs: Vec<&Request> = reqs.iter().collect();
@@ -613,6 +775,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 3,
+            precision: Precision::F64,
         };
         let got = run_host(&sreq, Method::NativeRsvd).unwrap();
         assert_eq!(got.method_used, "native_rsvd");
@@ -621,8 +784,14 @@ mod tests {
         assert_eq!(got.values, dense_got.values);
         // explicit exact method on a sparse payload densifies and matches
         let exact = svd_gesvd::svd(&d);
-        let sreq =
-            Request::SvdSparse { a, k: 4, method: Method::Gesvd, want_vectors: false, seed: 3 };
+        let sreq = Request::SvdSparse {
+            a,
+            k: 4,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 3,
+            precision: Precision::F64,
+        };
         let got = run_host(&sreq, Method::Gesvd).unwrap();
         assert_eq!(got.method_used, "gesvd");
         for i in 0..4 {
@@ -642,6 +811,7 @@ mod tests {
                     method: Method::NativeRsvd,
                     want_vectors: vecs,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
                 .collect();
             let refs: Vec<&Request> = reqs.iter().collect();
@@ -667,6 +837,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 1,
+            precision: Precision::F64,
         };
         let rd = req(dense, 2, Method::NativeRsvd, false);
         // numerically equal payloads, different kernels → never fused
@@ -680,6 +851,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 2,
+            precision: Precision::F64,
         };
         assert!(try_execute_fused(&[&rs, &ro], &route).is_none());
         assert!(try_execute_fused(&[&rs, &rs], &route).is_some());
@@ -695,6 +867,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: true,
             seed: 3,
+            precision: Precision::F64,
         };
         let got = run_host(&treq, Method::NativeRsvd).unwrap();
         assert_eq!(got.method_used, "native_rsvd");
@@ -711,6 +884,7 @@ mod tests {
             method: Method::Gesvd,
             want_vectors: false,
             seed: 3,
+            precision: Precision::F64,
         };
         let got = run_host(&treq, Method::Gesvd).unwrap();
         assert_eq!(got.method_used, "gesvd");
@@ -735,6 +909,7 @@ mod tests {
                     method: Method::NativeRsvd,
                     want_vectors: vecs,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
                 .collect();
             let refs: Vec<&Request> = reqs.iter().collect();
@@ -760,6 +935,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 1,
+            precision: Precision::F64,
         };
         let rd = req(d, 2, Method::NativeRsvd, false);
         // numerically equal payloads, different kernels → never fused
@@ -773,6 +949,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 2,
+            precision: Precision::F64,
         };
         assert!(try_execute_fused(&[&rt, &ro], &route).is_none());
         assert!(try_execute_fused(&[&rt, &rt], &route).is_some());
@@ -800,6 +977,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: true,
             seed: 5,
+            precision: Precision::F64,
         };
         let dense = run_host(&req(Operand::Dense(d.clone())), Method::NativeRsvd).unwrap();
         assert_eq!(dense.method_used, "native_rsvd");
@@ -824,6 +1002,7 @@ mod tests {
             method: Method::Gesvd,
             want_vectors: false,
             seed: 3,
+            precision: Precision::F64,
         };
         let got = run_host(&req, Method::Gesvd).unwrap();
         assert_eq!(got.method_used, "gesvd");
@@ -844,6 +1023,7 @@ mod tests {
             method: Method::Gesvd,
             want_vectors: false,
             seed: 3,
+            precision: Precision::F64,
         };
         assert!(run_host(&bad, Method::Gesvd).is_err());
     }
@@ -863,6 +1043,7 @@ mod tests {
                     method: Method::NativeRsvd,
                     want_vectors: vecs,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
                 .collect();
             let refs: Vec<&Request> = reqs.iter().collect();
@@ -893,6 +1074,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 1,
+            precision: Precision::F64,
         };
         let bad = mk(f64::NAN);
         let good = mk(0.1);
@@ -916,6 +1098,7 @@ mod tests {
             method: Method::NativeRsvd,
             want_vectors: vecs,
             seed: 1,
+            precision: Precision::F64,
         };
         let r1 = ad(Operand::Dense(d.clone()), false);
         // adaptive + fixed-rank over the same payload never fuse
@@ -945,5 +1128,122 @@ mod tests {
         }
         let d = host_pca(&x, 2, Method::Gesvd, 1).unwrap();
         assert!(d.values[0].abs() < 1e-18, "constant data has no variance");
+    }
+
+    /// A fixed-rank request at an arbitrary precision, for the reduced-
+    /// precision tests below.
+    fn preq(a: Matrix, k: usize, vecs: bool, seed: u64, precision: Precision) -> Request {
+        Request::Svd { a, k, method: Method::NativeRsvd, want_vectors: vecs, seed, precision }
+    }
+
+    #[test]
+    fn reduced_precision_solo_matches_direct_rsvd() {
+        // the coordinator path is a thin shim over the library entry points:
+        // f32 must match rsvd on the narrowed matrix bitwise, mixed must
+        // match rsvd_mixed on the (f64, f32) pair bitwise
+        let a = crate::datagen_test_matrix(30, 20, |i| 1.0 / (i + 1) as f64, 53);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let opts = native_rsvd::RsvdOpts { seed: 9, ..Default::default() };
+        let route = Route::Host { method: Method::NativeRsvd };
+
+        let got = execute(&preq(a.clone(), 4, true, 9, Precision::F32), &route, None).unwrap();
+        let want = native_rsvd::rsvd(&a32, 4, &opts);
+        assert_eq!(got.values, want.s);
+        assert_eq!(got.u.unwrap(), want.u);
+        assert_eq!(got.v.unwrap(), want.v);
+        assert_eq!(got.method_used, "native_rsvd");
+
+        let got = execute(&preq(a.clone(), 4, false, 9, Precision::Mixed), &route, None).unwrap();
+        assert_eq!(got.values, native_rsvd::rsvd_values_mixed(&a, &a32, 4, &opts));
+
+        // sparse payloads narrow through the CSR scalar map
+        let sp = test_csr(30, 20);
+        let sp32: CsrMat<f32> = sp.map_scalar();
+        let sreq = Request::SvdSparse {
+            a: sp.clone(),
+            k: 4,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 9,
+            precision: Precision::F32,
+        };
+        let got = execute(&sreq, &route, None).unwrap();
+        assert_eq!(got.values, native_rsvd::rsvd_values(&sp32, 4, &opts));
+    }
+
+    #[test]
+    fn fused_reduced_precision_batch_matches_solo() {
+        let a = crate::datagen_test_matrix(30, 20, |i| 1.0 / (i + 1) as f64, 59);
+        let route = Route::Host { method: Method::NativeRsvd };
+        for precision in [Precision::F32, Precision::Mixed] {
+            let reqs: Vec<Request> =
+                (0..3).map(|i| preq(a.clone(), 3 + i % 2, true, i as u64, precision)).collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "{precision:?}");
+                assert_eq!(f.u, s.u, "{precision:?}");
+                assert_eq!(f.v, s.v, "{precision:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_never_mixes_precisions() {
+        // the fuse-key precision token makes this structurally impossible;
+        // the executor's re-check is the collision insurance under test
+        let a = Matrix::gaussian(12, 9, 61);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let r64 = preq(a.clone(), 2, false, 1, Precision::F64);
+        let r32 = preq(a.clone(), 2, false, 1, Precision::F32);
+        let rmx = preq(a, 2, false, 1, Precision::Mixed);
+        assert!(try_execute_fused(&[&r64, &r32], &route).is_none());
+        assert!(try_execute_fused(&[&r32, &rmx], &route).is_none());
+        assert!(try_execute_fused(&[&rmx, &r64], &route).is_none());
+        assert!(try_execute_fused(&[&r32, &r32], &route).is_some());
+    }
+
+    #[test]
+    fn reduced_precision_rejects_exact_methods_and_uncertified_payloads() {
+        // mirrors the wire-codec guard for library callers that build
+        // requests directly: exact solvers and the tiled/adaptive pipelines
+        // carry no reduced-precision certification
+        let a = Matrix::gaussian(10, 8, 67);
+        for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen] {
+            let r = Request::Svd {
+                a: a.clone(),
+                k: 2,
+                method: m,
+                want_vectors: false,
+                seed: 1,
+                precision: Precision::F32,
+            };
+            let err = run_host(&r, m).unwrap_err();
+            assert!(err.contains("randomized pipeline"), "{m:?}: {err}");
+        }
+        let rt = Request::SvdTiled {
+            a: TiledMatrix::from_dense(&a, 4),
+            k: 2,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::Mixed,
+        };
+        let err = run_host(&rt, Method::NativeRsvd).unwrap_err();
+        assert!(err.contains("tiled payloads"), "{err}");
+        let ra = Request::SvdAdaptive {
+            a: Operand::Dense(a),
+            tol: 0.1,
+            block: 2,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::F32,
+        };
+        let err = run_host(&ra, Method::NativeRsvd).unwrap_err();
+        assert!(err.contains("adaptive payloads"), "{err}");
     }
 }

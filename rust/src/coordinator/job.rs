@@ -56,6 +56,72 @@ impl Method {
     }
 }
 
+/// Numeric precision the pipeline runs a request at. `F64` is the
+/// historical path and stays bitwise-frozen; the other two flavors trade
+/// accuracy for GEMM throughput (an f32 fma retires twice the elements of
+/// an f64 one under the AVX2 kernels — see `docs/NUMERICS.md` for the
+/// full contract and `docs/OPERATIONS.md` for when to pick each).
+///
+/// Only the randomized pipeline (method `auto`, `device`, or
+/// `native_rsvd`) honors a reduced precision — the exact solvers are
+/// f64-only, and the wire codec rejects the combination up front. Dense
+/// and sparse payloads support all three flavors; tiled and adaptive
+/// requests are f64-only on the wire (the streaming panel sweep and the
+/// posterior-bound growth loop are certified against the f64 error model
+/// only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Full double precision end to end — the bitwise-frozen default.
+    #[default]
+    F64,
+    /// Single precision end to end: sketch, power iterations, and finish
+    /// all run in f32 (factors widen to f64 for the result envelope, but
+    /// carry only ~1e-6 relative accuracy).
+    F32,
+    /// f32 sketch + one f64 refinement pass + f64 finish: near-f64
+    /// spectral accuracy at close to f32 sketch cost.
+    Mixed,
+}
+
+impl Precision {
+    /// Canonical wire name (the inverse of [`Precision::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a wire name. Unknown spellings are `None` — the codec turns
+    /// that into a rejected envelope rather than silently running f64.
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s {
+            "f64" => Precision::F64,
+            "f32" => Precision::F32,
+            "mixed" => Precision::Mixed,
+            _ => return None,
+        })
+    }
+}
+
+/// Reject payload values that are finite in f64 but overflow to infinity
+/// when narrowed to f32 — an `f32`/`mixed` request carrying one would
+/// silently sketch against `inf` and return garbage, so the wire codec
+/// errors instead (subnormal flush-to-zero narrowing is fine; it is the
+/// precision the caller asked for).
+fn check_f32_safe(values: &[f64], what: &str) -> Result<(), String> {
+    for &v in values {
+        if !(v as f32).is_finite() {
+            return Err(format!(
+                "{what} value {v:e} is finite in f64 but not representable in f32 \
+                 (f32/mixed precision requires every payload value to fit f32)"
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// A decomposition payload in whichever backend the caller holds it. The
 /// adaptive pipeline only touches A through [`LinOp`], so one request
 /// variant serves all three backends instead of tripling the enum.
@@ -160,6 +226,7 @@ pub enum Request {
         a: Matrix,
         k: usize,
         method: Method,
+        precision: Precision,
         want_vectors: bool,
         seed: u64,
     },
@@ -170,17 +237,21 @@ pub enum Request {
         a: Csr,
         k: usize,
         method: Method,
+        precision: Precision,
         want_vectors: bool,
         seed: u64,
     },
     /// k largest singular triplets (or values only) of a tiled, possibly
     /// disk-backed `a` — served by the out-of-core operator path (one panel
     /// sweep per block product, bitwise identical to the dense pipeline)
-    /// unless an exact host method is explicitly requested.
+    /// unless an exact host method is explicitly requested. f64-only on
+    /// the wire (see [`Precision`]); the field exists so every SVD flavor
+    /// shares one accessor surface.
     SvdTiled {
         a: TiledMatrix,
         k: usize,
         method: Method,
+        precision: Precision,
         want_vectors: bool,
         seed: u64,
     },
@@ -197,6 +268,7 @@ pub enum Request {
         block: usize,
         max_rank: usize,
         method: Method,
+        precision: Precision,
         want_vectors: bool,
         seed: u64,
     },
@@ -241,6 +313,18 @@ impl Request {
         }
     }
 
+    /// The numeric precision the pipeline runs at. PCA is an in-process
+    /// composition with no wire form and stays f64.
+    pub fn precision(&self) -> Precision {
+        match self {
+            Request::Svd { precision, .. }
+            | Request::SvdSparse { precision, .. }
+            | Request::SvdTiled { precision, .. }
+            | Request::SvdAdaptive { precision, .. } => *precision,
+            Request::Pca { .. } => Precision::F64,
+        }
+    }
+
     /// (rows, cols) of the operand.
     pub fn shape(&self) -> (usize, usize) {
         match self {
@@ -275,15 +359,15 @@ impl Request {
     /// which has no wire form (PCA is an in-process composition over the
     /// SVD primitives — see docs/PROTOCOL.md).
     pub fn to_wire_json(&self) -> Option<Json> {
-        let (ty, a, k, method, want_vectors, seed) = match self {
-            Request::Svd { a, k, method, want_vectors, seed } => {
-                ("svd", json::matrix_to_json(a), *k, *method, *want_vectors, *seed)
+        let (ty, a, k, method, precision, want_vectors, seed) = match self {
+            Request::Svd { a, k, method, precision, want_vectors, seed } => {
+                ("svd", json::matrix_to_json(a), *k, *method, *precision, *want_vectors, *seed)
             }
-            Request::SvdSparse { a, k, method, want_vectors, seed } => {
-                ("svd_sparse", json::csr_to_json(a), *k, *method, *want_vectors, *seed)
+            Request::SvdSparse { a, k, method, precision, want_vectors, seed } => {
+                ("svd_sparse", json::csr_to_json(a), *k, *method, *precision, *want_vectors, *seed)
             }
-            Request::SvdTiled { a, k, method, want_vectors, seed } => {
-                ("svd_tiled", json::tiled_to_json(a), *k, *method, *want_vectors, *seed)
+            Request::SvdTiled { a, k, method, precision, want_vectors, seed } => {
+                ("svd_tiled", json::tiled_to_json(a), *k, *method, *precision, *want_vectors, *seed)
             }
             Request::SvdAdaptive { .. } => return self.adaptive_to_json(),
             Request::Pca { .. } => return None,
@@ -293,6 +377,7 @@ impl Request {
         obj.insert("a".to_string(), a);
         obj.insert("k".to_string(), Json::Num(k as f64));
         obj.insert("method".to_string(), Json::Str(method.name().into()));
+        obj.insert("precision".to_string(), Json::Str(precision.name().into()));
         obj.insert("want_vectors".to_string(), Json::Bool(want_vectors));
         obj.insert("seed".to_string(), Json::Str(seed.to_string()));
         Some(Json::Obj(obj))
@@ -305,6 +390,12 @@ impl Request {
     /// tag with non-finite values rejected — and the payload kind must
     /// match the request type (a `"svd"` frame carrying a CSR payload is a
     /// protocol error, not a silent densification).
+    ///
+    /// The optional `precision` field defaults to `"f64"` (pre-precision
+    /// clients keep their exact historical behavior). A reduced precision
+    /// is rejected when combined with an exact solver method, with a tiled
+    /// payload, or with a payload value that overflows f32 — each is an
+    /// error envelope, never a silent fallback (see [`Precision`]).
     pub fn from_wire_json(j: &Json) -> Result<Request, String> {
         let ty = j.str_field("type")?;
         if ty == "svd_adaptive" {
@@ -326,16 +417,72 @@ impl Request {
         let k = j.u64_field("k")? as usize;
         let mname = j.str_field("method")?;
         let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
+        let precision = Self::precision_from_json(j)?;
+        if precision != Precision::F64 {
+            Self::check_reduced_precision(ty, method, precision)?;
+            match &a {
+                Operand::Dense(a) => check_f32_safe(a.as_slice(), "payload")?,
+                Operand::Sparse(a) => check_f32_safe(a.parts().2, "payload")?,
+                Operand::Tiled(_) => unreachable!("tiled rejected above"),
+            }
+        }
         let want_vectors = j.bool_field("want_vectors")?;
         let seed = j
             .str_field("seed")?
             .parse::<u64>()
             .map_err(|e| format!("invalid seed: {e}"))?;
         Ok(match a {
-            Operand::Dense(a) => Request::Svd { a, k, method, want_vectors, seed },
-            Operand::Sparse(a) => Request::SvdSparse { a, k, method, want_vectors, seed },
-            Operand::Tiled(a) => Request::SvdTiled { a, k, method, want_vectors, seed },
+            Operand::Dense(a) => Request::Svd { a, k, method, precision, want_vectors, seed },
+            Operand::Sparse(a) => {
+                Request::SvdSparse { a, k, method, precision, want_vectors, seed }
+            }
+            Operand::Tiled(a) => Request::SvdTiled { a, k, method, precision, want_vectors, seed },
         })
+    }
+
+    /// Parse the optional `precision` wire field: missing means `"f64"`
+    /// (the pre-precision protocol), anything else must be a known name.
+    fn precision_from_json(j: &Json) -> Result<Precision, String> {
+        match j.get("precision") {
+            None => Ok(Precision::F64),
+            Some(p) => {
+                let s = p
+                    .as_str()
+                    .ok_or_else(|| format!("precision must be a string, got {p}"))?;
+                Precision::parse(s).ok_or_else(|| {
+                    format!("unknown precision '{s}' (expected f64, f32, or mixed)")
+                })
+            }
+        }
+    }
+
+    /// The request-level legality of a reduced precision: only the
+    /// randomized pipeline honors it, and only for dense/sparse payloads.
+    fn check_reduced_precision(
+        ty: &str,
+        method: Method,
+        precision: Precision,
+    ) -> Result<(), String> {
+        match method {
+            Method::Auto | Method::Device | Method::NativeRsvd => {}
+            exact => {
+                return Err(format!(
+                    "precision '{}' requires the randomized pipeline \
+                     (method auto, device, or native_rsvd), got '{}'",
+                    precision.name(),
+                    exact.name()
+                ));
+            }
+        }
+        if ty == "svd_tiled" || ty == "svd_adaptive" {
+            return Err(format!(
+                "precision '{}' is not supported for '{ty}' requests \
+                 (the {} pipeline is certified f64-only; see docs/NUMERICS.md)",
+                precision.name(),
+                if ty == "svd_tiled" { "out-of-core panel" } else { "adaptive-rank" },
+            ));
+        }
+        Ok(())
     }
 
     /// Wire encoding of an adaptive request:
@@ -344,7 +491,16 @@ impl Request {
     /// travels as a decimal string so all 64 bits survive the f64 wire).
     /// Returns `None` for non-adaptive variants.
     pub fn adaptive_to_json(&self) -> Option<Json> {
-        let Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } = self
+        let Request::SvdAdaptive {
+            a,
+            tol,
+            block,
+            max_rank,
+            method,
+            precision,
+            want_vectors,
+            seed,
+        } = self
         else {
             return None;
         };
@@ -355,6 +511,7 @@ impl Request {
         obj.insert("block".to_string(), Json::Num(*block as f64));
         obj.insert("max_rank".to_string(), Json::Num(*max_rank as f64));
         obj.insert("method".to_string(), Json::Str(method.name().into()));
+        obj.insert("precision".to_string(), Json::Str(precision.name().into()));
         obj.insert("want_vectors".to_string(), Json::Bool(*want_vectors));
         obj.insert("seed".to_string(), Json::Str(seed.to_string()));
         Some(Json::Obj(obj))
@@ -382,12 +539,16 @@ impl Request {
         let max_rank = j.u64_field("max_rank")? as usize;
         let mname = j.str_field("method")?;
         let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
+        let precision = Self::precision_from_json(j)?;
+        if precision != Precision::F64 {
+            Self::check_reduced_precision("svd_adaptive", method, precision)?;
+        }
         let want_vectors = j.bool_field("want_vectors")?;
         let seed = j
             .str_field("seed")?
             .parse::<u64>()
             .map_err(|e| format!("invalid seed: {e}"))?;
-        Ok(Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed })
+        Ok(Request::SvdAdaptive { a, tol, block, max_rank, method, precision, want_vectors, seed })
     }
 }
 
@@ -486,12 +647,32 @@ mod tests {
             a: Matrix::zeros(5, 3),
             k: 2,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         };
         assert_eq!(r.k(), 2);
         assert_eq!(r.shape(), (5, 3));
         assert_eq!(r.method(), Method::Auto);
+        assert_eq!(r.precision(), Precision::F64);
+    }
+
+    #[test]
+    fn precision_parse_roundtrip_and_default() {
+        for p in [Precision::F64, Precision::F32, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()), Some(p), "{p:?}");
+        }
+        assert_eq!(Precision::parse("fp32"), None);
+        assert_eq!(Precision::parse("F32"), None, "names are case-sensitive on the wire");
+        assert_eq!(Precision::default(), Precision::F64);
+        // PCA has no precision knob: always f64
+        let pca = Request::Pca {
+            x: Matrix::zeros(2, 2),
+            k: 1,
+            method: Method::Auto,
+            seed: 0,
+        };
+        assert_eq!(pca.precision(), Precision::F64);
     }
 
     #[test]
@@ -503,6 +684,7 @@ mod tests {
             a,
             k: 3,
             method: Method::NativeRsvd,
+            precision: Precision::F64,
             want_vectors: true,
             seed: 9,
         };
@@ -523,6 +705,7 @@ mod tests {
             block: 4,
             max_rank: 0,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 9,
         };
@@ -536,6 +719,7 @@ mod tests {
             block: 4,
             max_rank: 3,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 9,
         };
@@ -565,6 +749,7 @@ mod tests {
                 block: 6,
                 max_rank: 12,
                 method: Method::NativeRsvd,
+                precision: Precision::F64,
                 want_vectors: true,
                 seed: u64::MAX - 7, // all 64 bits must survive the wire
             };
@@ -572,7 +757,7 @@ mod tests {
             let back =
                 Request::adaptive_from_json(&crate::util::json::Json::parse(&wire).unwrap())
                     .unwrap();
-            let Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed } =
+            let Request::SvdAdaptive { a, tol, block, max_rank, method, want_vectors, seed, .. } =
                 &back
             else {
                 panic!("wrong variant");
@@ -598,6 +783,7 @@ mod tests {
             block: 2,
             max_rank: 0,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 1,
         }
@@ -644,6 +830,7 @@ mod tests {
             a: Matrix::zeros(2, 2),
             k: 1,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 0,
         };
@@ -660,6 +847,7 @@ mod tests {
                 a: d.clone(),
                 k: 2,
                 method: Method::Gesvd,
+                precision: Precision::F64,
                 want_vectors: true,
                 seed: u64::MAX - 3, // all 64 bits must survive the wire
             },
@@ -667,6 +855,7 @@ mod tests {
                 a: sp,
                 k: 3,
                 method: Method::NativeRsvd,
+                precision: Precision::F64,
                 want_vectors: false,
                 seed: 7,
             },
@@ -674,6 +863,7 @@ mod tests {
                 a: t,
                 k: 1,
                 method: Method::Auto,
+                precision: Precision::F64,
                 want_vectors: false,
                 seed: 0,
             },
@@ -683,6 +873,7 @@ mod tests {
                 block: 4,
                 max_rank: 8,
                 method: Method::Auto,
+                precision: Precision::F64,
                 want_vectors: false,
                 seed: 11,
             },
@@ -726,6 +917,7 @@ mod tests {
             a: Matrix::gaussian(3, 2, 1),
             k: 1,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 5,
         }
@@ -779,6 +971,185 @@ mod tests {
     }
 
     #[test]
+    fn precision_roundtrips_and_defaults_on_the_wire() {
+        // f32 and mixed survive the dense and sparse codecs
+        let d = Matrix::gaussian(4, 3, 2);
+        let sp = Csr::from_coo(4, 3, &[(0, 1, 0.5), (3, 2, -2.0)]).unwrap();
+        for p in [Precision::F32, Precision::Mixed] {
+            let reqs = [
+                Request::Svd {
+                    a: d.clone(),
+                    k: 2,
+                    method: Method::Auto,
+                    precision: p,
+                    want_vectors: true,
+                    seed: 3,
+                },
+                Request::SvdSparse {
+                    a: sp.clone(),
+                    k: 2,
+                    method: Method::NativeRsvd,
+                    precision: p,
+                    want_vectors: false,
+                    seed: 3,
+                },
+            ];
+            for req in reqs {
+                let wire = req.to_wire_json().unwrap().to_string();
+                assert!(wire.contains(&format!("\"precision\":\"{}\"", p.name())), "{wire}");
+                let back = Request::from_wire_json(&Json::parse(&wire).unwrap()).unwrap();
+                assert_eq!(back.precision(), p);
+                assert_eq!(back.fingerprint(), req.fingerprint());
+            }
+        }
+        // a frame without the field decodes as f64 — pre-precision clients
+        // keep their exact historical behavior
+        let good = Request::Svd {
+            a: d.clone(),
+            k: 2,
+            method: Method::Auto,
+            precision: Precision::F64,
+            want_vectors: false,
+            seed: 1,
+        }
+        .to_wire_json()
+        .unwrap();
+        let mut m = match good {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("precision");
+        let back = Request::from_wire_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.precision(), Precision::F64);
+    }
+
+    #[test]
+    fn precision_wire_rejections() {
+        let d = Matrix::gaussian(4, 3, 2);
+        let good = Request::Svd {
+            a: d.clone(),
+            k: 2,
+            method: Method::Auto,
+            precision: Precision::F32,
+            want_vectors: false,
+            seed: 1,
+        }
+        .to_wire_json()
+        .unwrap();
+        let mutate = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
+            let mut m = match good.clone() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            f(&mut m);
+            Request::from_wire_json(&Json::Obj(m))
+        };
+        // unknown spelling or wrong json type → error, never a silent f64
+        let err = mutate(&|m| {
+            m.insert("precision".into(), Json::Str("fp32".into()));
+        })
+        .unwrap_err();
+        assert!(err.contains("unknown precision"), "{err}");
+        assert!(mutate(&|m| {
+            m.insert("precision".into(), Json::Num(32.0));
+        })
+        .is_err());
+        // reduced precision never combines with an exact solver
+        for m_name in ["gesvd", "jacobi", "lanczos", "partial_eigen"] {
+            let err = mutate(&|m| {
+                m.insert("method".into(), Json::Str(m_name.into()));
+            })
+            .unwrap_err();
+            assert!(err.contains("randomized pipeline"), "{m_name}: {err}");
+        }
+        // ...but every randomized spelling is fine
+        for m_name in ["auto", "device", "native_rsvd"] {
+            assert!(mutate(&|m| {
+                m.insert("method".into(), Json::Str(m_name.into()));
+            })
+            .is_ok());
+        }
+        // tiled and adaptive payloads are f64-only on the wire
+        let t = TiledMatrix::from_dense(&d, 2);
+        let tiled = Request::SvdTiled {
+            a: t,
+            k: 2,
+            method: Method::Auto,
+            precision: Precision::F64,
+            want_vectors: false,
+            seed: 1,
+        }
+        .to_wire_json()
+        .unwrap();
+        let mut m = match tiled {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("precision".into(), Json::Str("f32".into()));
+        let err = Request::from_wire_json(&Json::Obj(m)).unwrap_err();
+        assert!(err.contains("not supported for 'svd_tiled'"), "{err}");
+        let adaptive = Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol: 0.1,
+            block: 2,
+            max_rank: 0,
+            method: Method::Auto,
+            precision: Precision::F64,
+            want_vectors: false,
+            seed: 1,
+        }
+        .adaptive_to_json()
+        .unwrap();
+        let mut m = match adaptive {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("precision".into(), Json::Str("mixed".into()));
+        let err = Request::from_wire_json(&Json::Obj(m)).unwrap_err();
+        assert!(err.contains("not supported for 'svd_adaptive'"), "{err}");
+    }
+
+    #[test]
+    fn f32_overflow_payload_rejected_for_reduced_precision() {
+        // 1e300 is perfectly finite in f64 but narrows to +inf in f32 —
+        // the codec must reject it for f32/mixed and accept it for f64
+        let mut a = Matrix::zeros(2, 2);
+        a[(0, 0)] = 1e300;
+        a[(1, 1)] = 1.0;
+        let wire = |p: Precision| {
+            Request::Svd {
+                a: a.clone(),
+                k: 1,
+                method: Method::Auto,
+                precision: p,
+                want_vectors: false,
+                seed: 1,
+            }
+            .to_wire_json()
+            .unwrap()
+        };
+        assert!(Request::from_wire_json(&wire(Precision::F64)).is_ok());
+        for p in [Precision::F32, Precision::Mixed] {
+            let err = Request::from_wire_json(&wire(p)).unwrap_err();
+            assert!(err.contains("not representable in f32"), "{p:?}: {err}");
+        }
+        // the sparse payload path runs the same guard over the CSR values
+        let sp = Csr::from_coo(2, 2, &[(0, 0, 1e300)]).unwrap();
+        let sparse = Request::SvdSparse {
+            a: sp,
+            k: 1,
+            method: Method::Auto,
+            precision: Precision::Mixed,
+            want_vectors: false,
+            seed: 1,
+        }
+        .to_wire_json()
+        .unwrap();
+        let err = Request::from_wire_json(&sparse).unwrap_err();
+        assert!(err.contains("not representable in f32"), "{err}");
+    }
+
+    #[test]
     fn tiled_request_accessors() {
         let d = Matrix::gaussian(6, 4, 1);
         let t = TiledMatrix::from_dense(&d, 2);
@@ -787,6 +1158,7 @@ mod tests {
             a: t,
             k: 2,
             method: Method::Auto,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 3,
         };

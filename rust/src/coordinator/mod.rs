@@ -32,7 +32,7 @@ pub mod router;
 pub mod server;
 
 pub use cache::ResultCache;
-pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Operand, Request};
+pub use job::{Decomposition, Job, JobHandle, JobResult, Method, Operand, Precision, Request};
 pub use metrics::{BatchWidth, Metrics, Snapshot};
 pub use net::{ServeCfg, Server};
 pub use router::{Route, RouterCfg};

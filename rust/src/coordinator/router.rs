@@ -73,6 +73,15 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     if method != Method::Auto && method != Method::Device {
         return Route::Host { method };
     }
+    // Reduced-precision requests always run the host randomized pipeline:
+    // the AOT device artifacts are f64 graphs, and silently serving an f32
+    // request with an f64 bucket would return the wrong error model (and
+    // the wrong cache identity). The wire codec already restricts non-f64
+    // to dense/sparse randomized requests; this guard keeps the invariant
+    // even for library callers constructing requests directly.
+    if req.precision() != crate::coordinator::job::Precision::F64 {
+        return Route::Host { method: Method::NativeRsvd };
+    }
     let (m, n) = req.shape();
     let k = req.k();
     let r = m.min(n);
@@ -108,7 +117,7 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::Request;
+    use crate::coordinator::job::{Precision, Request};
     use crate::linalg::Matrix;
     use crate::runtime::Manifest;
 
@@ -125,7 +134,41 @@ mod tests {
     }
 
     fn svd_req(m: usize, n: usize, k: usize, method: Method) -> Request {
-        Request::Svd { a: Matrix::zeros(m, n), k, method, want_vectors: false, seed: 0 }
+        Request::Svd {
+            a: Matrix::zeros(m, n),
+            k,
+            method,
+            precision: Precision::F64,
+            want_vectors: false,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn reduced_precision_never_routes_to_device() {
+        let man = toy_manifest();
+        let cfg = RouterCfg::default();
+        // the f64 twin of this request lands on a device bucket
+        assert!(matches!(
+            route(&svd_req(200, 100, 8, Method::Auto), &man, &cfg),
+            Route::Device { .. }
+        ));
+        for p in [Precision::F32, Precision::Mixed] {
+            for m in [Method::Auto, Method::Device] {
+                let req = Request::Svd {
+                    a: Matrix::zeros(200, 100),
+                    k: 8,
+                    method: m,
+                    precision: p,
+                    want_vectors: false,
+                    seed: 0,
+                };
+                match route(&req, &man, &cfg) {
+                    Route::Host { method } => assert_eq!(method, Method::NativeRsvd),
+                    other => panic!("{p:?}/{m:?} routed to {other:?}"),
+                }
+            }
+        }
     }
 
     #[test]
@@ -208,6 +251,7 @@ mod tests {
             a: a.clone(),
             k: 8,
             method,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 0,
         };
@@ -237,6 +281,7 @@ mod tests {
             a: a.clone(),
             k: 8,
             method,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 0,
         };
@@ -268,6 +313,7 @@ mod tests {
             block: 8,
             max_rank: 0,
             method,
+            precision: Precision::F64,
             want_vectors: false,
             seed: 0,
         };

@@ -501,7 +501,7 @@ fn manifest_of(engine: &Option<Engine>) -> &crate::runtime::Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::Method;
+    use crate::coordinator::job::{Method, Precision};
     use crate::linalg::Matrix;
 
     fn svd_req(m: usize, n: usize, k: usize, method: Method) -> Request {
@@ -511,6 +511,7 @@ mod tests {
             method,
             want_vectors: false,
             seed: 5,
+            precision: Precision::F64,
         }
     }
 
@@ -596,6 +597,7 @@ mod tests {
                 method: Method::NativeRsvd,
                 want_vectors: false,
                 seed: 5,
+                precision: Precision::F64,
             });
             r.outcome.expect("ok").values
         };
@@ -667,6 +669,7 @@ mod tests {
             method: Method::Gesvd,
             want_vectors: false,
             seed: 1,
+            precision: Precision::F64,
         };
         let r = coord.run(poison);
         let err = r.outcome.expect_err("NaN through gesvd must fail the job");
@@ -728,6 +731,7 @@ mod tests {
                     method: Method::Auto,
                     want_vectors: false,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
             })
             .collect();
@@ -766,6 +770,7 @@ mod tests {
                         method: Method::NativeRsvd,
                         want_vectors: false,
                         seed: i as u64,
+                        precision: Precision::F64,
                     })
                 })
                 .collect();
@@ -815,6 +820,7 @@ mod tests {
                     method: Method::NativeRsvd,
                     want_vectors: false,
                     seed: i as u64,
+                    precision: Precision::F64,
                 })
             })
             .collect();
@@ -910,6 +916,7 @@ mod tests {
             method: Method::Auto,
             want_vectors: true,
             seed: 3,
+            precision: Precision::F64,
         };
         let first = coord.run(req.clone());
         let second = coord.run(req);

@@ -7,7 +7,7 @@
 
 use super::k_of;
 use crate::bench_harness::{fmt_secs, fmt_speedup, speedup, time_n, Table, Timing};
-use crate::coordinator::{Coordinator, Method, Request};
+use crate::coordinator::{Coordinator, Method, Precision, Request};
 use crate::datagen::{spectrum_matrix, Decay};
 
 /// Options for a spectrum figure run.
@@ -83,6 +83,7 @@ pub fn run_spectrum_figure(coord: &Coordinator, decay: Decay, opts: &SpectrumOpt
                     method,
                     want_vectors: false,
                     seed: opts.seed,
+                    precision: Precision::F64,
                 });
                 r.outcome.expect("baseline failed");
             });
@@ -98,6 +99,7 @@ pub fn run_spectrum_figure(coord: &Coordinator, decay: Decay, opts: &SpectrumOpt
                     method: Method::Auto,
                     want_vectors: false,
                     seed: opts.seed,
+                    precision: Precision::F64,
                 });
                 r.outcome.expect("ours failed");
             });
@@ -115,6 +117,7 @@ pub fn run_spectrum_figure(coord: &Coordinator, decay: Decay, opts: &SpectrumOpt
                         method,
                         want_vectors: false,
                         seed: opts.seed,
+                        precision: Precision::F64,
                     });
                     r.outcome.expect("baseline failed");
                 });
@@ -148,11 +151,25 @@ pub fn accuracy_gate(
 ) -> f64 {
     let a = spectrum_matrix(m, n, decay, seed);
     let ours = coord
-        .run(Request::Svd { a: a.clone(), k, method: Method::Auto, want_vectors: false, seed })
+        .run(Request::Svd {
+            a: a.clone(),
+            k,
+            method: Method::Auto,
+            want_vectors: false,
+            seed,
+            precision: Precision::F64,
+        })
         .outcome
         .expect("ours");
     let exact = coord
-        .run(Request::Svd { a, k, method: Method::Gesvd, want_vectors: false, seed })
+        .run(Request::Svd {
+            a,
+            k,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed,
+            precision: Precision::F64,
+        })
         .outcome
         .expect("gesvd");
     let mut worst: f64 = 0.0;

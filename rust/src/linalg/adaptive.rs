@@ -42,10 +42,21 @@
 //! single wide `apply`, jobs that met their tolerance drop out of later
 //! rounds (the sweep survives to the widest living tolerance), and the
 //! final projection runs as one wide `QᵀA` over the stacked bases.
+//!
+//! **Precision.** The growth sweep and the wide projection are generic
+//! over [`Scalar`] like the fixed-rank pipeline (the f64 instantiation is
+//! byte-for-byte the historical computation); the small-B finish always
+//! runs in `f64`, and the tolerance/estimate bookkeeping is kept in `f64`
+//! regardless of the sweep precision. Note the wire protocol only accepts
+//! `precision` on the fixed-rank requests — adaptive requests stay `f64`
+//! end-to-end (docs/NUMERICS.md) — so the `f32` instantiation here serves
+//! library callers, not the coordinator.
 
 use super::gemm::{matmul, matmul_tn};
+use super::matrix::Mat;
 use super::op::LinOp;
 use super::qr::orthonormalize;
+use super::scalar::Scalar;
 use super::svd_gesvd::{svd, Svd};
 use super::threading::with_threads_opt;
 use super::Matrix;
@@ -103,11 +114,12 @@ impl AdaptiveJob {
     }
 }
 
-/// Result of the incremental range finder: the orthonormal basis, the last
-/// posterior residual estimate, and how many growth steps ran.
-pub struct AdaptiveRange {
+/// Result of the incremental range finder: the orthonormal basis (in the
+/// sweep's scalar type, default `f64`), the last posterior residual
+/// estimate, and how many growth steps ran.
+pub struct AdaptiveRange<S: Scalar = f64> {
     /// Orthonormal basis Q (m × r, r data-dependent).
-    pub q: Matrix,
+    pub q: Mat<S>,
     /// Last posterior estimate of ‖A − QQᵀA‖₂ (≤ tol/2 when the finder
     /// stopped on tolerance; above it when the rank cap cut growth short).
     pub est: f64,
@@ -138,13 +150,13 @@ impl AdaptiveSvd {
 /// basis of range(A) `block` columns at a time until the Halko posterior
 /// bound certifies `‖A − QQᵀA‖₂ ≤ tol/2`, capped at `max_rank` (`0` =
 /// min(m, n)). A is touched only through [`LinOp::apply`].
-pub fn adaptive_range<A: LinOp + ?Sized>(
+pub fn adaptive_range<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     tol: f64,
     block: usize,
     max_rank: usize,
     seed: u64,
-) -> AdaptiveRange {
+) -> AdaptiveRange<S> {
     let job = AdaptiveJob { tol, block, max_rank, seed };
     let g = grow_all(a, std::slice::from_ref(&job)).pop().expect("one job in, one out");
     AdaptiveRange { q: g.q, est: g.est, steps: g.steps }
@@ -155,7 +167,11 @@ pub fn adaptive_range<A: LinOp + ?Sized>(
 /// finish with the same small-B SVD as the fixed-rank pipeline.
 /// Implemented as a single-job [`rsvd_adaptive_batch`], for the same
 /// structural-identity reason as [`super::rsvd::rsvd`].
-pub fn rsvd_adaptive<A: LinOp + ?Sized>(a: &A, tol: f64, opts: &AdaptiveOpts) -> AdaptiveSvd {
+pub fn rsvd_adaptive<S: Scalar, A: LinOp<S> + ?Sized>(
+    a: &A,
+    tol: f64,
+    opts: &AdaptiveOpts,
+) -> AdaptiveSvd {
     rsvd_adaptive_batch(a, &[AdaptiveJob::from_opts(tol, opts)], true, opts.threads)
         .pop()
         .expect("one job in, one out")
@@ -170,7 +186,7 @@ pub fn rsvd_adaptive<A: LinOp + ?Sized>(a: &A, tol: f64, opts: &AdaptiveOpts) ->
 /// n×0) and only the singular values are assembled — the m×r×k BLAS-3
 /// `Q·U_B` product is skipped entirely. The values themselves are bitwise
 /// identical either way (same small-B SVD).
-pub fn rsvd_adaptive_batch<A: LinOp + ?Sized>(
+pub fn rsvd_adaptive_batch<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     jobs: &[AdaptiveJob],
     want_vectors: bool,
@@ -183,27 +199,30 @@ pub fn rsvd_adaptive_batch<A: LinOp + ?Sized>(
         // one wide projection over the stacked bases: rows of B belong to
         // columns of Q, and the per-element reduction order of the QᵀA
         // kernels is width-independent, so the slice each job gets back is
-        // bitwise its solo projection
-        let parts: Vec<Matrix> = states.iter().map(|s| s.q.clone()).collect();
-        let qstack = Matrix::hstack(&parts);
-        let b_all = if qstack.cols() == 0 { Matrix::zeros(0, n) } else { a.project(&qstack) };
+        // bitwise its solo projection. The projection runs in the sweep's
+        // precision; the finish below is always f64 (widening is the
+        // identity for an f64 sweep).
+        let parts: Vec<Mat<S>> = states.iter().map(|s| s.q.clone()).collect();
+        let qstack = Mat::hstack(&parts);
+        let b_all = if qstack.cols() == 0 { Mat::zeros(0, n) } else { a.project(&qstack) };
+        let b64 = b_all.widen();
         let mut r0 = 0usize;
         states
             .iter()
             .zip(jobs)
             .map(|(st, job)| {
                 let r1 = r0 + st.q.cols();
-                let b = b_all.submatrix(r0, r1, 0, n);
+                let b = b64.submatrix(r0, r1, 0, n);
                 r0 = r1;
-                finish_one(st, job, &b, m, n, want_vectors)
+                finish_one(&st.q.widen(), st.est, st.steps, job, &b, m, n, want_vectors)
             })
             .collect()
     })
 }
 
 /// Per-job growth state of the shared sweep.
-struct Grow {
-    q: Matrix,
+struct Grow<S: Scalar> {
+    q: Mat<S>,
     est: f64,
     steps: usize,
     done: bool,
@@ -216,10 +235,10 @@ struct Grow {
 /// The shared lockstep growth sweep (module docs). Jobs that met their
 /// tolerance (or rank cap) drop out of later rounds; the wide `apply` per
 /// round covers exactly the survivors.
-fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
+fn grow_all<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow<S>> {
     let (m, n) = a.shape();
     let r = m.min(n);
-    let mut states: Vec<Grow> = jobs
+    let mut states: Vec<Grow<S>> = jobs
         .iter()
         .map(|j| {
             assert!(
@@ -228,7 +247,7 @@ fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
                 j.tol
             );
             Grow {
-                q: Matrix::zeros(m, 0),
+                q: Mat::zeros(m, 0),
                 est: 0.0,
                 steps: 0,
                 done: r == 0,
@@ -248,14 +267,14 @@ fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
             break;
         }
         // fresh per-job probe blocks, stacked for one wide apply
-        let blocks: Vec<Matrix> = active
+        let blocks: Vec<Mat<S>> = active
             .iter()
             .map(|&i| {
                 let st = &states[i];
-                Matrix::gaussian(n, st.block, block_seed(st.seed, st.steps))
+                Mat::gaussian(n, st.block, block_seed(st.seed, st.steps))
             })
             .collect();
-        let y = a.apply(&Matrix::hstack(&blocks));
+        let y = a.apply(&Mat::hstack(&blocks));
         let mut c0 = 0usize;
         for (&i, blk) in active.iter().zip(&blocks) {
             let st = &mut states[i];
@@ -266,7 +285,10 @@ fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
             // both the posterior probe and, if growth continues, the raw
             // material of the next panel
             let e = project_out(&st.q, &yi);
-            st.est = POSTERIOR_FACTOR * max_col_norm(&e);
+            // the product runs in S (identity arithmetic for f64), but the
+            // estimate is kept in f64 so the tol comparison is precision-
+            // independent
+            st.est = (S::from_f64(POSTERIOR_FACTOR) * max_col_norm(&e)).to_f64();
             st.steps += 1;
             if st.est <= st.tol_half {
                 st.done = true; // the current basis already meets tol/2
@@ -275,7 +297,7 @@ fn grow_all<A: LinOp + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec<Grow> {
             } else {
                 let take = st.block.min(st.max_rank - st.q.cols());
                 let panel = orthonormalize(&e.submatrix(0, m, 0, take));
-                st.q = Matrix::hstack(&[st.q.clone(), panel]);
+                st.q = Mat::hstack(&[st.q.clone(), panel]);
             }
         }
     }
@@ -290,20 +312,20 @@ fn block_seed(seed: u64, step: usize) -> u64 {
 
 /// `Y − Q·(QᵀY)` applied twice — classical blocked Gram–Schmidt with
 /// re-orthogonalization, all BLAS-3.
-fn project_out(q: &Matrix, y: &Matrix) -> Matrix {
+fn project_out<S: Scalar>(q: &Mat<S>, y: &Mat<S>) -> Mat<S> {
     if q.cols() == 0 {
         return y.clone();
     }
-    let e = y.add_scaled(-1.0, &matmul(q, &matmul_tn(q, y)));
-    e.add_scaled(-1.0, &matmul(q, &matmul_tn(q, &e)))
+    let e = y.add_scaled(-S::ONE, &matmul(q, &matmul_tn(q, y)));
+    e.add_scaled(-S::ONE, &matmul(q, &matmul_tn(q, &e)))
 }
 
 /// Largest Euclidean column norm of `e` (the `max_j ‖E_j‖` of the
 /// posterior bound).
-fn max_col_norm(e: &Matrix) -> f64 {
-    let mut best = 0.0f64;
+fn max_col_norm<S: Scalar>(e: &Mat<S>) -> S {
+    let mut best = S::ZERO;
     for j in 0..e.cols() {
-        let mut s = 0.0;
+        let mut s = S::ZERO;
         for i in 0..e.rows() {
             let x = e[(i, j)];
             s += x * x;
@@ -313,32 +335,35 @@ fn max_col_norm(e: &Matrix) -> f64 {
     best
 }
 
-/// The small-B finish: SVD of the job's projection slice, trimmed at
-/// σ > tol/2 so the truncation cannot spend more than the half of the
-/// budget the stopping rule left it. Values-only jobs skip the m×r×k
-/// left-factor assembly (the values are the same bits either way).
+/// The small-B finish, always in `f64`: SVD of the job's projection slice,
+/// trimmed at σ > tol/2 so the truncation cannot spend more than the half
+/// of the budget the stopping rule left it. Values-only jobs skip the
+/// m×r×k left-factor assembly (the values are the same bits either way).
+#[allow(clippy::too_many_arguments)]
 fn finish_one(
-    st: &Grow,
+    q64: &Matrix,
+    est: f64,
+    steps: usize,
     job: &AdaptiveJob,
     b: &Matrix,
     m: usize,
     n: usize,
     want_vectors: bool,
 ) -> AdaptiveSvd {
-    if st.q.cols() == 0 {
+    if q64.cols() == 0 {
         let empty = Svd { u: Matrix::zeros(m, 0), s: Vec::new(), v: Matrix::zeros(n, 0) };
-        return AdaptiveSvd { svd: empty, est: st.est, steps: st.steps };
+        return AdaptiveSvd { svd: empty, est, steps };
     }
     let sb = svd(b);
     let k = sb.s.iter().take_while(|&&x| x > job.tol * 0.5).count();
     let s = sb.s[..k].to_vec();
     let out = if want_vectors {
         let ub = sb.u.submatrix(0, sb.u.rows(), 0, k);
-        Svd { u: matmul(&st.q, &ub), s, v: sb.v.submatrix(0, sb.v.rows(), 0, k) }
+        Svd { u: matmul(q64, &ub), s, v: sb.v.submatrix(0, sb.v.rows(), 0, k) }
     } else {
         Svd { u: Matrix::zeros(m, 0), s, v: Matrix::zeros(n, 0) }
     };
-    AdaptiveSvd { svd: out, est: st.est, steps: st.steps }
+    AdaptiveSvd { svd: out, est, steps }
 }
 
 #[cfg(test)]
@@ -505,5 +530,34 @@ mod tests {
         // the basis is orthonormal
         let qtq = matmul_tn(&rng.q, &rng.q);
         assert!(qtq.max_diff(&Matrix::eye(rng.q.cols())) < 1e-9);
+    }
+
+    #[test]
+    fn f32_sweep_tracks_f64_on_fast_decay() {
+        // the f32 instantiation is a library-level flavor (the wire keeps
+        // adaptive f64-only): it must discover a comparable rank and
+        // deliver leading values at f32-grade accuracy, with the f64
+        // finish returning well-orthonormal factors
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 29);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let tol = 1e-2;
+        let r64 = rsvd_adaptive(&a, tol, &AdaptiveOpts::default());
+        let r32 = rsvd_adaptive(&a32, tol, &AdaptiveOpts::default());
+        assert!(r32.rank() > 0 && r32.rank() < 30);
+        let k = r32.rank().min(r64.rank());
+        for i in 0..k {
+            assert!(
+                (r32.svd.s[i] - r64.svd.s[i]).abs() < 1e-3 * r64.svd.s[0],
+                "σ{i}: f32 {} vs f64 {}",
+                r32.svd.s[i],
+                r64.svd.s[i]
+            );
+        }
+        if r32.rank() > 0 {
+            // Q is grown in f32, so its widened Gram is I + O(f32 eps):
+            // the factors are orthonormal to single precision, not double
+            let utu = matmul_tn(&r32.svd.u, &r32.svd.u);
+            assert!(utu.max_diff(&Matrix::eye(r32.rank())) < 1e-5);
+        }
     }
 }

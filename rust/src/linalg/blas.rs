@@ -2,17 +2,23 @@
 //! contrasts against BLAS-3; the iterative baselines (power method, Lanczos,
 //! bidiagonal QR) live almost entirely here, which is precisely why they do
 //! not scale on throughput-oriented hardware.
+//!
+//! The BLAS-1 kernels (`dot`, `axpy`, `nrm2`, `scal`, `householder`) are
+//! generic over [`Scalar`] so the factorizations backing the f32 range
+//! finder reuse them; the BLAS-2 routines stay `f64`-only (the iterative
+//! baselines they serve have no reduced-precision flavor).
 
+use super::scalar::Scalar;
 use super::Matrix;
 
 /// dot(x, y) with 4-way unrolled accumulation (helps the scalar core and
 /// keeps rounding behaviour stable across call sites).
 #[inline]
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> S {
     debug_assert_eq!(x.len(), y.len());
     let n = x.len();
     let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
     for c in 0..chunks {
         let i = c * 4;
         s0 += x[i] * y[i];
@@ -29,26 +35,28 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
 
 /// y ← y + alpha x
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+        *yi += alpha * *xi;
     }
 }
 
 /// Euclidean norm with scaling guard against overflow/underflow
 /// (LAPACK dnrm2 style).
-pub fn nrm2(x: &[f64]) -> f64 {
-    let mut scale = 0.0f64;
-    let mut ssq = 1.0f64;
+pub fn nrm2<S: Scalar>(x: &[S]) -> S {
+    let mut scale = S::ZERO;
+    let mut ssq = S::ONE;
     for &v in x {
-        if v != 0.0 {
+        if v != S::ZERO {
             let a = v.abs();
             if scale < a {
-                ssq = 1.0 + ssq * (scale / a).powi(2);
+                let t = scale / a;
+                ssq = S::ONE + ssq * (t * t);
                 scale = a;
             } else {
-                ssq += (a / scale).powi(2);
+                let t = a / scale;
+                ssq += t * t;
             }
         }
     }
@@ -57,7 +65,7 @@ pub fn nrm2(x: &[f64]) -> f64 {
 
 /// x ← alpha x
 #[inline]
-pub fn scal(alpha: f64, x: &mut [f64]) {
+pub fn scal<S: Scalar>(alpha: S, x: &mut [S]) {
     for v in x {
         *v *= alpha;
     }
@@ -108,27 +116,27 @@ pub fn ger(a: &mut Matrix, alpha: f64, x: &[f64], y: &[f64]) {
 
 /// Householder reflector for a vector: returns (v, tau, beta) such that
 /// (I - tau v vᵀ) x = beta e₁ with v[0] = 1. LAPACK dlarfg convention.
-pub fn householder(x: &[f64]) -> (Vec<f64>, f64, f64) {
+pub fn householder<S: Scalar>(x: &[S]) -> (Vec<S>, S, S) {
     let n = x.len();
     let mut v = x.to_vec();
     if n == 0 {
-        return (v, 0.0, 0.0);
+        return (v, S::ZERO, S::ZERO);
     }
     let alpha = x[0];
     let xnorm = nrm2(&x[1..]);
-    if xnorm == 0.0 {
+    if xnorm == S::ZERO {
         // already e1-aligned: no reflection needed
         let beta = alpha;
-        v[0] = 1.0;
-        return (v, 0.0, beta);
+        v[0] = S::ONE;
+        return (v, S::ZERO, beta);
     }
     let beta = -alpha.signum() * (alpha * alpha + xnorm * xnorm).sqrt();
     let tau = (beta - alpha) / beta;
-    let inv = 1.0 / (alpha - beta);
+    let inv = S::ONE / (alpha - beta);
     for vi in v.iter_mut().skip(1) {
         *vi *= inv;
     }
-    v[0] = 1.0;
+    v[0] = S::ONE;
     (v, tau, beta)
 }
 
@@ -147,6 +155,20 @@ mod tests {
         // overflow guard
         let big = [1e200, 1e200];
         assert!((nrm2(&big) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-15);
+    }
+
+    #[test]
+    fn f32_blas1_matches_f64_shapes() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut y = [5.0f32, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&x, &y), 35.0f32);
+        axpy(2.0f32, &x, &mut y);
+        assert_eq!(y, [7.0f32, 8.0, 9.0, 10.0, 11.0]);
+        assert!((nrm2(&[3.0f32, 4.0]) - 5.0).abs() < 1e-6);
+        // f32 overflow guard: naive sum-of-squares would be inf at 1e20
+        let big = [1e20f32, 1e20];
+        let want = 1e20f32 * 2f32.sqrt();
+        assert!(((nrm2(&big) - want) / want).abs() < 1e-6);
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! Cholesky factorization and triangular solves — the small-matrix core of
 //! CholeskyQR2, which is how the pipeline turns panel orthogonalization
-//! (classically a BLAS-2 Householder sweep) into BLAS-3 work.
+//! (classically a BLAS-2 Householder sweep) into BLAS-3 work. The
+//! factorization and the row-wise trsm are generic over [`Scalar`] so the
+//! f32 range finder runs the same CholeskyQR2; the vector solves stay
+//! `f64`-only.
 
+use super::matrix::Mat;
+use super::scalar::Scalar;
 use super::Matrix;
 
 /// Errors from factorizations.
@@ -28,10 +33,10 @@ impl std::error::Error for LinalgError {}
 
 /// Lower-triangular Cholesky factor L with A = L·Lᵀ.
 /// Right-looking, row-major friendly.
-pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
+pub fn cholesky<S: Scalar>(a: &Mat<S>) -> Result<Mat<S>, LinalgError> {
     let n = a.rows();
     assert_eq!(a.cols(), n, "cholesky needs square input");
-    let mut l = Matrix::zeros(n, n);
+    let mut l = Mat::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {
             let mut s = a[(i, j)];
@@ -39,7 +44,7 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
                 s -= l[(i, k)] * l[(j, k)];
             }
             if i == j {
-                if s <= 0.0 || !s.is_finite() {
+                if s <= S::ZERO || !s.is_finite() {
                     return Err(LinalgError::NotPositiveDefinite(i));
                 }
                 l[(i, i)] = s.sqrt();
@@ -58,7 +63,7 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
 /// Each row of B is an independent n² triangular solve, so the BLAS-3 team
 /// (see [`super::threading`]) splits the rows; per-row arithmetic is
 /// unchanged, keeping results bitwise independent of the team size.
-pub fn trsm_right_lt(b: &mut Matrix, l: &Matrix) {
+pub fn trsm_right_lt<S: Scalar>(b: &mut Mat<S>, l: &Mat<S>) {
     let (m, n) = b.shape();
     assert_eq!(l.shape(), (n, n));
     if m == 0 || n == 0 {
@@ -66,7 +71,7 @@ pub fn trsm_right_lt(b: &mut Matrix, l: &Matrix) {
     }
     // Row i of X solves x·Lᵀ = b i.e. for each column j ascending:
     // x[j] = (b[j] - Σ_{k<j} x[k]·Lᵀ[k,j]) / Lᵀ[j,j]; Lᵀ[k,j] = L[j,k]
-    let solve_rows = |band: &mut [f64]| {
+    let solve_rows = |band: &mut [S]| {
         for row in band.chunks_mut(n) {
             for j in 0..n {
                 let mut s = row[j];

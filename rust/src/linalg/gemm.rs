@@ -4,7 +4,11 @@
 //! device side the analogous tiling is done by the L1 Pallas kernel
 //! (`python/compile/kernels/matmul.py`). This host implementation is the
 //! parallel, packed, cache-blocked row-major GEMM used by every pure-rust
-//! baseline and by the native fallback solver.
+//! baseline and by the native fallback solver. It is generic over the
+//! [`Scalar`] element type: the `f64` instantiation is bit-for-bit the
+//! historical double-precision path; the `f32` instantiation runs the same
+//! schedule at half the footprint (~2× effective bandwidth — the host
+//! analogue of the paper's tensor-core story).
 //!
 //! Schedule (BLIS-style three-level blocking, see DESIGN.md §GEMM):
 //!
@@ -19,8 +23,10 @@
 //!
 //! The innermost MR×nc micro-kernel is dispatched at runtime via
 //! [`super::kernel`]: the portable scalar loop (MR=4, bit-for-bit the
-//! historical implementation) or the AVX2+FMA register-blocked kernel
-//! (MR=6, NR=8) on x86-64 hosts that support it; `RSVD_KERNEL` and
+//! historical implementation at each precision) or the per-scalar AVX2+FMA
+//! register-blocked kernel (MR=6, NR=8 for both element types — two
+//! `__m256d` per row for f64, one 8-lane `__m256` for f32; bodies in
+//! [`super::scalar`]) on x86-64 hosts that support it; `RSVD_KERNEL` and
 //! [`super::kernel::with_kernel`] select between them. MC is rounded down
 //! to a whole number of micro-panels per kernel so ragged panels only ever
 //! appear at the end of a worker's row range.
@@ -32,14 +38,15 @@
 //! the k-reduction order per element (KC blocks ascending, then k ascending
 //! within a block) does not depend on the partition — or, for the AVX2
 //! kernel, on the micro-panel height or column-block geometry — results are
-//! **bitwise identical for any thread count** under a fixed kernel — the
-//! determinism contract the coordinator and the tier-1 suite rely on.
-//! Calls below the flop threshold run serially on the calling thread with
-//! the same schedule.
+//! **bitwise identical for any thread count** under a fixed kernel and a
+//! fixed scalar type — the determinism contract the coordinator and the
+//! tier-1 suite rely on. Calls below the flop threshold run serially on the
+//! calling thread with the same schedule.
 
 use super::kernel::{self, Kernel};
+use super::matrix::Mat;
+use super::scalar::Scalar;
 use super::threading::{partition, partition_triangular, scoped_bands, Parallelism};
-use super::Matrix;
 
 /// Reduction (k) panel depth: B̃ rows streamed per pack, Ã working set
 /// depth. Public because the sparse SpMM kernels replay the same
@@ -53,20 +60,20 @@ const MC: usize = 128;
 const NC: usize = 1024;
 
 /// C ← alpha·A·B + beta·C. Shapes: A(m×k), B(k×n), C(m×n).
-pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+pub fn gemm<S: Scalar>(alpha: S, a: &Mat<S>, b: &Mat<S>, beta: S, c: &mut Mat<S>) {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "gemm inner dims {k} vs {kb}");
     assert_eq!(c.shape(), (m, n), "gemm output shape");
 
-    if beta != 1.0 {
-        if beta == 0.0 {
-            c.as_mut_slice().fill(0.0);
+    if beta != S::ONE {
+        if beta == S::ZERO {
+            c.as_mut_slice().fill(S::ZERO);
         } else {
             c.scale(beta);
         }
     }
-    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+    if alpha == S::ZERO || m == 0 || n == 0 || k == 0 {
         return;
     }
 
@@ -90,24 +97,25 @@ pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
 
 /// One worker's share: the full packed schedule over C rows [i0, i1).
 /// `c_band` holds exactly those rows (row-major, width n).
-fn gemm_rows(
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows<S: Scalar>(
     kern: Kernel,
-    alpha: f64,
-    a: &Matrix,
-    bs: &[f64],
+    alpha: S,
+    a: &Mat<S>,
+    bs: &[S],
     n: usize,
     k: usize,
     i0: usize,
     i1: usize,
-    c_band: &mut [f64],
+    c_band: &mut [S],
 ) {
     let mr = kern.mr();
     // whole micro-panels per A block: 128 for MR=4 (the historical MC),
     // 126 for MR=6 — a ragged panel can then only be the block's last
     let mc_max = (MC / mr) * mr;
-    let mut bpack = vec![0.0; KC.min(k) * NC.min(n)];
+    let mut bpack = vec![S::ZERO; KC.min(k) * NC.min(n)];
     // Ã holds full MR-high micro-panels, so round the block height up
-    let mut apack = vec![0.0; mc_max.min(i1 - i0).div_ceil(mr) * mr * KC.min(k)];
+    let mut apack = vec![S::ZERO; mc_max.min(i1 - i0).div_ceil(mr) * mr * KC.min(k)];
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for kk0 in (0..k).step_by(KC) {
@@ -124,7 +132,15 @@ fn gemm_rows(
 
 /// B̃ ← B[kk0..kk0+kc, jc..jc+nc], rows made contiguous (stride n → nc).
 #[inline]
-fn pack_b(bs: &[f64], n: usize, kk0: usize, kc: usize, jc: usize, nc: usize, bpack: &mut [f64]) {
+fn pack_b<S: Scalar>(
+    bs: &[S],
+    n: usize,
+    kk0: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &mut [S],
+) {
     for kk in 0..kc {
         let src = &bs[(kk0 + kk) * n + jc..(kk0 + kk) * n + jc + nc];
         bpack[kk * nc..kk * nc + nc].copy_from_slice(src);
@@ -136,7 +152,15 @@ fn pack_b(bs: &[f64], n: usize, kk0: usize, kc: usize, jc: usize, nc: usize, bpa
 /// so the micro-kernel reads its coefficients with unit stride. Ragged
 /// final panels are zero-padded (the pad slots are never read back into C).
 #[inline]
-fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, mr: usize, apack: &mut [f64]) {
+fn pack_a<S: Scalar>(
+    a: &Mat<S>,
+    ic: usize,
+    mc: usize,
+    kk0: usize,
+    kc: usize,
+    mr: usize,
+    apack: &mut [S],
+) {
     for (p, r0) in (0..mc).step_by(mr).enumerate() {
         let h = mr.min(mc - r0);
         let base = p * mr * kc;
@@ -148,7 +172,7 @@ fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, mr: usize, ap
                 }
             } else {
                 for kk in 0..kc {
-                    apack[base + kk * mr + r] = 0.0;
+                    apack[base + kk * mr + r] = S::ZERO;
                 }
             }
         }
@@ -159,15 +183,16 @@ fn pack_a(a: &Matrix, ic: usize, mc: usize, kk0: usize, kc: usize, mr: usize, ap
 /// (mc×kc)·(kc×nc) block, sweeping mr-row micro-panels and dispatching
 /// each to the selected micro-kernel.
 #[inline]
-fn macro_kernel(
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel<S: Scalar>(
     kern: Kernel,
-    alpha: f64,
-    apack: &[f64],
-    bpack: &[f64],
+    alpha: S,
+    apack: &[S],
+    bpack: &[S],
     mc: usize,
     nc: usize,
     kc: usize,
-    c_band: &mut [f64],
+    c_band: &mut [S],
     ir_base: usize,
     jc: usize,
     n: usize,
@@ -180,33 +205,32 @@ fn macro_kernel(
             Kernel::Scalar => {
                 micro_kernel_scalar(alpha, panel, bpack, h, mr, nc, kc, c_band, ir_base + r0, jc, n)
             }
-            #[cfg(target_arch = "x86_64")]
             // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
-            // with_kernel after a positive AVX2+FMA feature check.
+            // with_kernel after a positive AVX2+FMA feature check; the
+            // per-scalar impls in `scalar.rs` unreachable!() off x86-64.
             Kernel::Avx2 => unsafe {
-                avx2::micro_kernel(alpha, panel, bpack, h, nc, kc, c_band, ir_base + r0, jc, n)
+                S::gemm_micro_avx2(alpha, panel, bpack, h, nc, kc, c_band, ir_base + r0, jc, n)
             },
-            #[cfg(not(target_arch = "x86_64"))]
-            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
         }
     }
 }
 
-/// Portable mr×nc micro-kernel — bit-for-bit the historical scalar loop:
-/// for each k, broadcast the (≤mr) A coefficients and axpy the B̃ row into
-/// the C rows — unit stride on B̃ and C, autovectorizes to FMA. Per C
-/// element the k-order is strictly ascending, independent of panel height
-/// or thread partition (the determinism contract).
+/// Portable mr×nc micro-kernel — bit-for-bit the historical scalar loop at
+/// each precision: for each k, broadcast the (≤mr) A coefficients and axpy
+/// the B̃ row into the C rows — unit stride on B̃ and C, autovectorizes to
+/// FMA. Per C element the k-order is strictly ascending, independent of
+/// panel height or thread partition (the determinism contract).
 #[inline(always)]
-fn micro_kernel_scalar(
-    alpha: f64,
-    apanel: &[f64],
-    bpack: &[f64],
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_scalar<S: Scalar>(
+    alpha: S,
+    apanel: &[S],
+    bpack: &[S],
     h: usize,
     mr: usize,
     nc: usize,
     kc: usize,
-    c_band: &mut [f64],
+    c_band: &mut [S],
     row0: usize,
     jc: usize,
     n: usize,
@@ -220,115 +244,16 @@ fn micro_kernel_scalar(
             let cf = alpha * coef[r];
             let crow = &mut c_band[(row0 + r) * n + jc..(row0 + r) * n + jc + nc];
             for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += cf * bv;
+                *cv += cf * *bv;
             }
         }
-    }
-}
-
-/// Explicit AVX2+FMA micro-kernels (x86-64 only; gated at runtime by
-/// [`super::kernel`]).
-#[cfg(target_arch = "x86_64")]
-mod avx2 {
-    use std::arch::x86_64::{
-        __m256d, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd,
-        _mm256_storeu_pd,
-    };
-
-    /// Register-tile height: 6 C rows per micro-panel.
-    pub const MR: usize = 6;
-    /// Register-tile width: 8 C columns = two 4-lane f64 vectors. With
-    /// 6×2 accumulators + 2 B vectors + 1 broadcast coefficient the tile
-    /// uses 15 of the 16 ymm registers — the classic double-precision
-    /// AVX2 GEMM shape.
-    pub const NR: usize = 8;
-
-    /// AVX2 micro-kernel: C[row0+r, jc..jc+nc] += alpha · Ã panel · B̃ for
-    /// r < h.
-    ///
-    /// Arithmetic contract (per C element, independent of the panel height
-    /// h, the thread partition, and the column-block geometry): the kc
-    /// products are fused-multiply-accumulated in ascending-k order into a
-    /// fresh accumulator, then folded into C once as `c = fma(alpha, acc,
-    /// c)`. Pad rows of a ragged panel (r ≥ h) are computed on the packed
-    /// zero coefficients and never stored, so a row's bits do not depend
-    /// on the height of the panel it landed in. The < NR column tail uses
-    /// scalar `f64::mul_add` — IEEE-identical to one fma lane — so an
-    /// element's bits never depend on which path computed it either.
-    ///
-    /// # Safety
-    /// Caller must ensure AVX2 and FMA are available, `apanel.len() ≥
-    /// MR·kc`, `bpack.len() ≥ kc·nc`, and the C rows `row0..row0+h` with
-    /// columns `jc..jc+nc` lie inside `c_band` (width n).
-    #[target_feature(enable = "avx2,fma")]
-    pub unsafe fn micro_kernel(
-        alpha: f64,
-        apanel: &[f64],
-        bpack: &[f64],
-        h: usize,
-        nc: usize,
-        kc: usize,
-        c_band: &mut [f64],
-        row0: usize,
-        jc: usize,
-        n: usize,
-    ) {
-        debug_assert!((1..=MR).contains(&h));
-        debug_assert!(apanel.len() >= MR * kc);
-        debug_assert!(bpack.len() >= kc * nc);
-        debug_assert!(c_band.len() >= (row0 + h - 1) * n + jc + nc);
-        let ap = apanel.as_ptr();
-        let bp = bpack.as_ptr();
-        let cp = c_band.as_mut_ptr();
-        let mut j = 0;
-        while j + NR <= nc {
-            let mut acc = [[_mm256_setzero_pd(); 2]; MR];
-            for kk in 0..kc {
-                let b0 = _mm256_loadu_pd(bp.add(kk * nc + j));
-                let b1 = _mm256_loadu_pd(bp.add(kk * nc + j + 4));
-                for r in 0..MR {
-                    let av = _mm256_set1_pd(*ap.add(kk * MR + r));
-                    acc[r][0] = _mm256_fmadd_pd(av, b0, acc[r][0]);
-                    acc[r][1] = _mm256_fmadd_pd(av, b1, acc[r][1]);
-                }
-            }
-            let alphav = _mm256_set1_pd(alpha);
-            for (r, a) in acc.iter().take(h).enumerate() {
-                let crow = cp.add((row0 + r) * n + jc + j);
-                store_fma(crow, alphav, a[0]);
-                store_fma(crow.add(4), alphav, a[1]);
-            }
-            j += NR;
-        }
-        // ragged column tail: same per-element op sequence, scalar fma
-        for r in 0..h {
-            for jj in j..nc {
-                let mut acc = 0.0f64;
-                for kk in 0..kc {
-                    acc = apanel[kk * MR + r].mul_add(bpack[kk * nc + jj], acc);
-                }
-                let cv = &mut c_band[(row0 + r) * n + jc + jj];
-                *cv = alpha.mul_add(acc, *cv);
-            }
-        }
-    }
-
-    /// `c[0..4] = fma(alpha, acc, c[0..4])` at `cp`.
-    ///
-    /// # Safety
-    /// AVX2+FMA available; `cp` valid for 4 f64 reads and writes.
-    #[inline(always)]
-    #[target_feature(enable = "avx2,fma")]
-    unsafe fn store_fma(cp: *mut f64, alphav: __m256d, acc: __m256d) {
-        let c = _mm256_loadu_pd(cp);
-        _mm256_storeu_pd(cp, _mm256_fmadd_pd(alphav, acc, c));
     }
 }
 
 /// C = A·B (allocating convenience).
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let mut c = Matrix::zeros(a.rows(), b.cols());
-    gemm(1.0, a, b, 0.0, &mut c);
+pub fn matmul<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm(S::ONE, a, b, S::ZERO, &mut c);
     c
 }
 
@@ -337,8 +262,8 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// splits the rows of C (= columns of A): each worker owns C[j0..j1, :] and
 /// sweeps all of A/B, so the i-reduction order per element matches the
 /// serial schedule exactly for any thread count.
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    let mut c = Matrix::zeros(a.cols(), b.cols());
+pub fn matmul_tn<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
+    let mut c = Mat::zeros(a.cols(), b.cols());
     matmul_tn_acc(a, b, &mut c);
     c
 }
@@ -351,7 +276,7 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 /// bitwise seam the out-of-core tiled backend ([`super::tiled`]) streams
 /// panels through. (Kernel-independent: this entry point always runs the
 /// scalar schedule, so its bits are frozen across `RSVD_KERNEL` settings.)
-pub fn matmul_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+pub fn matmul_tn_acc<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
     let (m, ka) = a.shape();
     let (mb, n) = b.shape();
     assert_eq!(m, mb, "matmul_tn row dims");
@@ -363,15 +288,15 @@ pub fn matmul_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let team = Parallelism::current().team_for_flops(flops);
     let chunks = if team > 1 { partition(ka, team, 1) } else { Vec::new() };
 
-    let tn_rows = |j0: usize, j1: usize, band: &mut [f64]| {
+    let tn_rows = |j0: usize, j1: usize, band: &mut [S]| {
         for i in 0..m {
             let arow = &a.row(i)[j0..j1];
             let brow = b.row(i);
             for (jj, &aij) in arow.iter().enumerate() {
-                if aij != 0.0 {
+                if aij != S::ZERO {
                     let crow = &mut band[jj * n..jj * n + n];
                     for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aij * bv;
+                        *cv += aij * *bv;
                     }
                 }
             }
@@ -387,11 +312,11 @@ pub fn matmul_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// C = A·Bᵀ. Inner products of rows — unit stride on both operands; the
 /// team splits the rows of C.
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+pub fn matmul_nt<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_nt inner dims");
-    let mut c = Matrix::zeros(m, n);
+    let mut c = Mat::zeros(m, n);
     if m == 0 || n == 0 {
         return c;
     }
@@ -399,7 +324,7 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let team = Parallelism::current().team_for_flops(flops);
     let chunks = if team > 1 { partition(m, team, 1) } else { Vec::new() };
 
-    let nt_rows = |i0: usize, i1: usize, band: &mut [f64]| {
+    let nt_rows = |i0: usize, i1: usize, band: &mut [S]| {
         for i in i0..i1 {
             let arow = a.row(i);
             let crow = &mut band[(i - i0) * n..(i - i0) * n + n];
@@ -421,9 +346,9 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 /// and mirroring — the BLAS dsyrk pattern CholeskyQR relies on. The team
 /// splits the rows of G with a triangular partition (row j costs ~(n−j)
 /// axpys), then the mirror pass runs serially.
-pub fn gram_t(a: &Matrix) -> Matrix {
+pub fn gram_t<S: Scalar>(a: &Mat<S>) -> Mat<S> {
     let (m, n) = a.shape();
-    let mut g = Matrix::zeros(n, n);
+    let mut g = Mat::zeros(n, n);
     if m == 0 || n == 0 {
         return g;
     }
@@ -432,15 +357,15 @@ pub fn gram_t(a: &Matrix) -> Matrix {
     let team = Parallelism::current().team_for_flops(flops);
     let chunks = if team > 1 { partition_triangular(n, team) } else { Vec::new() };
 
-    let upper_rows = |j0: usize, j1: usize, band: &mut [f64]| {
+    let upper_rows = |j0: usize, j1: usize, band: &mut [S]| {
         for i in 0..m {
             let arow = a.row(i);
             for j in j0..j1 {
                 let aij = arow[j];
-                if aij != 0.0 {
+                if aij != S::ZERO {
                     let grow = &mut band[(j - j0) * n + j..(j - j0) * n + n];
                     for (gv, av) in grow.iter_mut().zip(&arow[j..]) {
-                        *gv += aij * av;
+                        *gv += aij * *av;
                     }
                 }
             }
@@ -464,9 +389,9 @@ pub fn gram_t(a: &Matrix) -> Matrix {
 
 /// Symmetric Gram matrix G = A·Aᵀ (m×m), upper triangle + mirror, with the
 /// same triangular row partition as [`gram_t`].
-pub fn gram_n(a: &Matrix) -> Matrix {
+pub fn gram_n<S: Scalar>(a: &Mat<S>) -> Mat<S> {
     let (m, k) = a.shape();
-    let mut g = Matrix::zeros(m, m);
+    let mut g = Mat::zeros(m, m);
     if m == 0 {
         return g;
     }
@@ -474,7 +399,7 @@ pub fn gram_n(a: &Matrix) -> Matrix {
     let team = Parallelism::current().team_for_flops(flops);
     let chunks = if team > 1 { partition_triangular(m, team) } else { Vec::new() };
 
-    let upper_rows = |i0: usize, i1: usize, band: &mut [f64]| {
+    let upper_rows = |i0: usize, i1: usize, band: &mut [S]| {
         for i in i0..i1 {
             let ri = a.row(i);
             for j in i..m {
@@ -502,6 +427,7 @@ mod tests {
     use super::*;
     use crate::linalg::kernel::{avx2_available, with_kernel};
     use crate::linalg::threading::with_threads;
+    use crate::linalg::Matrix;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
         let mut c = Matrix::zeros(a.rows(), b.cols());
@@ -684,6 +610,50 @@ mod tests {
             let scale = (k as f64).sqrt();
             let d = sc.max_diff(&vx);
             assert!(d < 1e-13 * scale, "{m}x{k}x{n}: |scalar - avx2| = {d}");
+        }
+    }
+
+    #[test]
+    fn f32_gemm_matches_naive() {
+        // the f32 instantiation of the same schedule, both kernels, with a
+        // tolerance scaled to single-precision accumulation
+        let naive32 = |a: &Mat<f32>, b: &Mat<f32>| {
+            let mut c = Mat::<f32>::zeros(a.rows(), b.cols());
+            for i in 0..a.rows() {
+                for j in 0..b.cols() {
+                    let mut s = 0.0f32;
+                    for k in 0..a.cols() {
+                        s += a[(i, k)] * b[(k, j)];
+                    }
+                    c[(i, j)] = s;
+                }
+            }
+            c
+        };
+        for kern in kernels() {
+            for &(m, k, n) in &[(1, 1, 1), (6, KC, 8), (17, 33, 9), (130, 511, 70)] {
+                let a = Mat::<f32>::gaussian(m, k, 1);
+                let b = Mat::<f32>::gaussian(k, n, 2);
+                let c = with_kernel(kern, || matmul(&a, &b));
+                let d = c.max_diff(&naive32(&a, &b));
+                let tol = 1e-5f32 * (k as f32).sqrt();
+                assert!(d < tol, "[{}] shape {m}x{k}x{n}: {d}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn f32_parallel_bitwise_matches_serial_per_kernel() {
+        // the determinism contract holds per scalar type too
+        for kern in kernels() {
+            let a = Mat::<f32>::gaussian(257, 193, 11);
+            let b = Mat::<f32>::gaussian(193, 129, 12);
+            let serial = with_kernel(kern, || with_threads(1, || matmul(&a, &b)));
+            for t in [2, 3, crate::linalg::threading::available_threads()] {
+                let par = with_kernel(kern, || with_threads(t, || matmul(&a, &b)));
+                let nm = kern.name();
+                assert_eq!(serial.as_slice(), par.as_slice(), "[{nm}] t={t}");
+            }
         }
     }
 

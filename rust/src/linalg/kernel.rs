@@ -8,8 +8,12 @@
 //! * [`Kernel::Scalar`] — the portable loop, bit-for-bit the historical
 //!   implementation on every platform. Always available.
 //! * [`Kernel::Avx2`] — explicit `std::arch` AVX2+FMA microkernels with a
-//!   wider register-blocked shape (MR=6, NR=8 for GEMM). Requires an
-//!   x86-64 CPU with AVX2 and FMA; selected automatically when present.
+//!   wider register-blocked shape (MR=6, NR=8 for GEMM, at *both* scalar
+//!   types: the f64 tile covers NR with two `__m256d` vectors per row, the
+//!   f32 tile with a single `__m256` — twice the elements per fma, which
+//!   is where the ~2× f32 GEMM throughput comes from; bodies live in
+//!   [`super::scalar`]). Requires an x86-64 CPU with AVX2 and FMA;
+//!   selected automatically when present.
 //!
 //! Selection mirrors the [`super::threading`] config exactly:
 //!
@@ -85,7 +89,8 @@ impl Kernel {
 
     /// Micro-panel height MR for the packed GEMM schedule: the scalar loop
     /// keeps its historical MR=4; the AVX2 kernel uses the classic 6×8
-    /// double-precision register tile (12 accumulator vectors).
+    /// register tile at both scalar types (12 accumulator vectors for f64,
+    /// 6 for f32 — same geometry, so the schedule is precision-agnostic).
     pub fn mr(&self) -> usize {
         match self {
             Kernel::Scalar => 4,

@@ -1,41 +1,51 @@
-//! Dense row-major `f64` matrix — the substrate type every solver in this
-//! crate operates on. Row-major is chosen to match XLA's default literal
-//! layout so `runtime/` can marshal buffers without transposition.
+//! Dense row-major matrix — the substrate type every solver in this
+//! crate operates on, generic over the element type via
+//! [`Scalar`](super::scalar::Scalar) (`f64` and `f32`). Row-major is
+//! chosen to match XLA's default literal layout so `runtime/` can marshal
+//! buffers without transposition. [`Matrix`] is the historical `f64`
+//! alias; every pre-existing call site still reads (and compiles)
+//! unchanged against it.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-/// Dense row-major matrix of `f64`.
+use super::scalar::Scalar;
+
+/// Dense row-major matrix over a [`Scalar`] element type.
 #[derive(Clone, PartialEq)]
-pub struct Matrix {
+pub struct Mat<S: Scalar> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl Matrix {
+/// The historical double-precision matrix — an alias so every existing
+/// `f64` call site keeps its exact spelling (and its exact bits).
+pub type Matrix = Mat<f64>;
+
+impl<S: Scalar> Mat<S> {
     /// Zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        Self { rows, cols, data: vec![S::ZERO; rows * cols] }
     }
 
     /// Identity.
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = S::ONE;
         }
         m
     }
 
     /// From an existing row-major buffer.
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
         assert_eq!(data.len(), rows * cols, "buffer size mismatch");
         Self { rows, cols, data }
     }
 
     /// From a closure f(i, j).
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -46,14 +56,21 @@ impl Matrix {
     }
 
     /// Standard-Gaussian matrix from the Philox stream (the host-side Ω).
+    ///
+    /// The variates are always generated at `f64` and then narrowed with
+    /// [`Scalar::from_f64`]: for `f64` that is the historical stream
+    /// bit-for-bit, and for `f32` the *same* draw narrowed — so an f32 or
+    /// mixed-precision sketch samples the identical Gaussian panel its
+    /// f64 twin would, which is what makes the `mixed` flavor's f64
+    /// refinement a refinement of the same subspace (docs/NUMERICS.md).
     pub fn gaussian(rows: usize, cols: usize, seed: u64) -> Self {
-        let mut m = Self::zeros(rows, cols);
-        crate::rng::fill_gaussian(seed, &mut m.data);
-        m
+        let mut buf = vec![0.0f64; rows * cols];
+        crate::rng::fill_gaussian(seed, &mut buf);
+        Self { rows, cols, data: buf.into_iter().map(S::from_f64).collect() }
     }
 
     /// Diagonal matrix from a slice (rectangular allowed).
-    pub fn diag(rows: usize, cols: usize, d: &[f64]) -> Self {
+    pub fn diag(rows: usize, cols: usize, d: &[S]) -> Self {
         let mut m = Self::zeros(rows, cols);
         for (i, &v) in d.iter().enumerate().take(rows.min(cols)) {
             m[(i, i)] = v;
@@ -81,38 +98,38 @@ impl Matrix {
 
     #[inline]
     /// The row-major backing slice.
-    pub fn as_slice(&self) -> &[f64] {
+    pub fn as_slice(&self) -> &[S] {
         &self.data
     }
 
     #[inline]
     /// The row-major backing slice, mutably.
-    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
         &mut self.data
     }
 
     /// Consume into the row-major backing vector.
-    pub fn into_vec(self) -> Vec<f64> {
+    pub fn into_vec(self) -> Vec<S> {
         self.data
     }
 
     /// Borrow row i as a slice.
     #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> &[S] {
         debug_assert!(i < self.rows);
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
     /// Mutably borrow row i as a slice.
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
         debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     /// Copy of column j — one strided walk over the backing slice instead
     /// of per-element (i, j) indexing (no repeated offset multiplies).
-    pub fn col(&self, j: usize) -> Vec<f64> {
+    pub fn col(&self, j: usize) -> Vec<S> {
         debug_assert!(j < self.cols);
         if self.rows == 0 {
             return Vec::new();
@@ -121,7 +138,7 @@ impl Matrix {
     }
 
     /// Overwrite column j from a slice of length `rows`.
-    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+    pub fn set_col(&mut self, j: usize, v: &[S]) {
         assert_eq!(v.len(), self.rows);
         debug_assert!(j < self.cols || self.rows == 0);
         if self.rows == 0 {
@@ -134,10 +151,10 @@ impl Matrix {
     }
 
     /// Transposed copy.
-    pub fn transpose(&self) -> Matrix {
+    pub fn transpose(&self) -> Mat<S> {
         // blocked transpose for cache friendliness on big matrices
         const B: usize = 32;
-        let mut t = Matrix::zeros(self.cols, self.rows);
+        let mut t = Mat::zeros(self.cols, self.rows);
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
                 for i in ib..(ib + B).min(self.rows) {
@@ -151,9 +168,9 @@ impl Matrix {
     }
 
     /// Sub-matrix copy: rows [r0, r1), cols [c0, c1).
-    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat<S> {
         assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
-        let mut m = Matrix::zeros(r1 - r0, c1 - c0);
+        let mut m = Mat::zeros(r1 - r0, c1 - c0);
         for i in r0..r1 {
             m.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
         }
@@ -163,9 +180,9 @@ impl Matrix {
     /// Zero-pad (or keep) to a larger shape; used by coordinator bucketing.
     /// Padding with zeros appends exact zero singular values, so the top-k
     /// spectrum is unchanged.
-    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Mat<S> {
         assert!(rows >= self.rows && cols >= self.cols, "pad_to must grow");
-        let mut m = Matrix::zeros(rows, cols);
+        let mut m = Mat::zeros(rows, cols);
         for i in 0..self.rows {
             m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
         }
@@ -179,13 +196,15 @@ impl Matrix {
     /// coordinator uses this to group same-matrix requests for fused batch
     /// execution; hashing bit patterns (not values) means `0.0` and `-0.0`
     /// fingerprint differently, which is exactly right for a key that
-    /// promises bitwise-identical results.
+    /// promises bitwise-identical results. f32 bit patterns zero-extend,
+    /// so an f32 payload never collides with the f64 payload it was
+    /// narrowed from by construction.
     pub fn fingerprint(&self) -> u64 {
         let mut f = FnvStream::new();
         f.word(self.rows as u64);
         f.word(self.cols as u64);
         for v in &self.data {
-            f.word(v.to_bits());
+            f.word(v.bits());
         }
         f.finish()
     }
@@ -193,11 +212,11 @@ impl Matrix {
     /// Column-wise concatenation `[A₁ | A₂ | …]`; every part must have the
     /// same row count. Used by the fused rsvd batch path to stack per-job
     /// sketch panels into one wide GEMM operand.
-    pub fn hstack(parts: &[Matrix]) -> Matrix {
+    pub fn hstack(parts: &[Mat<S>]) -> Mat<S> {
         assert!(!parts.is_empty(), "hstack of nothing");
         let rows = parts[0].rows;
         let cols = parts.iter().map(|p| p.cols).sum();
-        let mut out = Matrix::zeros(rows, cols);
+        let mut out = Mat::zeros(rows, cols);
         for i in 0..rows {
             let mut at = 0;
             let orow = out.row_mut(i);
@@ -211,7 +230,7 @@ impl Matrix {
     }
 
     /// Overwrite the column block starting at `c0` with `src` (same rows).
-    pub fn set_col_block(&mut self, c0: usize, src: &Matrix) {
+    pub fn set_col_block(&mut self, c0: usize, src: &Mat<S>) {
         assert_eq!(src.rows, self.rows, "set_col_block row mismatch");
         assert!(c0 + src.cols <= self.cols, "set_col_block out of range");
         for i in 0..self.rows {
@@ -221,47 +240,70 @@ impl Matrix {
     }
 
     /// Frobenius norm.
-    pub fn fro_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    pub fn fro_norm(&self) -> S {
+        self.data.iter().fold(S::ZERO, |a, &x| a + x * x).sqrt()
     }
 
     /// Max-abs entry.
-    pub fn max_abs(&self) -> f64 {
-        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    pub fn max_abs(&self) -> S {
+        self.data.iter().fold(S::ZERO, |a, &x| a.max(x.abs()))
     }
 
     /// self + alpha * other (allocating).
-    pub fn add_scaled(&self, alpha: f64, other: &Matrix) -> Matrix {
+    pub fn add_scaled(&self, alpha: S, other: &Mat<S>) -> Mat<S> {
         assert_eq!(self.shape(), other.shape());
         let data = self
             .data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| a + alpha * b)
+            .map(|(&a, &b)| a + alpha * b)
             .collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Mat { rows: self.rows, cols: self.cols, data }
     }
 
     /// In-place scale.
-    pub fn scale(&mut self, alpha: f64) {
+    pub fn scale(&mut self, alpha: S) {
         for v in &mut self.data {
             *v *= alpha;
         }
     }
 
     /// Max-abs difference — the test workhorse.
-    pub fn max_diff(&self, other: &Matrix) -> f64 {
+    pub fn max_diff(&self, other: &Mat<S>) -> S {
         assert_eq!(self.shape(), other.shape());
         self.data
             .iter()
             .zip(&other.data)
-            .fold(0.0f64, |a, (x, y)| a.max((x - y).abs()))
+            .fold(S::ZERO, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+
+    /// Widen every element to `f64` (exact; the identity for `Mat<f64>`).
+    /// The generic rSVD pipelines use this to hand their range-finder
+    /// output to the double-precision finish.
+    pub fn widen(&self) -> Mat<f64> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v.to_f64()).collect(),
+        }
+    }
+
+    /// Narrow an `f64` matrix into this scalar type (round-to-nearest for
+    /// `f32`, the identity for `f64`). Values finite in f64 can overflow
+    /// to `±inf` in f32 — the wire decoders reject such payloads before
+    /// they ever reach a kernel (docs/NUMERICS.md).
+    pub fn from_wide(a: &Mat<f64>) -> Mat<S> {
+        Mat {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data.iter().map(|&v| S::from_f64(v)).collect(),
+        }
     }
 }
 
 /// Streaming FNV-1a over 64-bit words, finished with a splitmix64-style
 /// avalanche — the single hash behind every fingerprint in the crate
-/// ([`Matrix::fingerprint`], `Csr::fingerprint`, the `op` wrapper
+/// ([`Mat::fingerprint`], `Csr::fingerprint`, the `op` wrapper
 /// combinator). The batcher's collision-safety story assumes all
 /// fingerprints share these exact constants; keep them here only.
 pub(crate) struct FnvStream(u64);
@@ -295,26 +337,26 @@ impl FnvStream {
     }
 }
 
-impl Index<(usize, usize)> for Matrix {
-    type Output = f64;
+impl<S: Scalar> Index<(usize, usize)> for Mat<S> {
+    type Output = S;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+    fn index(&self, (i, j): (usize, usize)) -> &S {
         debug_assert!(i < self.rows && j < self.cols);
         &self.data[i * self.cols + j]
     }
 }
 
-impl IndexMut<(usize, usize)> for Matrix {
+impl<S: Scalar> IndexMut<(usize, usize)> for Mat<S> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 }
 
-impl fmt::Debug for Matrix {
+impl<S: Scalar> fmt::Debug for Mat<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        writeln!(f, "Matrix[{}] {}x{} [", S::NAME, self.rows, self.cols)?;
         let show_r = self.rows.min(8);
         let show_c = self.cols.min(8);
         for i in 0..show_r {
@@ -453,5 +495,40 @@ mod tests {
         let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
         assert!((m.fro_norm() - 5.0).abs() < 1e-12);
         assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn f32_matrix_basics() {
+        let m = Mat::<f32>::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m[(2, 3)], 23.0f32);
+        assert_eq!(m.row(1), &[10.0f32, 11.0, 12.0, 13.0]);
+        assert_eq!(m.transpose().transpose(), m);
+        // f32 fingerprints zero-extend bit patterns — never the f64 key
+        let w = m.widen();
+        assert_ne!(m.fingerprint(), w.fingerprint());
+    }
+
+    #[test]
+    fn widen_narrow_roundtrip() {
+        // every f32 value is exactly representable in f64: narrowing a
+        // widened matrix is the identity
+        let a32 = Mat::<f32>::gaussian(17, 9, 7);
+        let back = Mat::<f32>::from_wide(&a32.widen());
+        assert_eq!(a32, back);
+        // f64 widen/from_wide are both identities
+        let a64 = Matrix::gaussian(5, 5, 1);
+        assert_eq!(a64.widen(), a64);
+        assert_eq!(Matrix::from_wide(&a64), a64);
+    }
+
+    #[test]
+    fn gaussian_f32_narrows_the_f64_stream() {
+        let a64 = Matrix::gaussian(11, 6, 42);
+        let a32 = Mat::<f32>::gaussian(11, 6, 42);
+        for i in 0..11 {
+            for j in 0..6 {
+                assert_eq!(a32[(i, j)], a64[(i, j)] as f32);
+            }
+        }
     }
 }

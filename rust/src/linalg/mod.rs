@@ -18,6 +18,12 @@
 //! independent of the team size — see DESIGN.md §GEMM. Their inner
 //! micro-kernels dispatch at runtime via [`kernel`] (`RSVD_KERNEL`, scoped
 //! overrides, AVX2+FMA auto-detection with a portable scalar fallback).
+//!
+//! The numeric stack is generic over the [`scalar::Scalar`] element type
+//! (f64 and f32): [`matrix::Mat<S>`], [`sparse::CsrMat<S>`], the GEMM/SpMM
+//! kernels, and the rSVD pipelines all instantiate at either precision,
+//! with [`Matrix`]/[`Csr`] as the historical (bitwise-frozen) `f64`
+//! aliases. See docs/NUMERICS.md for the precision contract.
 
 pub mod adaptive;
 pub mod blas;
@@ -32,6 +38,7 @@ pub mod op;
 pub mod power;
 pub mod qr;
 pub mod rsvd;
+pub mod scalar;
 pub mod sparse;
 pub mod svd_gesvd;
 pub mod svd_jacobi;
@@ -41,9 +48,10 @@ pub mod tridiag;
 
 pub use cholesky::LinalgError;
 pub use kernel::{with_kernel, Kernel};
-pub use matrix::Matrix;
+pub use matrix::{Mat, Matrix};
 pub use op::LinOp;
-pub use sparse::Csr;
+pub use scalar::Scalar;
+pub use sparse::{Csr, CsrMat};
 pub use svd_gesvd::Svd;
 pub use tiled::TiledMatrix;
 pub use threading::{with_threads, with_threads_opt, Parallelism};

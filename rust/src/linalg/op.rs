@@ -8,6 +8,13 @@
 //! densifying — the workload Tomás et al. (sparse SpMM) and Lu et al.
 //! (block out-of-core) show the randomized pipeline dominates on.
 //!
+//! The trait is generic over the [`Scalar`] element type with `f64` as the
+//! default parameter, so every pre-existing `impl LinOp for …`,
+//! `A: LinOp + ?Sized` bound and `&dyn LinOp` spelling keeps meaning the
+//! double-precision operator it always did; the f32 range finder behind
+//! the `f32`/`mixed` request flavors takes `LinOp<f32>` backends built by
+//! the exec layer (docs/NUMERICS.md).
+//!
 //! **Bitwise-frozen dense specialization:** `impl LinOp for Matrix`
 //! delegates to the exact BLAS-3 entry points the pre-trait pipeline
 //! called (`matmul`, `matmul_tn` — including [`LinOp::project`], which
@@ -18,27 +25,29 @@
 //! construction. `tests/sparse_rsvd.rs` pins this.
 
 use super::gemm::{matmul, matmul_tn};
-use super::Matrix;
+use super::matrix::Mat;
+use super::scalar::Scalar;
 
-/// An m×n linear operator exposed through multi-column products — the only
-/// access pattern the randomized range finder needs.
+/// An m×n linear operator over `S` exposed through multi-column products —
+/// the only access pattern the randomized range finder needs. `S` defaults
+/// to `f64`, the historical (and bitwise-frozen) precision.
 ///
 /// Implementations must be deterministic and thread-count-invariant: for a
 /// fixed operand, `apply`/`apply_t`/`project` return bitwise-identical
 /// results for any ambient [`super::threading`] configuration (every
 /// backend here partitions *output* elements and keeps per-element
 /// reduction order fixed, like the dense GEMM).
-pub trait LinOp {
+pub trait LinOp<S: Scalar = f64> {
     /// (rows, cols) of the operator.
     fn shape(&self) -> (usize, usize);
 
     /// Y = A·X for a dense block X (cols(A) × p → rows(A) × p).
-    fn apply(&self, x: &Matrix) -> Matrix;
+    fn apply(&self, x: &Mat<S>) -> Mat<S>;
 
     /// Z = Aᵀ·X for a dense block X (rows(A) × p → cols(A) × p).
-    fn apply_t(&self, x: &Matrix) -> Matrix;
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S>;
 
-    /// Content fingerprint with [`Matrix::fingerprint`] semantics: one
+    /// Content fingerprint with [`Mat::fingerprint`] semantics: one
     /// streaming pass, bit patterns not values, shape mixed in. The
     /// coordinator's batcher keys fused batches on it, so two operators
     /// may share a fingerprint only if their products are bitwise
@@ -50,7 +59,7 @@ pub trait LinOp {
     /// B = Qᵀ·A (p × cols(A)) for an orthonormal block Q. Default:
     /// `apply_t(q)` transposed. Backends with a native Qᵀ·A kernel
     /// override this — the dense impl must, to stay bitwise-frozen.
-    fn project(&self, q: &Matrix) -> Matrix {
+    fn project(&self, q: &Mat<S>) -> Mat<S> {
         self.apply_t(q).transpose()
     }
 
@@ -67,67 +76,67 @@ pub trait LinOp {
     }
 }
 
-impl LinOp for Matrix {
+impl<S: Scalar> LinOp<S> for Mat<S> {
     fn shape(&self) -> (usize, usize) {
-        Matrix::shape(self)
+        Mat::shape(self)
     }
 
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         matmul(self, x)
     }
 
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         matmul_tn(self, x)
     }
 
     fn fingerprint(&self) -> u64 {
-        Matrix::fingerprint(self)
+        Mat::fingerprint(self)
     }
 
     /// The historical dense kernel: one wide `matmul_tn(q, a)`. (The
     /// default `apply_t + transpose` is mathematically identical but goes
     /// through a different code path; overriding keeps the dense pipeline
     /// byte-for-byte the pre-trait computation.)
-    fn project(&self, q: &Matrix) -> Matrix {
+    fn project(&self, q: &Mat<S>) -> Mat<S> {
         matmul_tn(q, self)
     }
 }
 
 /// α·A as an operator — no scaled copy of A is ever materialized. Scaling
 /// is applied to the (much smaller) product block.
-pub struct Scaled<'a, A: LinOp + ?Sized> {
+pub struct Scaled<'a, S: Scalar, A: LinOp<S> + ?Sized> {
     /// The scale factor.
-    pub alpha: f64,
+    pub alpha: S,
     /// The unscaled operator.
     pub inner: &'a A,
 }
 
-impl<'a, A: LinOp + ?Sized> Scaled<'a, A> {
+impl<'a, S: Scalar, A: LinOp<S> + ?Sized> Scaled<'a, S, A> {
     /// α·A without copying A.
-    pub fn new(alpha: f64, inner: &'a A) -> Self {
+    pub fn new(alpha: S, inner: &'a A) -> Self {
         Scaled { alpha, inner }
     }
 }
 
-impl<A: LinOp + ?Sized> LinOp for Scaled<'_, A> {
+impl<S: Scalar, A: LinOp<S> + ?Sized> LinOp<S> for Scaled<'_, S, A> {
     fn shape(&self) -> (usize, usize) {
         self.inner.shape()
     }
 
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         let mut y = self.inner.apply(x);
         y.scale(self.alpha);
         y
     }
 
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         let mut z = self.inner.apply_t(x);
         z.scale(self.alpha);
         z
     }
 
     fn fingerprint(&self) -> u64 {
-        mix(0x5CA1ED, &[self.alpha.to_bits(), self.inner.fingerprint()])
+        mix(0x5CA1ED, &[self.alpha.bits(), self.inner.fingerprint()])
     }
 }
 
@@ -135,16 +144,20 @@ impl<A: LinOp + ?Sized> LinOp for Scaled<'_, A> {
 /// formed; each sketch block flows through B then A. This is how a
 /// normalized or preconditioned input (D·A, A·E, …) rides the same range
 /// finder without a dense intermediate.
-pub struct Composed<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> {
+pub struct Composed<'a, A: ?Sized, B: ?Sized> {
     /// A in A·B.
     pub left: &'a A,
     /// B in A·B.
     pub right: &'a B,
 }
 
-impl<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> Composed<'a, A, B> {
+impl<'a, A: ?Sized, B: ?Sized> Composed<'a, A, B> {
     /// A·B; panics if the inner dimensions disagree.
-    pub fn new(left: &'a A, right: &'a B) -> Self {
+    pub fn new<S: Scalar>(left: &'a A, right: &'a B) -> Self
+    where
+        A: LinOp<S>,
+        B: LinOp<S>,
+    {
         assert_eq!(
             left.cols(),
             right.rows(),
@@ -156,16 +169,16 @@ impl<'a, A: LinOp + ?Sized, B: LinOp + ?Sized> Composed<'a, A, B> {
     }
 }
 
-impl<A: LinOp + ?Sized, B: LinOp + ?Sized> LinOp for Composed<'_, A, B> {
+impl<S: Scalar, A: LinOp<S> + ?Sized, B: LinOp<S> + ?Sized> LinOp<S> for Composed<'_, A, B> {
     fn shape(&self) -> (usize, usize) {
         (self.left.rows(), self.right.cols())
     }
 
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         self.left.apply(&self.right.apply(x))
     }
 
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         self.right.apply_t(&self.left.apply_t(x))
     }
 
@@ -190,6 +203,7 @@ pub(crate) fn mix(salt: u64, words: &[u64]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
 
     #[test]
     fn dense_linop_is_the_plain_blas_calls() {
@@ -197,6 +211,19 @@ mod tests {
         let x = Matrix::gaussian(9, 4, 2);
         let y = Matrix::gaussian(13, 4, 3);
         let op: &dyn LinOp = &a;
+        assert_eq!(op.shape(), (13, 9));
+        assert_eq!(op.apply(&x), matmul(&a, &x));
+        assert_eq!(op.apply_t(&y), matmul_tn(&a, &y));
+        assert_eq!(op.project(&y), matmul_tn(&y, &a));
+        assert_eq!(op.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn f32_dense_linop_delegates_to_f32_blas() {
+        let a = Mat::<f32>::gaussian(13, 9, 1);
+        let x = Mat::<f32>::gaussian(9, 4, 2);
+        let y = Mat::<f32>::gaussian(13, 4, 3);
+        let op: &dyn LinOp<f32> = &a;
         assert_eq!(op.shape(), (13, 9));
         assert_eq!(op.apply(&x), matmul(&a, &x));
         assert_eq!(op.apply_t(&y), matmul_tn(&a, &y));
@@ -232,6 +259,20 @@ mod tests {
         assert_ne!(s.fingerprint(), a.fingerprint());
         assert_ne!(s.fingerprint(), Scaled::new(2.5, &a).fingerprint());
         assert_eq!(s.fingerprint(), Scaled::new(-2.5, &a).fingerprint());
+    }
+
+    #[test]
+    fn f32_scaled_operator() {
+        let a = Mat::<f32>::gaussian(10, 7, 6);
+        let x = Mat::<f32>::gaussian(7, 3, 7);
+        let s = Scaled::new(-2.5f32, &a);
+        let mut want = matmul(&a, &x);
+        want.scale(-2.5f32);
+        assert_eq!(s.apply(&x), want);
+        // the f32 alpha bits differ from the f64 ones, so the same nominal
+        // scale never keys the same fingerprint across scalar types
+        let a64 = a.widen();
+        assert_ne!(s.fingerprint(), Scaled::new(-2.5f64, &a64).fingerprint());
     }
 
     #[test]

@@ -11,57 +11,58 @@
 use super::blas::{axpy, dot, householder};
 use super::cholesky::{cholesky, trsm_right_lt, LinalgError};
 use super::gemm::{gram_t, matmul};
-use super::Matrix;
+use super::matrix::Mat;
+use super::scalar::Scalar;
 
 /// Thin Householder QR: A(m×n, m≥n) = Q(m×n)·R(n×n).
 /// Returns (Q, R) with Q having orthonormal columns.
-pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
     let (m, n) = a.shape();
     assert!(m >= n, "householder_qr needs m >= n");
     let mut r = a.clone();
     // store reflectors: v_j in column j below diagonal, taus separately
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut vs: Vec<Vec<S>> = Vec::with_capacity(n);
     let mut taus = Vec::with_capacity(n);
     for j in 0..n {
-        let col: Vec<f64> = (j..m).map(|i| r[(i, j)]).collect();
+        let col: Vec<S> = (j..m).map(|i| r[(i, j)]).collect();
         let (v, tau, beta) = householder(&col);
         // apply reflector to trailing columns of R: R[j.., j..] -= tau v (vᵀ R)
         for c in j..n {
-            let mut w = 0.0;
+            let mut w = S::ZERO;
             for (ii, vi) in v.iter().enumerate() {
-                w += vi * r[(j + ii, c)];
+                w += *vi * r[(j + ii, c)];
             }
             let t = tau * w;
             for (ii, vi) in v.iter().enumerate() {
-                r[(j + ii, c)] -= t * vi;
+                r[(j + ii, c)] -= t * *vi;
             }
         }
         r[(j, j)] = beta;
         for i in j + 1..m {
-            r[(i, j)] = 0.0;
+            r[(i, j)] = S::ZERO;
         }
         vs.push(v);
         taus.push(tau);
     }
     // accumulate Q = H_0 H_1 … H_{n-1} · [I; 0]  (apply reflectors backwards)
-    let mut q = Matrix::zeros(m, n);
+    let mut q = Mat::zeros(m, n);
     for j in 0..n {
-        q[(j, j)] = 1.0;
+        q[(j, j)] = S::ONE;
     }
     for j in (0..n).rev() {
         let v = &vs[j];
         let tau = taus[j];
-        if tau == 0.0 {
+        if tau == S::ZERO {
             continue;
         }
         for c in 0..n {
-            let mut w = 0.0;
+            let mut w = S::ZERO;
             for (ii, vi) in v.iter().enumerate() {
-                w += vi * q[(j + ii, c)];
+                w += *vi * q[(j + ii, c)];
             }
             let t = tau * w;
             for (ii, vi) in v.iter().enumerate() {
-                q[(j + ii, c)] -= t * vi;
+                q[(j + ii, c)] -= t * *vi;
             }
         }
     }
@@ -73,7 +74,7 @@ pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
 /// κ(A)² digits; `cholesky_qr2` runs two rounds which is provably as
 /// orthogonal as Householder for κ(A) ≤ 1/√ε. All flops are GEMM/SYRK —
 /// the whole point of the paper's reformulation.
-pub fn cholesky_qr(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
+pub fn cholesky_qr<S: Scalar>(a: &Mat<S>) -> Result<(Mat<S>, Mat<S>), LinalgError> {
     let g = gram_t(a);
     let l = cholesky(&g)?;
     let mut q = a.clone();
@@ -83,7 +84,7 @@ pub fn cholesky_qr(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
 
 /// CholeskyQR2 (Yamamoto et al. 2015): two rounds of CholeskyQR.
 /// Returns (Q, R) with R = R₂·R₁.
-pub fn cholesky_qr2(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
+pub fn cholesky_qr2<S: Scalar>(a: &Mat<S>) -> Result<(Mat<S>, Mat<S>), LinalgError> {
     let (q1, r1) = cholesky_qr(a)?;
     let (q2, r2) = cholesky_qr(&q1)?;
     Ok((q2, matmul(&r2, &r1)))
@@ -93,7 +94,7 @@ pub fn cholesky_qr2(a: &Matrix) -> Result<(Matrix, Matrix), LinalgError> {
 /// Gram matrix is numerically singular (rank-deficient panel) — the exact
 /// policy the AOT pipeline cannot take (static graph), which is why the
 /// runtime adds oversampling instead.
-pub fn orthonormalize(a: &Matrix) -> Matrix {
+pub fn orthonormalize<S: Scalar>(a: &Mat<S>) -> Mat<S> {
     match cholesky_qr2(a) {
         Ok((q, _)) => q,
         Err(_) => householder_qr(a).0,
@@ -119,6 +120,7 @@ pub fn mgs_orthogonalize(q_cols: &[Vec<f64>], v: &mut [f64]) -> f64 {
 mod tests {
     use super::*;
     use crate::linalg::gemm::matmul_tn;
+    use crate::linalg::Matrix;
 
     fn check_qr(a: &Matrix, q: &Matrix, r: &Matrix, tol: f64) {
         // Q orthonormal

@@ -9,10 +9,24 @@
 //! Every step maps one-to-one onto the AOT pipeline in
 //! `python/compile/model.py`; the integration test in `tests/` checks the
 //! two produce the same spectrum on the same (A, Ω).
+//!
+//! **Precision flavors** (docs/NUMERICS.md): the range finder — where all
+//! the O(mnk) flops live — is generic over [`Scalar`]; the *finish* (small
+//! SVD/eigensolve of B and the thin back-projection) always runs in `f64`,
+//! so every entry point returns a double-precision [`Svd`]. Instantiated
+//! at `f64` the pipeline is byte-for-byte the historical computation (the
+//! widening step is the identity). At `f32` the sketch, power iterations
+//! and projection run at single precision for ~2× GEMM throughput. The
+//! `mixed` flavor ([`rsvd_batch_mixed`]) runs the f32 basis, then one
+//! extra *double-precision* power pass re-projects the subspace before the
+//! f64 finish — recovering f64-grade spectral accuracy at roughly half the
+//! sketch cost.
 
 use super::gemm::{matmul, matmul_nt, matmul_tn};
+use super::matrix::Mat;
 use super::op::LinOp;
 use super::qr::orthonormalize;
+use super::scalar::Scalar;
 use super::svd_gesvd::{svd, Svd};
 use super::threading::with_threads_opt;
 use super::Matrix;
@@ -39,15 +53,17 @@ impl Default for RsvdOpts {
 }
 
 /// Randomized k-SVD of A (Algorithm 1). Returns a truncated `Svd` with
-/// exactly k triplets. `A` is any [`LinOp`] — a dense `Matrix`, a CSR
+/// exactly k triplets. `A` is any [`LinOp`] — a dense matrix, a CSR
 /// sparse matrix, or a composed/scaled operator; the pipeline only ever
-/// touches it through block products.
+/// touches it through block products. The scalar type of the operator
+/// selects the range-finder precision; the result is always `f64` (see the
+/// module docs).
 ///
 /// Implemented as a single-job [`rsvd_batch`] — one shared range-finder
 /// implementation means the fused coordinator path and the standalone call
 /// cannot drift apart (the bitwise-identity contract is structural, not
 /// just test-enforced).
-pub fn rsvd<A: LinOp + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Svd {
+pub fn rsvd<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Svd {
     let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
     rsvd_batch(a, &[SketchJob::from_opts(k, opts)], &batch).pop().expect("one job in, one out")
 }
@@ -55,9 +71,34 @@ pub fn rsvd<A: LinOp + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Svd {
 /// k largest singular values only — stops after step 5 (the variant the
 /// spectrum experiments use; paper: "we needed only the matrix Σ").
 /// Single-job [`rsvd_values_batch`], for the same reason as [`rsvd`].
-pub fn rsvd_values<A: LinOp + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Vec<f64> {
+pub fn rsvd_values<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, k: usize, opts: &RsvdOpts) -> Vec<f64> {
     let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
     rsvd_values_batch(a, &[SketchJob::from_opts(k, opts)], &batch)
+        .pop()
+        .expect("one job in, one out")
+}
+
+/// Mixed-precision randomized k-SVD: f32 range finder, one f64 refinement
+/// power pass, f64 finish. Single-job [`rsvd_batch_mixed`].
+pub fn rsvd_mixed<A64, A32>(a64: &A64, a32: &A32, k: usize, opts: &RsvdOpts) -> Svd
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
+    rsvd_batch_mixed(a64, a32, &[SketchJob::from_opts(k, opts)], &batch)
+        .pop()
+        .expect("one job in, one out")
+}
+
+/// Values-only [`rsvd_mixed`]. Single-job [`rsvd_values_batch_mixed`].
+pub fn rsvd_values_mixed<A64, A32>(a64: &A64, a32: &A32, k: usize, opts: &RsvdOpts) -> Vec<f64>
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    let batch = BatchOpts { power_iters: opts.power_iters, threads: opts.threads };
+    rsvd_values_batch_mixed(a64, a32, &[SketchJob::from_opts(k, opts)], &batch)
         .pop()
         .expect("one job in, one out")
 }
@@ -111,25 +152,19 @@ impl Default for BatchOpts {
 ///
 /// Generic over [`LinOp`]: a dense `Matrix` runs the exact historical
 /// BLAS-3 calls (`impl LinOp for Matrix` delegates to `matmul` /
-/// `matmul_tn`, see `op.rs`), so the dense specialization is bitwise
+/// `matmul_tn`, see `op.rs`), so the dense f64 specialization is bitwise
 /// identical to the pre-trait pipeline; a [`super::sparse::Csr`] runs
-/// SpMM/SpMMᵀ and never densifies.
-pub fn rsvd_batch<A: LinOp + ?Sized>(a: &A, jobs: &[SketchJob], opts: &BatchOpts) -> Vec<Svd> {
+/// SpMM/SpMMᵀ and never densifies. An `f32` operator runs the whole range
+/// finder (and the projection `B = Qᵀ·A`) at single precision; the finish
+/// is always `f64`.
+pub fn rsvd_batch<S: Scalar, A: LinOp<S> + ?Sized>(
+    a: &A,
+    jobs: &[SketchJob],
+    opts: &BatchOpts,
+) -> Vec<Svd> {
     with_threads_opt(opts.threads, || {
         let (q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
-        layout
-            .iter()
-            .map(|&(k, c0, c1)| {
-                let s = c1 - c0;
-                let bj = b.submatrix(c0, c1, 0, b.cols());
-                let sb = svd(&bj);
-                let ub = sb.u.submatrix(0, s, 0, k.min(sb.s.len()));
-                let qj = q.submatrix(0, q.rows(), c0, c1);
-                let u = matmul(&qj, &ub);
-                let kk = k.min(sb.s.len());
-                Svd { u, s: sb.s[..kk].to_vec(), v: sb.v.submatrix(0, sb.v.rows(), 0, kk) }
-            })
-            .collect()
+        finish_batch(&q.widen(), &b.widen(), &layout)
     })
 }
 
@@ -137,39 +172,65 @@ pub fn rsvd_batch<A: LinOp + ?Sized>(a: &A, jobs: &[SketchJob], opts: &BatchOpts
 /// per-job Gram matrices `Gⱼ = Bⱼ·Bⱼᵀ` are contracted from the stacked B
 /// panel rows and finished with the same small eigensolve, bitwise
 /// identical to standalone calls.
-pub fn rsvd_values_batch<A: LinOp + ?Sized>(
+pub fn rsvd_values_batch<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     jobs: &[SketchJob],
     opts: &BatchOpts,
 ) -> Vec<Vec<f64>> {
     with_threads_opt(opts.threads, || {
         let (_q, b, layout) = batch_range_finder(a, jobs, opts.power_iters);
-        layout
-            .iter()
-            .map(|&(k, c0, c1)| {
-                let bj = b.submatrix(c0, c1, 0, b.cols());
-                let g = matmul_nt(&bj, &bj);
-                let w = super::eigen::eigvalsh(&g);
-                w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
-            })
-            .collect()
+        finish_values_batch(&b.widen(), &layout)
     })
 }
 
-/// Shared wide range finder (Algorithm 1, steps 1–4) for a batch of jobs
-/// against one matrix. Returns the stacked orthonormal basis Q (m×S,
-/// S = Σsⱼ), the stacked projection B = Qᵀ·A (S×n), and the per-job layout
-/// (k, column/row offset range) — columns of Q and rows of B in `[c0, c1)`
-/// belong to job j. With a single job this *is* the standalone pipeline.
-///
-/// The operator is touched only through [`LinOp::apply`],
-/// [`LinOp::apply_t`], and [`LinOp::project`] — everything else (sketch
-/// generation, per-panel orthonormalization) is dense block work.
-fn batch_range_finder<A: LinOp + ?Sized>(
+/// Mixed-precision fused batch: the f32 operand carries the sketch and
+/// power iterations (all the wide flops), then the subspace is widened and
+/// *refined* with one double-precision power pass against the f64 operand
+/// before the standard f64 projection and finish. The two operands must be
+/// the same matrix at two precisions (the exec layer builds the f32 twin
+/// with [`Mat::from_wide`] / [`super::sparse::CsrMat::map_scalar`]);
+/// only their shapes can be checked here.
+pub fn rsvd_batch_mixed<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    jobs: &[SketchJob],
+    opts: &BatchOpts,
+) -> Vec<Svd>
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    with_threads_opt(opts.threads, || {
+        let (q, b, layout) = mixed_range_finder(a64, a32, jobs, opts.power_iters);
+        finish_batch(&q, &b, &layout)
+    })
+}
+
+/// Values-only [`rsvd_batch_mixed`].
+pub fn rsvd_values_batch_mixed<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    jobs: &[SketchJob],
+    opts: &BatchOpts,
+) -> Vec<Vec<f64>>
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    with_threads_opt(opts.threads, || {
+        let (_q, b, layout) = mixed_range_finder(a64, a32, jobs, opts.power_iters);
+        finish_values_batch(&b, &layout)
+    })
+}
+
+/// Algorithm 1 steps 1–3 for a batch of jobs against one operator: returns
+/// the stacked orthonormal basis Q (m×S, S = Σsⱼ) and the per-job layout
+/// (k, column offset range) — columns of Q in `[c0, c1)` belong to job j.
+fn batch_basis<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     jobs: &[SketchJob],
     power_iters: usize,
-) -> (Matrix, Matrix, Vec<(usize, usize, usize)>) {
+) -> (Mat<S>, Vec<(usize, usize, usize)>) {
     assert!(!jobs.is_empty(), "empty rsvd batch");
     let (m, n) = a.shape();
     let r = m.min(n);
@@ -179,12 +240,14 @@ fn batch_range_finder<A: LinOp + ?Sized>(
     for j in jobs {
         let k = j.k.min(r);
         let s = (k + j.oversample).min(r);
-        // Step 1: Gaussian sketch Ωⱼ ∈ R^{n×sⱼ} (Philox — the CuRAND analog).
-        omegas.push(Matrix::gaussian(n, s, j.seed));
+        // Step 1: Gaussian sketch Ωⱼ ∈ R^{n×sⱼ} (Philox — the CuRAND
+        // analog; the f32 sketch narrows the same f64 stream, see
+        // `Mat::gaussian`).
+        omegas.push(Mat::gaussian(n, s, j.seed));
         layout.push((k, off, off + s));
         off += s;
     }
-    let omega = Matrix::hstack(&omegas);
+    let omega = Mat::hstack(&omegas);
 
     // Step 2: Y = (A·Aᵀ)^q · A·Ω, re-orthonormalizing between applications
     // for numerical stability (standard Halko et al. practice) — wide
@@ -199,18 +262,100 @@ fn batch_range_finder<A: LinOp + ?Sized>(
 
     // Step 3: Q = orth(Y) — CholeskyQR2 (BLAS-3), Householder fallback.
     let q = orth_panels(&y, &layout);
+    (q, layout)
+}
+
+/// Shared wide range finder (Algorithm 1, steps 1–4) for a batch of jobs
+/// against one matrix. Returns the stacked orthonormal basis Q (m×S,
+/// S = Σsⱼ), the stacked projection B = Qᵀ·A (S×n), and the per-job layout
+/// (k, column/row offset range) — columns of Q and rows of B in `[c0, c1)`
+/// belong to job j. With a single job this *is* the standalone pipeline.
+///
+/// The operator is touched only through [`LinOp::apply`],
+/// [`LinOp::apply_t`], and [`LinOp::project`] — everything else (sketch
+/// generation, per-panel orthonormalization) is dense block work.
+fn batch_range_finder<S: Scalar, A: LinOp<S> + ?Sized>(
+    a: &A,
+    jobs: &[SketchJob],
+    power_iters: usize,
+) -> (Mat<S>, Mat<S>, Vec<(usize, usize, usize)>) {
+    let (q, layout) = batch_basis(a, jobs, power_iters);
 
     // Step 4: B = Qᵀ·A, one wide product; job j owns rows [c0, c1).
     let b = a.project(&q);
     (q, b, layout)
 }
 
+/// The `mixed` range finder: f32 [`batch_basis`], widen, one f64 power
+/// pass (re-project through Aᵀ then A with per-panel re-orthonormalization
+/// — the same step shape as the in-loop iterations), then the f64
+/// projection. Returns f64 (Q, B, layout) ready for [`finish_batch`].
+fn mixed_range_finder<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    jobs: &[SketchJob],
+    power_iters: usize,
+) -> (Matrix, Matrix, Vec<(usize, usize, usize)>)
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    assert_eq!(
+        a64.shape(),
+        a32.shape(),
+        "mixed-precision operands must be the same matrix at two precisions"
+    );
+    let (q32, layout) = batch_basis(a32, jobs, power_iters);
+    let q0 = q32.widen();
+    // One f64 refinement pass: the f32 basis captures the subspace to
+    // single precision; one extra power step at double precision contracts
+    // the subspace error by ~σ_{s+1}/σ_s before the finish reads it.
+    let z = orth_panels(&a64.apply_t(&q0), &layout);
+    let y = a64.apply(&z);
+    let q = orth_panels(&y, &layout);
+    let b = a64.project(&q);
+    (q, b, layout)
+}
+
+/// Algorithm 1 steps 5–6 per job, always in `f64`: small SVD of each B
+/// panel, truncate to k, back-project U. This is the exact historical
+/// finishing sequence — `rsvd_batch::<f64>` feeds it unmodified inputs.
+fn finish_batch(q: &Matrix, b: &Matrix, layout: &[(usize, usize, usize)]) -> Vec<Svd> {
+    layout
+        .iter()
+        .map(|&(k, c0, c1)| {
+            let s = c1 - c0;
+            let bj = b.submatrix(c0, c1, 0, b.cols());
+            let sb = svd(&bj);
+            let ub = sb.u.submatrix(0, s, 0, k.min(sb.s.len()));
+            let qj = q.submatrix(0, q.rows(), c0, c1);
+            let u = matmul(&qj, &ub);
+            let kk = k.min(sb.s.len());
+            Svd { u, s: sb.s[..kk].to_vec(), v: sb.v.submatrix(0, sb.v.rows(), 0, kk) }
+        })
+        .collect()
+}
+
+/// Values-only finish, always in `f64`: per-job Gram eigensolve of the B
+/// panel rows (the historical [`rsvd_values_batch`] tail).
+fn finish_values_batch(b: &Matrix, layout: &[(usize, usize, usize)]) -> Vec<Vec<f64>> {
+    layout
+        .iter()
+        .map(|&(k, c0, c1)| {
+            let bj = b.submatrix(c0, c1, 0, b.cols());
+            let g = matmul_nt(&bj, &bj);
+            let w = super::eigen::eigvalsh(&g);
+            w.iter().take(k).map(|x| x.max(0.0).sqrt()).collect()
+        })
+        .collect()
+}
+
 /// Per-panel orthonormalization of a stacked sketch: each job's column
 /// block is orthonormalized independently (CholeskyQR2 mixes columns, so
 /// fusing it across jobs would change results; keeping it per-panel is
 /// what makes the batch bitwise identical to sequential calls).
-fn orth_panels(y: &Matrix, layout: &[(usize, usize, usize)]) -> Matrix {
-    let mut out = Matrix::zeros(y.rows(), y.cols());
+fn orth_panels<S: Scalar>(y: &Mat<S>, layout: &[(usize, usize, usize)]) -> Mat<S> {
+    let mut out = Mat::zeros(y.rows(), y.cols());
     for &(_k, c0, c1) in layout {
         let panel = orthonormalize(&y.submatrix(0, y.rows(), c0, c1));
         out.set_col_block(c0, &panel);
@@ -338,5 +483,79 @@ mod tests {
         let r1 = rsvd(&a, 4, &o);
         let r2 = rsvd(&a, 4, &o);
         assert_eq!(r1.s, r2.s);
+    }
+
+    #[test]
+    fn f32_rsvd_tracks_f64_on_decaying_spectrum() {
+        // the f32 flavor runs the whole range finder at single precision;
+        // on a fast-decay spectrum its leading values must track the f64
+        // run to f32-grade relative accuracy
+        let a = crate::datagen_test_matrix(60, 40, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 7);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let k = 5;
+        let r64 = rsvd(&a, k, &RsvdOpts::default());
+        let r32 = rsvd(&a32, k, &RsvdOpts::default());
+        assert_eq!(r32.s.len(), k);
+        for i in 0..k {
+            assert!(
+                (r32.s[i] - r64.s[i]).abs() < 1e-4 * r64.s[0],
+                "σ{i}: f32 {} vs f64 {}",
+                r32.s[i],
+                r64.s[i]
+            );
+        }
+        // Q is built in f32 and only widened for the finish, so the left
+        // factor is orthonormal to f32 round-off (the mixed flavor's f64
+        // re-orthonormalization is what buys double-precision factors)
+        let utu = matmul_tn(&r32.u, &r32.u);
+        assert!(utu.max_diff(&Matrix::eye(k)) < 1e-5);
+    }
+
+    #[test]
+    fn mixed_matches_f64_to_refinement_accuracy() {
+        // mixed = f32 basis + one f64 power pass + f64 finish: on a
+        // decaying spectrum the refined values must land much closer to
+        // the f64 run than the pure-f32 flavor does
+        let a = crate::datagen_test_matrix(60, 40, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 11);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let k = 5;
+        let opts = RsvdOpts::default();
+        let r64 = rsvd(&a, k, &opts);
+        let rmx = rsvd_mixed(&a, &a32, k, &opts);
+        assert_eq!(rmx.s.len(), k);
+        for i in 0..k {
+            assert!(
+                (rmx.s[i] - r64.s[i]).abs() < 1e-8 * r64.s[0],
+                "σ{i}: mixed {} vs f64 {}",
+                rmx.s[i],
+                r64.s[i]
+            );
+        }
+        let vals = rsvd_values_mixed(&a, &a32, k, &opts);
+        for (x, y) in rmx.s.iter().zip(&vals) {
+            assert!((x - y).abs() < 1e-8 * rmx.s[0], "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn mixed_batch_single_job_is_bitwise_solo() {
+        // the fused-batch ≡ solo contract holds for the mixed flavor too
+        let a = Matrix::gaussian(40, 30, 17);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let opts = RsvdOpts { seed: 3, ..Default::default() };
+        let job = SketchJob::from_opts(5, &opts);
+        let batch = rsvd_batch_mixed(&a, &a32, &[job], &BatchOpts::default());
+        let solo = rsvd_mixed(&a, &a32, 5, &opts);
+        assert_eq!(batch[0].s, solo.s);
+        assert_eq!(batch[0].u, solo.u);
+        assert_eq!(batch[0].v, solo.v);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed-precision operands")]
+    fn mixed_rejects_shape_mismatch() {
+        let a = Matrix::gaussian(10, 8, 1);
+        let wrong = Mat::<f32>::gaussian(8, 10, 1);
+        let _ = rsvd_mixed(&a, &wrong, 3, &RsvdOpts::default());
     }
 }

@@ -1,0 +1,706 @@
+//! The `Scalar` abstraction: the element types the numeric stack is
+//! generic over (`f64` and `f32`), plus the per-type AVX2+FMA micro-kernel
+//! bodies the runtime dispatch in [`super::kernel`] selects between.
+//!
+//! Everything BLAS-3 shaped in this crate — [`super::matrix::Mat`], the
+//! packed GEMM schedule in [`super::gemm`], the CSR SpMM kernels in
+//! [`super::sparse`], and the rSVD pipelines — is written once against
+//! this trait, in the `ndarray-linalg` trait/macro style: one
+//! `impl_scalar!` invocation per concrete type supplies the constants,
+//! float intrinsics, and SIMD kernel bodies. `f64` is the historical
+//! (bitwise-frozen) substrate; `f32` doubles effective GEMM and memory
+//! bandwidth — the host analogue of the paper's tensor-core story — and
+//! backs the `f32`/`mixed` request precisions (see `docs/NUMERICS.md`).
+//!
+//! **Per-scalar determinism.** The portable scalar loops are generic over
+//! `Scalar`, so the f32 instantiation performs the *same operation
+//! sequence* as the f64 one at its own width: per-kernel bitwise
+//! thread-count invariance and the 0-ULP sparse dense-twin contract hold
+//! for each scalar type independently. The AVX2 kernels here keep the same
+//! register-tile geometry for both types (MR=6, NR=8): the f64 tile is two
+//! 4-lane `__m256d` vectors per row, the f32 tile one 8-lane `__m256` —
+//! same column width, twice the elements per vector.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A floating-point element type the numeric stack can run on.
+///
+/// Implemented for `f64` (the historical, bitwise-frozen substrate) and
+/// `f32` (half the footprint, ~2× effective BLAS-3 bandwidth). The trait
+/// bundles exactly what the kernels need: arithmetic, the handful of libm
+/// calls the factorizations use, bit-pattern access for fingerprinting,
+/// and the per-type AVX2 micro-kernel entry points.
+pub trait Scalar:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+{
+    /// Additive identity (`0.0`).
+    const ZERO: Self;
+    /// Multiplicative identity (`1.0`).
+    const ONE: Self;
+    /// Stable lowercase dtype name (`"f64"` / `"f32"`) — stamped into
+    /// bench JSON rows so the bench-guard only ever compares like-dtype.
+    const NAME: &'static str;
+
+    /// Narrowing (for `f32`) or identity (for `f64`) conversion from f64.
+    fn from_f64(x: f64) -> Self;
+    /// Widening conversion to f64 (exact for both implementors).
+    fn to_f64(self) -> f64;
+    /// Raw bit pattern, zero-extended to 64 bits — the fingerprint word.
+    fn bits(self) -> u64;
+    /// Neither infinite nor NaN.
+    fn is_finite(self) -> bool;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Sign with the IEEE `signum` convention (`signum(-0.0) == -1.0`).
+    fn signum(self) -> Self;
+    /// Fused multiply-add `self * a + b` (one rounding).
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    /// IEEE maximum (NaN-ignoring, like `f64::max`).
+    fn max(self, other: Self) -> Self;
+
+    /// AVX2+FMA GEMM micro-kernel for this scalar type: one MR-high packed
+    /// A panel times the packed B block into the C band — see
+    /// [`super::gemm`] for the schedule and the per-element arithmetic
+    /// contract (ascending-k fma chain per KC block, one
+    /// `c = fma(alpha, acc, c)` fold, scalar `mul_add` column tail).
+    ///
+    /// # Safety
+    /// AVX2 and FMA must be available (the dispatcher in [`super::kernel`]
+    /// guarantees this for `Kernel::Avx2`); `apanel.len() >= 6*kc`,
+    /// `bpack.len() >= kc*nc`, and C rows `row0..row0+h` with columns
+    /// `jc..jc+nc` must lie inside `c_band` (row-major, width `n`).
+    #[allow(clippy::missing_safety_doc)]
+    unsafe fn gemm_micro_avx2(
+        alpha: Self,
+        apanel: &[Self],
+        bpack: &[Self],
+        h: usize,
+        nc: usize,
+        kc: usize,
+        c_band: &mut [Self],
+        row0: usize,
+        jc: usize,
+        n: usize,
+    );
+
+    /// AVX2+FMA SpMM row band for this scalar type (C rows `r0..r1` of
+    /// `C = A·X` over the raw CSR arrays) — replays the dense AVX2 GEMM's
+    /// per-element arithmetic on the stored pattern (KC segmentation, fresh
+    /// accumulator per segment, `fma(1, acc, c)` fold); see
+    /// [`super::sparse`] for why the dense-twin contract survives.
+    ///
+    /// # Safety
+    /// AVX2 and FMA must be available; the CSR arrays must satisfy the
+    /// [`super::sparse::CsrMat`] invariants, `xs` must be row-major with
+    /// `p` columns covering every stored column index, and `band` must
+    /// hold rows `r0..r1` (row-major, width `p`).
+    #[allow(clippy::missing_safety_doc)]
+    unsafe fn spmm_rows_avx2(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[Self],
+        xs: &[Self],
+        p: usize,
+        r0: usize,
+        r1: usize,
+        band: &mut [Self],
+    );
+
+    /// AVX2 SpMMᵀ column band for this scalar type (C rows `j0..j1` of
+    /// `C = Aᵀ·X`) — identical entry walk to the scalar path with the axpy
+    /// vectorized as separate multiply and add, so its bits match the
+    /// scalar kernel exactly (see [`super::sparse`]).
+    ///
+    /// # Safety
+    /// Same as [`Scalar::spmm_rows_avx2`], with `band` holding output rows
+    /// `j0..j1` and `xs` row-major with `p` columns and
+    /// `indptr.len() - 1` rows.
+    #[allow(clippy::missing_safety_doc)]
+    unsafe fn spmm_t_cols_avx2(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[Self],
+        xs: &[Self],
+        p: usize,
+        j0: usize,
+        j1: usize,
+        band: &mut [Self],
+    );
+}
+
+macro_rules! impl_scalar {
+    ($t:ty, $name:literal, $simd:ident) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const NAME: &'static str = $name;
+
+            #[inline(always)]
+            fn from_f64(x: f64) -> Self {
+                x as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn bits(self) -> u64 {
+                self.to_bits() as u64
+            }
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline(always)]
+            fn signum(self) -> Self {
+                <$t>::signum(self)
+            }
+            #[inline(always)]
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            #[inline(always)]
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+
+            #[inline]
+            unsafe fn gemm_micro_avx2(
+                alpha: Self,
+                apanel: &[Self],
+                bpack: &[Self],
+                h: usize,
+                nc: usize,
+                kc: usize,
+                c_band: &mut [Self],
+                row0: usize,
+                jc: usize,
+                n: usize,
+            ) {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    $simd::gemm_micro(alpha, apanel, bpack, h, nc, kc, c_band, row0, jc, n)
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    let _ = (alpha, apanel, bpack, h, nc, kc, c_band, row0, jc, n);
+                    unreachable!("avx2 kernel cannot be selected off x86-64")
+                }
+            }
+
+            #[inline]
+            unsafe fn spmm_rows_avx2(
+                indptr: &[usize],
+                indices: &[usize],
+                data: &[Self],
+                xs: &[Self],
+                p: usize,
+                r0: usize,
+                r1: usize,
+                band: &mut [Self],
+            ) {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    $simd::spmm_rows(indptr, indices, data, xs, p, r0, r1, band)
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    let _ = (indptr, indices, data, xs, p, r0, r1, band);
+                    unreachable!("avx2 kernel cannot be selected off x86-64")
+                }
+            }
+
+            #[inline]
+            unsafe fn spmm_t_cols_avx2(
+                indptr: &[usize],
+                indices: &[usize],
+                data: &[Self],
+                xs: &[Self],
+                p: usize,
+                j0: usize,
+                j1: usize,
+                band: &mut [Self],
+            ) {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    $simd::spmm_t_cols(indptr, indices, data, xs, p, j0, j1, band)
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    let _ = (indptr, indices, data, xs, p, j0, j1, band);
+                    unreachable!("avx2 kernel cannot be selected off x86-64")
+                }
+            }
+        }
+    };
+}
+
+impl_scalar!(f64, "f64", avx2_f64);
+impl_scalar!(f32, "f32", avx2_f32);
+
+/// Explicit AVX2+FMA kernels for `f64` (x86-64 only; gated at runtime by
+/// [`super::kernel`]). These are the PR-7 kernels verbatim, relocated here
+/// so both scalar types keep their SIMD bodies side by side.
+#[cfg(target_arch = "x86_64")]
+mod avx2_f64 {
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+
+    use crate::linalg::gemm::KC;
+
+    /// Register-tile height: 6 C rows per micro-panel.
+    pub const MR: usize = 6;
+    /// Register-tile width: 8 C columns = two 4-lane f64 vectors. With
+    /// 6×2 accumulators + 2 B vectors + 1 broadcast coefficient the tile
+    /// uses 15 of the 16 ymm registers — the classic double-precision
+    /// AVX2 GEMM shape.
+    pub const NR: usize = 8;
+
+    /// AVX2 micro-kernel: C[row0+r, jc..jc+nc] += alpha · Ã panel · B̃ for
+    /// r < h.
+    ///
+    /// Arithmetic contract (per C element, independent of the panel height
+    /// h, the thread partition, and the column-block geometry): the kc
+    /// products are fused-multiply-accumulated in ascending-k order into a
+    /// fresh accumulator, then folded into C once as `c = fma(alpha, acc,
+    /// c)`. Pad rows of a ragged panel (r ≥ h) are computed on the packed
+    /// zero coefficients and never stored, so a row's bits do not depend
+    /// on the height of the panel it landed in. The < NR column tail uses
+    /// scalar `f64::mul_add` — IEEE-identical to one fma lane — so an
+    /// element's bits never depend on which path computed it either.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available, `apanel.len() ≥
+    /// MR·kc`, `bpack.len() ≥ kc·nc`, and the C rows `row0..row0+h` with
+    /// columns `jc..jc+nc` lie inside `c_band` (width n).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_micro(
+        alpha: f64,
+        apanel: &[f64],
+        bpack: &[f64],
+        h: usize,
+        nc: usize,
+        kc: usize,
+        c_band: &mut [f64],
+        row0: usize,
+        jc: usize,
+        n: usize,
+    ) {
+        debug_assert!((1..=MR).contains(&h));
+        debug_assert!(apanel.len() >= MR * kc);
+        debug_assert!(bpack.len() >= kc * nc);
+        debug_assert!(c_band.len() >= (row0 + h - 1) * n + jc + nc);
+        let ap = apanel.as_ptr();
+        let bp = bpack.as_ptr();
+        let cp = c_band.as_mut_ptr();
+        let mut j = 0;
+        while j + NR <= nc {
+            let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+            for kk in 0..kc {
+                let b0 = _mm256_loadu_pd(bp.add(kk * nc + j));
+                let b1 = _mm256_loadu_pd(bp.add(kk * nc + j + 4));
+                for r in 0..MR {
+                    let av = _mm256_set1_pd(*ap.add(kk * MR + r));
+                    acc[r][0] = _mm256_fmadd_pd(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_pd(av, b1, acc[r][1]);
+                }
+            }
+            let alphav = _mm256_set1_pd(alpha);
+            for (r, a) in acc.iter().take(h).enumerate() {
+                let crow = cp.add((row0 + r) * n + jc + j);
+                store_fma(crow, alphav, a[0]);
+                store_fma(crow.add(4), alphav, a[1]);
+            }
+            j += NR;
+        }
+        // ragged column tail: same per-element op sequence, scalar fma
+        for r in 0..h {
+            for jj in j..nc {
+                let mut acc = 0.0f64;
+                for kk in 0..kc {
+                    acc = apanel[kk * MR + r].mul_add(bpack[kk * nc + jj], acc);
+                }
+                let cv = &mut c_band[(row0 + r) * n + jc + jj];
+                *cv = alpha.mul_add(acc, *cv);
+            }
+        }
+    }
+
+    /// `c[0..4] = fma(alpha, acc, c[0..4])` at `cp`.
+    ///
+    /// # Safety
+    /// AVX2+FMA available; `cp` valid for 4 f64 reads and writes.
+    #[inline(always)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn store_fma(cp: *mut f64, alphav: __m256d, acc: __m256d) {
+        let c = _mm256_loadu_pd(cp);
+        _mm256_storeu_pd(cp, _mm256_fmadd_pd(alphav, acc, c));
+    }
+
+    /// AVX2 SpMM row band over raw CSR arrays, replaying the AVX2 GEMM's
+    /// per-element arithmetic on the stored pattern: each row's entries are
+    /// split at the dense schedule's [`KC`] k-boundaries; each segment
+    /// fma-chains into a fresh accumulator in stored order; segments fold
+    /// into C via `c = fma(1.0, acc, c)` in ascending-k order. Empty
+    /// segments are skipped — their fold is an exact identity. The < 8
+    /// column tail runs the same sequence with scalar `f64::mul_add`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available and the CSR/operand
+    /// invariants of [`crate::linalg::scalar::Scalar::spmm_rows_avx2`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_rows(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[f64],
+        xs: &[f64],
+        p: usize,
+        r0: usize,
+        r1: usize,
+        band: &mut [f64],
+    ) {
+        let xp = xs.as_ptr();
+        let one = _mm256_set1_pd(1.0);
+        for r in r0..r1 {
+            let (lo, hi) = (indptr[r], indptr[r + 1]);
+            let mut j = 0;
+            while j + 8 <= p {
+                let mut c0 = _mm256_setzero_pd();
+                let mut c1 = _mm256_setzero_pd();
+                let mut q = lo;
+                while q < hi {
+                    // this stored entry starts a KC segment: chain every
+                    // entry below the segment's k-boundary into acc
+                    let seg_end = (indices[q] / KC + 1) * KC;
+                    let mut a0 = _mm256_setzero_pd();
+                    let mut a1 = _mm256_setzero_pd();
+                    while q < hi && indices[q] < seg_end {
+                        let v = _mm256_set1_pd(data[q]);
+                        let xq = xp.add(indices[q] * p + j);
+                        a0 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq), a0);
+                        a1 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq.add(4)), a1);
+                        q += 1;
+                    }
+                    c0 = _mm256_fmadd_pd(one, a0, c0);
+                    c1 = _mm256_fmadd_pd(one, a1, c1);
+                }
+                let cq = band.as_mut_ptr().add((r - r0) * p + j);
+                _mm256_storeu_pd(cq, c0);
+                _mm256_storeu_pd(cq.add(4), c1);
+                j += 8;
+            }
+            for jj in j..p {
+                let mut cv = 0.0f64;
+                let mut q = lo;
+                while q < hi {
+                    let seg_end = (indices[q] / KC + 1) * KC;
+                    let mut acc = 0.0f64;
+                    while q < hi && indices[q] < seg_end {
+                        acc = data[q].mul_add(xs[indices[q] * p + jj], acc);
+                        q += 1;
+                    }
+                    cv = 1.0f64.mul_add(acc, cv);
+                }
+                band[(r - r0) * p + jj] = cv;
+            }
+        }
+    }
+
+    /// AVX2 SpMMᵀ column band: identical entry walk to the scalar path,
+    /// with the inner axpy vectorized as separate multiply and add (no
+    /// fma — `matmul_tn` stays scalar under every kernel, and two-rounding
+    /// lanes keep this path bit-identical to it and to the scalar kernel).
+    /// Scalar remainder lanes use the same two ops.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available and the CSR/operand
+    /// invariants of [`crate::linalg::scalar::Scalar::spmm_t_cols_avx2`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_t_cols(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[f64],
+        xs: &[f64],
+        p: usize,
+        j0: usize,
+        j1: usize,
+        band: &mut [f64],
+    ) {
+        let rows = indptr.len() - 1;
+        for r in 0..rows {
+            let (lo, hi) = (indptr[r], indptr[r + 1]);
+            let row_cols = &indices[lo..hi];
+            let a = lo + row_cols.partition_point(|&c| c < j0);
+            let b = lo + row_cols.partition_point(|&c| c < j1);
+            if a == b {
+                continue;
+            }
+            let xrow = &xs[r * p..r * p + p];
+            let xp = xrow.as_ptr();
+            for q in a..b {
+                let j = indices[q];
+                let v = data[q];
+                let vv = _mm256_set1_pd(v);
+                let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
+                let cp = crow.as_mut_ptr();
+                let mut t = 0;
+                while t + 4 <= p {
+                    let cv = _mm256_loadu_pd(cp.add(t));
+                    let xv = _mm256_loadu_pd(xp.add(t));
+                    _mm256_storeu_pd(cp.add(t), _mm256_add_pd(cv, _mm256_mul_pd(vv, xv)));
+                    t += 4;
+                }
+                while t < p {
+                    crow[t] += v * xrow[t];
+                    t += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Explicit AVX2+FMA kernels for `f32` — the 8-wide single-precision twin
+/// of [`avx2_f64`]: same MR=6/NR=8 register-tile geometry and the same
+/// per-element arithmetic contract, with each row of the tile held in one
+/// 8-lane `__m256` instead of two `__m256d`, so every fma moves twice the
+/// elements — the ~2× GEMM throughput `benches/gemm.rs` measures.
+#[cfg(target_arch = "x86_64")]
+mod avx2_f32 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    use crate::linalg::gemm::KC;
+
+    /// Register-tile height — matches the f64 tile so the packed schedule
+    /// is geometry-identical across scalar types.
+    pub const MR: usize = 6;
+    /// Register-tile width: 8 C columns = one 8-lane f32 vector per row
+    /// (6 accumulators + 1 B vector + 1 broadcast = 8 ymm registers).
+    pub const NR: usize = 8;
+
+    /// f32 AVX2 GEMM micro-kernel — the single-precision twin of
+    /// [`super::avx2_f64::gemm_micro`], same arithmetic contract
+    /// (ascending-k fma chain, one `c = fma(alpha, acc, c)` fold, scalar
+    /// `f32::mul_add` column tail).
+    ///
+    /// # Safety
+    /// Same preconditions as [`super::avx2_f64::gemm_micro`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_micro(
+        alpha: f32,
+        apanel: &[f32],
+        bpack: &[f32],
+        h: usize,
+        nc: usize,
+        kc: usize,
+        c_band: &mut [f32],
+        row0: usize,
+        jc: usize,
+        n: usize,
+    ) {
+        debug_assert!((1..=MR).contains(&h));
+        debug_assert!(apanel.len() >= MR * kc);
+        debug_assert!(bpack.len() >= kc * nc);
+        debug_assert!(c_band.len() >= (row0 + h - 1) * n + jc + nc);
+        let ap = apanel.as_ptr();
+        let bp = bpack.as_ptr();
+        let cp = c_band.as_mut_ptr();
+        let mut j = 0;
+        while j + NR <= nc {
+            let mut acc = [_mm256_setzero_ps(); MR];
+            for kk in 0..kc {
+                let b0 = _mm256_loadu_ps(bp.add(kk * nc + j));
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*ap.add(kk * MR + r));
+                    *a = _mm256_fmadd_ps(av, b0, *a);
+                }
+            }
+            let alphav = _mm256_set1_ps(alpha);
+            for (r, a) in acc.iter().take(h).enumerate() {
+                let crow = cp.add((row0 + r) * n + jc + j);
+                let c = _mm256_loadu_ps(crow);
+                _mm256_storeu_ps(crow, _mm256_fmadd_ps(alphav, *a, c));
+            }
+            j += NR;
+        }
+        // ragged column tail: same per-element op sequence, scalar fma
+        for r in 0..h {
+            for jj in j..nc {
+                let mut acc = 0.0f32;
+                for kk in 0..kc {
+                    acc = apanel[kk * MR + r].mul_add(bpack[kk * nc + jj], acc);
+                }
+                let cv = &mut c_band[(row0 + r) * n + jc + jj];
+                *cv = alpha.mul_add(acc, *cv);
+            }
+        }
+    }
+
+    /// f32 AVX2 SpMM row band — the single-precision twin of
+    /// [`super::avx2_f64::spmm_rows`]: same KC segmentation and fold
+    /// sequence, one 8-lane vector per column block.
+    ///
+    /// # Safety
+    /// Same preconditions as [`super::avx2_f64::spmm_rows`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_rows(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[f32],
+        xs: &[f32],
+        p: usize,
+        r0: usize,
+        r1: usize,
+        band: &mut [f32],
+    ) {
+        let xp = xs.as_ptr();
+        let one = _mm256_set1_ps(1.0);
+        for r in r0..r1 {
+            let (lo, hi) = (indptr[r], indptr[r + 1]);
+            let mut j = 0;
+            while j + 8 <= p {
+                let mut c0 = _mm256_setzero_ps();
+                let mut q = lo;
+                while q < hi {
+                    let seg_end = (indices[q] / KC + 1) * KC;
+                    let mut a0 = _mm256_setzero_ps();
+                    while q < hi && indices[q] < seg_end {
+                        let v = _mm256_set1_ps(data[q]);
+                        a0 = _mm256_fmadd_ps(v, _mm256_loadu_ps(xp.add(indices[q] * p + j)), a0);
+                        q += 1;
+                    }
+                    c0 = _mm256_fmadd_ps(one, a0, c0);
+                }
+                _mm256_storeu_ps(band.as_mut_ptr().add((r - r0) * p + j), c0);
+                j += 8;
+            }
+            for jj in j..p {
+                let mut cv = 0.0f32;
+                let mut q = lo;
+                while q < hi {
+                    let seg_end = (indices[q] / KC + 1) * KC;
+                    let mut acc = 0.0f32;
+                    while q < hi && indices[q] < seg_end {
+                        acc = data[q].mul_add(xs[indices[q] * p + jj], acc);
+                        q += 1;
+                    }
+                    cv = 1.0f32.mul_add(acc, cv);
+                }
+                band[(r - r0) * p + jj] = cv;
+            }
+        }
+    }
+
+    /// f32 AVX2 SpMMᵀ column band — separate multiply and add like the f64
+    /// kernel, so its bits match the scalar f32 path exactly.
+    ///
+    /// # Safety
+    /// Same preconditions as [`super::avx2_f64::spmm_t_cols`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_t_cols(
+        indptr: &[usize],
+        indices: &[usize],
+        data: &[f32],
+        xs: &[f32],
+        p: usize,
+        j0: usize,
+        j1: usize,
+        band: &mut [f32],
+    ) {
+        let rows = indptr.len() - 1;
+        for r in 0..rows {
+            let (lo, hi) = (indptr[r], indptr[r + 1]);
+            let row_cols = &indices[lo..hi];
+            let a = lo + row_cols.partition_point(|&c| c < j0);
+            let b = lo + row_cols.partition_point(|&c| c < j1);
+            if a == b {
+                continue;
+            }
+            let xrow = &xs[r * p..r * p + p];
+            let xp = xrow.as_ptr();
+            for q in a..b {
+                let j = indices[q];
+                let v = data[q];
+                let vv = _mm256_set1_ps(v);
+                let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
+                let cp = crow.as_mut_ptr();
+                let mut t = 0;
+                while t + 8 <= p {
+                    let cv = _mm256_loadu_ps(cp.add(t));
+                    let xv = _mm256_loadu_ps(xp.add(t));
+                    _mm256_storeu_ps(cp.add(t), _mm256_add_ps(cv, _mm256_mul_ps(vv, xv)));
+                    t += 8;
+                }
+                while t < p {
+                    crow[t] += v * xrow[t];
+                    t += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_and_conversions() {
+        assert_eq!(f64::ZERO, 0.0);
+        assert_eq!(f32::ONE, 1.0);
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!(1.5f32.to_f64(), 1.5f64);
+        // bits: f64 keeps its full pattern, f32 zero-extends
+        assert_eq!(Scalar::bits(1.0f64), 1.0f64.to_bits());
+        assert_eq!(Scalar::bits(1.0f32), 1.0f32.to_bits() as u64);
+        assert_ne!(Scalar::bits(0.0f32), Scalar::bits(-0.0f32));
+    }
+
+    #[test]
+    fn narrowing_overflows_to_inf() {
+        // the wire decoders guard against exactly this (docs/NUMERICS.md):
+        // a value finite in f64 can narrow to an infinite f32
+        let big = 1e300f64;
+        assert!(big.is_finite());
+        assert!(!f32::from_f64(big).is_finite());
+    }
+
+    #[test]
+    fn signum_keeps_ieee_zero_convention() {
+        assert_eq!(Scalar::signum(-0.0f64), -1.0);
+        assert_eq!(Scalar::signum(0.0f32), 1.0);
+    }
+}

@@ -1,5 +1,7 @@
 //! CSR sparse matrices and the parallel SpMM kernels behind the sparse
-//! [`LinOp`](super::op::LinOp) backend.
+//! [`LinOp`](super::op::LinOp) backend, generic over the
+//! [`Scalar`](super::scalar::Scalar) element type ([`Csr`] is the
+//! historical `f64` alias).
 //!
 //! The paper's reformulation funnels all range-finder flops into products
 //! with a thin dense block, which means a sparse A only ever needs
@@ -13,59 +15,61 @@
 //! GEMM accumulates the k-reduction in ascending order while a zero term
 //! contributes an exact `+0.0`, SpMM on finite data matches
 //! `matmul(to_dense(), x)` to 0 ULP — `tests/sparse_rsvd.rs` pins this.
+//! The contract is per scalar type: the f32 instantiation runs the same
+//! term order at single precision and matches the f32 dense GEMM to 0 ULP.
 //!
 //! Both products dispatch on [`super::kernel`] like the dense GEMM. The
 //! dense-twin contract holds under *each* kernel because the sparse kernels
 //! replay the dense arithmetic per element: the scalar SpMM is the plain
 //! mul-then-add sweep (identical to the scalar GEMM's term order), and the
-//! AVX2 SpMM segments each row's stored entries at the dense schedule's
-//! [`KC`](super::gemm::KC) boundaries, fma-chains each segment into a fresh
-//! accumulator, and folds segments with `c = fma(1.0, acc, c)` — exactly
-//! the per-element op sequence of the AVX2 GEMM, with the skipped all-zero
-//! terms contributing exact identities (an accumulator seeded `+0.0` can
-//! never become `-0.0` under round-to-nearest, so `acc + ±0.0 == acc`).
-//! SpMMᵀ mirrors [`super::gemm::matmul_tn`], which stays scalar under every
-//! kernel; its AVX2 variant vectorizes the axpy with separate mul and add —
-//! the same two per-element roundings — and is therefore bit-identical to
-//! the scalar path, not just close.
+//! AVX2 SpMM (per-scalar bodies in [`super::scalar`]) segments each row's
+//! stored entries at the dense schedule's [`KC`](super::gemm::KC)
+//! boundaries, fma-chains each segment into a fresh accumulator, and folds
+//! segments with `c = fma(1.0, acc, c)` — exactly the per-element op
+//! sequence of the AVX2 GEMM, with the skipped all-zero terms contributing
+//! exact identities (an accumulator seeded `+0.0` can never become `-0.0`
+//! under round-to-nearest, so `acc + ±0.0 == acc`). SpMMᵀ mirrors
+//! [`super::gemm::matmul_tn`], which stays scalar under every kernel; its
+//! AVX2 variant vectorizes the axpy with separate mul and add — the same
+//! two per-element roundings — and is therefore bit-identical to the
+//! scalar path, not just close.
 
-use super::gemm::KC;
 use super::kernel::{self, Kernel};
+use super::matrix::Mat;
 use super::op::LinOp;
+use super::scalar::Scalar;
 use super::threading::{scoped_bands, Parallelism};
-use super::Matrix;
-#[cfg(target_arch = "x86_64")]
-use std::arch::x86_64::{
-    _mm256_add_pd, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
-    _mm256_setzero_pd, _mm256_storeu_pd,
-};
 
-/// Compressed sparse row matrix of `f64`.
+/// Compressed sparse row matrix over a [`Scalar`] element type.
 ///
-/// Invariants (enforced by [`Csr::new`]):
+/// Invariants (enforced by [`CsrMat::new`]):
 /// * `indptr.len() == rows + 1`, `indptr[0] == 0`,
 ///   `indptr[rows] == indices.len() == data.len()`, non-decreasing;
 /// * within each row, column indices are strictly increasing and `< cols`
 ///   (sorted, no duplicates — the bitwise SpMM contract needs a fixed,
 ///   canonical term order per output element).
 #[derive(Clone, Debug, PartialEq)]
-pub struct Csr {
+pub struct CsrMat<S: Scalar> {
     rows: usize,
     cols: usize,
     indptr: Vec<usize>,
     indices: Vec<usize>,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl Csr {
+/// The historical double-precision CSR matrix — an alias so every existing
+/// `f64` call site keeps its exact spelling (and its exact bits).
+pub type Csr = CsrMat<f64>;
+
+impl<S: Scalar> CsrMat<S> {
     /// Validated construction from raw CSR arrays.
     pub fn new(
         rows: usize,
         cols: usize,
         indptr: Vec<usize>,
         indices: Vec<usize>,
-        data: Vec<f64>,
-    ) -> Result<Csr, String> {
+        data: Vec<S>,
+    ) -> Result<CsrMat<S>, String> {
         if indptr.len() != rows + 1 {
             return Err(format!("indptr len {} != rows+1 {}", indptr.len(), rows + 1));
         }
@@ -105,7 +109,7 @@ impl Csr {
                 }
             }
         }
-        Ok(Csr { rows, cols, indptr, indices, data })
+        Ok(CsrMat { rows, cols, indptr, indices, data })
     }
 
     /// Build from COO triplets `(row, col, value)` in any order; duplicate
@@ -116,8 +120,8 @@ impl Csr {
     pub fn from_coo(
         rows: usize,
         cols: usize,
-        triplets: &[(usize, usize, f64)],
-    ) -> Result<Csr, String> {
+        triplets: &[(usize, usize, S)],
+    ) -> Result<CsrMat<S>, String> {
         for &(r, c, _) in triplets {
             if r >= rows || c >= cols {
                 return Err(format!("triplet ({r},{c}) outside {rows}x{cols}"));
@@ -129,7 +133,7 @@ impl Csr {
         order.sort_by_key(|&t| (triplets[t].0, triplets[t].1));
         let mut indptr = vec![0usize; rows + 1];
         let mut indices = Vec::with_capacity(triplets.len());
-        let mut data: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut data: Vec<S> = Vec::with_capacity(triplets.len());
         let mut last_rc = None;
         for &t in &order {
             let (r, c, v) = triplets[t];
@@ -147,7 +151,7 @@ impl Csr {
         for r in 0..rows {
             indptr[r + 1] += indptr[r];
         }
-        Csr::new(rows, cols, indptr, indices, data)
+        CsrMat::new(rows, cols, indptr, indices, data)
     }
 
     #[inline]
@@ -175,14 +179,14 @@ impl Csr {
     }
 
     /// Raw CSR views, in (indptr, indices, data) order.
-    pub fn parts(&self) -> (&[usize], &[usize], &[f64]) {
+    pub fn parts(&self) -> (&[usize], &[usize], &[S]) {
         (&self.indptr, &self.indices, &self.data)
     }
 
     /// Dense equivalent — tests and the exact-solver fallback only; the
     /// sketch pipeline itself never densifies.
-    pub fn to_dense(&self) -> Matrix {
-        let mut m = Matrix::zeros(self.rows, self.cols);
+    pub fn to_dense(&self) -> Mat<S> {
+        let mut m = Mat::zeros(self.rows, self.cols);
         for r in 0..self.rows {
             let row = m.row_mut(r);
             for p in self.indptr[r]..self.indptr[r + 1] {
@@ -192,7 +196,22 @@ impl Csr {
         m
     }
 
-    /// Content fingerprint with [`Matrix::fingerprint`] semantics (bit
+    /// Same pattern, values converted to another scalar type through f64
+    /// (`f64 → f32` rounds to nearest; `f32 → f64` is exact). The exec
+    /// layer uses this to build the f32 payload twin for `f32`/`mixed`
+    /// requests; the wire decoders have already rejected values that would
+    /// overflow f32 (docs/NUMERICS.md).
+    pub fn map_scalar<T: Scalar>(&self) -> CsrMat<T> {
+        CsrMat {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            data: self.data.iter().map(|v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// Content fingerprint with [`Mat::fingerprint`] semantics (bit
     /// patterns, shape included), salted so a CSR matrix never collides
     /// with the dense fingerprint of its densified twin — the batcher must
     /// not fuse a sparse job with a dense one even when the operators are
@@ -209,7 +228,7 @@ impl Csr {
             f.word(c as u64);
         }
         for v in &self.data {
-            f.word(v.to_bits());
+            f.word(v.bits());
         }
         f.finish()
     }
@@ -221,10 +240,10 @@ impl Csr {
     /// order regardless of the partition. The row-band inner loop
     /// dispatches on [`super::kernel`] (see the module docs for why the
     /// dense-twin 0-ULP contract survives the dispatch).
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
+    pub fn spmm(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.cols, x.rows(), "spmm inner dims {} vs {}", self.cols, x.rows());
         let p = x.cols();
-        let mut c = Matrix::zeros(self.rows, p);
+        let mut c = Mat::zeros(self.rows, p);
         if self.rows == 0 || p == 0 || self.nnz() == 0 {
             return c;
         }
@@ -234,14 +253,23 @@ impl Csr {
         let chunks =
             if team > 1 { partition_rows_by_nnz(&self.indptr, team) } else { Vec::new() };
 
-        let rows_kernel = |r0: usize, r1: usize, band: &mut [f64]| match kern {
+        let rows_kernel = |r0: usize, r1: usize, band: &mut [S]| match kern {
             Kernel::Scalar => self.spmm_rows_scalar(x, p, r0, r1, band),
-            #[cfg(target_arch = "x86_64")]
             // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
-            // with_kernel after a positive AVX2+FMA feature check.
-            Kernel::Avx2 => unsafe { self.spmm_rows_avx2(x, p, r0, r1, band) },
-            #[cfg(not(target_arch = "x86_64"))]
-            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
+            // with_kernel after a positive AVX2+FMA feature check; the
+            // per-scalar impls in `scalar.rs` unreachable!() off x86-64.
+            Kernel::Avx2 => unsafe {
+                S::spmm_rows_avx2(
+                    &self.indptr,
+                    &self.indices,
+                    &self.data,
+                    x.as_slice(),
+                    p,
+                    r0,
+                    r1,
+                    band,
+                )
+            },
         };
 
         if chunks.len() <= 1 {
@@ -252,81 +280,18 @@ impl Csr {
         c
     }
 
-    /// Portable SpMM row band — bit-for-bit the historical loop: every
-    /// stored entry axpys its X row into the C row with separate mul and
-    /// add, in stored order.
-    fn spmm_rows_scalar(&self, x: &Matrix, p: usize, r0: usize, r1: usize, band: &mut [f64]) {
+    /// Portable SpMM row band — bit-for-bit the historical loop at each
+    /// precision: every stored entry axpys its X row into the C row with
+    /// separate mul and add, in stored order.
+    fn spmm_rows_scalar(&self, x: &Mat<S>, p: usize, r0: usize, r1: usize, band: &mut [S]) {
         for r in r0..r1 {
             let crow = &mut band[(r - r0) * p..(r - r0) * p + p];
             for q in self.indptr[r]..self.indptr[r + 1] {
                 let v = self.data[q];
                 let xrow = x.row(self.indices[q]);
                 for (cv, xv) in crow.iter_mut().zip(xrow) {
-                    *cv += v * xv;
+                    *cv += v * *xv;
                 }
-            }
-        }
-    }
-
-    /// AVX2 SpMM row band, replaying the AVX2 GEMM's per-element arithmetic
-    /// on the stored pattern: each row's entries are split at the dense
-    /// schedule's [`KC`] k-boundaries; each segment fma-chains into a fresh
-    /// accumulator in stored order; segments fold into C via
-    /// `c = fma(1.0, acc, c)` in ascending-k order. Empty segments are
-    /// skipped — their fold is an exact identity (see module docs). The
-    /// < 8 column tail runs the same sequence with scalar `f64::mul_add`.
-    ///
-    /// # Safety
-    /// Caller must ensure AVX2 and FMA are available. (All loads/stores are
-    /// bounds-derived from the validated CSR invariants and `x`/`band`
-    /// shapes; unaligned access is explicit via `loadu`/`storeu`.)
-    #[cfg(target_arch = "x86_64")]
-    #[target_feature(enable = "avx2,fma")]
-    unsafe fn spmm_rows_avx2(&self, x: &Matrix, p: usize, r0: usize, r1: usize, band: &mut [f64]) {
-        let xs = x.as_slice();
-        let xp = xs.as_ptr();
-        let one = _mm256_set1_pd(1.0);
-        for r in r0..r1 {
-            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
-            let mut j = 0;
-            while j + 8 <= p {
-                let mut c0 = _mm256_setzero_pd();
-                let mut c1 = _mm256_setzero_pd();
-                let mut q = lo;
-                while q < hi {
-                    // this stored entry starts a KC segment: chain every
-                    // entry below the segment's k-boundary into acc
-                    let seg_end = (self.indices[q] / KC + 1) * KC;
-                    let mut a0 = _mm256_setzero_pd();
-                    let mut a1 = _mm256_setzero_pd();
-                    while q < hi && self.indices[q] < seg_end {
-                        let v = _mm256_set1_pd(self.data[q]);
-                        let xq = xp.add(self.indices[q] * p + j);
-                        a0 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq), a0);
-                        a1 = _mm256_fmadd_pd(v, _mm256_loadu_pd(xq.add(4)), a1);
-                        q += 1;
-                    }
-                    c0 = _mm256_fmadd_pd(one, a0, c0);
-                    c1 = _mm256_fmadd_pd(one, a1, c1);
-                }
-                let cq = band.as_mut_ptr().add((r - r0) * p + j);
-                _mm256_storeu_pd(cq, c0);
-                _mm256_storeu_pd(cq.add(4), c1);
-                j += 8;
-            }
-            for jj in j..p {
-                let mut cv = 0.0f64;
-                let mut q = lo;
-                while q < hi {
-                    let seg_end = (self.indices[q] / KC + 1) * KC;
-                    let mut acc = 0.0f64;
-                    while q < hi && self.indices[q] < seg_end {
-                        acc = self.data[q].mul_add(xs[self.indices[q] * p + jj], acc);
-                        q += 1;
-                    }
-                    cv = 1.0f64.mul_add(acc, cv);
-                }
-                band[(r - r0) * p + jj] = cv;
             }
         }
     }
@@ -341,10 +306,10 @@ impl Csr {
     /// row) is the serial order for any team size. Dispatches on
     /// [`super::kernel`]; both kernels produce identical bits (the AVX2
     /// variant keeps the scalar path's separate mul and add).
-    pub fn spmm_t(&self, x: &Matrix) -> Matrix {
+    pub fn spmm_t(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.rows, x.rows(), "spmm_t row dims {} vs {}", self.rows, x.rows());
         let p = x.cols();
-        let mut c = Matrix::zeros(self.cols, p);
+        let mut c = Mat::zeros(self.cols, p);
         if self.cols == 0 || p == 0 || self.nnz() == 0 {
             return c;
         }
@@ -357,14 +322,23 @@ impl Csr {
             Vec::new()
         };
 
-        let cols_kernel = |j0: usize, j1: usize, band: &mut [f64]| match kern {
+        let cols_kernel = |j0: usize, j1: usize, band: &mut [S]| match kern {
             Kernel::Scalar => self.spmm_t_cols_scalar(x, p, j0, j1, band),
-            #[cfg(target_arch = "x86_64")]
             // SAFETY: Kernel::Avx2 is only produced by kernel::resolve /
-            // with_kernel after a positive AVX2+FMA feature check.
-            Kernel::Avx2 => unsafe { self.spmm_t_cols_avx2(x, p, j0, j1, band) },
-            #[cfg(not(target_arch = "x86_64"))]
-            Kernel::Avx2 => unreachable!("avx2 kernel cannot be selected off x86-64"),
+            // with_kernel after a positive AVX2+FMA feature check; the
+            // per-scalar impls in `scalar.rs` unreachable!() off x86-64.
+            Kernel::Avx2 => unsafe {
+                S::spmm_t_cols_avx2(
+                    &self.indptr,
+                    &self.indices,
+                    &self.data,
+                    x.as_slice(),
+                    p,
+                    j0,
+                    j1,
+                    band,
+                )
+            },
         };
 
         if chunks.len() <= 1 {
@@ -376,7 +350,7 @@ impl Csr {
     }
 
     /// Portable SpMMᵀ column band — bit-for-bit the historical loop.
-    fn spmm_t_cols_scalar(&self, x: &Matrix, p: usize, j0: usize, j1: usize, band: &mut [f64]) {
+    fn spmm_t_cols_scalar(&self, x: &Mat<S>, p: usize, j0: usize, j1: usize, band: &mut [S]) {
         for r in 0..self.rows {
             // in-row columns are strictly increasing, so the band's
             // entries form the contiguous subrange [lo+a, lo+b) —
@@ -395,80 +369,28 @@ impl Csr {
                 let v = self.data[q];
                 let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
                 for (cv, xv) in crow.iter_mut().zip(xrow) {
-                    *cv += v * xv;
-                }
-            }
-        }
-    }
-
-    /// AVX2 SpMMᵀ column band: identical entry walk to the scalar path,
-    /// with the inner axpy vectorized as separate multiply and add (no
-    /// fma — `matmul_tn` stays scalar under every kernel, and two-rounding
-    /// lanes keep this path bit-identical to it and to the scalar kernel,
-    /// so `RSVD_KERNEL` can never change SpMMᵀ bits). Scalar remainder
-    /// lanes use the same two ops.
-    ///
-    /// # Safety
-    /// Caller must ensure AVX2 and FMA are available. (All loads/stores are
-    /// bounds-derived from the validated CSR invariants and `x`/`band`
-    /// shapes; unaligned access is explicit via `loadu`/`storeu`.)
-    #[cfg(target_arch = "x86_64")]
-    #[target_feature(enable = "avx2,fma")]
-    unsafe fn spmm_t_cols_avx2(
-        &self,
-        x: &Matrix,
-        p: usize,
-        j0: usize,
-        j1: usize,
-        band: &mut [f64],
-    ) {
-        for r in 0..self.rows {
-            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
-            let row_cols = &self.indices[lo..hi];
-            let a = lo + row_cols.partition_point(|&c| c < j0);
-            let b = lo + row_cols.partition_point(|&c| c < j1);
-            if a == b {
-                continue;
-            }
-            let xrow = x.row(r);
-            let xp = xrow.as_ptr();
-            for q in a..b {
-                let j = self.indices[q];
-                let v = self.data[q];
-                let vv = _mm256_set1_pd(v);
-                let crow = &mut band[(j - j0) * p..(j - j0) * p + p];
-                let cp = crow.as_mut_ptr();
-                let mut t = 0;
-                while t + 4 <= p {
-                    let cv = _mm256_loadu_pd(cp.add(t));
-                    let xv = _mm256_loadu_pd(xp.add(t));
-                    _mm256_storeu_pd(cp.add(t), _mm256_add_pd(cv, _mm256_mul_pd(vv, xv)));
-                    t += 4;
-                }
-                while t < p {
-                    crow[t] += v * xrow[t];
-                    t += 1;
+                    *cv += v * *xv;
                 }
             }
         }
     }
 }
 
-impl LinOp for Csr {
+impl<S: Scalar> LinOp<S> for CsrMat<S> {
     fn shape(&self) -> (usize, usize) {
-        Csr::shape(self)
+        CsrMat::shape(self)
     }
 
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         self.spmm(x)
     }
 
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         self.spmm_t(x)
     }
 
     fn fingerprint(&self) -> u64 {
-        Csr::fingerprint(self)
+        CsrMat::fingerprint(self)
     }
     // project() keeps the default (spmm_t + blocked transpose): CSR has no
     // cheaper native Qᵀ·A than Aᵀ·Q, and no frozen-bitwise history to
@@ -517,8 +439,9 @@ fn partition_rows_by_nnz(indptr: &[usize], teams: usize) -> Vec<(usize, usize)> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::linalg::gemm::{matmul, matmul_tn, KC};
     use crate::linalg::threading::{available_threads, with_threads};
+    use crate::linalg::Matrix;
     use crate::rng::RngCore;
 
     /// ~`density` random sparse matrix via the Philox stream (deterministic
@@ -668,6 +591,51 @@ mod tests {
     }
 
     #[test]
+    fn f32_dense_twin_holds_under_every_kernel() {
+        // the same 0-ULP contract at single precision: the f32 SpMM/SpMMᵀ
+        // replay the f32 dense GEMM's per-element arithmetic
+        use crate::linalg::kernel::{avx2_available, with_kernel, Kernel};
+        let mut kernels = vec![Kernel::Scalar];
+        if avx2_available() {
+            kernels.push(Kernel::Avx2);
+        }
+        for kern in kernels {
+            for &(m, n, p, dens) in
+                &[(7usize, 5usize, 3usize, 0.4), (40, 30, 8, 0.1), (10, KC + 9, 11, 0.08)]
+            {
+                let a = random_csr(m, n, dens, (m + 31 * n) as u64).map_scalar::<f32>();
+                let d = a.to_dense();
+                let x = Mat::<f32>::gaussian(n, p, 3);
+                let (s, g) = with_kernel(kern, || (a.spmm(&x), matmul(&d, &x)));
+                assert_eq!(s, g, "[{}] f32 spmm {m}x{n}x{p}", kern.name());
+                let y = Mat::<f32>::gaussian(m, p, 4);
+                let (st, gt) = with_kernel(kern, || (a.spmm_t(&y), matmul_tn(&d, &y)));
+                assert_eq!(st, gt, "[{}] f32 spmm_t {m}x{n}x{p}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn map_scalar_converts_values_and_keeps_pattern() {
+        let a = random_csr(12, 9, 0.3, 55);
+        let a32 = a.map_scalar::<f32>();
+        assert_eq!(a32.shape(), a.shape());
+        assert_eq!(a32.nnz(), a.nnz());
+        let (ip, ix, d32) = a32.parts();
+        let (ip64, ix64, d64) = a.parts();
+        assert_eq!(ip, ip64);
+        assert_eq!(ix, ix64);
+        for (v32, v64) in d32.iter().zip(d64) {
+            assert_eq!(*v32, *v64 as f32);
+        }
+        // round trip back to f64 only moves values by f32 rounding
+        let back = a32.map_scalar::<f64>();
+        assert!(back.to_dense().max_diff(&a.to_dense()) < 1e-7);
+        // different scalar types never share a fingerprint
+        assert_ne!(a32.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
     fn spmm_t_bits_are_kernel_independent() {
         // SpMMᵀ promises identical bits under every kernel (its AVX2 path
         // keeps the scalar mul-then-add), unlike SpMM which only promises
@@ -682,6 +650,12 @@ mod tests {
         let sc = with_kernel(Kernel::Scalar, || a.spmm_t(&y));
         let vx = with_kernel(Kernel::Avx2, || a.spmm_t(&y));
         assert_eq!(sc, vx);
+        // and the f32 twin makes the same promise
+        let a32 = a.map_scalar::<f32>();
+        let y32 = Mat::<f32>::from_wide(&y);
+        let sc32 = with_kernel(Kernel::Scalar, || a32.spmm_t(&y32));
+        let vx32 = with_kernel(Kernel::Avx2, || a32.spmm_t(&y32));
+        assert_eq!(sc32, vx32);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!                     --tolerance 0.25]      CI bench-regression guard
 //! ```
 
-use rsvd::coordinator::{Method, Request};
+use rsvd::coordinator::{Method, Precision, Request};
 use rsvd::datagen::{spectrum_matrix, synthetic_faces, Decay};
 use rsvd::experiments::{self, SpectrumOpts};
 use rsvd::util::cli::Args;
@@ -305,7 +305,14 @@ fn svd_cmd(args: &Args) {
     let coord = experiments::boot_coordinator();
     let a = spectrum_matrix(m, n, decay, args.get_usize("seed", 1) as u64);
     let t0 = std::time::Instant::now();
-    let res = coord.run(Request::Svd { a, k, method, want_vectors: false, seed: 1 });
+    let res = coord.run(Request::Svd {
+        a,
+        k,
+        method,
+        want_vectors: false,
+        seed: 1,
+        precision: Precision::F64,
+    });
     match res.outcome {
         Ok(d) => {
             println!(

@@ -3,7 +3,7 @@
 //! the true tail), bitwise determinism across thread counts and operator
 //! backends, and the coordinator round trip including the wire codec.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Operand, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Operand, Precision, Request};
 use rsvd::datagen::sparse::{tridiag_toeplitz, tridiag_toeplitz_spectrum};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::linalg::adaptive::{rsvd_adaptive, AdaptiveOpts};
@@ -148,6 +148,7 @@ fn coordinator_serves_adaptive_over_the_wire() {
         method: Method::Auto,
         want_vectors: true,
         seed: 21,
+        precision: Precision::F64,
     };
     let wire = req.adaptive_to_json().expect("adaptive encodes").to_string();
     let decoded =
@@ -181,6 +182,7 @@ fn coordinator_adaptive_exact_method_honored() {
         method: Method::Gesvd,
         want_vectors: false,
         seed: 1,
+        precision: Precision::F64,
     });
     let d = res.outcome.expect("ok");
     assert_eq!(d.method_used, "gesvd");

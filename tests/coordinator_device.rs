@@ -2,7 +2,7 @@
 //! inventory — routing decisions, device/host agreement, concurrent mixed
 //! workloads, and the padding invariance end to end.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::linalg::svd_gesvd::svd;
 use std::sync::Arc;
@@ -34,6 +34,7 @@ fn auto_uses_device_and_matches_exact() {
         method: Method::Auto,
         want_vectors: false,
         seed: 5,
+        precision: Precision::F64,
     });
     let d = r.outcome.expect("ok");
     assert_eq!(d.method_used, "device", "bucket should fit");
@@ -55,12 +56,26 @@ fn device_and_host_methods_agree() {
     let a = spectrum_matrix(400, 200, Decay::Sharp { beta: 10.0 }, 9);
     let k = 6;
     let dev = coord
-        .run(Request::Svd { a: a.clone(), k, method: Method::Auto, want_vectors: false, seed: 1 })
+        .run(Request::Svd {
+            a: a.clone(),
+            k,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::F64,
+        })
         .outcome
         .unwrap();
     for m in [Method::Gesvd, Method::Lanczos, Method::PartialEigen] {
         let host = coord
-            .run(Request::Svd { a: a.clone(), k, method: m, want_vectors: false, seed: 1 })
+            .run(Request::Svd {
+                a: a.clone(),
+                k,
+                method: m,
+                want_vectors: false,
+                seed: 1,
+                precision: Precision::F64,
+            })
             .outcome
             .unwrap();
         for i in 0..k {
@@ -93,6 +108,7 @@ fn concurrent_mixed_workload_no_failures() {
                         method,
                         want_vectors: i % 2 == 0,
                         seed,
+                        precision: Precision::F64,
                     });
                     let d = r.outcome.expect("job must not fail");
                     assert_eq!(d.values.len(), 4);
@@ -118,7 +134,14 @@ fn padding_invariance_through_coordinator() {
     // exact solver on the *unpadded* matrix
     let a = spectrum_matrix(300, 200, Decay::Fast, 21);
     let d = coord
-        .run(Request::Svd { a: a.clone(), k: 5, method: Method::Auto, want_vectors: true, seed: 2 })
+        .run(Request::Svd {
+            a: a.clone(),
+            k: 5,
+            method: Method::Auto,
+            want_vectors: true,
+            seed: 2,
+            precision: Precision::F64,
+        })
         .outcome
         .unwrap();
     assert_eq!(d.method_used, "device");
@@ -153,8 +176,14 @@ fn failure_surfaces_cleanly() {
     let Some(coord) = boot() else { return };
     // k = 0 is degenerate but must not crash anything; values empty or err
     let a = spectrum_matrix(64, 48, Decay::Fast, 1);
-    let r =
-        coord.run(Request::Svd { a, k: 0, method: Method::Lanczos, want_vectors: false, seed: 1 });
+    let r = coord.run(Request::Svd {
+        a,
+        k: 0,
+        method: Method::Lanczos,
+        want_vectors: false,
+        seed: 1,
+        precision: Precision::F64,
+    });
     match r.outcome {
         Ok(d) => assert!(d.values.is_empty()),
         Err(e) => assert!(!e.is_empty()),

@@ -3,7 +3,7 @@
 //! sequential per-job solves, for any solver thread count — while actually
 //! engaging fusion (metrics prove it).
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::linalg::rsvd::{
     rsvd, rsvd_batch, rsvd_values, rsvd_values_batch, BatchOpts, RsvdOpts, SketchJob,
 };
@@ -91,6 +91,7 @@ fn coordinator_fused_burst_matches_sequential_calls() {
                     method: Method::NativeRsvd,
                     want_vectors: false,
                     seed: j.seed,
+                    precision: Precision::F64,
                 })
             })
             .collect();

@@ -3,7 +3,7 @@
 //! every job answered, and every job's (possibly fused) result is
 //! bitwise-equal to resubmitting it solo on a fresh coordinator.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::sparse::banded;
 use rsvd::linalg::{Matrix, TiledMatrix};
 use std::sync::Arc;
@@ -31,6 +31,7 @@ fn request(
             method: Method::NativeRsvd,
             want_vectors,
             seed,
+            precision: Precision::F64,
         },
         2 => Request::SvdSparse {
             a: sparse.clone(),
@@ -38,6 +39,7 @@ fn request(
             method: Method::NativeRsvd,
             want_vectors,
             seed,
+            precision: Precision::F64,
         },
         3 | 4 => Request::SvdTiled {
             a: tiled[id % tiled.len()].clone(),
@@ -45,6 +47,7 @@ fn request(
             method: Method::NativeRsvd,
             want_vectors,
             seed,
+            precision: Precision::F64,
         },
         5 => Request::Svd {
             a: dense[0].clone(),
@@ -52,6 +55,7 @@ fn request(
             method: Method::Lanczos,
             want_vectors: false,
             seed,
+            precision: Precision::F64,
         },
         _ => Request::Pca {
             x: dense[id % dense.len()].clone(),

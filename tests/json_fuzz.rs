@@ -141,6 +141,49 @@ fn prop_corrupted_payloads_error_never_panic() {
 }
 
 #[test]
+fn prop_f32_overflow_payloads_rejected_for_reduced_precision() {
+    // the reduced-precision guard: a payload value finite in f64 but
+    // overflowing f32 decodes fine as an f64 request, and is refused —
+    // with a named error, never a silent inf, never a panic — the moment
+    // the same frame asks for f32 or mixed precision
+    use rsvd::coordinator::{Method, Precision, Request};
+    testkit::check(60, |g: &mut Gen| {
+        let mut m = g.matrix(1..8, 1..8);
+        let (i, j) = (g.usize(0..m.rows()), g.usize(0..m.cols()));
+        let sign = if g.bool() { 1.0 } else { -1.0 };
+        let big = sign * g.f64(1e39..1e300);
+        m[(i, j)] = big;
+        let req = Request::Svd {
+            a: m,
+            k: 1,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::F64,
+        };
+        let wire = req.to_wire_json().expect("f64 requests are wire-expressible");
+        testkit::assert_that(
+            Request::from_wire_json(&wire).is_ok(),
+            "an f64 request must accept large-but-finite values",
+        )?;
+        let Json::Obj(mut obj) = wire else { unreachable!("wire frames are objects") };
+        let prec = if g.bool() { "f32" } else { "mixed" };
+        obj.insert("precision".into(), Json::Str(prec.into()));
+        let outcome = std::panic::catch_unwind(move || Request::from_wire_json(&Json::Obj(obj)));
+        match outcome {
+            Err(_) => Err(format!("decoder panicked on {prec} overflow payload")),
+            Ok(Ok(_)) => {
+                Err(format!("{prec} decode accepted an f32-overflowing value {big:e}"))
+            }
+            Ok(Err(e)) => testkit::assert_that(
+                e.contains("not representable in f32"),
+                &format!("error must name the overflow, got: {e}"),
+            ),
+        }
+    });
+}
+
+#[test]
 fn prop_truncated_wire_never_panics() {
     testkit::check(150, |g: &mut Gen| {
         let wire = if g.bool() {

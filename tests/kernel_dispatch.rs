@@ -11,9 +11,12 @@
 //!    unsupported forced kernel exits 2 naming the knob, before any work.
 
 use rsvd::datagen::{power_law, spectrum_matrix, Decay};
+use rsvd::linalg::eigen::eigvalsh;
 use rsvd::linalg::gemm::{gemm, matmul, matmul_nt, matmul_tn, KC};
 use rsvd::linalg::kernel::avx2_available;
+use rsvd::linalg::qr::orthonormalize;
 use rsvd::linalg::rsvd::{rsvd, rsvd_values, RsvdOpts};
+use rsvd::linalg::svd_gesvd::svd;
 use rsvd::linalg::threading::available_threads;
 use rsvd::linalg::{with_kernel, with_threads, Kernel, Matrix, Svd};
 
@@ -135,6 +138,59 @@ fn sparse_dense_twin_holds_under_every_kernel() {
             let serial = with_threads(1, || a.spmm(&x));
             let par = with_threads(available_threads(), || a.spmm(&x));
             assert_eq!(serial, par, "spmm thread-invariance broke under {}", kern.name());
+        });
+    }
+}
+
+#[test]
+fn f64_rsvd_is_bitwise_frozen_against_transcribed_pipeline() {
+    // The docs/NUMERICS.md freeze: the f64 pipeline must keep producing
+    // the exact bits of the historical computation. The expectation here
+    // is an independent line-by-line transcription of Algorithm 1 —
+    // sketch, re-orthonormalized power iterations, projection, small-SVD
+    // finish (and the Gram-eigensolve values finish) — built from the
+    // public primitives, so any reordering inside `rsvd`/`rsvd_values`
+    // (new fusion, a changed accumulation order, an accidental f32 hop)
+    // fails this test bitwise, under every kernel this host can run.
+    let (m, n) = (48usize, 32usize);
+    let a = spectrum_matrix(m, n, Decay::Fast, 11);
+    let (k, p, q_iters, seed) = (6usize, 10usize, 2usize, 0xF0u64);
+    let opts = RsvdOpts { oversample: p, power_iters: q_iters, seed, ..Default::default() };
+    for kern in kernels() {
+        with_kernel(kern, || {
+            // range finder: Ω → Y = A·Ω → q× (orth, Aᵀ·, orth, A·) → Q
+            let s = (k + p).min(m.min(n));
+            let omega = Matrix::gaussian(n, s, seed);
+            let mut y = matmul(&a, &omega);
+            for _ in 0..q_iters {
+                y = orthonormalize(&y);
+                let z = orthonormalize(&matmul_tn(&a, &y));
+                y = matmul(&a, &z);
+            }
+            let q = orthonormalize(&y);
+            let b = matmul_tn(&q, &a);
+
+            // vectors finish: small SVD of B, truncate, back-project U
+            let sb = svd(&b);
+            let kk = k.min(sb.s.len());
+            let u = matmul(&q, &sb.u.submatrix(0, s, 0, kk));
+            let got = rsvd(&a, k, &opts);
+            assert_eq!(got.s, sb.s[..kk], "σ drifted from the frozen f64 bits ({})", kern.name());
+            assert_eq!(got.u, u, "U drifted from the frozen f64 bits ({})", kern.name());
+            let v = sb.v.submatrix(0, sb.v.rows(), 0, kk);
+            assert_eq!(got.v, v, "V drifted from the frozen f64 bits ({})", kern.name());
+
+            // values finish: Gram eigensolve of the same B panel
+            let g = matmul_nt(&b, &b);
+            let want: Vec<f64> =
+                eigvalsh(&g).iter().take(k).map(|x| x.max(0.0).sqrt()).collect();
+            let vals = rsvd_values(&a, k, &opts);
+            assert_eq!(
+                vals,
+                want,
+                "values path drifted from the frozen f64 bits ({})",
+                kern.name()
+            );
         });
     }
 }

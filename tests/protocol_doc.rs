@@ -82,6 +82,41 @@ fn rejected_examples_are_refused_by_the_decoder() {
 }
 
 #[test]
+fn precision_examples_cover_the_reduced_precision_contract() {
+    // at least one documented request opts into reduced precision, and it
+    // must decode like any other example
+    let reduced: Vec<String> =
+        blocks("request").into_iter().filter(|t| t.contains("\"precision\"")).collect();
+    assert!(!reduced.is_empty(), "PROTOCOL.md must show a reduced-precision request example");
+    for text in &reduced {
+        let j = Json::parse(text).expect("parses");
+        Request::from_wire_json(&j)
+            .unwrap_or_else(|e| panic!("documented precision example must decode: {e}\n{text}"));
+    }
+    // ...and the rejected set pins each decode-time restriction, named by
+    // its error message: unknown spelling, exact solver, f32 overflow,
+    // f64-only pipeline
+    let rejections: Vec<String> = blocks("rejected")
+        .into_iter()
+        .filter(|t| t.contains("\"precision\""))
+        .map(|t| {
+            let j = Json::parse(&t).expect("parses");
+            Request::from_wire_json(&j)
+                .expect_err("documented precision rejection unexpectedly decoded")
+        })
+        .collect();
+    assert!(rejections.len() >= 4, "PROTOCOL.md lost its precision rejection examples");
+    for needle in
+        ["unknown precision", "randomized pipeline", "not representable in f32", "f64-only"]
+    {
+        assert!(
+            rejections.iter().any(|e| e.contains(needle)),
+            "no precision rejection mentions '{needle}' (got {rejections:?})"
+        );
+    }
+}
+
+#[test]
 fn response_examples_parse_with_an_ok_field() {
     let examples = blocks("response");
     assert!(examples.len() >= 2, "PROTOCOL.md lost its response examples");

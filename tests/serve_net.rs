@@ -2,7 +2,7 @@
 //! real sockets: request/reply framing, cache hits over the wire, error
 //! envelopes, admission control, and graceful drain.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request, ServeCfg, Server};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request, ServeCfg, Server};
 use rsvd::datagen::{spectrum_matrix, Decay};
 use rsvd::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -58,6 +58,7 @@ fn dense_req(seed: u64) -> Request {
         method: Method::NativeRsvd,
         want_vectors: false,
         seed,
+        precision: Precision::F64,
     }
 }
 
@@ -181,6 +182,7 @@ fn drain_completes_in_flight_jobs_and_refuses_new_connections() {
         method: Method::Gesvd,
         want_vectors: true,
         seed: 7,
+        precision: Precision::F64,
     };
     c.send_line(&req.to_wire_json().unwrap().to_string());
 

@@ -10,7 +10,7 @@
 //!     fused same-fingerprint pair — return singular values within 1e-8
 //!     of the dense solve on the densified matrix.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
 use rsvd::datagen::permutation;
 use rsvd::datagen::sparse::{banded, power_law, tridiag_toeplitz, tridiag_toeplitz_spectrum};
 use rsvd::linalg::gemm::{matmul, matmul_tn};
@@ -158,6 +158,7 @@ fn c_coordinator_serves_sparse_within_1e8_of_dense_solve() {
                 method: Method::Auto,
                 want_vectors: false,
                 seed: 100 + i as u64,
+                precision: Precision::F64,
             })
         })
         .collect();
@@ -167,6 +168,7 @@ fn c_coordinator_serves_sparse_within_1e8_of_dense_solve() {
         method: Method::Auto,
         want_vectors: true,
         seed: 7,
+        precision: Precision::F64,
     });
 
     for h in pair {
