@@ -1,0 +1,135 @@
+//! Sharded single-pass tiled rSVD bench: one huge `TiledMatrix` swept by
+//! the scatter/gather driver at pool width vs the serial `rsvd_once`
+//! sweep it replaces for shard-eligible jobs. The win is structural as
+//! well as parallel: a shard sweep runs the co-sketch Ψ_pᵀ·A_p through
+//! the packed GEMM (the panel is resident anyway), while the serial
+//! sweep's `matmul_tn_acc` is pinned to the scalar schedule.
+//!
+//! ```sh
+//! cargo bench --bench shardsvd -- [--repeats 3] [--k 8]
+//! cargo bench --bench shardsvd -- --smoke   # fast CI mode → BENCH_shardsvd.json
+//! ```
+//!
+//! `--smoke` writes `BENCH_shardsvd.json` (sweeps/s for the serial and
+//! sharded drivers plus the effective streaming GFLOP/s of the sharded
+//! sweep), uploaded by CI in the shared `bench-json` artifact and guarded
+//! by the bench-guard job. Cargo runs bench binaries with CWD = the
+//! package root, so the file lands at `rust/BENCH_shardsvd.json`.
+
+use rsvd::bench_harness::{fmt_secs, gflops, save_json, time_n, Table};
+use rsvd::datagen::{spectrum_matrix, Decay};
+use rsvd::linalg::rsvd::RsvdOpts;
+use rsvd::linalg::threading::available_threads;
+use rsvd::linalg::tiled::{rsvd_once, rsvd_once_sharded};
+use rsvd::linalg::TiledMatrix;
+use rsvd::util::cli::Args;
+use rsvd::util::json::Json;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let repeats = args.get_usize("repeats", if smoke { 3 } else { 5 });
+    let k = args.get_usize("k", 8);
+    bench_shardsvd(smoke, repeats, k);
+}
+
+/// One workload row: serial vs width-sharded single-pass sweep of the
+/// same tiling, as a JSON object for the CI artifact. Asserts the bitwise
+/// shard-invariance contract before timing anything.
+fn run_case(
+    table: &mut Table,
+    m: usize,
+    n: usize,
+    tile: usize,
+    repeats: usize,
+    k: usize,
+    seed: u64,
+) -> Json {
+    let a = spectrum_matrix(m, n, Decay::Fast, seed);
+    let t = TiledMatrix::from_dense(&a, tile);
+    let width = available_threads().max(2);
+    let opts = RsvdOpts { seed: seed.wrapping_mul(3).wrapping_add(1), ..Default::default() };
+
+    // the contract this bench measures a fast path of: the width-sharded
+    // sweep is bitwise the 1-shard sweep of the same tiling
+    let one = rsvd_once_sharded(&t, k, &opts, 1);
+    let wide = rsvd_once_sharded(&t, k, &opts, width);
+    assert_eq!(one.s, wide.s, "sharded sweep must be bitwise shard-count invariant");
+    assert_eq!(one.u, wide.u, "sharded U must be bitwise shard-count invariant");
+    assert_eq!(one.v, wide.v, "sharded V must be bitwise shard-count invariant");
+
+    let t_serial = time_n(repeats, || {
+        let _ = rsvd_once(&t, k, &opts);
+    });
+    let t_one = time_n(repeats, || {
+        let _ = rsvd_once_sharded(&t, k, &opts, 1);
+    });
+    let t_wide = time_n(repeats, || {
+        let _ = rsvd_once_sharded(&t, k, &opts, width);
+    });
+
+    // the single-pass sweep moves 2·m·n·(s + s_l) flops through the store
+    let s = (k + opts.oversample).min(m.min(n));
+    let sl = (s + opts.oversample).min(m);
+    let sweep_flops = 2.0 * (m * n) as f64 * (s + sl) as f64;
+    let stream_gf = gflops(sweep_flops, t_wide.mean_s);
+
+    table.row(vec![
+        format!("{m}x{n}/{tile}"),
+        format!(
+            "{} / {} / {}",
+            fmt_secs(t_serial.mean_s),
+            fmt_secs(t_one.mean_s),
+            fmt_secs(t_wide.mean_s)
+        ),
+        format!("{width}"),
+        format!("{:.2}x", t_serial.mean_s / t_wide.mean_s),
+        format!("{stream_gf:.2}"),
+    ]);
+
+    let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
+    let mut row = BTreeMap::new();
+    row.insert("m".to_string(), Json::Num(m as f64));
+    row.insert("n".to_string(), Json::Num(n as f64));
+    row.insert("tile_rows".to_string(), Json::Num(tile as f64));
+    row.insert("k".to_string(), Json::Num(k as f64));
+    row.insert("shard_width".to_string(), Json::Num(width as f64));
+    row.insert("serial_sweeps_per_s".to_string(), Json::Num(per_s(t_serial.mean_s)));
+    row.insert("one_shard_sweeps_per_s".to_string(), Json::Num(per_s(t_one.mean_s)));
+    row.insert("sharded_sweeps_per_s".to_string(), Json::Num(per_s(t_wide.mean_s)));
+    row.insert("sharded_stream_gflops".to_string(), Json::Num(stream_gf));
+    row.insert(
+        "sharded_vs_serial_speedup".to_string(),
+        Json::Num(t_serial.mean_s / t_wide.mean_s),
+    );
+    Json::Obj(row)
+}
+
+fn bench_shardsvd(smoke: bool, repeats: usize, k: usize) {
+    let mut table = Table::new(
+        &format!("sharded single-pass tiled rSVD (k={k})"),
+        &["shape/tile", "serial / 1-shard / sharded", "width", "speedup", "stream GFLOP/s"],
+    );
+    let cases: &[(usize, usize, usize)] = if smoke {
+        &[(2048, 384, 32)]
+    } else {
+        &[(2048, 384, 32), (4096, 512, 64), (4096, 512, 16)]
+    };
+    let mut rows = Vec::new();
+    for (i, &(m, n, tile)) in cases.iter().enumerate() {
+        rows.push(run_case(&mut table, m, n, tile, repeats, k, 91 + i as u64));
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("shardsvd");
+        return;
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("shardsvd".into()));
+    doc.insert("kernel".to_string(), Json::Str(rsvd::linalg::kernel::selected_name().into()));
+    doc.insert("repeats".to_string(), Json::Num(repeats as f64));
+    doc.insert("threads".to_string(), Json::Num(available_threads() as f64));
+    doc.insert("results".to_string(), Json::Arr(rows));
+    save_json("BENCH_shardsvd.json", &Json::Obj(doc));
+}

@@ -110,6 +110,17 @@ pub struct Snapshot {
     pub batched_jobs: u64,
     /// Jobs served by the fused wide-sketch batch path.
     pub fused_jobs: u64,
+    /// Giant tiled jobs served by the sharded scatter/gather path.
+    pub sharded_jobs: u64,
+    /// Shard sweeps scattered across the pool by those jobs.
+    pub shard_tasks: u64,
+    /// Widest single job observed (shards actually scattered, after the
+    /// panel-count clamp).
+    pub shard_width_max: u64,
+    /// Mean ascending-order partial reduce time of sharded jobs.
+    pub reduce_mean: Duration,
+    /// Longest partial reduce observed.
+    pub reduce_max: Duration,
     /// Batch-width stats keyed by backend ("device", "native_rsvd", …).
     pub batch_widths: BTreeMap<String, BatchWidth>,
     /// Jobs served straight from the result cache (no solver call).
@@ -163,6 +174,16 @@ impl Snapshot {
                 w.max_width
             );
         }
+        if self.sharded_jobs > 0 {
+            println!(
+                "sharded: {} jobs, {} shard sweeps, max width {}, reduce mean {:?}, max {:?}",
+                self.sharded_jobs,
+                self.shard_tasks,
+                self.shard_width_max,
+                self.reduce_mean,
+                self.reduce_max
+            );
+        }
         println!("cache: {} hits, {} misses", self.cache_hits, self.cache_misses);
         println!("conns: {} accepted, {} rejected", self.conns_accepted, self.conns_rejected);
         println!("queue: mean {:?}, p95 {:?}", self.queue_mean, self.queue_p95);
@@ -196,6 +217,11 @@ impl Snapshot {
         obj.insert("batches".to_string(), Json::Num(self.batches as f64));
         obj.insert("batched_jobs".to_string(), Json::Num(self.batched_jobs as f64));
         obj.insert("fused_jobs".to_string(), Json::Num(self.fused_jobs as f64));
+        obj.insert("sharded_jobs".to_string(), Json::Num(self.sharded_jobs as f64));
+        obj.insert("shard_tasks".to_string(), Json::Num(self.shard_tasks as f64));
+        obj.insert("shard_width_max".to_string(), Json::Num(self.shard_width_max as f64));
+        obj.insert("reduce_mean_us".to_string(), us(self.reduce_mean));
+        obj.insert("reduce_max_us".to_string(), us(self.reduce_max));
         obj.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
         obj.insert("cache_misses".to_string(), Json::Num(self.cache_misses as f64));
         obj.insert("conns_accepted".to_string(), Json::Num(self.conns_accepted as f64));
@@ -226,6 +252,9 @@ struct Inner {
     batches: u64,
     batched_jobs: u64,
     fused_jobs: u64,
+    sharded_jobs: u64,
+    shard_tasks: u64,
+    shard_width_max: u64,
     batch_widths: BTreeMap<String, BatchWidth>,
     cache_hits: u64,
     cache_misses: u64,
@@ -233,6 +262,7 @@ struct Inner {
     conns_rejected: u64,
     queue: Option<Histogram>,
     exec: Option<Histogram>,
+    reduce: Option<Histogram>,
 }
 
 impl Metrics {
@@ -326,6 +356,18 @@ impl Metrics {
         self.lock().cache_misses += 1;
     }
 
+    /// Account one sharded giant-tiled job: `width` shard sweeps were
+    /// scattered across the pool and their partials folded in `reduce`
+    /// (the ascending-order reduce + nothing else — scatter and sweep time
+    /// live in the job's exec histogram like any other solve).
+    pub fn record_sharded(&self, width: usize, reduce: Duration) {
+        let mut g = self.lock();
+        g.sharded_jobs += 1;
+        g.shard_tasks += width as u64;
+        g.shard_width_max = g.shard_width_max.max(width as u64);
+        g.reduce.get_or_insert_with(Histogram::new).record(reduce);
+    }
+
     /// Account a serve-front-end connection: admitted (`accepted = true`)
     /// or refused by admission control / drain.
     pub fn record_conn(&self, accepted: bool) {
@@ -348,6 +390,7 @@ impl Metrics {
         let empty = Histogram::new();
         let queue = g.queue.as_ref().unwrap_or(&empty);
         let exec = g.exec.as_ref().unwrap_or(&empty);
+        let reduce = g.reduce.as_ref().unwrap_or(&empty);
         Snapshot {
             jobs_completed: g.completed,
             jobs_failed: g.failed,
@@ -355,6 +398,11 @@ impl Metrics {
             batches: g.batches,
             batched_jobs: g.batched_jobs,
             fused_jobs: g.fused_jobs,
+            sharded_jobs: g.sharded_jobs,
+            shard_tasks: g.shard_tasks,
+            shard_width_max: g.shard_width_max,
+            reduce_mean: reduce.mean(),
+            reduce_max: reduce.max(),
             batch_widths: g.batch_widths.clone(),
             cache_hits: g.cache_hits,
             cache_misses: g.cache_misses,
@@ -493,6 +541,7 @@ mod tests {
         m.record_cache_miss();
         m.record_conn(true);
         m.record_conn(false);
+        m.record_sharded(4, Duration::from_micros(9));
         assert_eq!(m.total_solver_calls(), 3);
         let s = m.snapshot();
         assert_eq!(s.jobs_completed, 3);
@@ -503,6 +552,34 @@ mod tests {
         assert_eq!(s.cache_misses, 1);
         assert_eq!(s.conns_accepted, 1);
         assert_eq!(s.conns_rejected, 1);
+        assert_eq!(s.sharded_jobs, 1);
+        assert_eq!(s.shard_tasks, 4);
+    }
+
+    #[test]
+    fn sharded_accounting() {
+        let m = Metrics::new();
+        m.record_sharded(3, Duration::from_micros(10));
+        m.record_sharded(8, Duration::from_micros(30));
+        m.record_sharded(2, Duration::from_micros(20));
+        let s = m.snapshot();
+        assert_eq!(s.sharded_jobs, 3);
+        assert_eq!(s.shard_tasks, 13);
+        assert_eq!(s.shard_width_max, 8);
+        assert_eq!(s.reduce_max, Duration::from_micros(30));
+        assert!(s.reduce_mean >= Duration::from_micros(10));
+        assert!(s.reduce_mean <= Duration::from_micros(30));
+        // the shard counters ride the snapshot's wire encoding
+        use crate::util::json::Json;
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.u64_field("sharded_jobs").unwrap(), 3);
+        assert_eq!(back.u64_field("shard_tasks").unwrap(), 13);
+        assert_eq!(back.u64_field("shard_width_max").unwrap(), 8);
+        assert_eq!(back.u64_field("reduce_max_us").unwrap(), 30);
+        // untouched sink reports zeros, not absent fields
+        let z = Metrics::new().snapshot();
+        assert_eq!(z.sharded_jobs, 0);
+        assert_eq!(z.reduce_mean, Duration::ZERO);
     }
 
     #[test]

@@ -31,6 +31,12 @@ pub struct RouterCfg {
     pub full_spectrum_cutoff: f64,
     /// default power iterations (must match exported buckets)
     pub power_iters: usize,
+    /// Panel count at or above which a sketch-method f64 `SvdTiled` job is
+    /// scattered across the executor pool as shard sweeps (the coordinator's
+    /// single-pass scatter/gather path; see DESIGN.md §Sharding) instead of
+    /// sweeping serially inside one solver call. Values ≤ 1 shard every
+    /// tiled job; `usize::MAX` effectively disables sharding.
+    pub shard_panels: usize,
 }
 
 impl Default for RouterCfg {
@@ -40,6 +46,7 @@ impl Default for RouterCfg {
             impl_name: "xladot".into(),
             full_spectrum_cutoff: 0.5,
             power_iters: 2,
+            shard_panels: 32,
         }
     }
 }

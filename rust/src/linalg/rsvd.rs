@@ -78,6 +78,32 @@ pub fn rsvd_values<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, k: usize, opts: &Rsvd
         .expect("one job in, one out")
 }
 
+/// Sharded two-pass (q > 0) randomized k-SVD of one huge tiled matrix:
+/// the standard pipeline over a [`super::tiled::ShardedTiled`] wrapper,
+/// whose panel-crossing products run as per-panel partials swept by up to
+/// `shards` concurrent participants and folded in ascending panel order.
+/// Bitwise invariant in the shard count (and thread count / panel store)
+/// at a fixed tile height; the single-pass sibling is
+/// [`super::tiled::rsvd_once_sharded`].
+pub fn rsvd_sharded(
+    a: &super::tiled::TiledMatrix,
+    k: usize,
+    opts: &RsvdOpts,
+    shards: usize,
+) -> Svd {
+    rsvd(&super::tiled::ShardedTiled::new(a.clone(), shards), k, opts)
+}
+
+/// Values-only [`rsvd_sharded`].
+pub fn rsvd_values_sharded(
+    a: &super::tiled::TiledMatrix,
+    k: usize,
+    opts: &RsvdOpts,
+    shards: usize,
+) -> Vec<f64> {
+    rsvd_values(&super::tiled::ShardedTiled::new(a.clone(), shards), k, opts)
+}
+
 /// Mixed-precision randomized k-SVD: f32 range finder, one f64 refinement
 /// power pass, f64 finish. Single-job [`rsvd_batch_mixed`].
 pub fn rsvd_mixed<A64, A32>(a64: &A64, a32: &A32, k: usize, opts: &RsvdOpts) -> Svd

@@ -6,7 +6,8 @@
 //! rsvd svd   [--m 2000 --n 512 --k 10 --decay fast --method auto]
 //! rsvd pca   [--n-samples 2048 --hw 12 --k 10 --method auto]
 //! rsvd serve [--addr 127.0.0.1:7878 --cache 64 --workers 1 --max-batch 8
-//!             --drain-cap N --max-conns 64 --window N --no-fuse]
+//!             --drain-cap N --max-conns 64 --window N --no-fuse
+//!             --shards N]
 //!                                   TCP front end (NDJSON frames; ctrl-c
 //!                                   drains in-flight jobs, then exits)
 //! rsvd fig1|fig2|fig3|fig4|table1   regenerate a paper figure/table
@@ -78,7 +79,9 @@ fn main() {
 /// (`--cache 64`; 0 disables). Runs until SIGINT/ctrl-c, then drains —
 /// new connections are refused while in-flight jobs complete — and prints
 /// the metrics snapshot (cache hits, connection accept/reject counts,
-/// latency percentiles).
+/// latency percentiles). `--shards` caps how many workers co-sweep one
+/// shard-eligible tiled job (0 = one shard per worker; see
+/// docs/OPERATIONS.md).
 fn serve_cmd(args: &Args) {
     use rsvd::coordinator::{CoordinatorCfg, ServeCfg, Server};
     let cfg = CoordinatorCfg {
@@ -87,6 +90,7 @@ fn serve_cmd(args: &Args) {
         drain_cap: args.get("drain-cap").and_then(|s| s.parse().ok()),
         cache: args.get_usize("cache", 64),
         fuse: !args.has("no-fuse"),
+        shards: args.get_usize("shards", 0),
         ..Default::default()
     };
     let coord = std::sync::Arc::new(experiments::boot_coordinator_with(cfg));

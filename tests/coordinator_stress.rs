@@ -1,9 +1,11 @@
 //! Coordinator stress: N client threads submitting a mixed
 //! dense/sparse/tiled workload against a 2-worker pool — no deadlock,
 //! every job answered, and every job's (possibly fused) result is
-//! bitwise-equal to resubmitting it solo on a fresh coordinator.
+//! bitwise-equal to resubmitting it solo on a fresh coordinator. A second
+//! burst mixes sharded giant-matrix jobs (scatter/gather across the same
+//! pool) with ordinary fused batches.
 
-use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request};
+use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Precision, Request, RouterCfg};
 use rsvd::datagen::sparse::banded;
 use rsvd::linalg::{Matrix, TiledMatrix};
 use std::sync::Arc;
@@ -126,6 +128,106 @@ fn stress_mixed_burst_no_deadlock_all_answered_fusion_invisible() {
     let solo = Coordinator::start_host_only(CoordinatorCfg::default());
     for (id, got) in &results {
         let r = solo.run(request(*id, &dense, &sparse, &tiled));
+        let want = r.outcome.expect("solo run ok");
+        assert_eq!(got.values, want.values, "job {id} values");
+        assert_eq!(got.u, want.u, "job {id} u");
+        assert_eq!(got.v, want.v, "job {id} v");
+        assert_eq!(got.method_used, want.method_used, "job {id} method");
+    }
+}
+
+/// The sharded-stress request stream: every third job is a "giant" tiled
+/// job that clears the shard threshold and scatters across the pool; the
+/// rest are ordinary dense jobs that keep the fusion path busy underneath
+/// the same workers.
+fn sharded_request(id: usize, giant: &TiledMatrix, dense: &[Matrix]) -> Request {
+    if id % 3 == 0 {
+        Request::SvdTiled {
+            a: giant.clone(),
+            k: 3 + id % 3,
+            method: Method::NativeRsvd,
+            want_vectors: id % 2 == 0,
+            seed: (id % 4) as u64,
+            precision: Precision::F64,
+        }
+    } else {
+        Request::Svd {
+            a: dense[id % dense.len()].clone(),
+            k: 2 + id % 3,
+            method: Method::NativeRsvd,
+            want_vectors: id % 4 == 0,
+            seed: (id % 5) as u64,
+            precision: Precision::F64,
+        }
+    }
+}
+
+#[test]
+fn stress_sharded_giants_ride_the_pool_with_fused_batches() {
+    // a tiled operand big enough (in panels) to clear the low threshold:
+    // 64×20 at tile 8 → 8 panels, scattered across 3 workers per job
+    let big = rsvd::datagen_test_matrix(64, 20, |i| 1.0 / (i + 1) as f64, 21);
+    let giant = TiledMatrix::from_dense(&big, 8);
+    let dense = vec![
+        rsvd::datagen_test_matrix(48, 36, |i| 1.0 / (i + 1) as f64, 5),
+        rsvd::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 6),
+    ];
+    let cfg = CoordinatorCfg {
+        workers: 3,
+        max_batch: 4,
+        batch_window: Duration::from_millis(2),
+        router: RouterCfg { shard_panels: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start_host_only(cfg));
+
+    let mut results: Vec<(usize, rsvd::coordinator::Decomposition)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let giant = &giant;
+            let dense = &dense;
+            handles.push(scope.spawn(move || {
+                let submitted: Vec<_> = (0..JOBS_PER_CLIENT)
+                    .map(|i| {
+                        let id = c * JOBS_PER_CLIENT + i;
+                        (id, coord.submit(sharded_request(id, giant, dense)))
+                    })
+                    .collect();
+                submitted
+                    .into_iter()
+                    .map(|(id, h)| {
+                        let r = h.wait();
+                        (id, r.outcome.unwrap_or_else(|e| panic!("job {id} failed: {e}")))
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().expect("client thread"));
+        }
+    });
+    assert_eq!(results.len(), CLIENTS * JOBS_PER_CLIENT, "every job answered");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, (CLIENTS * JOBS_PER_CLIENT) as u64);
+    assert_eq!(snap.jobs_failed, 0);
+    assert!(snap.sharded_jobs > 0, "the giant jobs must take the sharded route");
+    assert!(
+        snap.shard_tasks >= snap.sharded_jobs,
+        "each sharded job scatters at least one shard sweep"
+    );
+
+    // pool width and interleaving must be invisible: a single-worker
+    // coordinator with the same threshold answers every job bitwise
+    // identically (sharded results are f(request, threshold) by contract)
+    let solo = Coordinator::start_host_only(CoordinatorCfg {
+        workers: 1,
+        router: RouterCfg { shard_panels: 2, ..Default::default() },
+        ..Default::default()
+    });
+    for (id, got) in &results {
+        let r = solo.run(sharded_request(*id, &giant, &dense));
         let want = r.outcome.expect("solo run ok");
         assert_eq!(got.values, want.values, "job {id} values");
         assert_eq!(got.u, want.u, "job {id} u");

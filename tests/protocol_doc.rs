@@ -105,13 +105,22 @@ fn precision_examples_cover_the_reduced_precision_contract() {
                 .expect_err("documented precision rejection unexpectedly decoded")
         })
         .collect();
-    assert!(rejections.len() >= 4, "PROTOCOL.md lost its precision rejection examples");
+    assert!(rejections.len() >= 5, "PROTOCOL.md lost its precision rejection examples");
     for needle in
         ["unknown precision", "randomized pipeline", "not representable in f32", "f64-only"]
     {
         assert!(
             rejections.iter().any(|e| e.contains(needle)),
             "no precision rejection mentions '{needle}' (got {rejections:?})"
+        );
+    }
+    // both f64-only pipelines must be pinned by name: a `precision` field
+    // on svd_tiled AND on svd_adaptive is refused at decode time (the
+    // adaptive case regressed once by being documented but untested)
+    for pipeline in ["svd_tiled", "svd_adaptive"] {
+        assert!(
+            rejections.iter().any(|e| e.contains(pipeline)),
+            "no precision rejection names the f64-only pipeline '{pipeline}' (got {rejections:?})"
         );
     }
 }
