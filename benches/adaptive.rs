@@ -9,16 +9,20 @@
 //! cargo bench --bench adaptive -- --smoke   # fast CI mode → BENCH_adaptive.json
 //! ```
 //!
-//! `--smoke` writes `BENCH_adaptive.json` (jobs/s per tolerance + the
-//! fused-batch throughput), uploaded by CI in the shared `bench-json`
+//! `--smoke` writes `BENCH_adaptive.json` (jobs/s per tolerance, the
+//! fused-batch throughput, and the f32/mixed adaptive twins with their
+//! `f32_vs_f64` ratio), uploaded by CI in the shared `bench-json`
 //! artifact and guarded by the bench-guard job. Cargo runs bench binaries
 //! with CWD = the package root, so the file lands at
 //! `rust/BENCH_adaptive.json`.
 
 use rsvd::bench_harness::{fmt_secs, save_json, time_n, Table};
 use rsvd::datagen::{spectrum_matrix, Decay};
-use rsvd::linalg::adaptive::{rsvd_adaptive, rsvd_adaptive_batch, AdaptiveJob, AdaptiveOpts};
+use rsvd::linalg::adaptive::{
+    rsvd_adaptive, rsvd_adaptive_batch, rsvd_adaptive_mixed, AdaptiveJob, AdaptiveOpts,
+};
 use rsvd::linalg::rsvd::{rsvd_values, RsvdOpts};
+use rsvd::linalg::Mat;
 use rsvd::util::cli::Args;
 use rsvd::util::json::Json;
 use std::collections::BTreeMap;
@@ -68,6 +72,15 @@ fn run_case(table: &mut Table, m: usize, n: usize, tol: f64, repeats: usize, see
             let _ = rsvd_adaptive(&a, j.tol, &o);
         }
     });
+    // dtype rows: the same tolerance on the narrowed operand (f32 grow +
+    // finish) and through the mixed driver (f32 grow, f64 refinement)
+    let a32 = Mat::<f32>::from_wide(&a);
+    let t_ad32 = time_n(repeats, || {
+        let _ = rsvd_adaptive(&a32, tol, &opts);
+    });
+    let t_mixed = time_n(repeats, || {
+        let _ = rsvd_adaptive_mixed(&a, &a32, tol, &opts);
+    });
 
     table.row(vec![
         format!("{m}x{n}"),
@@ -77,6 +90,8 @@ fn run_case(table: &mut Table, m: usize, n: usize, tol: f64, repeats: usize, see
         format!("{:.2}x", t_ad.mean_s / t_fix.mean_s),
         format!("{} / {}", fmt_secs(t_fused.mean_s), fmt_secs(t_solo.mean_s)),
         format!("{:.2}x", t_solo.mean_s / t_fused.mean_s),
+        format!("{} / {}", fmt_secs(t_ad32.mean_s), fmt_secs(t_mixed.mean_s)),
+        format!("{:.2}x", t_ad.mean_s / t_ad32.mean_s),
     ]);
 
     let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
@@ -93,6 +108,10 @@ fn run_case(table: &mut Table, m: usize, n: usize, tol: f64, repeats: usize, see
         "fused_vs_solo_speedup".to_string(),
         Json::Num(t_solo.mean_s / t_fused.mean_s),
     );
+    row.insert("dtype".to_string(), Json::Str("f64".into()));
+    row.insert("adaptive_f32_jobs_per_s".to_string(), Json::Num(per_s(t_ad32.mean_s)));
+    row.insert("adaptive_mixed_jobs_per_s".to_string(), Json::Num(per_s(t_mixed.mean_s)));
+    row.insert("f32_vs_f64".to_string(), Json::Num(t_ad.mean_s / t_ad32.mean_s));
     Json::Obj(row)
 }
 
@@ -107,6 +126,8 @@ fn bench_adaptive(smoke: bool, repeats: usize) {
             "overhead",
             "fused / solo x4",
             "fuse speedup",
+            "f32 / mixed",
+            "f32 vs f64",
         ],
     );
     let cases: &[(usize, usize, f64)] = if smoke {

@@ -10,8 +10,11 @@
 //! ```
 //!
 //! `--smoke` writes `BENCH_oocrsvd.json` (jobs/s for every variant plus
-//! the effective streaming GFLOP/s of the panel sweep), uploaded by CI in
-//! the shared `bench-json` artifact and guarded by the bench-guard job.
+//! the effective streaming GFLOP/s of the panel sweep, the f32 tiled
+//! twins with their `f32_vs_f64` throughput ratio, and the spill-file
+//! byte counts proving the f32 panel footprint is exactly half the f64
+//! one), uploaded by CI in the shared `bench-json` artifact and guarded
+//! by the bench-guard job.
 //! Cargo runs bench binaries with CWD = the package root, so the file
 //! lands at `rust/BENCH_oocrsvd.json`.
 
@@ -72,6 +75,22 @@ fn run_case(
         let _ = rsvd_values(&disk, k, &opts_q0);
     });
 
+    // dtype rows: the same two-pass sweep over the narrowed f32 tilings,
+    // and the concrete spill-footprint figure — an f32 scratch file holds
+    // the same panels in exactly half the bytes
+    let mem32 = mem.narrow();
+    let disk32 = disk.narrow();
+    let spill64 = disk.spill_bytes().expect("disk store reports its bytes");
+    let spill32 = disk32.spill_bytes().expect("narrowed disk store stays on disk");
+    assert_eq!(spill64, (m * n * 8) as u64, "f64 spill is rows*cols*8");
+    assert_eq!(spill32 * 2, spill64, "f32 spill must be exactly half the f64 bytes");
+    let t_mem32 = time_n(repeats, || {
+        let _ = rsvd_values(&mem32, k, &opts);
+    });
+    let t_disk32 = time_n(repeats, || {
+        let _ = rsvd_values(&disk32, k, &opts);
+    });
+
     // effective streaming rate of the panel sweep: the q-pass pipeline
     // moves ~(2 + 2q)·2·m·n·s flops through the store per solve
     let s = k + opts.oversample;
@@ -91,6 +110,9 @@ fn run_case(
         format!("{stream_gf:.2}"),
         format!("{} / {}", fmt_secs(t_once.mean_s), fmt_secs(t_two_q0.mean_s)),
         format!("{:.2}x", t_two_q0.mean_s / t_once.mean_s),
+        format!("{} / {}", fmt_secs(t_mem32.mean_s), fmt_secs(t_disk32.mean_s)),
+        format!("{:.2}x", t_disk.mean_s / t_disk32.mean_s),
+        format!("{:.1}MiB/{:.1}MiB", spill64 as f64 / 1048576.0, spill32 as f64 / 1048576.0),
     ]);
 
     let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
@@ -109,6 +131,12 @@ fn run_case(
         "once_vs_two_pass_speedup".to_string(),
         Json::Num(t_two_q0.mean_s / t_once.mean_s),
     );
+    row.insert("dtype".to_string(), Json::Str("f64".into()));
+    row.insert("tiled_mem_f32_jobs_per_s".to_string(), Json::Num(per_s(t_mem32.mean_s)));
+    row.insert("tiled_disk_f32_jobs_per_s".to_string(), Json::Num(per_s(t_disk32.mean_s)));
+    row.insert("f32_vs_f64".to_string(), Json::Num(t_disk.mean_s / t_disk32.mean_s));
+    row.insert("spill_bytes_f64".to_string(), Json::Num(spill64 as f64));
+    row.insert("spill_bytes_f32".to_string(), Json::Num(spill32 as f64));
     Json::Obj(row)
 }
 
@@ -123,6 +151,9 @@ fn bench_oocrsvd(smoke: bool, repeats: usize, k: usize) {
             "stream GFLOP/s",
             "once / 2-pass q0",
             "once speedup",
+            "f32 mem / disk",
+            "f32 vs f64",
+            "spill f64/f32",
         ],
     );
     let cases: &[(usize, usize, usize)] = if smoke {

@@ -68,6 +68,13 @@ fn run_case(
     let t_wide = time_n(repeats, || {
         let _ = rsvd_once_sharded(&t, k, &opts, width);
     });
+    // dtype row: the same width-sharded sweep over the narrowed tiling —
+    // half-bandwidth panels, same shard schedule; the f32 contract holds
+    // too (bitwise invariance is asserted per dtype in tests/shard_rsvd.rs)
+    let t32 = t.narrow();
+    let t_wide32 = time_n(repeats, || {
+        let _ = rsvd_once_sharded(&t32, k, &opts, width);
+    });
 
     // the single-pass sweep moves 2·m·n·(s + s_l) flops through the store
     let s = (k + opts.oversample).min(m.min(n));
@@ -86,6 +93,8 @@ fn run_case(
         format!("{width}"),
         format!("{:.2}x", t_serial.mean_s / t_wide.mean_s),
         format!("{stream_gf:.2}"),
+        format!("{}", fmt_secs(t_wide32.mean_s)),
+        format!("{:.2}x", t_wide.mean_s / t_wide32.mean_s),
     ]);
 
     let per_s = |mean_s: f64| if mean_s > 0.0 { 1.0 / mean_s } else { f64::INFINITY };
@@ -103,13 +112,24 @@ fn run_case(
         "sharded_vs_serial_speedup".to_string(),
         Json::Num(t_serial.mean_s / t_wide.mean_s),
     );
+    row.insert("dtype".to_string(), Json::Str("f64".into()));
+    row.insert("sharded_f32_sweeps_per_s".to_string(), Json::Num(per_s(t_wide32.mean_s)));
+    row.insert("f32_vs_f64".to_string(), Json::Num(t_wide.mean_s / t_wide32.mean_s));
     Json::Obj(row)
 }
 
 fn bench_shardsvd(smoke: bool, repeats: usize, k: usize) {
     let mut table = Table::new(
         &format!("sharded single-pass tiled rSVD (k={k})"),
-        &["shape/tile", "serial / 1-shard / sharded", "width", "speedup", "stream GFLOP/s"],
+        &[
+            "shape/tile",
+            "serial / 1-shard / sharded",
+            "width",
+            "speedup",
+            "stream GFLOP/s",
+            "f32 sharded",
+            "f32 vs f64",
+        ],
     );
     let cases: &[(usize, usize, usize)] = if smoke {
         &[(2048, 384, 32)]

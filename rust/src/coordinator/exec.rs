@@ -7,7 +7,7 @@ use crate::linalg::adaptive::{self, AdaptiveJob};
 use crate::linalg::rsvd::{BatchOpts, RsvdOpts, SketchJob};
 use crate::linalg::{
     eigen, gemm, lanczos, rsvd as native_rsvd, svd_gesvd, svd_jacobi, Csr, CsrMat, Mat, Matrix,
-    TiledMatrix,
+    TiledMat, TiledMatrix,
 };
 use crate::runtime::{finish_rsvd, finish_values, Engine};
 
@@ -117,9 +117,12 @@ pub fn try_execute_fused(
             run_fused_mixed(a, &a.map_scalar::<f32>(), &jobs, want_vectors)
         }
         (Payload::Tiled(a), Precision::F64) => run_fused(a, &jobs, want_vectors),
-        // the wire codec rejects reduced-precision tiled requests before they
-        // reach the pool — fall back to the solo path for its clean error
-        (Payload::Tiled(_), _) => return None,
+        // the tiled f32 twin narrows panel-by-panel (never densifies); the
+        // narrowed store is built once for the whole fused batch
+        (Payload::Tiled(a), Precision::F32) => run_fused(&a.narrow(), &jobs, want_vectors),
+        (Payload::Tiled(a), Precision::Mixed) => {
+            run_fused_mixed(a, &a.narrow(), &jobs, want_vectors)
+        }
     })
 }
 
@@ -128,12 +131,12 @@ pub fn try_execute_fused(
 /// drop out of the sweep as their tolerances are met, and each result is
 /// bitwise identical to its solo [`execute`] (see
 /// [`adaptive::rsvd_adaptive_batch`]). Returns `None` when the batch does
-/// not qualify — mixed payloads, mixed flavors, or a stray non-adaptive
-/// request (the batcher's `ad…` fuse keys make that structurally
-/// impossible, but the re-check stays cheap insurance).
+/// not qualify — mixed payloads, mixed output flavors, mixed precisions,
+/// or a stray non-adaptive request (the batcher's `ad…` fuse keys make
+/// that structurally impossible, but the re-check stays cheap insurance).
 fn try_execute_fused_adaptive(reqs: &[&Request]) -> Option<Vec<Result<Decomposition, String>>> {
     let mut jobs = Vec::with_capacity(reqs.len());
-    let mut shared: Option<(&Operand, bool)> = None;
+    let mut shared: Option<(&Operand, bool, Precision)> = None;
     for r in reqs {
         let Request::SvdAdaptive { a, tol, block, max_rank, want_vectors, seed, .. } = r else {
             return None;
@@ -145,19 +148,65 @@ fn try_execute_fused_adaptive(reqs: &[&Request]) -> Option<Vec<Result<Decomposit
             return None;
         }
         match &shared {
-            None => shared = Some((a, *want_vectors)),
-            Some((first, fv)) => {
-                if *fv != *want_vectors || *first != a {
+            None => shared = Some((a, *want_vectors, r.precision())),
+            Some((first, fv, fp)) => {
+                if *fv != *want_vectors || *fp != r.precision() || *first != a {
                     return None;
                 }
             }
         }
         jobs.push(AdaptiveJob { tol: *tol, block: *block, max_rank: *max_rank, seed: *seed });
     }
-    let (a, want_vectors) = shared?;
-    // threads stay ambient, exactly like the fixed-rank fused path
-    let results = adaptive::rsvd_adaptive_batch(a.as_linop(), &jobs, want_vectors, None);
+    let (a, want_vectors, precision) = shared?;
+    // threads stay ambient, exactly like the fixed-rank fused path. The
+    // f32 twin is narrowed once for the whole batch (deterministic, so a
+    // solo run narrowing its own twin gets the same bits).
+    let results = match precision {
+        Precision::F64 => adaptive::rsvd_adaptive_batch(a.as_linop(), &jobs, want_vectors, None),
+        Precision::F32 => {
+            let a32 = Operand32::narrow(a);
+            adaptive::rsvd_adaptive_batch(a32.as_linop(), &jobs, want_vectors, None)
+        }
+        Precision::Mixed => {
+            let a32 = Operand32::narrow(a);
+            adaptive::rsvd_adaptive_batch_mixed(
+                a.as_linop(),
+                a32.as_linop(),
+                &jobs,
+                want_vectors,
+                None,
+            )
+        }
+    };
     Some(results.into_iter().map(|r| Ok(decomp_from_adaptive(r, want_vectors))).collect())
+}
+
+/// The f32 twin of a payload, whichever backend it rides: dense narrows
+/// element-wise, sparse maps its value array over the unchanged pattern,
+/// tiled narrows panel-by-panel ([`TiledMat::narrow`] — a disk-backed
+/// store spills a half-size f32 scratch file, never densifying).
+enum Operand32 {
+    Dense(Mat<f32>),
+    Sparse(CsrMat<f32>),
+    Tiled(TiledMat<f32>),
+}
+
+impl Operand32 {
+    fn narrow(a: &Operand) -> Operand32 {
+        match a {
+            Operand::Dense(a) => Operand32::Dense(Mat::<f32>::from_wide(a)),
+            Operand::Sparse(a) => Operand32::Sparse(a.map_scalar()),
+            Operand::Tiled(a) => Operand32::Tiled(a.narrow()),
+        }
+    }
+
+    fn as_linop(&self) -> &dyn crate::linalg::LinOp<f32> {
+        match self {
+            Operand32::Dense(a) => a,
+            Operand32::Sparse(a) => a,
+            Operand32::Tiled(a) => a,
+        }
+    }
 }
 
 /// Shape an adaptive result into the reply envelope — the reported value
@@ -339,22 +388,23 @@ fn run_host(req: &Request, method: Method) -> Result<Decomposition, String> {
             Precision::F64 => {
                 host_operator_svd(a, || a.to_dense(), *k, method, *want_vectors, *seed)
             }
-            // the wire codec already rejects these — defense in depth for
-            // library callers constructing requests directly
-            p => Err(format!(
-                "precision '{}' is not supported for tiled payloads (the out-of-core panel pipeline is certified f64-only; see docs/NUMERICS.md)",
-                p.name()
-            )),
+            // panels narrow in place ([`TiledMat::narrow`]) — the f32 twin
+            // keeps the out-of-core shape (half-size spill for disk stores)
+            p => {
+                require_randomized(method, p)?;
+                let a32 = a.narrow();
+                host_reduced_svd(a, &a32, *k, p, *want_vectors, *seed)
+            }
         },
         Request::SvdAdaptive { a, tol, block, max_rank, want_vectors, seed, .. } => {
             match precision {
                 Precision::F64 => {
                     host_adaptive_svd(a, *tol, *block, *max_rank, method, *want_vectors, *seed)
                 }
-                p => Err(format!(
-                    "precision '{}' is not supported for adaptive payloads (the adaptive-rank pipeline is certified f64-only; see docs/NUMERICS.md)",
-                    p.name()
-                )),
+                p => {
+                    require_randomized(method, p)?;
+                    host_reduced_adaptive_svd(a, *tol, *block, *max_rank, p, *want_vectors, *seed)
+                }
             }
         }
         Request::Pca { x, k, seed, .. } => host_pca(x, *k, method, *seed),
@@ -426,6 +476,45 @@ where
         }
         Precision::F64 => unreachable!("run_host dispatches f64 to the standard host paths"),
     }
+}
+
+/// Adaptive-rank SVD at a reduced working precision over any payload
+/// backend. `f32` runs the slack-gated growth sweep
+/// ([`adaptive::F32_POSTERIOR_SLACK`]) on the narrowed operator; `mixed`
+/// grows in f32 and refines with one f64 power pass against the original
+/// operator ([`adaptive::rsvd_adaptive_batch_mixed`]). Like the f64 path,
+/// A is touched only through [`crate::linalg::LinOp`] — tiled payloads
+/// narrow panel-by-panel and are never densified.
+fn host_reduced_adaptive_svd(
+    a: &Operand,
+    tol: f64,
+    block: usize,
+    max_rank: usize,
+    precision: Precision,
+    want_vectors: bool,
+    seed: u64,
+) -> Result<Decomposition, String> {
+    if !tol.is_finite() || tol < 0.0 {
+        return Err(format!("adaptive tol must be finite and >= 0, got {tol}"));
+    }
+    let job = AdaptiveJob { tol, block, max_rank, seed };
+    let a32 = Operand32::narrow(a);
+    let r = match precision {
+        Precision::F32 => {
+            adaptive::rsvd_adaptive_batch(a32.as_linop(), &[job], want_vectors, None)
+        }
+        Precision::Mixed => adaptive::rsvd_adaptive_batch_mixed(
+            a.as_linop(),
+            a32.as_linop(),
+            &[job],
+            want_vectors,
+            None,
+        ),
+        Precision::F64 => unreachable!("run_host dispatches f64 to host_adaptive_svd"),
+    }
+    .pop()
+    .expect("one job in, one out");
+    Ok(decomp_from_adaptive(r, want_vectors))
 }
 
 /// Tolerance-driven SVD on the host. The sketch-pipeline methods run the
@@ -1206,10 +1295,10 @@ mod tests {
     }
 
     #[test]
-    fn reduced_precision_rejects_exact_methods_and_uncertified_payloads() {
+    fn reduced_precision_rejects_exact_methods_but_serves_tiled_and_adaptive() {
         // mirrors the wire-codec guard for library callers that build
-        // requests directly: exact solvers and the tiled/adaptive pipelines
-        // carry no reduced-precision certification
+        // requests directly: exact solvers carry no reduced-precision
+        // certification...
         let a = Matrix::gaussian(10, 8, 67);
         for m in [Method::Gesvd, Method::Jacobi, Method::Lanczos, Method::PartialEigen] {
             let r = Request::Svd {
@@ -1223,18 +1312,25 @@ mod tests {
             let err = run_host(&r, m).unwrap_err();
             assert!(err.contains("randomized pipeline"), "{m:?}: {err}");
         }
+        // ...but the tiled and adaptive pipelines do, since the Scalar
+        // generalization: tiled mixed is bitwise the library rsvd_mixed
+        // over the (f64, narrowed) operator pair, adaptive f32 is bitwise
+        // the slack-gated batch on the narrowed operand
+        let t = TiledMatrix::from_dense(&a, 4);
         let rt = Request::SvdTiled {
-            a: TiledMatrix::from_dense(&a, 4),
+            a: t.clone(),
             k: 2,
             method: Method::NativeRsvd,
             want_vectors: false,
             seed: 1,
             precision: Precision::Mixed,
         };
-        let err = run_host(&rt, Method::NativeRsvd).unwrap_err();
-        assert!(err.contains("tiled payloads"), "{err}");
+        let got = run_host(&rt, Method::NativeRsvd).unwrap();
+        assert_eq!(got.method_used, "native_rsvd");
+        let opts = native_rsvd::RsvdOpts { seed: 1, ..Default::default() };
+        assert_eq!(got.values, native_rsvd::rsvd_values_mixed(&t, &t.narrow(), 2, &opts));
         let ra = Request::SvdAdaptive {
-            a: Operand::Dense(a),
+            a: Operand::Dense(a.clone()),
             tol: 0.1,
             block: 2,
             max_rank: 0,
@@ -1243,7 +1339,92 @@ mod tests {
             seed: 1,
             precision: Precision::F32,
         };
-        let err = run_host(&ra, Method::NativeRsvd).unwrap_err();
-        assert!(err.contains("adaptive payloads"), "{err}");
+        let got = run_host(&ra, Method::NativeRsvd).unwrap();
+        assert_eq!(got.method_used, "native_rsvd");
+        let a32 = Mat::<f32>::from_wide(&a);
+        let job = AdaptiveJob { tol: 0.1, block: 2, max_rank: 0, seed: 1 };
+        let want = adaptive::rsvd_adaptive_batch(&a32, &[job], false, None).pop().unwrap();
+        assert_eq!(got.values, want.svd.s);
+        // exact method + reduced precision still errors on these flavors
+        let bad = Request::SvdTiled {
+            a: t,
+            k: 2,
+            method: Method::Gesvd,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::F32,
+        };
+        let err = run_host(&bad, Method::Gesvd).unwrap_err();
+        assert!(err.contains("randomized pipeline"), "{err}");
+    }
+
+    #[test]
+    fn fused_reduced_precision_tiled_and_adaptive_match_solo() {
+        let d = crate::datagen_test_matrix(30, 20, |i| 1.0 / (i + 1) as f64, 71);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let tols = [0.5, 0.1, 0.5];
+        for precision in [Precision::F32, Precision::Mixed] {
+            let reqs: Vec<Request> = (0..3)
+                .map(|i| Request::SvdTiled {
+                    a: TiledMatrix::from_dense(&d, 7),
+                    k: 3 + i % 2,
+                    method: Method::NativeRsvd,
+                    want_vectors: true,
+                    seed: i as u64,
+                    precision,
+                })
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in reqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "{precision:?}");
+                assert_eq!(f.u, s.u, "{precision:?}");
+                assert_eq!(f.v, s.v, "{precision:?}");
+            }
+            let areqs: Vec<Request> = (0..3)
+                .map(|i| Request::SvdAdaptive {
+                    a: Operand::Tiled(TiledMatrix::from_dense(&d, 6)),
+                    tol: tols[i],
+                    block: 4,
+                    max_rank: 0,
+                    method: Method::NativeRsvd,
+                    want_vectors: false,
+                    seed: i as u64,
+                    precision,
+                })
+                .collect();
+            let refs: Vec<&Request> = areqs.iter().collect();
+            let fused = try_execute_fused(&refs, &route).expect("qualifies");
+            for (req, f) in areqs.iter().zip(fused) {
+                let f = f.expect("fused ok");
+                let s = execute(req, &route, None).expect("sequential ok");
+                assert_eq!(f.values, s.values, "{precision:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_adaptive_batch_never_mixes_precisions() {
+        let d = Matrix::gaussian(10, 8, 73);
+        let route = Route::Host { method: Method::NativeRsvd };
+        let ad = |p: Precision| Request::SvdAdaptive {
+            a: Operand::Dense(d.clone()),
+            tol: 0.1,
+            block: 2,
+            max_rank: 0,
+            method: Method::NativeRsvd,
+            want_vectors: false,
+            seed: 1,
+            precision: p,
+        };
+        let r64 = ad(Precision::F64);
+        let r32 = ad(Precision::F32);
+        let rmx = ad(Precision::Mixed);
+        assert!(try_execute_fused(&[&r64, &r32], &route).is_none());
+        assert!(try_execute_fused(&[&r32, &rmx], &route).is_none());
+        assert!(try_execute_fused(&[&rmx, &r64], &route).is_none());
+        assert!(try_execute_fused(&[&rmx, &rmx], &route).is_some());
     }
 }

@@ -64,11 +64,14 @@ impl Method {
 ///
 /// Only the randomized pipeline (method `auto`, `device`, or
 /// `native_rsvd`) honors a reduced precision — the exact solvers are
-/// f64-only, and the wire codec rejects the combination up front. Dense
-/// and sparse payloads support all three flavors; tiled and adaptive
-/// requests are f64-only on the wire (the streaming panel sweep and the
-/// posterior-bound growth loop are certified against the f64 error model
-/// only).
+/// f64-only, and the wire codec rejects the combination up front. Every
+/// payload backend supports all three flavors: dense and sparse since the
+/// `Scalar` generalization, tiled (the out-of-core panel sweep narrows
+/// its panels — spill files shrink 2× at f32) and adaptive (the growth
+/// loop runs a slack-adjusted posterior gate at f32,
+/// [`crate::linalg::adaptive::F32_POSTERIOR_SLACK`]) since the pipelines
+/// went `Scalar`-generic. Reduced-precision payload values must be
+/// f32-representable — the codec sweeps and rejects otherwise.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum Precision {
     /// Full double precision end to end — the bitwise-frozen default.
@@ -120,6 +123,24 @@ fn check_f32_safe(values: &[f64], what: &str) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Streaming f32-representability sweep over any payload backend: dense
+/// and sparse check their value slices in place; a tiled payload is swept
+/// one panel at a time (a disk-backed store loads and drops each panel —
+/// the matrix is never densified, so the sweep's working set stays one
+/// panel regardless of the operand's size).
+fn check_operand_f32_safe(a: &Operand) -> Result<(), String> {
+    match a {
+        Operand::Dense(a) => check_f32_safe(a.as_slice(), "payload"),
+        Operand::Sparse(a) => check_f32_safe(a.parts().2, "payload"),
+        Operand::Tiled(a) => {
+            for p in 0..a.panel_count() {
+                check_f32_safe(a.panel(p).as_slice(), "payload")?;
+            }
+            Ok(())
+        }
+    }
 }
 
 /// A decomposition payload in whichever backend the caller holds it. The
@@ -244,9 +265,11 @@ pub enum Request {
     /// k largest singular triplets (or values only) of a tiled, possibly
     /// disk-backed `a` — served by the out-of-core operator path (one panel
     /// sweep per block product, bitwise identical to the dense pipeline)
-    /// unless an exact host method is explicitly requested. f64-only on
-    /// the wire (see [`Precision`]); the field exists so every SVD flavor
-    /// shares one accessor surface.
+    /// unless an exact host method is explicitly requested. All three
+    /// [`Precision`] flavors are accepted: `f32` narrows the panels (the
+    /// sweep is bitwise invariant in tile height, shard count, thread
+    /// count, and panel store at either dtype), `mixed` runs the f32 panel
+    /// sweep plus one f64 refinement pass.
     SvdTiled {
         a: TiledMatrix,
         k: usize,
@@ -393,9 +416,10 @@ impl Request {
     ///
     /// The optional `precision` field defaults to `"f64"` (pre-precision
     /// clients keep their exact historical behavior). A reduced precision
-    /// is rejected when combined with an exact solver method, with a tiled
-    /// payload, or with a payload value that overflows f32 — each is an
-    /// error envelope, never a silent fallback (see [`Precision`]).
+    /// is rejected when combined with an exact solver method or with a
+    /// payload value that overflows f32 (tiled payloads are swept one
+    /// panel at a time, never densified) — each is an error envelope,
+    /// never a silent fallback (see [`Precision`]).
     pub fn from_wire_json(j: &Json) -> Result<Request, String> {
         let ty = j.str_field("type")?;
         if ty == "svd_adaptive" {
@@ -419,12 +443,8 @@ impl Request {
         let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
         let precision = Self::precision_from_json(j)?;
         if precision != Precision::F64 {
-            Self::check_reduced_precision(ty, method, precision)?;
-            match &a {
-                Operand::Dense(a) => check_f32_safe(a.as_slice(), "payload")?,
-                Operand::Sparse(a) => check_f32_safe(a.parts().2, "payload")?,
-                Operand::Tiled(_) => unreachable!("tiled rejected above"),
-            }
+            Self::check_reduced_precision(method, precision)?;
+            check_operand_f32_safe(&a)?;
         }
         let want_vectors = j.bool_field("want_vectors")?;
         let seed = j
@@ -457,32 +477,19 @@ impl Request {
     }
 
     /// The request-level legality of a reduced precision: only the
-    /// randomized pipeline honors it, and only for dense/sparse payloads.
-    fn check_reduced_precision(
-        ty: &str,
-        method: Method,
-        precision: Precision,
-    ) -> Result<(), String> {
+    /// randomized pipeline honors it — the exact solvers are f64-only.
+    /// Every payload backend is eligible (the f32-representability sweep
+    /// is a separate check, [`check_operand_f32_safe`]).
+    fn check_reduced_precision(method: Method, precision: Precision) -> Result<(), String> {
         match method {
-            Method::Auto | Method::Device | Method::NativeRsvd => {}
-            exact => {
-                return Err(format!(
-                    "precision '{}' requires the randomized pipeline \
-                     (method auto, device, or native_rsvd), got '{}'",
-                    precision.name(),
-                    exact.name()
-                ));
-            }
-        }
-        if ty == "svd_tiled" || ty == "svd_adaptive" {
-            return Err(format!(
-                "precision '{}' is not supported for '{ty}' requests \
-                 (the {} pipeline is certified f64-only; see docs/NUMERICS.md)",
+            Method::Auto | Method::Device | Method::NativeRsvd => Ok(()),
+            exact => Err(format!(
+                "precision '{}' requires the randomized pipeline \
+                 (method auto, device, or native_rsvd), got '{}'",
                 precision.name(),
-                if ty == "svd_tiled" { "out-of-core panel" } else { "adaptive-rank" },
-            ));
+                exact.name()
+            )),
         }
-        Ok(())
     }
 
     /// Wire encoding of an adaptive request:
@@ -541,7 +548,8 @@ impl Request {
         let method = Method::parse(mname).ok_or_else(|| format!("unknown method '{mname}'"))?;
         let precision = Self::precision_from_json(j)?;
         if precision != Precision::F64 {
-            Self::check_reduced_precision("svd_adaptive", method, precision)?;
+            Self::check_reduced_precision(method, precision)?;
+            check_operand_f32_safe(&a)?;
         }
         let want_vectors = j.bool_field("want_vectors")?;
         let seed = j
@@ -1069,7 +1077,8 @@ mod tests {
             })
             .is_ok());
         }
-        // tiled and adaptive payloads are f64-only on the wire
+        // tiled and adaptive payloads accept every precision flavor on the
+        // wire (the Scalar generalization), round-tripping the field
         let t = TiledMatrix::from_dense(&d, 2);
         let tiled = Request::SvdTiled {
             a: t,
@@ -1086,8 +1095,9 @@ mod tests {
             _ => unreachable!(),
         };
         m.insert("precision".into(), Json::Str("f32".into()));
-        let err = Request::from_wire_json(&Json::Obj(m)).unwrap_err();
-        assert!(err.contains("not supported for 'svd_tiled'"), "{err}");
+        let back = Request::from_wire_json(&Json::Obj(m)).unwrap();
+        assert!(matches!(back, Request::SvdTiled { .. }));
+        assert_eq!(back.precision(), Precision::F32);
         let adaptive = Request::SvdAdaptive {
             a: Operand::Dense(d.clone()),
             tol: 0.1,
@@ -1105,8 +1115,18 @@ mod tests {
             _ => unreachable!(),
         };
         m.insert("precision".into(), Json::Str("mixed".into()));
+        let back = Request::from_wire_json(&Json::Obj(m)).unwrap();
+        assert!(matches!(back, Request::SvdAdaptive { .. }));
+        assert_eq!(back.precision(), Precision::Mixed);
+        // ...but reduced precision still never combines with an exact
+        // solver, on the adaptive flavor too
+        let mut m = match back.adaptive_to_json().unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("method".into(), Json::Str("gesvd".into()));
         let err = Request::from_wire_json(&Json::Obj(m)).unwrap_err();
-        assert!(err.contains("not supported for 'svd_adaptive'"), "{err}");
+        assert!(err.contains("randomized pipeline"), "{err}");
     }
 
     #[test]
@@ -1146,6 +1166,41 @@ mod tests {
         .to_wire_json()
         .unwrap();
         let err = Request::from_wire_json(&sparse).unwrap_err();
+        assert!(err.contains("not representable in f32"), "{err}");
+        // the tiled payload sweep runs panel-by-panel and trips the same
+        // guard — f64 keeps accepting the identical payload
+        let t = TiledMatrix::from_dense(&a, 1);
+        let wire_tiled = |p: Precision| {
+            Request::SvdTiled {
+                a: t.clone(),
+                k: 1,
+                method: Method::Auto,
+                precision: p,
+                want_vectors: false,
+                seed: 1,
+            }
+            .to_wire_json()
+            .unwrap()
+        };
+        assert!(Request::from_wire_json(&wire_tiled(Precision::F64)).is_ok());
+        for p in [Precision::F32, Precision::Mixed] {
+            let err = Request::from_wire_json(&wire_tiled(p)).unwrap_err();
+            assert!(err.contains("not representable in f32"), "{p:?}: {err}");
+        }
+        // the adaptive flavor sweeps whatever backend it carries
+        let adaptive = Request::SvdAdaptive {
+            a: Operand::Tiled(t.clone()),
+            tol: 0.1,
+            block: 2,
+            max_rank: 0,
+            method: Method::Auto,
+            precision: Precision::F32,
+            want_vectors: false,
+            seed: 1,
+        }
+        .adaptive_to_json()
+        .unwrap();
+        let err = Request::from_wire_json(&adaptive).unwrap_err();
         assert!(err.contains("not representable in f32"), "{err}");
     }
 

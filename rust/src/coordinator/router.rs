@@ -83,9 +83,10 @@ pub fn route(req: &Request, manifest: &Manifest, cfg: &RouterCfg) -> Route {
     // Reduced-precision requests always run the host randomized pipeline:
     // the AOT device artifacts are f64 graphs, and silently serving an f32
     // request with an f64 bucket would return the wrong error model (and
-    // the wrong cache identity). The wire codec already restricts non-f64
-    // to dense/sparse randomized requests; this guard keeps the invariant
-    // even for library callers constructing requests directly.
+    // the wrong cache identity). The wire codec restricts non-f64 to
+    // randomized-pipeline methods (on any payload — dense, sparse, tiled,
+    // adaptive); this guard keeps the invariant even for library callers
+    // constructing requests directly.
     if req.precision() != crate::coordinator::job::Precision::F64 {
         return Route::Host { method: Method::NativeRsvd };
     }

@@ -13,10 +13,10 @@
 
 use super::batcher::{fuse_key, is_fusable, is_fused_key, plan_batches, route_key};
 use super::cache::ResultCache;
-use super::job::{Decomposition, Job, JobHandle, JobResult, Request};
+use super::job::{Decomposition, Job, JobHandle, JobResult, Precision, Request};
 use super::metrics::Metrics;
 use super::router::{route, Route, RouterCfg};
-use crate::linalg::{tiled, Matrix, TiledMatrix};
+use crate::linalg::{tiled, Mat, Scalar, TiledMat};
 use crate::runtime::{ArtifactKind, Engine};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -264,27 +264,43 @@ enum WorkItem {
     Shard(ShardTask),
 }
 
-/// One contiguous panel slice of a sharded [`Request::SvdTiled`] job: the
-/// worker sweeps panels `[lo, hi)` of `a` against the shared Ω/Ψ streams
-/// ([`tiled::sketch_shard`]) and sends the partial back tagged with its
-/// shard index, where the job's gather thread reduces all partials in
-/// ascending order. A panicking sweep (e.g. a dead panel store) is caught
-/// per shard and reported as this shard's error — isolation stays per
-/// shard, the pool survives.
-struct ShardTask {
-    a: TiledMatrix,
-    omega: Arc<Matrix>,
-    psi: Arc<Matrix>,
+/// One contiguous panel slice of a sharded [`Request::SvdTiled`] job at
+/// sweep precision `S`: the worker sweeps panels `[lo, hi)` of `a` against
+/// the shared Ω/Ψ streams ([`tiled::sketch_shard`]) and sends the partial
+/// back tagged with its shard index, where the job's gather thread reduces
+/// all partials in ascending order. A panicking sweep (e.g. a dead panel
+/// store) is caught per shard and reported as this shard's error —
+/// isolation stays per shard, the pool survives.
+struct ShardSweep<S: Scalar> {
+    a: TiledMat<S>,
+    omega: Arc<Mat<S>>,
+    psi: Arc<Mat<S>>,
     shard: usize,
     lo: usize,
     hi: usize,
-    reply: mpsc::Sender<(usize, Result<tiled::SketchPartial, String>)>,
+    reply: mpsc::Sender<(usize, Result<tiled::SketchPartial<S>, String>)>,
+}
+
+/// Dtype dispatch wrapper so one worker channel carries sweeps at either
+/// precision: the request's `precision` picked the variant at scatter time
+/// (`mixed` never shards — see [`shard_eligible`]).
+enum ShardTask {
+    F64(ShardSweep<f64>),
+    F32(ShardSweep<f32>),
 }
 
 /// Execute one shard sweep under the worker's thread budget, converting a
 /// panic into this shard's error reply. A send failure means the gather
 /// side already gave up (its job failed on an earlier shard) — dropped.
 fn run_shard(t: ShardTask, threads: Option<usize>) {
+    match t {
+        ShardTask::F64(t) => run_sweep(t, threads),
+        ShardTask::F32(t) => run_sweep(t, threads),
+    }
+}
+
+/// The dtype-generic body of [`run_shard`].
+fn run_sweep<S: Scalar>(t: ShardSweep<S>, threads: Option<usize>) {
     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         crate::linalg::with_threads_opt(threads, || {
             tiled::sketch_shard(&t.a, &t.omega, &t.psi, t.shard, t.lo, t.hi)
@@ -493,16 +509,18 @@ fn dispatch_loop(
     }
 }
 
-/// Whether a request takes the sharded single-pass path: a tiled f64
-/// payload on a sketch-pipeline method whose panel count clears the
+/// Whether a request takes the sharded single-pass path: a tiled f64 or
+/// f32 payload on a sketch-pipeline method whose panel count clears the
 /// router's `shard_panels` threshold. Explicit exact methods keep the
-/// ordinary route (they densify in exec), as do reduced precisions (the
-/// panel pipeline is certified f64-only).
+/// ordinary route (they densify in exec). So does `mixed`: its contract
+/// is an f32 sketch *plus an f64 refinement pass*, and the single-pass
+/// co-sketch this driver runs has no refinement step to widen into — it
+/// rides the ordinary two-pass host path instead.
 fn shard_eligible(req: &Request, cfg: &CoordinatorCfg) -> bool {
-    use crate::coordinator::job::{Method, Precision};
+    use crate::coordinator::job::Method;
     match req {
         Request::SvdTiled { a, method, precision, .. } => {
-            *precision == Precision::F64
+            matches!(precision, Precision::F64 | Precision::F32)
                 && matches!(method, Method::Auto | Method::Device | Method::NativeRsvd)
                 && a.panel_count() >= cfg.router.shard_panels.max(1)
         }
@@ -564,16 +582,36 @@ fn run_sharded_job(
         metrics.record_cache_miss();
     }
     let outcome = match &job.request {
-        Request::SvdTiled { a, k, want_vectors, seed, .. } => execute_sharded(
-            a,
-            *k,
-            *want_vectors,
-            *seed,
-            shard_width(cfg),
-            cfg.solver_threads,
-            btx,
-            metrics,
-        ),
+        Request::SvdTiled { a, k, want_vectors, seed, precision, .. } => match precision {
+            Precision::F64 => execute_sharded(
+                a,
+                *k,
+                *want_vectors,
+                *seed,
+                shard_width(cfg),
+                cfg.solver_threads,
+                ShardTask::F64,
+                btx,
+                metrics,
+            ),
+            // narrow panel-by-panel once up front; the narrowed store is
+            // what every shard sweeps (bits match `rsvd_once_sharded` on
+            // the same narrowed operand)
+            Precision::F32 => execute_sharded(
+                &a.narrow(),
+                *k,
+                *want_vectors,
+                *seed,
+                shard_width(cfg),
+                cfg.solver_threads,
+                ShardTask::F32,
+                btx,
+                metrics,
+            ),
+            Precision::Mixed => {
+                unreachable!("shard_eligible keeps mixed on the two-pass route")
+            }
+        },
         _ => unreachable!("shard_eligible admits only tiled requests"),
     };
     let exec = t0.elapsed();
@@ -591,25 +629,26 @@ fn run_sharded_job(
 /// Any shard error (including a caught panic) fails the job; the remaining
 /// partials are dropped when the reply receiver goes away.
 #[allow(clippy::too_many_arguments)]
-fn execute_sharded(
-    a: &TiledMatrix,
+fn execute_sharded<S: Scalar>(
+    a: &TiledMat<S>,
     k: usize,
     want_vectors: bool,
     seed: u64,
     width: usize,
     threads: Option<usize>,
+    wrap: fn(ShardSweep<S>) -> ShardTask,
     btx: &mpsc::Sender<WorkItem>,
     metrics: &Metrics,
 ) -> Result<Decomposition, String> {
     let (m, n) = a.shape();
     let opts = crate::linalg::rsvd::RsvdOpts { seed, ..Default::default() };
-    let st = tiled::sketch_streams(m, n, k, &opts);
+    let st = tiled::sketch_streams::<S>(m, n, k, &opts);
     let ranges = tiled::shard_ranges(a.panel_count(), width);
     let omega = Arc::new(st.omega);
     let psi = Arc::new(st.psi);
     let (ptx, prx) = mpsc::channel();
     for (i, &(lo, hi)) in ranges.iter().enumerate() {
-        let task = ShardTask {
+        let task = ShardSweep {
             a: a.clone(),
             omega: omega.clone(),
             psi: psi.clone(),
@@ -618,11 +657,11 @@ fn execute_sharded(
             hi,
             reply: ptx.clone(),
         };
-        btx.send(WorkItem::Shard(task))
+        btx.send(WorkItem::Shard(wrap(task)))
             .map_err(|_| "executor pool is shut down".to_string())?;
     }
     drop(ptx);
-    let mut slots: Vec<Option<tiled::SketchPartial>> =
+    let mut slots: Vec<Option<tiled::SketchPartial<S>>> =
         (0..ranges.len()).map(|_| None).collect();
     for _ in 0..ranges.len() {
         let (i, res) = prx
@@ -630,7 +669,7 @@ fn execute_sharded(
             .map_err(|_| "shard workers dropped their replies".to_string())?;
         slots[i] = Some(res?);
     }
-    let partials: Vec<tiled::SketchPartial> =
+    let partials: Vec<tiled::SketchPartial<S>> =
         slots.into_iter().map(|s| s.expect("every shard replied once")).collect();
     Ok(crate::linalg::with_threads_opt(threads, || {
         let t_reduce = Instant::now();
@@ -769,8 +808,8 @@ fn manifest_of(engine: &Option<Engine>) -> &crate::runtime::Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{Method, Precision};
-    use crate::linalg::Matrix;
+    use crate::coordinator::job::Method;
+    use crate::linalg::{Matrix, TiledMatrix};
 
     fn svd_req(m: usize, n: usize, k: usize, method: Method) -> Request {
         Request::Svd {
@@ -1272,6 +1311,74 @@ mod tests {
         };
         let base = run(1, 0);
         for (w, s) in [(2usize, 0usize), (3, 2), (2, 5), (1, 64)] {
+            assert_eq!(run(w, s), base, "workers {w} shards {s}");
+        }
+    }
+
+    #[test]
+    fn f32_sharded_job_is_bitwise_the_narrowed_single_pass_driver() {
+        use crate::linalg::rsvd::RsvdOpts;
+        let a = crate::datagen_test_matrix(60, 24, |i| 1.0 / ((i + 1) as f64).powf(1.5), 31);
+        let t = TiledMatrix::from_dense(&a, 8); // 8 panels ≥ threshold 4
+        let mut cfg = CoordinatorCfg { workers: 3, ..Default::default() };
+        cfg.router.shard_panels = 4;
+        let coord = Coordinator::start_host_only(cfg);
+        let req = |precision| Request::SvdTiled {
+            a: t.clone(),
+            k: 5,
+            method: Method::Auto,
+            precision,
+            want_vectors: true,
+            seed: 9,
+        };
+        let d = coord.run(req(Precision::F32)).outcome.expect("ok");
+        let solo = tiled::rsvd_once_sharded(
+            &t.narrow(),
+            5,
+            &RsvdOpts { seed: 9, ..Default::default() },
+            1,
+        );
+        assert_eq!(d.values, solo.s, "f32 sharded job is bitwise the narrowed 1-shard sweep");
+        assert_eq!(d.u.unwrap(), solo.u);
+        assert_eq!(d.v.unwrap(), solo.v);
+        assert_eq!(coord.metrics.snapshot().sharded_jobs, 1);
+        // mixed never scatters: its f64 refinement pass has no home in the
+        // single-pass co-sketch, so it rides the ordinary two-pass host
+        // path — bitwise the solo mixed pipeline
+        let md = coord.run(req(Precision::Mixed)).outcome.expect("ok");
+        let mixed = crate::linalg::rsvd::rsvd_mixed(
+            &t,
+            &t.narrow(),
+            5,
+            &RsvdOpts { seed: 9, ..Default::default() },
+        );
+        assert_eq!(md.values, mixed.s, "mixed tiled job is bitwise the two-pass solve");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.sharded_jobs, 1, "the mixed job ran no scatter");
+    }
+
+    #[test]
+    fn f32_sharded_results_are_knob_invariant() {
+        // the f32 contract matches the f64 one: served bits depend only on
+        // the request and tile height, never on workers or shard width
+        let a = crate::datagen_test_matrix(40, 18, |i| 1.0 / ((i + 1) as f64).powi(2), 37);
+        let t = TiledMatrix::from_dense(&a, 5); // 8 panels
+        let run = |workers: usize, shards: usize| -> Vec<f64> {
+            let mut cfg = CoordinatorCfg { workers, shards, ..Default::default() };
+            cfg.router.shard_panels = 2;
+            let coord = Coordinator::start_host_only(cfg);
+            let req = Request::SvdTiled {
+                a: t.clone(),
+                k: 4,
+                method: Method::NativeRsvd,
+                precision: Precision::F32,
+                want_vectors: false,
+                seed: 3,
+            };
+            coord.run(req).outcome.unwrap().values
+        };
+        let base = run(1, 0);
+        for (w, s) in [(2usize, 0usize), (3, 2), (1, 64)] {
             assert_eq!(run(w, s), base, "workers {w} shards {s}");
         }
     }

@@ -47,10 +47,18 @@
 //! over [`Scalar`] like the fixed-rank pipeline (the f64 instantiation is
 //! byte-for-byte the historical computation); the small-B finish always
 //! runs in `f64`, and the tolerance/estimate bookkeeping is kept in `f64`
-//! regardless of the sweep precision. Note the wire protocol only accepts
-//! `precision` on the fixed-rank requests — adaptive requests stay `f64`
-//! end-to-end (docs/NUMERICS.md) — so the `f32` instantiation here serves
-//! library callers, not the coordinator.
+//! regardless of the sweep precision. An `f32` sweep additionally slack-
+//! adjusts the Halko gate: the stopping test becomes
+//! `est ≤ max(tol/2, F32_POSTERIOR_SLACK · est₀)` with `est₀` the
+//! first-round (σ₁-proportional) estimate, so a tolerance below what f32
+//! roundoff can attain stops at the attainable floor instead of grinding
+//! every job to its rank cap (the `F32_SLACK` convention of the accuracy
+//! suites). `f64` sweeps get slack `0` — the historical gate, bitwise.
+//! The `mixed` flavor ([`rsvd_adaptive_batch_mixed`]) grows the basis in
+//! f32, widens, runs one f64 refinement pass (the
+//! [`super::rsvd::rsvd_batch_mixed`] step shape), and finishes in f64.
+//! The wire protocol accepts `precision` on `svd_adaptive` requests and
+//! the coordinator routes the reduced flavors here (docs/NUMERICS.md).
 
 use super::gemm::{matmul, matmul_tn};
 use super::matrix::Mat;
@@ -67,6 +75,22 @@ pub const POSTERIOR_FACTOR: f64 = 7.978845608028654;
 
 /// Salt for the per-step probe-block seeds (Philox stream keying).
 const BLOCK_SEED_SALT: u64 = 0xADA_B10C;
+
+/// Attainable-error slack of the posterior gate for `f32` sweeps (module
+/// docs): the gate floor is this fraction of the first-round estimate, so
+/// a tolerance below the single-precision roundoff floor stops growth at
+/// the attainable error instead of the rank cap.
+pub const F32_POSTERIOR_SLACK: f64 = 1e-3;
+
+/// The gate slack for a sweep precision: [`F32_POSTERIOR_SLACK`] for f32,
+/// `0.0` for f64 (`max(tol/2, 0)` is the historical gate — bitwise).
+fn precision_slack<S: Scalar>() -> f64 {
+    if S::NAME == "f32" {
+        F32_POSTERIOR_SLACK
+    } else {
+        0.0
+    }
+}
 
 /// Batch-independent knobs of one adaptive solve (the tolerance itself is
 /// an argument of [`rsvd_adaptive`] — it is the request, not a knob).
@@ -120,8 +144,9 @@ impl AdaptiveJob {
 pub struct AdaptiveRange<S: Scalar = f64> {
     /// Orthonormal basis Q (m × r, r data-dependent).
     pub q: Mat<S>,
-    /// Last posterior estimate of ‖A − QQᵀA‖₂ (≤ tol/2 when the finder
-    /// stopped on tolerance; above it when the rank cap cut growth short).
+    /// Last posterior estimate of ‖A − QQᵀA‖₂ (≤ the stopping gate —
+    /// `max(tol/2, slack·est₀)`, module docs — when the finder stopped on
+    /// tolerance; above it when the rank cap cut growth short).
     pub est: f64,
     /// Growth steps taken (= fresh probe blocks drawn).
     pub steps: usize,
@@ -220,10 +245,101 @@ pub fn rsvd_adaptive_batch<S: Scalar, A: LinOp<S> + ?Sized>(
     })
 }
 
-/// Per-job growth state of the shared sweep.
+/// Mixed-precision fused adaptive solve: the blocked range finder grows
+/// every job's basis against the f32 operand (all the wide sweep flops and
+/// the slack-adjusted stopping rule), then each basis is widened and
+/// *refined* with one double-precision power pass against the f64 operand
+/// — the [`super::rsvd::rsvd_batch_mixed`] step shape, per-job panels
+/// re-orthonormalized independently so a fused batch stays bitwise a solo
+/// run — before the standard f64 projection and finish. The two operands
+/// must be the same matrix at two precisions; only shapes can be checked
+/// here. The reported `est`/`steps` are the f32 finder's diagnostics (the
+/// stopping decisions that chose the rank).
+pub fn rsvd_adaptive_batch_mixed<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    jobs: &[AdaptiveJob],
+    want_vectors: bool,
+    threads: Option<usize>,
+) -> Vec<AdaptiveSvd>
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    assert!(!jobs.is_empty(), "empty adaptive batch");
+    assert_eq!(
+        a64.shape(),
+        a32.shape(),
+        "mixed-precision operands must be the same matrix at two precisions"
+    );
+    with_threads_opt(threads, || {
+        let states = grow_all(a32, jobs);
+        let (m, n) = a64.shape();
+        // per-job column layout over the stacked widened bases (the finish
+        // trims by tolerance, so the "k" slot is just the panel width)
+        let mut layout = Vec::with_capacity(states.len());
+        let mut off = 0usize;
+        for st in &states {
+            layout.push((st.q.cols(), off, off + st.q.cols()));
+            off += st.q.cols();
+        }
+        let parts: Vec<Matrix> = states.iter().map(|s| s.q.widen()).collect();
+        let q0 = Mat::hstack(&parts);
+        // One f64 refinement pass: the f32 basis captures the subspace to
+        // single precision; one extra power step at double precision
+        // contracts the subspace error before the finish reads it.
+        let (q, b64) = if q0.cols() == 0 {
+            (q0, Matrix::zeros(0, n))
+        } else {
+            let z = super::rsvd::orth_panels(&a64.apply_t(&q0), &layout);
+            let y = a64.apply(&z);
+            let q = super::rsvd::orth_panels(&y, &layout);
+            let b = a64.project(&q);
+            (q, b)
+        };
+        states
+            .iter()
+            .zip(jobs)
+            .zip(&layout)
+            .map(|((st, job), &(_w, r0, r1))| {
+                let b = b64.submatrix(r0, r1, 0, n);
+                let qj = q.submatrix(0, m, r0, r1);
+                finish_one(&qj, st.est, st.steps, job, &b, m, n, want_vectors)
+            })
+            .collect()
+    })
+}
+
+/// Single-job [`rsvd_adaptive_batch_mixed`], mirroring
+/// [`super::rsvd::rsvd_mixed`].
+pub fn rsvd_adaptive_mixed<A64, A32>(
+    a64: &A64,
+    a32: &A32,
+    tol: f64,
+    opts: &AdaptiveOpts,
+) -> AdaptiveSvd
+where
+    A64: LinOp<f64> + ?Sized,
+    A32: LinOp<f32> + ?Sized,
+{
+    rsvd_adaptive_batch_mixed(
+        a64,
+        a32,
+        &[AdaptiveJob::from_opts(tol, opts)],
+        true,
+        opts.threads,
+    )
+    .pop()
+    .expect("one job in, one out")
+}
+
+/// Per-job growth state of the shared sweep. `est0` records the
+/// first-round posterior estimate — a σ₁-proportional scale that anchors
+/// the slack-adjusted gate for reduced-precision sweeps (module docs).
 struct Grow<S: Scalar> {
     q: Mat<S>,
     est: f64,
+    est0: f64,
     steps: usize,
     done: bool,
     max_rank: usize,
@@ -249,6 +365,7 @@ fn grow_all<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec
             Grow {
                 q: Mat::zeros(m, 0),
                 est: 0.0,
+                est0: 0.0,
                 steps: 0,
                 done: r == 0,
                 max_rank: if j.max_rank == 0 { r } else { j.max_rank.min(r) },
@@ -261,6 +378,7 @@ fn grow_all<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec
             }
         })
         .collect();
+    let slack = precision_slack::<S>();
     loop {
         let active: Vec<usize> = (0..states.len()).filter(|&i| !states[i].done).collect();
         if active.is_empty() {
@@ -289,9 +407,12 @@ fn grow_all<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, jobs: &[AdaptiveJob]) -> Vec
             // estimate is kept in f64 so the tol comparison is precision-
             // independent
             st.est = (S::from_f64(POSTERIOR_FACTOR) * max_col_norm(&e)).to_f64();
+            if st.steps == 0 {
+                st.est0 = st.est; // σ₁-proportional anchor for the slack floor
+            }
             st.steps += 1;
-            if st.est <= st.tol_half {
-                st.done = true; // the current basis already meets tol/2
+            if st.est <= st.tol_half.max(slack * st.est0) {
+                st.done = true; // tol/2 met, or the precision's attainable floor
             } else if st.q.cols() >= st.max_rank {
                 st.done = true; // rank cap: est records the miss honestly
             } else {
@@ -534,10 +655,10 @@ mod tests {
 
     #[test]
     fn f32_sweep_tracks_f64_on_fast_decay() {
-        // the f32 instantiation is a library-level flavor (the wire keeps
-        // adaptive f64-only): it must discover a comparable rank and
-        // deliver leading values at f32-grade accuracy, with the f64
-        // finish returning well-orthonormal factors
+        // the f32 instantiation backs `precision: "f32"` adaptive wire
+        // requests: it must discover a comparable rank and deliver leading
+        // values at f32-grade accuracy, with the f64 finish returning
+        // well-orthonormal factors
         let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 29);
         let a32 = Mat::<f32>::from_wide(&a);
         let tol = 1e-2;
@@ -559,5 +680,95 @@ mod tests {
             let utu = matmul_tn(&r32.svd.u, &r32.svd.u);
             assert!(utu.max_diff(&Matrix::eye(r32.rank())) < 1e-5);
         }
+    }
+
+    #[test]
+    fn f32_slack_gate_stops_at_the_attainable_floor() {
+        // a tolerance far below what f32 arithmetic can attain: the f64
+        // finder (slack 0) chases the raw tolerance all the way to the
+        // rank cap, while the slack-adjusted f32 gate stops growth once
+        // the posterior falls F32_POSTERIOR_SLACK below the first-round
+        // (σ₁-scale) estimate — before the cap
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) as f64).powi(4), 31);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let opts = AdaptiveOpts { block: 2, ..Default::default() };
+        let r64 = rsvd_adaptive(&a, 1e-12, &opts);
+        let r32 = rsvd_adaptive(&a32, 1e-12, &opts);
+        assert!(
+            r32.steps < r64.steps,
+            "slack gate must cut f32 growth short: f32 {} vs f64 {} steps",
+            r32.steps,
+            r64.steps
+        );
+        assert!(r32.rank() < 30, "f32 stopped on the floor, not the cap");
+        assert!(r32.rank() > 0, "the floor is below the leading structure");
+    }
+
+    #[test]
+    fn f64_slack_is_zero_so_the_historical_gate_is_unchanged() {
+        // pin the convention: the reduced-precision floor must never
+        // perturb the bitwise-frozen f64 stopping rule
+        assert_eq!(super::precision_slack::<f64>(), 0.0);
+        assert_eq!(super::precision_slack::<f32>(), F32_POSTERIOR_SLACK);
+    }
+
+    #[test]
+    fn mixed_batch_meets_the_tolerance_with_f64_grade_factors() {
+        let a = crate::datagen_test_matrix(40, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 37);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let jobs = [
+            AdaptiveJob { tol: 0.05, block: 4, max_rank: 0, seed: 3 },
+            AdaptiveJob { tol: 0.2, block: 8, max_rank: 0, seed: 5 },
+        ];
+        let mixed = rsvd_adaptive_batch_mixed(&a, &a32, &jobs, true, None);
+        assert_eq!(mixed.len(), jobs.len());
+        for (r, job) in mixed.iter().zip(&jobs) {
+            assert!(r.rank() > 0 && r.rank() < 30, "rank {} for tol {}", r.rank(), job.tol);
+            // the tolerance contract, checked against the true spectral err
+            let mut us = r.svd.u.clone();
+            for j in 0..r.rank() {
+                for i in 0..us.rows() {
+                    us[(i, j)] *= r.svd.s[j];
+                }
+            }
+            let rec = crate::linalg::gemm::matmul_nt(&us, &r.svd.v);
+            let err = full_svd(&a.add_scaled(-1.0, &rec)).s[0];
+            assert!(err <= job.tol, "spectral err {err} vs tol {}", job.tol);
+            // the f64 refinement pass re-orthonormalizes in double, so the
+            // factors are orthonormal to double precision (unlike raw f32)
+            let utu = matmul_tn(&r.svd.u, &r.svd.u);
+            assert!(utu.max_diff(&Matrix::eye(r.rank())) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mixed_batch_is_bitwise_solo_mixed() {
+        let a = crate::datagen_test_matrix(30, 24, |i| 1.0 / (i + 1) as f64, 41);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let jobs = [
+            AdaptiveJob { tol: 0.3, block: 4, max_rank: 0, seed: 1 },
+            AdaptiveJob { tol: 0.1, block: 6, max_rank: 12, seed: 2 },
+        ];
+        let fused = rsvd_adaptive_batch_mixed(&a, &a32, &jobs, true, None);
+        for (j, f) in jobs.iter().zip(&fused) {
+            let opts =
+                AdaptiveOpts { block: j.block, max_rank: j.max_rank, seed: j.seed, threads: None };
+            let solo = rsvd_adaptive_mixed(&a, &a32, j.tol, &opts);
+            assert_eq!(f.svd.s, solo.svd.s, "job {j:?}");
+            assert_eq!(f.svd.u, solo.svd.u, "job {j:?}");
+            assert_eq!(f.svd.v, solo.svd.v, "job {j:?}");
+            assert_eq!(f.est, solo.est, "job {j:?}");
+            assert_eq!(f.steps, solo.steps, "job {j:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_zero_matrix_reports_rank_zero() {
+        let a = Matrix::zeros(12, 7);
+        let a32 = Mat::<f32>::from_wide(&a);
+        let r = rsvd_adaptive_mixed(&a, &a32, 1e-6, &AdaptiveOpts::default());
+        assert_eq!(r.rank(), 0);
+        assert_eq!(r.svd.u.shape(), (12, 0));
+        assert_eq!(r.svd.v.shape(), (7, 0));
     }
 }

@@ -53,5 +53,5 @@ pub use op::LinOp;
 pub use scalar::Scalar;
 pub use sparse::{Csr, CsrMat};
 pub use svd_gesvd::Svd;
-pub use tiled::TiledMatrix;
+pub use tiled::{TiledMat, TiledMatrix};
 pub use threading::{with_threads, with_threads_opt, Parallelism};

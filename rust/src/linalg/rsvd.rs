@@ -83,10 +83,10 @@ pub fn rsvd_values<S: Scalar, A: LinOp<S> + ?Sized>(a: &A, k: usize, opts: &Rsvd
 /// whose panel-crossing products run as per-panel partials swept by up to
 /// `shards` concurrent participants and folded in ascending panel order.
 /// Bitwise invariant in the shard count (and thread count / panel store)
-/// at a fixed tile height; the single-pass sibling is
+/// at a fixed tile height, per dtype; the single-pass sibling is
 /// [`super::tiled::rsvd_once_sharded`].
-pub fn rsvd_sharded(
-    a: &super::tiled::TiledMatrix,
+pub fn rsvd_sharded<S: Scalar>(
+    a: &super::tiled::TiledMat<S>,
     k: usize,
     opts: &RsvdOpts,
     shards: usize,
@@ -95,13 +95,50 @@ pub fn rsvd_sharded(
 }
 
 /// Values-only [`rsvd_sharded`].
-pub fn rsvd_values_sharded(
-    a: &super::tiled::TiledMatrix,
+pub fn rsvd_values_sharded<S: Scalar>(
+    a: &super::tiled::TiledMat<S>,
     k: usize,
     opts: &RsvdOpts,
     shards: usize,
 ) -> Vec<f64> {
     rsvd_values(&super::tiled::ShardedTiled::new(a.clone(), shards), k, opts)
+}
+
+/// Mixed-precision sharded two-pass k-SVD of one huge tiled matrix: the
+/// f32 range finder sweeps the half-bandwidth narrowing while the single
+/// f64 refinement pass and finish sweep the original — both through
+/// [`super::tiled::ShardedTiled`] wrappers, so every panel-crossing
+/// product keeps the ascending-fold shard/thread/store invariance at a
+/// fixed tile height.
+pub fn rsvd_sharded_mixed(
+    a64: &super::tiled::TiledMatrix,
+    a32: &super::tiled::TiledMat<f32>,
+    k: usize,
+    opts: &RsvdOpts,
+    shards: usize,
+) -> Svd {
+    rsvd_mixed(
+        &super::tiled::ShardedTiled::new(a64.clone(), shards),
+        &super::tiled::ShardedTiled::new(a32.clone(), shards),
+        k,
+        opts,
+    )
+}
+
+/// Values-only [`rsvd_sharded_mixed`].
+pub fn rsvd_values_sharded_mixed(
+    a64: &super::tiled::TiledMatrix,
+    a32: &super::tiled::TiledMat<f32>,
+    k: usize,
+    opts: &RsvdOpts,
+    shards: usize,
+) -> Vec<f64> {
+    rsvd_values_mixed(
+        &super::tiled::ShardedTiled::new(a64.clone(), shards),
+        &super::tiled::ShardedTiled::new(a32.clone(), shards),
+        k,
+        opts,
+    )
 }
 
 /// Mixed-precision randomized k-SVD: f32 range finder, one f64 refinement
@@ -380,7 +417,7 @@ fn finish_values_batch(b: &Matrix, layout: &[(usize, usize, usize)]) -> Vec<Vec<
 /// block is orthonormalized independently (CholeskyQR2 mixes columns, so
 /// fusing it across jobs would change results; keeping it per-panel is
 /// what makes the batch bitwise identical to sequential calls).
-fn orth_panels<S: Scalar>(y: &Mat<S>, layout: &[(usize, usize, usize)]) -> Mat<S> {
+pub(super) fn orth_panels<S: Scalar>(y: &Mat<S>, layout: &[(usize, usize, usize)]) -> Mat<S> {
     let mut out = Mat::zeros(y.rows(), y.cols());
     for &(_k, c0, c1) in layout {
         let panel = orthonormalize(&y.submatrix(0, y.rows(), c0, c1));

@@ -57,6 +57,10 @@ pub trait Scalar:
     /// Stable lowercase dtype name (`"f64"` / `"f32"`) — stamped into
     /// bench JSON rows so the bench-guard only ever compares like-dtype.
     const NAME: &'static str;
+    /// Storage width in bytes (`8` / `4`) — the out-of-core spill codec
+    /// sizes its scratch-file records with this, which is exactly where
+    /// the f32 "half the panel I/O" win comes from.
+    const BYTES: usize;
 
     /// Narrowing (for `f32`) or identity (for `f64`) conversion from f64.
     fn from_f64(x: f64) -> Self;
@@ -76,6 +80,12 @@ pub trait Scalar:
     fn mul_add(self, a: Self, b: Self) -> Self;
     /// IEEE maximum (NaN-ignoring, like `f64::max`).
     fn max(self, other: Self) -> Self;
+    /// Write the little-endian byte encoding into `buf`
+    /// (`buf.len() == Self::BYTES`) — exact bit round-trip with
+    /// [`Scalar::read_le`]; the spill-to-disk panel codec.
+    fn write_le(self, buf: &mut [u8]);
+    /// Decode a little-endian `Self` from `buf` (`buf.len() == Self::BYTES`).
+    fn read_le(buf: &[u8]) -> Self;
 
     /// AVX2+FMA GEMM micro-kernel for this scalar type: one MR-high packed
     /// A panel times the packed B block into the C band — see
@@ -153,6 +163,7 @@ macro_rules! impl_scalar {
             const ZERO: Self = 0.0;
             const ONE: Self = 1.0;
             const NAME: &'static str = $name;
+            const BYTES: usize = std::mem::size_of::<$t>();
 
             #[inline(always)]
             fn from_f64(x: f64) -> Self {
@@ -189,6 +200,14 @@ macro_rules! impl_scalar {
             #[inline(always)]
             fn max(self, other: Self) -> Self {
                 <$t>::max(self, other)
+            }
+            #[inline(always)]
+            fn write_le(self, buf: &mut [u8]) {
+                buf.copy_from_slice(&self.to_le_bytes());
+            }
+            #[inline(always)]
+            fn read_le(buf: &[u8]) -> Self {
+                <$t>::from_le_bytes(buf.try_into().expect("le record width"))
             }
 
             #[inline]

@@ -5,13 +5,22 @@
 //! arXiv:1706.07191) show the same sketch algebra survives streaming A in
 //! row panels — every A-touching product is a sum of per-panel products,
 //! so each range-finder step needs exactly **one pass** over A no matter
-//! where the panels live. [`TiledMatrix`] stores A as row panels behind a
+//! where the panels live. [`TiledMat`] stores A as row panels behind a
 //! pluggable [`PanelStore`] (in-memory panels, or spilled to a scratch
 //! file for matrices that don't fit) and implements [`LinOp`] by streaming
 //! panels through the existing packed GEMM.
 //!
-//! **Bitwise contract.** The blocked products are *bitwise identical* to
-//! the dense path for any tile height:
+//! **Scalar generality.** Everything here is generic over [`Scalar`], with
+//! `f64` as the default parameter — [`TiledMatrix`] is the historical
+//! (bitwise-frozen) `TiledMat<f64>` alias, and `TiledMat<f32>` is the
+//! out-of-core half-bandwidth operand: panel-I/O dominates this path
+//! (Lu et al.), and an f32 panel is half the bytes, so the spill-to-disk
+//! scratch file (and every panel read) shrinks 2×. [`TiledMat::narrow`]
+//! converts an f64 tiling panel-at-a-time without densifying.
+//!
+//! **Bitwise contract (per scalar type).** The blocked products are
+//! *bitwise identical* to the dense path of the same dtype for any tile
+//! height:
 //!
 //! * `apply` (Y = A·X): each panel's C rows come from the same packed
 //!   schedule as the full GEMM — the k-reduction order per element (KC
@@ -26,36 +35,46 @@
 //!   element (no per-panel partial is ever formed and re-added).
 //!
 //! Combined with the thread-count invariance of the underlying kernels
-//! (DESIGN.md §GEMM), `rsvd` over a `TiledMatrix` reproduces the dense
+//! (DESIGN.md §GEMM), `rsvd` over a `TiledMat<S>` reproduces the dense
 //! pipeline's bits for any (tile height, thread count) — pinned in
-//! `tests/tiled_rsvd.rs`.
+//! `tests/tiled_rsvd.rs` (f64) and `tests/shard_rsvd.rs` (f32).
 //!
 //! [`rsvd_once`] adds the single-pass variant for q = 0 jobs: the range
 //! sketch Y = A·Ω and the co-sketch W = Ψᵀ·A are accumulated in the *same*
 //! panel sweep (Lu et al.'s co-visit trick), so the whole factorization
 //! reads A exactly once — the two-pass pipeline reads it 2 + 2q times.
+//! At any dtype the panel sweeps run in `S` and the small co-sketch solve
+//! runs in f64 ([`finish_cosketch`]), the reduced-sketch /
+//! full-precision-finish split of Tomás et al.; `mixed` tiled requests
+//! take the two-pass [`super::rsvd::rsvd_mixed`] shape instead (an f32
+//! sweep refined by one f64 pass needs a second pass by definition, which
+//! is exactly what the single-pass driver exists to avoid).
 
 use super::gemm::{matmul, matmul_tn, matmul_tn_acc};
-use super::matrix::FnvStream;
+use super::matrix::{FnvStream, Mat};
 use super::op::LinOp;
 use super::qr::orthonormalize;
 use super::rsvd::RsvdOpts;
+use super::scalar::Scalar;
 use super::svd_gesvd::{svd, Svd};
 use super::threading::{process_default_threads, with_threads, with_threads_opt};
 use super::Matrix;
 use std::fmt;
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
+use std::marker::PhantomData;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Operator-kind salt for [`TiledMatrix::fingerprint`] — a tiled operator
+/// Operator-kind salt for [`TiledMat::fingerprint`] — a tiled operator
 /// must never share a batcher key with its dense or CSR twin (distinct
-/// product kernels), mirroring the CSR salt in `sparse.rs`.
+/// product kernels), mirroring the CSR salt in `sparse.rs`. The element
+/// words are [`Scalar::bits`] (zero-extended), so the f32 narrowing of a
+/// tiling never collides with its f64 original either.
 const TILED_SALT: u64 = 0x71_1ED;
 
-/// Where a [`TiledMatrix`] keeps its panels.
+/// Where a [`TiledMat`] keeps its panels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Spill {
     /// Panels held in memory (the fast path; still streams panel-at-a-time
@@ -67,32 +86,38 @@ pub enum Spill {
     Disk,
 }
 
-/// Storage backend for the row panels of a [`TiledMatrix`]. Panel `i`
+/// Storage backend for the row panels of a [`TiledMat`]. Panel `i`
 /// holds rows `[i·tile_rows, min((i+1)·tile_rows, rows))`, full width.
 ///
 /// `load` returns the panel as a dense matrix; implementations may panic
 /// on I/O failure (the coordinator's per-job panic isolation turns that
 /// into a failed job, not a dead worker).
-pub trait PanelStore: Send + Sync {
+pub trait PanelStore<S: Scalar = f64>: Send + Sync {
     /// Number of row panels.
     fn panel_count(&self) -> usize;
     /// Materialize panel `idx` as a dense matrix.
-    fn load(&self, idx: usize) -> Matrix;
+    fn load(&self, idx: usize) -> Mat<S>;
     /// Short backend tag for Debug/metrics ("mem" | "disk").
     fn kind(&self) -> &'static str;
+    /// Bytes this store keeps on disk (`None` for in-memory backends) —
+    /// the figure `benches/oocrsvd.rs` reports to prove the f32 2×
+    /// panel-footprint reduction.
+    fn spill_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// In-memory panel store: a plain vector of row-panel matrices.
-struct MemStore {
-    panels: Vec<Matrix>,
+struct MemStore<S: Scalar> {
+    panels: Vec<Mat<S>>,
 }
 
-impl PanelStore for MemStore {
+impl<S: Scalar> PanelStore<S> for MemStore<S> {
     fn panel_count(&self) -> usize {
         self.panels.len()
     }
 
-    fn load(&self, idx: usize) -> Matrix {
+    fn load(&self, idx: usize) -> Mat<S> {
         self.panels[idx].clone()
     }
 
@@ -102,21 +127,24 @@ impl PanelStore for MemStore {
 }
 
 /// Spill-to-disk panel store: all panels live in one scratch file as raw
-/// little-endian `f64` bytes (exact bit round-trip); `load` seeks and
-/// reads one panel through a single long-lived handle (a panel sweep is
-/// one `load` per panel × (2 + 2q) sweeps per solve — re-opening the file
-/// each time would put an `open`/`close` syscall pair on exactly the hot
-/// path this store exists for). The file is removed on drop.
-struct DiskStore {
+/// little-endian `S` records ([`Scalar::write_le`], exact bit round-trip —
+/// [`Scalar::BYTES`] per element, so an f32 spill is half the f64 bytes);
+/// `load` seeks and reads one panel through a single long-lived handle (a
+/// panel sweep is one `load` per panel × (2 + 2q) sweeps per solve —
+/// re-opening the file each time would put an `open`/`close` syscall pair
+/// on exactly the hot path this store exists for). The file is removed on
+/// drop.
+struct DiskStore<S: Scalar> {
     path: PathBuf,
     /// The open scratch file; a mutex serializes the seek+read pairs so
     /// the store stays `Sync` without platform-specific positional reads.
     file: Mutex<File>,
     /// (byte offset, rows, cols) per panel.
     panels: Vec<(u64, usize, usize)>,
+    _dtype: PhantomData<S>,
 }
 
-impl DiskStore {
+impl<S: Scalar> DiskStore<S> {
     fn scratch_path() -> PathBuf {
         static NEXT: AtomicU64 = AtomicU64::new(0);
         let n = NEXT.fetch_add(1, Ordering::Relaxed);
@@ -124,14 +152,14 @@ impl DiskStore {
     }
 }
 
-impl PanelStore for DiskStore {
+impl<S: Scalar> PanelStore<S> for DiskStore<S> {
     fn panel_count(&self) -> usize {
         self.panels.len()
     }
 
-    fn load(&self, idx: usize) -> Matrix {
+    fn load(&self, idx: usize) -> Mat<S> {
         let (off, rows, cols) = self.panels[idx];
-        let mut buf = vec![0u8; rows * cols * 8];
+        let mut buf = vec![0u8; rows * cols * S::BYTES];
         {
             let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
             f.seek(SeekFrom::Start(off))
@@ -139,19 +167,20 @@ impl PanelStore for DiskStore {
             f.read_exact(&mut buf)
                 .unwrap_or_else(|e| panic!("tiled panel read: {e}"));
         }
-        let data = buf
-            .chunks_exact(8)
-            .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
-            .collect();
-        Matrix::from_vec(rows, cols, data)
+        let data = buf.chunks_exact(S::BYTES).map(S::read_le).collect();
+        Mat::from_vec(rows, cols, data)
     }
 
     fn kind(&self) -> &'static str {
         "disk"
     }
+
+    fn spill_bytes(&self) -> Option<u64> {
+        Some(self.panels.iter().map(|&(_, r, c)| (r * c * S::BYTES) as u64).sum())
+    }
 }
 
-impl Drop for DiskStore {
+impl<S: Scalar> Drop for DiskStore<S> {
     fn drop(&mut self) {
         let _ = std::fs::remove_file(&self.path);
     }
@@ -179,21 +208,26 @@ impl Drop for ScratchGuard {
     }
 }
 
-/// An m×n matrix stored as row panels behind a [`PanelStore`], serving the
-/// sketch pipeline through [`LinOp`] with results bitwise identical to the
-/// dense path for any tile height (module docs). Clones share the store.
+/// An m×n matrix over `S` stored as row panels behind a [`PanelStore`],
+/// serving the sketch pipeline through [`LinOp`] with results bitwise
+/// identical to the same-dtype dense path for any tile height (module
+/// docs). Clones share the store.
 #[derive(Clone)]
-pub struct TiledMatrix {
+pub struct TiledMat<S: Scalar = f64> {
     rows: usize,
     cols: usize,
     tile_rows: usize,
-    store: Arc<dyn PanelStore>,
+    store: Arc<dyn PanelStore<S>>,
     /// Content fingerprint, computed once while the panels stream through
     /// construction (a disk-backed matrix is never re-read to hash it).
     fp: u64,
 }
 
-impl TiledMatrix {
+/// The historical double-precision tiled operand — every pre-existing
+/// `TiledMatrix` call site keeps meaning the bitwise-frozen f64 pipeline.
+pub type TiledMatrix = TiledMat<f64>;
+
+impl<S: Scalar> TiledMat<S> {
     /// Build from a panel producer: `fill(r0, r1)` must return the
     /// `(r1-r0)×cols` panel holding rows `[r0, r1)`. Panels are requested
     /// in ascending order and handed straight to the store, so only one
@@ -205,8 +239,8 @@ impl TiledMatrix {
         cols: usize,
         tile_rows: usize,
         spill: Spill,
-        mut fill: impl FnMut(usize, usize) -> Matrix,
-    ) -> Result<TiledMatrix, String> {
+        mut fill: impl FnMut(usize, usize) -> Mat<S>,
+    ) -> Result<TiledMat<S>, String> {
         assert!(tile_rows > 0, "tile height must be positive");
         let tile_rows = tile_rows.min(rows.max(1));
         let count = rows.div_ceil(tile_rows);
@@ -218,23 +252,23 @@ impl TiledMatrix {
         h.word(TILED_SALT);
         h.word(rows as u64);
         h.word(cols as u64);
-        let mut take_panel = |i: usize| -> Matrix {
+        let mut take_panel = |i: usize| -> Mat<S> {
             let r0 = i * tile_rows;
             let r1 = (r0 + tile_rows).min(rows);
             let p = fill(r0, r1);
             assert_eq!(p.shape(), (r1 - r0, cols), "panel {i} shape");
             for v in p.as_slice() {
-                h.word(v.to_bits());
+                h.word(v.bits());
             }
             p
         };
-        let store: Arc<dyn PanelStore> = match spill {
+        let store: Arc<dyn PanelStore<S>> = match spill {
             Spill::Memory => {
                 let panels = (0..count).map(&mut take_panel).collect();
                 Arc::new(MemStore { panels })
             }
             Spill::Disk => {
-                let path = DiskStore::scratch_path();
+                let path = DiskStore::<S>::scratch_path();
                 // armed for the whole streaming build: `fill` is caller
                 // code and may panic mid-stream — the unwind must not leak
                 // the scratch file (error returns ride the same guard)
@@ -245,9 +279,9 @@ impl TiledMatrix {
                 let mut off = 0u64;
                 for i in 0..count {
                     let p = take_panel(i);
-                    let mut buf = Vec::with_capacity(p.as_slice().len() * 8);
-                    for v in p.as_slice() {
-                        buf.extend_from_slice(&v.to_le_bytes());
+                    let mut buf = vec![0u8; p.as_slice().len() * S::BYTES];
+                    for (v, rec) in p.as_slice().iter().zip(buf.chunks_exact_mut(S::BYTES)) {
+                        v.write_le(rec);
                     }
                     f.write_all(&buf).map_err(|e| format!("tiled spill write: {e}"))?;
                     panels.push((off, p.rows(), p.cols()));
@@ -258,14 +292,19 @@ impl TiledMatrix {
                 drop(f);
                 let reader = File::open(&path)
                     .map_err(|e| format!("tiled spill reopen {}: {e}", path.display()))?;
-                Arc::new(DiskStore { path: guard.disarm(), file: Mutex::new(reader), panels })
+                Arc::new(DiskStore {
+                    path: guard.disarm(),
+                    file: Mutex::new(reader),
+                    panels,
+                    _dtype: PhantomData,
+                })
             }
         };
-        Ok(TiledMatrix { rows, cols, tile_rows, store, fp: h.finish() })
+        Ok(TiledMat { rows, cols, tile_rows, store, fp: h.finish() })
     }
 
     /// Tile an in-memory dense matrix (in-memory panels).
-    pub fn from_dense(a: &Matrix, tile_rows: usize) -> TiledMatrix {
+    pub fn from_dense(a: &Mat<S>, tile_rows: usize) -> TiledMat<S> {
         Self::build(a.rows(), a.cols(), tile_rows, Spill::Memory, |r0, r1| {
             a.submatrix(r0, r1, 0, a.cols())
         })
@@ -274,9 +313,9 @@ impl TiledMatrix {
 
     /// Tile an in-memory dense matrix and spill the panels to disk — the
     /// test/bench entry point for the out-of-core store (real out-of-core
-    /// construction goes through [`TiledMatrix::build`], which never holds
+    /// construction goes through [`TiledMat::build`], which never holds
     /// more than one panel).
-    pub fn from_dense_spilled(a: &Matrix, tile_rows: usize) -> Result<TiledMatrix, String> {
+    pub fn from_dense_spilled(a: &Mat<S>, tile_rows: usize) -> Result<TiledMat<S>, String> {
         Self::build(a.rows(), a.cols(), tile_rows, Spill::Disk, |r0, r1| {
             a.submatrix(r0, r1, 0, a.cols())
         })
@@ -319,15 +358,29 @@ impl TiledMatrix {
         (r0, (r0 + self.tile_rows).min(self.rows))
     }
 
+    /// Materialize panel `i` as a dense matrix — the streaming accessor
+    /// behind [`TiledMat::narrow`] and the wire decoder's per-panel
+    /// f32-representability sweep (neither ever densifies the operand).
+    pub fn panel(&self, i: usize) -> Mat<S> {
+        self.store.load(i)
+    }
+
     /// Store backend tag ("mem" | "disk").
     pub fn store_kind(&self) -> &'static str {
         self.store.kind()
     }
 
+    /// Bytes the panel store keeps on disk; `None` for in-memory panels.
+    /// `rows·cols·`[`Scalar::BYTES`] for a spilled store — the concrete
+    /// "f32 halves the spill footprint" figure.
+    pub fn spill_bytes(&self) -> Option<u64> {
+        self.store.spill_bytes()
+    }
+
     /// Dense equivalent — tests and the exact-solver fallback only; the
     /// sketch pipeline itself streams panels.
-    pub fn to_dense(&self) -> Matrix {
-        let mut m = Matrix::zeros(self.rows, self.cols);
+    pub fn to_dense(&self) -> Mat<S> {
+        let mut m = Mat::zeros(self.rows, self.cols);
         for i in 0..self.panel_count() {
             let (r0, _) = self.panel_range(i);
             let p = self.store.load(i);
@@ -338,7 +391,7 @@ impl TiledMatrix {
         m
     }
 
-    /// Content fingerprint (cached at construction): [`Matrix::fingerprint`]
+    /// Content fingerprint (cached at construction): [`Mat::fingerprint`]
     /// semantics over the row-major element bits, salted with the tiled
     /// operator kind. Invariant in tile height and store backend — two
     /// tilings of the same data *may* share a fused batch, because their
@@ -357,20 +410,43 @@ impl TiledMatrix {
         rows: usize,
         cols: usize,
         tile_rows: usize,
-        store: Arc<dyn PanelStore>,
+        store: Arc<dyn PanelStore<S>>,
         fp: u64,
-    ) -> TiledMatrix {
+    ) -> TiledMat<S> {
         assert!(tile_rows > 0, "tile height must be positive");
         let tile_rows = tile_rows.min(rows.max(1));
         assert_eq!(store.panel_count(), rows.div_ceil(tile_rows), "store panel count");
-        TiledMatrix { rows, cols, tile_rows, store, fp }
+        TiledMat { rows, cols, tile_rows, store, fp }
+    }
+}
+
+impl TiledMat<f64> {
+    /// Narrow to the half-bandwidth f32 tiling, panel by panel — one
+    /// streaming pass, never densified, same tile height. The spill kind
+    /// follows the source (a disk-backed tiling narrows into a disk-backed
+    /// scratch file of **half** the bytes; if the scratch file cannot be
+    /// created the panels fall back to memory — the narrowing itself is
+    /// infallible). Narrowing rounds each element to the nearest f32
+    /// ([`Mat::from_wide`]); callers own pre-checking representability
+    /// (`util::json::check_f32_safe` at the wire boundary).
+    pub fn narrow(&self) -> TiledMat<f32> {
+        let fill = |r0: usize, _r1: usize| Mat::<f32>::from_wide(&self.panel(r0 / self.tile_rows));
+        if self.store_kind() == "disk" {
+            if let Ok(t) =
+                TiledMat::<f32>::build(self.rows, self.cols, self.tile_rows, Spill::Disk, fill)
+            {
+                return t;
+            }
+        }
+        TiledMat::<f32>::build(self.rows, self.cols, self.tile_rows, Spill::Memory, fill)
+            .expect("in-memory tiling cannot fail")
     }
 }
 
 /// Content equality (shape + elements), regardless of tile height or store
 /// backend — the executor's fused-batch re-check compares payloads with
 /// this. Streams one panel of each side at a time; never densifies.
-impl PartialEq for TiledMatrix {
+impl<S: Scalar> PartialEq for TiledMat<S> {
     fn eq(&self, other: &Self) -> bool {
         if self.shape() != other.shape() {
             return false;
@@ -379,7 +455,7 @@ impl PartialEq for TiledMatrix {
             return true;
         }
         let mut oi = usize::MAX;
-        let mut op = Matrix::zeros(0, 0);
+        let mut op = Mat::zeros(0, 0);
         for i in 0..self.panel_count() {
             let (r0, _) = self.panel_range(i);
             let p = self.store.load(i);
@@ -399,32 +475,33 @@ impl PartialEq for TiledMatrix {
     }
 }
 
-impl fmt::Debug for TiledMatrix {
+impl<S: Scalar> fmt::Debug for TiledMat<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "TiledMatrix {}x{} ({} panels x {} rows, {} store, fp {:016x})",
+            "TiledMatrix {}x{} ({} panels x {} rows, {} store, {}, fp {:016x})",
             self.rows,
             self.cols,
             self.panel_count(),
             self.tile_rows,
             self.store.kind(),
+            S::NAME,
             self.fp
         )
     }
 }
 
-impl LinOp for TiledMatrix {
+impl<S: Scalar> LinOp<S> for TiledMat<S> {
     fn shape(&self) -> (usize, usize) {
-        TiledMatrix::shape(self)
+        TiledMat::shape(self)
     }
 
     /// Y = A·X, one pass over the panels: panel i's GEMM produces Y's rows
     /// [r0, r1) with the exact bits of the dense call (the packed
     /// schedule's k-reduction order is row-set-independent).
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.cols, x.rows(), "tiled apply inner dims {} vs {}", self.cols, x.rows());
-        let mut y = Matrix::zeros(self.rows, x.cols());
+        let mut y = Mat::zeros(self.rows, x.cols());
         for i in 0..self.panel_count() {
             let (r0, _) = self.panel_range(i);
             let p = self.store.load(i);
@@ -439,9 +516,9 @@ impl LinOp for TiledMatrix {
     /// Z = Aᵀ·X, one pass: panels accumulate through `matmul_tn_acc` in
     /// ascending order, reproducing the flat kernel's global ascending-i
     /// term order per element (module docs).
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.rows, x.rows(), "tiled apply_t row dims {} vs {}", self.rows, x.rows());
-        let mut z = Matrix::zeros(self.cols, x.cols());
+        let mut z = Mat::zeros(self.cols, x.cols());
         for i in 0..self.panel_count() {
             let (r0, r1) = self.panel_range(i);
             let p = self.store.load(i);
@@ -459,9 +536,9 @@ impl LinOp for TiledMatrix {
     /// bitwise identical to the dense override `matmul_tn(q, a)` (which is
     /// the frozen historical kernel), so tiled rsvd reproduces dense rsvd
     /// exactly.
-    fn project(&self, q: &Matrix) -> Matrix {
+    fn project(&self, q: &Mat<S>) -> Mat<S> {
         assert_eq!(self.rows, q.rows(), "tiled project row dims {} vs {}", self.rows, q.rows());
-        let mut b = Matrix::zeros(q.cols(), self.cols);
+        let mut b = Mat::zeros(q.cols(), self.cols);
         for i in 0..self.panel_count() {
             let (r0, r1) = self.panel_range(i);
             let p = self.store.load(i);
@@ -486,12 +563,14 @@ impl LinOp for TiledMatrix {
 /// triplets come from the small SVD of B exactly as in the two-pass
 /// finish. Accuracy matches two-pass q = 0 up to the co-sketch solve
 /// (`tests/tiled_rsvd.rs` checks the same tail bound on datagen spectra).
-pub fn rsvd_once(a: &TiledMatrix, k: usize, opts: &RsvdOpts) -> Svd {
+/// At `S = f32` the panel sweep moves half the bytes and the small solve
+/// still runs in f64 ([`finish_cosketch`]).
+pub fn rsvd_once<S: Scalar>(a: &TiledMat<S>, k: usize, opts: &RsvdOpts) -> Svd {
     with_threads_opt(opts.threads, || {
         let (m, n) = a.shape();
         let st = sketch_streams(m, n, k, opts);
-        let mut y = Matrix::zeros(m, st.s);
-        let mut w = Matrix::zeros(st.sl, n);
+        let mut y = Mat::zeros(m, st.s);
+        let mut w = Mat::zeros(st.sl, n);
         for i in 0..a.panel_count() {
             // the single pass: each panel is loaded once and feeds both
             // sketches before the next is touched
@@ -508,21 +587,24 @@ pub fn rsvd_once(a: &TiledMatrix, k: usize, opts: &RsvdOpts) -> Svd {
     })
 }
 
-/// The co-sketch finish shared by every single-pass driver: `Q = orth(Y)`,
-/// B from the small least-squares system `(ΨᵀQ)·B ≈ W`, then the k
-/// triplets from the small SVD of B (Halko et al. §5.5 / Lu et al. Alg. 3).
+/// The co-sketch finish shared by every single-pass driver: `Q = orth(Y)`
+/// in the sweep precision, then B from the small least-squares system
+/// `(ΨᵀQ)·B ≈ W` and the k triplets from the small SVD of B — both in
+/// f64 (Halko et al. §5.5 / Lu et al. Alg. 3; the widen is an exact bit
+/// copy at `S = f64`, so the historical pipeline is unchanged, and the
+/// reduced-sketch / full-precision-finish split of Tomás et al. at f32).
 /// Factored out of [`rsvd_once`] verbatim so the sharded drivers — in
 /// process ([`rsvd_once_sharded`]) or scattered across a worker pool (the
 /// coordinator's gather step) — reuse its exact operation sequence.
-pub fn finish_cosketch(k: usize, y: &Matrix, w: &Matrix, psi: &Matrix) -> Svd {
+pub fn finish_cosketch<S: Scalar>(k: usize, y: &Mat<S>, w: &Mat<S>, psi: &Mat<S>) -> Svd {
     let q = orthonormalize(y);
-    let mq = matmul_tn(psi, &q); // s_l × s, tall — well-posed lstsq
-    let b = lstsq_pinv(&mq, w); // s × n
+    let mq = matmul_tn(psi, &q).widen(); // s_l × s, tall — well-posed lstsq
+    let b = lstsq_pinv(&mq, &w.widen()); // s × n
     let sb = svd(&b);
     let kk = k.min(sb.s.len());
     let ub = sb.u.submatrix(0, sb.u.rows(), 0, kk);
     Svd {
-        u: matmul(&q, &ub),
+        u: matmul(&q.widen(), &ub),
         s: sb.s[..kk].to_vec(),
         v: sb.v.submatrix(0, sb.v.rows(), 0, kk),
     }
@@ -530,27 +612,30 @@ pub fn finish_cosketch(k: usize, y: &Matrix, w: &Matrix, psi: &Matrix) -> Svd {
 
 // ───────────────────────── sharded execution ─────────────────────────
 //
-// One giant `TiledMatrix` can be swept by several participants at once:
+// One giant `TiledMat` can be swept by several participants at once:
 // the co-visit sweep is embarrassingly parallel over row panels (every
 // A-touching product is a sum of per-panel products), so each shard
 // sweeps a contiguous slice of panels into a [`SketchPartial`] and
 // [`reduce_partials`] folds them in deterministic ascending order.
 //
-// **Shard-count invariance.** A shard never folds its co-sketch panels —
-// the partial keeps one product per panel, and the reduce folds panel
-// products in ascending *panel* order through the accumulating
-// `matmul_tn_acc` form whatever the shard grouping was. Every shard
-// count (and thread count, and panel store) therefore produces
-// bit-identical results at a fixed tile height. Unlike the serial
-// `rsvd_once` flat accumulation (which is tile-height invariant), the
-// per-panel grouping makes the sharded result depend on the tile height:
-// the contract is "identical to the 1-shard sweep", per tile height.
+// **Shard-count invariance (per dtype).** A shard never folds its
+// co-sketch panels — the partial keeps one product per panel, and the
+// reduce folds panel products in ascending *panel* order through the
+// accumulating `matmul_tn_acc` form whatever the shard grouping was.
+// Every shard count (and thread count, and panel store) therefore
+// produces bit-identical results at a fixed tile height, for f64 and f32
+// alike. Unlike the serial `rsvd_once` flat accumulation (which is
+// tile-height invariant), the per-panel grouping makes the sharded result
+// depend on the tile height: the contract is "identical to the 1-shard
+// sweep", per tile height.
 
 /// Sketch dimensions and Gaussian streams shared by every participant of
 /// one (possibly sharded) single-pass solve — derived from the job seed
 /// exactly as [`rsvd_once`] derives them, so sharded and serial sweeps
-/// test A against the same Ω/Ψ.
-pub struct SketchStreams {
+/// test A against the same Ω/Ψ. At `S = f32` the streams are the
+/// narrowing of the same Philox draw ([`Mat::gaussian`]), keeping the
+/// tested subspace aligned with the f64 flavor's.
+pub struct SketchStreams<S: Scalar = f64> {
     /// Effective rank target (clamped to min(m, n)).
     pub k: usize,
     /// Range-sketch width s = k + oversample (clamped to min(m, n)).
@@ -558,21 +643,21 @@ pub struct SketchStreams {
     /// Co-sketch width s_l = s + oversample (clamped to m).
     pub sl: usize,
     /// n×s range test matrix Ω.
-    pub omega: Matrix,
+    pub omega: Mat<S>,
     /// m×s_l co-sketch test matrix Ψ.
-    pub psi: Matrix,
+    pub psi: Mat<S>,
 }
 
 /// Derive the single-pass sketch widths and test matrices for an m×n
 /// operator at rank target `k` (see [`SketchStreams`]).
-pub fn sketch_streams(m: usize, n: usize, k: usize, opts: &RsvdOpts) -> SketchStreams {
+pub fn sketch_streams<S: Scalar>(m: usize, n: usize, k: usize, opts: &RsvdOpts) -> SketchStreams<S> {
     let r = m.min(n);
     let k = k.min(r);
     let s = (k + opts.oversample).min(r);
     let sl = (s + opts.oversample).min(m);
-    let omega = Matrix::gaussian(n, s, opts.seed);
+    let omega = Mat::gaussian(n, s, opts.seed);
     // independent co-sketch stream: salt the seed like the op wrappers
-    let psi = Matrix::gaussian(m, sl, opts.seed ^ 0x0E0C_5EED);
+    let psi = Mat::gaussian(m, sl, opts.seed ^ 0x0E0C_5EED);
     SketchStreams { k, s, sl, omega, psi }
 }
 
@@ -603,7 +688,7 @@ pub fn shard_ranges(panel_count: usize, shards: usize) -> Vec<(usize, usize)> {
 /// so the reduce can replay the global ascending-panel accumulation order
 /// under any shard grouping. Transient memory is O(panels·s_l·n) across
 /// all partials of one job, freed at the reduce.
-pub struct SketchPartial {
+pub struct SketchPartial<S: Scalar = f64> {
     /// Shard index in the ascending schedule.
     pub shard: usize,
     /// First panel of the swept range.
@@ -613,9 +698,9 @@ pub struct SketchPartial {
     /// First matrix row of panel `lo`.
     pub row_lo: usize,
     /// Rows [row_lo, row_lo + y.rows()) of Y = A·Ω.
-    pub y: Matrix,
+    pub y: Mat<S>,
     /// Ψ_pᵀ·A_p per panel, ascending by panel index.
-    pub w_panels: Vec<Matrix>,
+    pub w_panels: Vec<Mat<S>>,
 }
 
 /// Sweep panels [lo, hi) once, producing this shard's partial sketch and
@@ -624,19 +709,19 @@ pub struct SketchPartial {
 /// which is why a sharded sweep out-throughputs the serial [`rsvd_once`]
 /// sweep even at one shard — the serial path's `matmul_tn_acc` is pinned
 /// to the scalar schedule.
-pub fn sketch_shard(
-    a: &TiledMatrix,
-    omega: &Matrix,
-    psi: &Matrix,
+pub fn sketch_shard<S: Scalar>(
+    a: &TiledMat<S>,
+    omega: &Mat<S>,
+    psi: &Mat<S>,
     shard: usize,
     lo: usize,
     hi: usize,
-) -> SketchPartial {
+) -> SketchPartial<S> {
     assert!(lo <= hi && hi <= a.panel_count(), "shard panel range");
     let sl = psi.cols();
     let row_lo = lo * a.tile_rows;
     let row_hi = if lo == hi { row_lo } else { a.panel_range(hi - 1).1 };
-    let mut y = Matrix::zeros(row_hi - row_lo, omega.cols());
+    let mut y = Mat::zeros(row_hi - row_lo, omega.cols());
     let mut w_panels = Vec::with_capacity(hi - lo);
     for i in lo..hi {
         let (r0, r1) = a.panel_range(i);
@@ -658,17 +743,17 @@ pub fn sketch_shard(
 /// makes each fold exactly one `1.0·x` add per element, replaying the
 /// global ascending-panel order no matter how panels were grouped into
 /// shards — the whole bitwise-invariance argument.
-pub fn reduce_partials(
+pub fn reduce_partials<S: Scalar>(
     m: usize,
     n: usize,
     s: usize,
     sl: usize,
     panel_count: usize,
-    partials: &[SketchPartial],
-) -> (Matrix, Matrix) {
-    let mut y = Matrix::zeros(m, s);
-    let mut w = Matrix::zeros(sl, n);
-    let eye = Matrix::eye(sl);
+    partials: &[SketchPartial<S>],
+) -> (Mat<S>, Mat<S>) {
+    let mut y = Mat::zeros(m, s);
+    let mut w = Mat::zeros(sl, n);
+    let eye = Mat::eye(sl);
     let mut next = 0usize;
     for (i, p) in partials.iter().enumerate() {
         assert_eq!(p.shard, i, "partials must arrive in ascending shard order");
@@ -690,13 +775,19 @@ pub fn reduce_partials(
 /// in ascending order. Bitwise identical to the 1-shard run for **any**
 /// shard count, thread count, and panel store (the per-panel partials
 /// make the fold grouping-independent — see [`reduce_partials`]); like
-/// every sharded driver the bits are pinned *per tile height*.
-pub fn rsvd_once_sharded(a: &TiledMatrix, k: usize, opts: &RsvdOpts, shards: usize) -> Svd {
+/// every sharded driver the bits are pinned *per tile height* (and per
+/// dtype — the f32 sweep is the same schedule over half-width panels).
+pub fn rsvd_once_sharded<S: Scalar>(
+    a: &TiledMat<S>,
+    k: usize,
+    opts: &RsvdOpts,
+    shards: usize,
+) -> Svd {
     with_threads_opt(opts.threads, || {
         let (m, n) = a.shape();
         let st = sketch_streams(m, n, k, opts);
         let ranges = shard_ranges(a.panel_count(), shards);
-        let partials: Vec<SketchPartial> = if ranges.len() == 1 {
+        let partials: Vec<SketchPartial<S>> = if ranges.len() == 1 {
             let (lo, hi) = ranges[0];
             vec![sketch_shard(a, &st.omega, &st.psi, 0, lo, hi)]
         } else {
@@ -724,22 +815,22 @@ pub fn rsvd_once_sharded(a: &TiledMatrix, k: usize, opts: &RsvdOpts, shards: usi
     })
 }
 
-/// A [`TiledMatrix`] view whose panel-crossing products are computed as
+/// A [`TiledMat`] view whose panel-crossing products are computed as
 /// per-panel partials reduced in ascending order — the q > 0 (two-pass)
 /// counterpart of [`rsvd_once_sharded`]. Every [`LinOp`] product is
 /// bitwise invariant in the shard count (and thread count / store), so
 /// `rsvd` over this wrapper is too; like the single-pass driver, the
-/// bits are pinned per tile height (the plain `TiledMatrix` operator
+/// bits are pinned per tile height (the plain `TiledMat` operator
 /// stays the tile-height-invariant one).
-pub struct ShardedTiled {
-    a: TiledMatrix,
+pub struct ShardedTiled<S: Scalar = f64> {
+    a: TiledMat<S>,
     shards: usize,
 }
 
-impl ShardedTiled {
+impl<S: Scalar> ShardedTiled<S> {
     /// Wrap `a` for sharded products over up to `shards` concurrent
     /// panel sweeps (clamped to at least one).
-    pub fn new(a: TiledMatrix, shards: usize) -> ShardedTiled {
+    pub fn new(a: TiledMat<S>, shards: usize) -> ShardedTiled<S> {
         ShardedTiled { a, shards: shards.max(1) }
     }
 
@@ -767,24 +858,24 @@ impl ShardedTiled {
 /// Ascending fold of equal-shape per-panel partials through the
 /// accumulating `matmul_tn_acc` form (identity selector: one exact
 /// `1.0·x` add per element per partial).
-fn fold_ascending(rows: usize, cols: usize, parts: &[Matrix]) -> Matrix {
-    let mut out = Matrix::zeros(rows, cols);
-    let eye = Matrix::eye(rows);
+fn fold_ascending<S: Scalar>(rows: usize, cols: usize, parts: &[Mat<S>]) -> Mat<S> {
+    let mut out = Mat::zeros(rows, cols);
+    let eye = Mat::eye(rows);
     for p in parts {
         matmul_tn_acc(&eye, p, &mut out);
     }
     out
 }
 
-impl LinOp for ShardedTiled {
+impl<S: Scalar> LinOp<S> for ShardedTiled<S> {
     fn shape(&self) -> (usize, usize) {
         self.a.shape()
     }
 
     /// Y = A·X — panel rows are disjoint, so sharding cannot change bits.
-    fn apply(&self, x: &Matrix) -> Matrix {
+    fn apply(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.a.cols, x.rows(), "sharded apply inner dims");
-        let mut y = Matrix::zeros(self.a.rows, x.cols());
+        let mut y = Mat::zeros(self.a.rows, x.cols());
         let panels =
             self.sweep(|i| (self.a.panel_range(i).0, matmul(&self.a.store.load(i), x)));
         for (r0, yp) in panels {
@@ -796,7 +887,7 @@ impl LinOp for ShardedTiled {
     }
 
     /// Z = Aᵀ·X via per-panel partials folded ascending.
-    fn apply_t(&self, x: &Matrix) -> Matrix {
+    fn apply_t(&self, x: &Mat<S>) -> Mat<S> {
         assert_eq!(self.a.rows, x.rows(), "sharded apply_t row dims");
         let parts = self.sweep(|i| {
             let (r0, r1) = self.a.panel_range(i);
@@ -811,7 +902,7 @@ impl LinOp for ShardedTiled {
     }
 
     /// B = Qᵀ·A via per-panel partials folded ascending.
-    fn project(&self, q: &Matrix) -> Matrix {
+    fn project(&self, q: &Mat<S>) -> Mat<S> {
         assert_eq!(self.a.rows, q.rows(), "sharded project row dims");
         let parts = self.sweep(|i| {
             let (r0, r1) = self.a.panel_range(i);
@@ -882,6 +973,24 @@ mod tests {
     }
 
     #[test]
+    fn f32_products_bitwise_match_f32_dense_across_tile_heights() {
+        // the tile-height bitwise contract extends to the f32 operand:
+        // every product equals the same-dtype dense kernel's bits
+        let a = Mat::<f32>::from_wide(&Matrix::gaussian(37, 21, 2));
+        let x = Mat::<f32>::from_wide(&Matrix::gaussian(21, 5, 3));
+        let y = Mat::<f32>::from_wide(&Matrix::gaussian(37, 5, 4));
+        let dense_apply = matmul(&a, &x);
+        let dense_apply_t = matmul_tn(&a, &y);
+        let dense_project = matmul_tn(&y, &a);
+        for tile in [1usize, 5, 8, 37] {
+            let t = TiledMat::<f32>::from_dense(&a, tile);
+            assert_eq!(t.apply(&x), dense_apply, "apply tile {tile}");
+            assert_eq!(t.apply_t(&y), dense_apply_t, "apply_t tile {tile}");
+            assert_eq!(LinOp::project(&t, &y), dense_project, "project tile {tile}");
+        }
+    }
+
+    #[test]
     fn disk_store_matches_memory_and_cleans_up() {
         let a = Matrix::gaussian(19, 11, 5);
         let mem = TiledMatrix::from_dense(&a, 6);
@@ -900,6 +1009,28 @@ mod tests {
         assert_eq!(scratch_files(), before, "clones share the file");
         drop(clone);
         assert!(scratch_files() < before, "scratch file removed on last drop");
+    }
+
+    #[test]
+    fn narrowing_halves_the_spill_and_round_trips_f32_bits() {
+        let a = Matrix::gaussian(19, 11, 5);
+        let d64 = TiledMatrix::from_dense_spilled(&a, 6).unwrap();
+        let d32 = d64.narrow();
+        // same tiling, disk spill preserved, half the scratch bytes
+        assert_eq!(d32.store_kind(), "disk");
+        assert_eq!(d32.tile_rows(), d64.tile_rows());
+        assert_eq!(d64.spill_bytes(), Some(19 * 11 * 8));
+        assert_eq!(d32.spill_bytes(), Some(19 * 11 * 4));
+        // per-element the narrowing is the plain dense narrowing, exact
+        // through the scratch file, and the fingerprints never collide
+        assert_eq!(d32.to_dense(), Mat::<f32>::from_wide(&a));
+        assert_ne!(d32.fingerprint(), d64.fingerprint(), "dtypes never share a fingerprint");
+        // a memory-backed tiling narrows into a memory-backed one
+        let m32 = TiledMatrix::from_dense(&a, 6).narrow();
+        assert_eq!(m32.store_kind(), "mem");
+        assert_eq!(m32.spill_bytes(), None);
+        assert_eq!(m32.to_dense(), d32.to_dense());
+        assert_eq!(m32.fingerprint(), d32.fingerprint(), "store-invariant after narrowing");
     }
 
     fn scratch_files() -> usize {
@@ -985,6 +1116,22 @@ mod tests {
     }
 
     #[test]
+    fn f32_rsvd_over_tiled_is_bitwise_f32_dense() {
+        // same transcription contract, one dtype down: the tiled f32
+        // operand reproduces the dense f32 pipeline's bits per tile height
+        let a = Mat::<f32>::from_wide(&test_matrix(40, 28, 11));
+        let opts = RsvdOpts { seed: 3, ..Default::default() };
+        let dense = rsvd(&a, 5, &opts);
+        for tile in [1usize, 9, 16, 40] {
+            let t = TiledMat::<f32>::from_dense(&a, tile);
+            let got = rsvd(&t, 5, &opts);
+            assert_eq!(got.s, dense.s, "tile {tile}");
+            assert_eq!(got.u, dense.u, "tile {tile}");
+            assert_eq!(got.v, dense.v, "tile {tile}");
+        }
+    }
+
+    #[test]
     fn rsvd_once_recovers_decaying_spectrum() {
         // fast decay: the single-pass factorization should be ~exact
         let a = crate::datagen_test_matrix(50, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 13);
@@ -1005,6 +1152,28 @@ mod tests {
         let utu = matmul_tn(&got.u, &got.u);
         assert!(utu.max_diff(&Matrix::eye(k)) < 1e-8);
         assert_eq!(got.v.shape(), (30, k));
+    }
+
+    #[test]
+    fn f32_rsvd_once_recovers_decaying_spectrum_at_f32_slack() {
+        // the f32 sweep + f64 co-sketch finish lands within single-
+        // precision slack of the exact spectrum on fast decay
+        let a = crate::datagen_test_matrix(50, 30, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 13);
+        let t = TiledMatrix::from_dense(&a, 13).narrow();
+        let k = 5;
+        let got = rsvd_once(&t, k, &RsvdOpts { seed: 9, ..Default::default() });
+        let exact = svd(&a);
+        assert_eq!(got.s.len(), k);
+        for i in 0..k {
+            assert!(
+                (got.s[i] - exact.s[i]).abs() < 1e-3 * exact.s[0],
+                "σ{i}: {} vs {}",
+                got.s[i],
+                exact.s[i]
+            );
+        }
+        let utu = matmul_tn(&got.u, &got.u);
+        assert!(utu.max_diff(&Matrix::eye(k)) < 1e-4);
     }
 
     #[test]

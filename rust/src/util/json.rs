@@ -286,6 +286,10 @@ pub fn tiled_to_json(t: &TiledMatrix) -> Json {
 /// Decode a [`tiled_to_json`] object back into an (in-memory) tiled
 /// matrix — dimensions, length agreement, finite values, and a positive
 /// tile height are all enforced (error, never panic, on hostile payloads).
+/// The payload always decodes at f64; when the request asks for a reduced
+/// precision, the request layer sweeps the panels for f32
+/// representability (panel by panel, never re-densified) and the narrow
+/// happens at execution time.
 pub fn tiled_from_json(j: &Json) -> Result<TiledMatrix, String> {
     if let Some(fmt_tag) = j.get("format") {
         if fmt_tag.as_str() != Some("tiled") {

@@ -6,10 +6,10 @@
 use rsvd::coordinator::{Coordinator, CoordinatorCfg, Method, Operand, Precision, Request};
 use rsvd::datagen::sparse::{tridiag_toeplitz, tridiag_toeplitz_spectrum};
 use rsvd::datagen::{spectrum_matrix, Decay};
-use rsvd::linalg::adaptive::{rsvd_adaptive, AdaptiveOpts};
+use rsvd::linalg::adaptive::{rsvd_adaptive, rsvd_adaptive_mixed, AdaptiveOpts};
 use rsvd::linalg::gemm::matmul_nt;
 use rsvd::linalg::svd_gesvd::svd;
-use rsvd::linalg::{Matrix, TiledMatrix};
+use rsvd::linalg::{Mat, Matrix, TiledMatrix};
 
 /// Spectral norm of `A − U·diag(s)·Vᵀ` — the quantity the tolerance
 /// contract bounds (exact solve of the small residual, fine at test sizes).
@@ -165,6 +165,106 @@ fn coordinator_serves_adaptive_over_the_wire() {
     assert_eq!(d.u.as_ref(), Some(&direct.svd.u));
     assert_eq!(d.v.as_ref(), Some(&direct.svd.v));
     assert!(!d.values.is_empty() && d.values.len() < 30, "rank was discovered");
+}
+
+#[test]
+fn f32_meets_tolerance_on_tridiag_toeplitz_closed_form() {
+    // the f32 growth loop must still honor the tolerance contract on an
+    // exactly known spectrum — the slack floor only short-circuits *below*
+    // f32's attainable error, it never licenses missing a meetable tol
+    let n = 40;
+    let a = tridiag_toeplitz(n, 2.0, -1.0).map_scalar::<f32>();
+    let exact = tridiag_toeplitz_spectrum(n, 2.0, -1.0);
+    let dense = tridiag_toeplitz(n, 2.0, -1.0).to_dense();
+    for tol in [2.0, 1.0, 0.25] {
+        let r = rsvd_adaptive(&a, tol, &AdaptiveOpts::default());
+        let rank = r.rank();
+        assert!(rank > 0, "f32 tol {tol} keeps some spectrum");
+        if rank < n {
+            assert!(
+                exact[rank] <= tol,
+                "f32 tol {tol}: true tail σ_{} = {} exceeds it",
+                rank + 1,
+                exact[rank]
+            );
+        }
+        let err = reconstruction_error(&dense, &r);
+        assert!(err <= tol, "f32 tol {tol}: reconstruction err {err}");
+        // the returned values match the closed form at f32 grade
+        for (i, got) in r.svd.s.iter().enumerate() {
+            assert!(
+                (got - exact[i]).abs() < 1e-4 * exact[0],
+                "f32 tol {tol} σ{i}: {got} vs {}",
+                exact[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_meets_tolerance_on_decay_spectra_with_f64_grade_values() {
+    // mixed discovers the rank in f32 but certifies the factors with one
+    // f64 refinement pass: the tolerance contract holds AND the reported
+    // values track the known spectrum to near-f64 grade
+    let (m, n) = (60, 40);
+    let a = spectrum_matrix(m, n, Decay::Fast, 7);
+    let a32 = Mat::<f32>::from_wide(&a);
+    for tol in [0.05, 0.01] {
+        let r = rsvd_adaptive_mixed(&a, &a32, tol, &AdaptiveOpts::default());
+        let rank = r.rank();
+        assert!(rank > 0 && rank <= n, "mixed tol {tol}: rank {rank}");
+        if rank < n {
+            assert!(Decay::Fast.sigma(rank) <= tol, "mixed tol {tol}: true tail exceeds it");
+        }
+        let err = reconstruction_error(&a, &r);
+        assert!(err <= tol, "mixed tol {tol}: reconstruction err {err}");
+        for (i, got) in r.svd.s.iter().enumerate() {
+            let want = Decay::Fast.sigma(i);
+            assert!(
+                (got - want).abs() < 1e-6 * Decay::Fast.sigma(0),
+                "mixed tol {tol} σ{i}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_reduced_precision_adaptive_over_the_wire() {
+    // f32 and mixed adaptive requests travel the JSON codec and come back
+    // bitwise the direct library calls on the (narrowed) operand
+    let a = spectrum_matrix(50, 30, Decay::Fast, 17);
+    let a32 = Mat::<f32>::from_wide(&a);
+    let coord = Coordinator::start_host_only(CoordinatorCfg::default());
+    let req = |precision| Request::SvdAdaptive {
+        a: Operand::Dense(a.clone()),
+        tol: 0.05,
+        block: 8,
+        max_rank: 0,
+        method: Method::Auto,
+        want_vectors: true,
+        seed: 21,
+        precision,
+    };
+    let opts = AdaptiveOpts { seed: 21, ..Default::default() };
+
+    let wire = req(Precision::F32).adaptive_to_json().expect("encodes").to_string();
+    let decoded =
+        Request::adaptive_from_json(&rsvd::util::json::Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(decoded.precision(), Precision::F32, "precision survives the round trip");
+    let d = coord.run(decoded).outcome.expect("f32 adaptive job ok");
+    let direct = rsvd_adaptive(&a32, 0.05, &opts);
+    assert_eq!(d.values, direct.svd.s, "f32 wire result is bitwise the library call");
+    assert_eq!(d.u.as_ref(), Some(&direct.svd.u));
+    assert_eq!(d.v.as_ref(), Some(&direct.svd.v));
+
+    let wire = req(Precision::Mixed).adaptive_to_json().expect("encodes").to_string();
+    let decoded =
+        Request::adaptive_from_json(&rsvd::util::json::Json::parse(&wire).unwrap()).unwrap();
+    let d = coord.run(decoded).outcome.expect("mixed adaptive job ok");
+    let direct = rsvd_adaptive_mixed(&a, &a32, 0.05, &opts);
+    assert_eq!(d.values, direct.svd.s, "mixed wire result is bitwise the library call");
+    assert_eq!(d.u.as_ref(), Some(&direct.svd.u));
+    assert_eq!(d.v.as_ref(), Some(&direct.svd.v));
 }
 
 #[test]

@@ -184,6 +184,79 @@ fn prop_f32_overflow_payloads_rejected_for_reduced_precision() {
 }
 
 #[test]
+fn prop_tiled_payloads_reject_f32_overflow_and_non_finite() {
+    // the tiled flavor of the reduced-precision guard: the per-panel
+    // representability sweep must refuse an f32-overflowing value (while
+    // the f64 pipeline keeps accepting it), and a genuinely non-finite
+    // value stays a protocol error at any precision — Err, never a panic,
+    // never a silent inf inside a narrowed panel
+    use rsvd::coordinator::{Method, Precision, Request};
+    use rsvd::linalg::TiledMatrix;
+    testkit::check(60, |g: &mut Gen| {
+        let mut m = g.matrix(1..8, 1..8);
+        let (i, j) = (g.usize(0..m.rows()), g.usize(0..m.cols()));
+        let sign = if g.bool() { 1.0 } else { -1.0 };
+        let big = sign * g.f64(1e39..1e300);
+        m[(i, j)] = big;
+        let tile = g.usize(1..m.rows() + 1);
+        let req = Request::SvdTiled {
+            a: TiledMatrix::from_dense(&m, tile),
+            k: 1,
+            method: Method::Auto,
+            want_vectors: false,
+            seed: 1,
+            precision: Precision::F64,
+        };
+        let wire = req.to_wire_json().expect("f64 tiled requests are wire-expressible");
+        testkit::assert_that(
+            Request::from_wire_json(&wire).is_ok(),
+            "the f64 tiled pipeline must accept large-but-finite values",
+        )?;
+        let Json::Obj(obj) = wire else { unreachable!("wire frames are objects") };
+        let prec = if g.bool() { "f32" } else { "mixed" };
+        let mut over = obj.clone();
+        over.insert("precision".into(), Json::Str(prec.into()));
+        let outcome =
+            std::panic::catch_unwind(move || Request::from_wire_json(&Json::Obj(over)));
+        match outcome {
+            Err(_) => return Err(format!("decoder panicked on {prec} tiled overflow payload")),
+            Ok(Ok(_)) => {
+                return Err(format!(
+                    "{prec} tiled decode accepted an f32-overflowing value {big:e}"
+                ))
+            }
+            Ok(Err(e)) => testkit::assert_that(
+                e.contains("not representable in f32"),
+                &format!("error must name the overflow, got: {e}"),
+            )?,
+        }
+        // same frame, payload poisoned with a true inf at a random slot
+        // (full length, so the non-finite check is what trips, not the
+        // length check)
+        let want = m.rows() * m.cols();
+        let p = g.usize(0..want);
+        let inf = if g.bool() { f64::INFINITY } else { f64::NEG_INFINITY };
+        let data: Vec<Json> =
+            (0..want).map(|x| Json::Num(if x == p { inf } else { 0.5 })).collect();
+        let mut bad = obj;
+        if let Some(Json::Obj(am)) = bad.get_mut("a") {
+            am.insert("data".into(), Json::Arr(data));
+        } else {
+            return Err("tiled wire frame lost its payload object".into());
+        }
+        let outcome = std::panic::catch_unwind(move || Request::from_wire_json(&Json::Obj(bad)));
+        match outcome {
+            Err(_) => Err("decoder panicked on a non-finite tiled payload".into()),
+            Ok(Ok(_)) => Err("decode accepted a non-finite tiled payload".into()),
+            Ok(Err(e)) => testkit::assert_that(
+                e.contains("non-finite"),
+                &format!("error must name the non-finite value, got: {e}"),
+            ),
+        }
+    });
+}
+
+#[test]
 fn prop_truncated_wire_never_panics() {
     testkit::check(150, |g: &mut Gen| {
         let wire = if g.bool() {

@@ -83,44 +83,52 @@ fn rejected_examples_are_refused_by_the_decoder() {
 
 #[test]
 fn precision_examples_cover_the_reduced_precision_contract() {
-    // at least one documented request opts into reduced precision, and it
-    // must decode like any other example
+    // every pipeline honors reduced precision now: the documented accepted
+    // examples must opt in on the dense, tiled, AND adaptive request
+    // types, and each must decode like any other example (the tiled and
+    // adaptive cases were rejections until the Scalar generalization —
+    // this pin keeps them accepted)
     let reduced: Vec<String> =
         blocks("request").into_iter().filter(|t| t.contains("\"precision\"")).collect();
-    assert!(!reduced.is_empty(), "PROTOCOL.md must show a reduced-precision request example");
+    assert!(reduced.len() >= 3, "PROTOCOL.md must show reduced-precision request examples");
     for text in &reduced {
         let j = Json::parse(text).expect("parses");
         Request::from_wire_json(&j)
             .unwrap_or_else(|e| panic!("documented precision example must decode: {e}\n{text}"));
     }
+    for ty in ["\"svd\"", "\"svd_tiled\"", "\"svd_adaptive\""] {
+        assert!(
+            reduced.iter().any(|t| t.contains(ty)),
+            "no accepted reduced-precision example has type {ty} (got {reduced:?})"
+        );
+    }
     // ...and the rejected set pins each decode-time restriction, named by
-    // its error message: unknown spelling, exact solver, f32 overflow,
-    // f64-only pipeline
-    let rejections: Vec<String> = blocks("rejected")
-        .into_iter()
-        .filter(|t| t.contains("\"precision\""))
+    // its error message: unknown spelling, exact solver (on fixed-rank
+    // and adaptive frames alike), f32 overflow (dense and per-panel tiled)
+    let texts: Vec<String> =
+        blocks("rejected").into_iter().filter(|t| t.contains("\"precision\"")).collect();
+    let rejections: Vec<String> = texts
+        .iter()
         .map(|t| {
-            let j = Json::parse(&t).expect("parses");
+            let j = Json::parse(t).expect("parses");
             Request::from_wire_json(&j)
                 .expect_err("documented precision rejection unexpectedly decoded")
         })
         .collect();
     assert!(rejections.len() >= 5, "PROTOCOL.md lost its precision rejection examples");
-    for needle in
-        ["unknown precision", "randomized pipeline", "not representable in f32", "f64-only"]
-    {
+    for needle in ["unknown precision", "randomized pipeline", "not representable in f32"] {
         assert!(
             rejections.iter().any(|e| e.contains(needle)),
             "no precision rejection mentions '{needle}' (got {rejections:?})"
         );
     }
-    // both f64-only pipelines must be pinned by name: a `precision` field
-    // on svd_tiled AND on svd_adaptive is refused at decode time (the
-    // adaptive case regressed once by being documented but untested)
-    for pipeline in ["svd_tiled", "svd_adaptive"] {
+    // the restrictions are per method / per value, not per pipeline — pin
+    // that the doc still demonstrates them ON the tiled and adaptive
+    // frames (a tiled payload overflowing f32, an exact-method adaptive)
+    for ty in ["\"svd_tiled\"", "\"svd_adaptive\""] {
         assert!(
-            rejections.iter().any(|e| e.contains(pipeline)),
-            "no precision rejection names the f64-only pipeline '{pipeline}' (got {rejections:?})"
+            texts.iter().any(|t| t.contains(ty)),
+            "no precision rejection example has type {ty} (got {texts:?})"
         );
     }
 }

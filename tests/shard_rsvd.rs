@@ -7,11 +7,13 @@
 //! exact solver on decaying spectra.
 
 use rsvd::datagen::{spectrum_matrix, Decay};
-use rsvd::linalg::rsvd::{rsvd_sharded, rsvd_values_sharded, RsvdOpts};
+use rsvd::linalg::rsvd::{
+    rsvd_sharded, rsvd_sharded_mixed, rsvd_values_sharded, rsvd_values_sharded_mixed, RsvdOpts,
+};
 use rsvd::linalg::svd_gesvd::svd;
 use rsvd::linalg::threading::available_threads;
 use rsvd::linalg::tiled::{rsvd_once_sharded, shard_ranges};
-use rsvd::linalg::{Matrix, TiledMatrix};
+use rsvd::linalg::{Matrix, TiledMat, TiledMatrix};
 use rsvd::testkit::{self, assert_that, Gen};
 
 /// The acceptance tile-height grid for an m-row operand: one row per
@@ -171,6 +173,93 @@ fn reconstruction_from_sharded_factors_matches_the_operand() {
         resid <= tail * 2.0 + 1e-12,
         "sharded factors must reconstruct to truncation quality: {resid:.3e} vs tail {tail:.3e}"
     );
+}
+
+#[test]
+fn f32_single_pass_sweep_is_bitwise_knob_invariant() {
+    // the f64 acceptance grid, re-run at f32: for every tile height the
+    // narrowed sweep must be bitwise the 1-shard 1-thread sweep of the
+    // same tiling, across both panel stores, every shard count, and
+    // every thread count — the Scalar generalization extends the bitwise
+    // contract per dtype, it never weakens it
+    let a = rsvd::datagen_test_matrix(97, 41, |i| 1.0 / ((i + 1) as f64).powf(1.2), 3);
+    for tile in tile_grid(97) {
+        let mem: TiledMat<f32> = TiledMatrix::from_dense(&a, tile).narrow();
+        let disk = TiledMatrix::from_dense_spilled(&a, tile)
+            .expect("spill to scratch file")
+            .narrow();
+        assert_eq!(disk.store_kind(), "disk", "a disk tiling narrows into a disk tiling");
+        let ref_opts = RsvdOpts { seed: 11, threads: Some(1), ..Default::default() };
+        let reference = rsvd_once_sharded(&mem, 6, &ref_opts, 1);
+        for t in [&mem, &disk] {
+            for shards in shard_grid() {
+                for threads in [1, 2, available_threads()] {
+                    let o = RsvdOpts { seed: 11, threads: Some(threads), ..Default::default() };
+                    let got = rsvd_once_sharded(t, 6, &o, shards);
+                    let tag = format!(
+                        "f32 tile={tile} store={} shards={shards} threads={threads}",
+                        t.store_kind()
+                    );
+                    assert_eq!(got.s, reference.s, "values {tag}");
+                    assert_eq!(got.u, reference.u, "u {tag}");
+                    assert_eq!(got.v, reference.v, "v {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_and_mixed_two_pass_sharded_drivers_are_bitwise_shard_invariant() {
+    let a = rsvd::datagen_test_matrix(80, 34, |i| 1.0 / ((i + 1) * (i + 1)) as f64, 9);
+    for tile in tile_grid(80) {
+        let t64 = TiledMatrix::from_dense(&a, tile);
+        let t32 = t64.narrow();
+        let ro = RsvdOpts { seed: 5, threads: Some(1), ..Default::default() };
+        let ref32 = rsvd_sharded(&t32, 5, &ro, 1);
+        let refmx = rsvd_sharded_mixed(&t64, &t32, 5, &ro, 1);
+        for shards in shard_grid() {
+            for threads in [1, 2, available_threads()] {
+                let o = RsvdOpts { seed: 5, threads: Some(threads), ..Default::default() };
+                let tag = format!("tile={tile} shards={shards} threads={threads}");
+                let g32 = rsvd_sharded(&t32, 5, &o, shards);
+                assert_eq!(g32.s, ref32.s, "f32 values {tag}");
+                assert_eq!(g32.u, ref32.u, "f32 u {tag}");
+                assert_eq!(g32.v, ref32.v, "f32 v {tag}");
+                assert_eq!(rsvd_values_sharded(&t32, 5, &o, shards), ref32.s, "f32 vals {tag}");
+                let gmx = rsvd_sharded_mixed(&t64, &t32, 5, &o, shards);
+                assert_eq!(gmx.s, refmx.s, "mixed values {tag}");
+                assert_eq!(gmx.u, refmx.u, "mixed u {tag}");
+                assert_eq!(gmx.v, refmx.v, "mixed v {tag}");
+                assert_eq!(
+                    rsvd_values_sharded_mixed(&t64, &t32, 5, &o, shards),
+                    refmx.s,
+                    "mixed vals {tag}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reduced_precision_sharded_drivers_meet_dtype_scaled_accuracy() {
+    // the per-dtype accuracy ladder on the paper's fast-decay setting:
+    // f32 holds f32-grade relative error against the exact spectrum,
+    // mixed tracks the all-f64 sharded driver to near-f64 grade
+    let a = spectrum_matrix(120, 90, Decay::Fast, 1);
+    let exact = svd(&a);
+    let t64 = TiledMatrix::from_dense(&a, 16);
+    let t32 = t64.narrow();
+    let o = RsvdOpts { seed: 2, ..Default::default() };
+    let r64 = rsvd_sharded(&t64, 8, &o, 3);
+    let r32 = rsvd_sharded(&t32, 8, &o, 3);
+    let rmx = rsvd_sharded_mixed(&t64, &t32, 8, &o, 3);
+    for i in 0..8 {
+        let rel32 = (r32.s[i] - exact.s[i]).abs() / exact.s[0];
+        assert!(rel32 < 1e-4, "f32 σ{i}: rel err {rel32:.2e}");
+        let relmx = (rmx.s[i] - r64.s[i]).abs() / r64.s[0];
+        assert!(relmx < 1e-8, "mixed σ{i}: rel err vs f64 {relmx:.2e}");
+    }
 }
 
 /// Oversharding footnote: more shards than panels is clamped, so even a
